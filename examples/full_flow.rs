@@ -1,0 +1,136 @@
+//! END-TO-END DRIVER — exercises every layer of the stack on a real (small)
+//! workload and proves they compose:
+//!
+//!   L2/L1 (build time)  trained DWN + pallas kernels, AOT-lowered to HLO
+//!   runtime             PJRT loads + executes the HLO (golden model)
+//!   L3 hwgen            gate-level accelerator incl. thermometer encoders
+//!   L3 techmap/timing   6-LUT mapping + STA (the paper's Table I numbers)
+//!   L3 sim              bit-accurate netlist simulation
+//!   coordinator         batched serving over both backends
+//!
+//! For every model it checks: PJRT output == netlist output == JAX golden
+//! vectors, then reports hardware cost + serving throughput. This is the
+//! run recorded in EXPERIMENTS.md §End-to-end.
+
+use dwn::config::Artifacts;
+use dwn::coordinator::{Backend, Server, ServerConfig};
+use dwn::data::Dataset;
+use dwn::hwgen::{build_accelerator, AccelOptions};
+use dwn::model::{DwnModel, Variant};
+use dwn::runtime::Engine;
+use dwn::techmap::MapConfig;
+use dwn::timing::{analyze, DelayModel};
+use dwn::verify::verify_against_golden;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Artifacts::discover();
+    anyhow::ensure!(artifacts.exists(), "run `make artifacts` first");
+    let test = Dataset::load_csv(&artifacts.dataset_path("test"))?;
+    println!("test split: {} samples, {} features", test.len(), test.num_features);
+
+    for name in artifacts.manifest_models()? {
+        let model = DwnModel::load(&artifacts.model_path(&name))?;
+        println!("\n=== {} ===", model.name);
+
+        // --- 1. golden verification: netlist == JAX for all three variants.
+        for variant in [Variant::Ten, Variant::Pen, Variant::PenFt] {
+            let out = verify_against_golden(&artifacts, &model, variant, 256)?;
+            println!(
+                "  netlist vs golden [{:6}]: {}/{} bit-exact",
+                variant.label(),
+                out.checked - out.mismatches,
+                out.checked
+            );
+            anyhow::ensure!(out.ok(), "golden mismatch for {name} {}", variant.label());
+        }
+
+        // --- 2. PJRT runtime equals the generated hardware on live data.
+        let frac_bits = model.penft.frac_bits.unwrap();
+        let scale = 1.0 / (1u64 << frac_bits) as f32;
+        let batch = artifacts.hlo_batch()?;
+        let engine =
+            Engine::load(&artifacts.hlo_path(&name), batch, model.num_features, model.num_classes)?;
+        let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt))?;
+        let nl = accel.map(&MapConfig::default());
+        let n = batch;
+        let mut flat = vec![0f32; n * model.num_features];
+        let mut vectors = Vec::with_capacity(n);
+        for i in 0..n {
+            let width = (frac_bits + 1) as usize;
+            let mut bits = Vec::with_capacity(model.num_features * width);
+            for (j, &x) in test.row(i).iter().enumerate() {
+                let k = dwn::util::fixed::input_to_int(x as f64, frac_bits);
+                flat[i * model.num_features + j] = k as f32 * scale;
+                let pat = dwn::util::fixed::int_to_bits(k, frac_bits);
+                for b in 0..width {
+                    bits.push((pat >> b) & 1 == 1);
+                }
+            }
+            vectors.push(bits);
+        }
+        let pjrt_out = engine.execute(&flat)?;
+        let hw_out = nl.eval_batch(&vectors);
+        let iw = accel.index_width();
+        let mut agree = 0usize;
+        for i in 0..n {
+            let mut hw_pred = 0usize;
+            for b in 0..iw {
+                if hw_out[i][b] {
+                    hw_pred |= 1 << b;
+                }
+            }
+            if hw_pred == pjrt_out.pred[i] as usize {
+                agree += 1;
+            }
+        }
+        println!("  PJRT vs netlist on live data: {agree}/{n} agree");
+        anyhow::ensure!(agree == n, "PJRT/netlist divergence");
+
+        // --- 3. hardware cost (the paper's metrics).
+        let rep = analyze(&nl, &DelayModel::default());
+        println!(
+            "  hardware: {} LUTs, {} FFs, Fmax {:.0} MHz, latency {:.1} ns, AxD {:.0}",
+            rep.luts, rep.ffs, rep.fmax_mhz, rep.latency_ns, rep.area_delay
+        );
+
+        // --- 4. serving throughput over the PJRT engine (batched).
+        let hlo = artifacts.hlo_path(&name);
+        let (features, classes) = (model.num_features, model.num_classes);
+        let server = Server::start_with(
+            move || Ok(Backend::Pjrt(Engine::load(&hlo, batch, features, classes)?)),
+            ServerConfig::default(),
+        )?;
+        let requests = 5000usize;
+        let t0 = Instant::now();
+        let mut pending = Vec::new();
+        let mut correct = 0usize;
+        for i in 0..requests {
+            let idx = i % test.len();
+            pending.push((idx, server.submit(test.row(idx))?));
+            if pending.len() >= 256 {
+                for (j, rx) in pending.drain(..) {
+                    if rx.recv()?? as usize == test.y[j] as usize {
+                        correct += 1;
+                    }
+                }
+            }
+        }
+        for (j, rx) in pending.drain(..) {
+            if rx.recv()?? as usize == test.y[j] as usize {
+                correct += 1;
+            }
+        }
+        let dt = t0.elapsed();
+        let snap = server.metrics.snapshot();
+        println!(
+            "  serving: {:.0} req/s, p50 {} us, p99 {} us, accuracy {:.4}",
+            requests as f64 / dt.as_secs_f64(),
+            snap.p50_us,
+            snap.p99_us,
+            correct as f64 / requests as f64
+        );
+    }
+    println!("\nfull flow OK — all layers compose");
+    Ok(())
+}

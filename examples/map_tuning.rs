@@ -1,0 +1,25 @@
+//! Mapper-tuning ablation: cut-set size and area-recovery passes vs LUT
+//! count and map time (the perf pass's stopping-criteria evidence).
+use dwn::config::Artifacts;
+use dwn::hwgen::{build_accelerator, AccelOptions};
+use dwn::model::{DwnModel, Variant};
+use dwn::techmap::MapConfig;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Artifacts::discover();
+    anyhow::ensure!(artifacts.exists(), "run `make artifacts` first");
+    let model = DwnModel::load(&artifacts.model_path("lg-2400"))?;
+    let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt))?;
+    println!("{:>8} {:>6} {:>8} {:>8} {:>9}", "cuts", "passes", "LUTs", "depth", "time");
+    for (cuts, passes) in [(4usize, 1usize), (8, 2), (12, 2), (8, 4), (16, 3)] {
+        let cfg = MapConfig { k: 6, cut_set_size: cuts, area_passes: passes };
+        let t0 = Instant::now();
+        let nl = accel.map(&cfg);
+        println!(
+            "{:>8} {:>6} {:>8} {:>8} {:>8.0}ms",
+            cuts, passes, nl.lut_count(), nl.depth(), t0.elapsed().as_millis()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,61 @@
+//! Design-space exploration beyond the paper's four configs: sweep the
+//! input bit-width for every model and chart how the encoder's share of the
+//! total LUT budget shrinks as models grow (the paper's Fig. 5 narrative),
+//! including the uniform-encoding ablation the paper lists as future work
+//! (iii).
+//!
+//!     cargo run --release --example pareto_sweep
+
+use dwn::config::Artifacts;
+use dwn::hwgen::{build_accelerator, AccelOptions, Component};
+use dwn::model::{DwnModel, Variant};
+use dwn::techmap::MapConfig;
+use dwn::util::fixed;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Artifacts::discover();
+    anyhow::ensure!(artifacts.exists(), "run `make artifacts` first");
+
+    println!(
+        "{:>9} {:>5} {:>10} {:>9} {:>9} {:>10} {:>9}",
+        "model", "bits", "enc LUTs", "total", "enc %", "uniform", "unif enc"
+    );
+    for name in ["sm-10", "sm-50", "md-360", "lg-2400"] {
+        let Ok(mut model) = DwnModel::load(&artifacts.model_path(name)) else { continue };
+        for bw in [4u32, 6, 8, 10] {
+            // Re-quantize thresholds at this bit-width (PTQ, mapping fixed).
+            model.pen_threshold_ints = model
+                .thresholds
+                .iter()
+                .map(|r| r.iter().map(|&t| fixed::threshold_to_int(t, bw)).collect())
+                .collect();
+            model.pen.frac_bits = Some(bw);
+
+            let distributive = build_accelerator(&model, &AccelOptions::new(Variant::Pen))?;
+            let (nl_d, bd_d) = distributive.map_with_breakdown(&MapConfig::default());
+            let enc_d =
+                bd_d.iter().find(|(c, _)| *c == Component::Encoder).map(|(_, n)| *n).unwrap_or(0);
+
+            let mut uni_opts = AccelOptions::new(Variant::Pen);
+            uni_opts.uniform_encoding = true;
+            let uniform = build_accelerator(&model, &uni_opts)?;
+            let (nl_u, bd_u) = uniform.map_with_breakdown(&MapConfig::default());
+            let enc_u =
+                bd_u.iter().find(|(c, _)| *c == Component::Encoder).map(|(_, n)| *n).unwrap_or(0);
+
+            println!(
+                "{:>9} {:>5} {:>10} {:>9} {:>8.1}% {:>10} {:>9}",
+                name,
+                bw,
+                enc_d,
+                nl_d.lut_count(),
+                100.0 * enc_d as f64 / nl_d.lut_count() as f64,
+                nl_u.lut_count(),
+                enc_u
+            );
+        }
+    }
+    println!("\n(uniform encoding shares comparator structure on the fixed grid, trading");
+    println!(" the accuracy the paper's Fig. 2 attributes to distributive thresholds)");
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Quickstart: load a trained DWN model, generate its FPGA hardware with
+//! the thermometer-encoding stage included, and print the resource/timing
+//! report — the paper's core flow in ~30 lines.
+//!
+//!     make artifacts                      # once (trains + exports)
+//!     cargo run --release --example quickstart
+
+use dwn::config::Artifacts;
+use dwn::hwgen::{build_accelerator, AccelOptions};
+use dwn::model::{DwnModel, Variant};
+use dwn::techmap::MapConfig;
+use dwn::timing::{analyze, DelayModel};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Artifacts::discover();
+    anyhow::ensure!(artifacts.exists(), "run `make artifacts` first");
+
+    // 1. Load the trained sm-50 model (thresholds, mapping, truth tables).
+    let model = DwnModel::load(&artifacts.model_path("sm-50"))?;
+    println!(
+        "model {}: {} LUT6s, PEN+FT accuracy {:.1}% at {}-bit inputs",
+        model.name,
+        model.num_luts,
+        model.penft.acc * 100.0,
+        model.penft.frac_bits.unwrap()
+    );
+
+    // 2. Generate the full accelerator (encoders + LUT layer + popcount +
+    //    argmax) for both variants and compare — the paper's Table I story.
+    for variant in [Variant::Ten, Variant::PenFt] {
+        let accel = build_accelerator(&model, &AccelOptions::new(variant))?;
+        let netlist = accel.map(&MapConfig::default());
+        let report = analyze(&netlist, &DelayModel::default());
+        println!(
+            "  {:7}  {:5} LUTs  {:5} FFs  Fmax {:6.1} MHz  latency {:4.1} ns  AxD {:8.1}",
+            variant.label(),
+            report.luts,
+            report.ffs,
+            report.fmax_mhz,
+            report.latency_ns,
+            report.area_delay
+        );
+    }
+
+    // 3. The headline: how much does explicit thermometer encoding cost?
+    let ten = analyze(
+        &build_accelerator(&model, &AccelOptions::new(Variant::Ten))?.map(&MapConfig::default()),
+        &DelayModel::default(),
+    );
+    let pen = analyze(
+        &build_accelerator(&model, &AccelOptions::new(Variant::PenFt))?.map(&MapConfig::default()),
+        &DelayModel::default(),
+    );
+    println!(
+        "thermometer encoding overhead: {:.2}x LUTs (paper reports up to 3.20x after FT)",
+        pen.luts as f64 / ten.luts as f64
+    );
+    Ok(())
+}

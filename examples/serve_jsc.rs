@@ -1,0 +1,77 @@
+//! Serving scenario: stand up the batching coordinator over the AOT-compiled
+//! DWN model (PJRT backend) and drive it with an open-loop Poisson-ish
+//! arrival process at several request rates, reporting latency percentiles
+//! vs throughput — the classic serving curve, here for the JSC classifier.
+//!
+//!     cargo run --release --example serve_jsc [-- --model sm-50]
+
+use dwn::config::{Args, Artifacts};
+use dwn::coordinator::{Backend, Server, ServerConfig};
+use dwn::data::Dataset;
+use dwn::model::DwnModel;
+use dwn::runtime::Engine;
+use dwn::util::SplitMix64;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &[])?;
+    let artifacts = Artifacts::discover();
+    anyhow::ensure!(artifacts.exists(), "run `make artifacts` first");
+    let name = args.get_or("model", "sm-50");
+    let model = DwnModel::load(&artifacts.model_path(&name))?;
+    let test = Dataset::load_csv(&artifacts.dataset_path("test"))?;
+
+    let batch = artifacts.hlo_batch()?;
+    let hlo = artifacts.hlo_path(&name);
+    let (features, classes) = (model.num_features, model.num_classes);
+    let server = Server::start_with(
+        move || Ok(Backend::Pjrt(Engine::load(&hlo, batch, features, classes)?)),
+        ServerConfig {
+            max_batch: batch,
+            max_wait: Duration::from_micros(300),
+            queue_depth: 4096,
+        },
+    )?;
+    println!("serving {} via PJRT (batch {batch})", name);
+    println!("{:>12} {:>12} {:>10} {:>10} {:>10} {:>11}", "target req/s", "achieved", "p50 us", "p99 us", "max us", "mean batch");
+
+    let mut rng = SplitMix64::new(42);
+    for target_rps in [2_000u64, 10_000, 50_000, 200_000] {
+        let duration = Duration::from_millis(800);
+        let t0 = Instant::now();
+        let mut sent = 0u64;
+        let mut pending = Vec::new();
+        // Open-loop arrivals with exponential inter-arrival times.
+        let mut next_t = 0f64;
+        while t0.elapsed() < duration {
+            let now = t0.elapsed().as_secs_f64();
+            if now >= next_t {
+                let i = (sent as usize) % test.len();
+                if let Ok(rx) = server.submit(test.row(i)) {
+                    pending.push(rx);
+                }
+                sent += 1;
+                // exponential gap
+                let u: f64 = rng.next_f64().max(1e-12);
+                next_t += -u.ln() / target_rps as f64;
+            } else {
+                std::hint::spin_loop();
+            }
+            if pending.len() >= 2048 {
+                for rx in pending.drain(..) {
+                    let _ = rx.recv();
+                }
+            }
+        }
+        for rx in pending.drain(..) {
+            let _ = rx.recv();
+        }
+        let achieved = sent as f64 / t0.elapsed().as_secs_f64();
+        let snap = server.metrics.snapshot();
+        println!(
+            "{:>12} {:>12.0} {:>10} {:>10} {:>10} {:>11.1}",
+            target_rps, achieved, snap.p50_us, snap.p99_us, snap.max_us, snap.mean_batch
+        );
+    }
+    Ok(())
+}

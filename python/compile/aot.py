@@ -1,0 +1,292 @@
+"""AOT driver: train DWN variants, quantize, fine-tune, and export artifacts.
+
+Outputs (consumed by the rust layer — python never runs at request time):
+
+  artifacts/data/jsc_{train,test}.csv      synthetic JSC dataset
+  artifacts/models/<cfg>.json              trained model: thresholds, mapping,
+                                           truth tables, TEN/PEN/PEN+FT
+                                           variants, bit-width sweep (Fig 5)
+  artifacts/hlo/<cfg>_penft.hlo.txt        hard-inference graph as HLO TEXT
+                                           (jax>=0.5 serialized protos use
+                                           64-bit ids that xla_extension
+                                           0.5.1 rejects; text round-trips)
+  artifacts/golden/<cfg>_<variant>.csv     golden vectors for netlist verify
+  artifacts/manifest.json                  index of everything above
+
+Run via ``make artifacts`` (no-op when up to date). QUICK=1 trains tiny
+models for CI-style smoke runs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data as jsc_data
+from . import encoding, model, quantize, train
+
+HLO_BATCH = 128
+
+
+# ------------------------------------------------------------------ helpers
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see /opt/xla-example/gen_hlo.py)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def tables_to_hex(tables: np.ndarray) -> list[str]:
+    """[L, 64] {0,1} -> 16-hex-digit strings, bit i of the mask = entry i."""
+    out = []
+    for row in np.asarray(tables).astype(np.int64):
+        mask = 0
+        for i, v in enumerate(row):
+            if v:
+                mask |= 1 << i
+        out.append(f"{mask:016x}")
+    return out
+
+
+def export_hlo(path, thresholds, sel, tables, num_classes):
+    """Lower the hard inference path (pallas kernels) to HLO text."""
+
+    th = jnp.asarray(thresholds)
+    se = jnp.asarray(np.asarray(sel, dtype=np.int32))
+    tb = jnp.asarray(np.asarray(tables, dtype=np.float32))
+
+    def infer(x):
+        scores, pred = model.hard_forward(x, th, se, tb, num_classes)
+        return scores, pred
+
+    spec = jax.ShapeDtypeStruct((HLO_BATCH, th.shape[0]), jnp.float32)
+    lowered = jax.jit(infer).lower(spec)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def export_golden_pen(path, x_test, y_test, thresholds_q, frac_bits, sel, tables, num_classes, n=512):
+    """Golden vectors for PEN hardware: integer inputs + expected scores/pred."""
+    x_q = encoding.quantize_inputs(x_test[:n], frac_bits)
+    xi = encoding.input_ints(x_test[:n], frac_bits)
+    scores, pred = model.hard_forward(
+        jnp.asarray(x_q), jnp.asarray(thresholds_q), jnp.asarray(sel), jnp.asarray(tables), num_classes, use_ref=True
+    )
+    scores = np.asarray(scores)
+    pred = np.asarray(pred)
+    with open(path, "w") as f:
+        f.write(f"# frac_bits={frac_bits} format=pen\n")
+        cols = ",".join(f"x{i}" for i in range(xi.shape[1]))
+        scols = ",".join(f"s{i}" for i in range(num_classes))
+        f.write(f"{cols},{scols},pred,label\n")
+        for i in range(xi.shape[0]):
+            f.write(
+                ",".join(str(v) for v in xi[i])
+                + ","
+                + ",".join(str(v) for v in scores[i])
+                + f",{pred[i]},{int(y_test[i])}\n"
+            )
+
+
+def export_golden_ten(path, x_test, y_test, thresholds, sel, tables, num_classes, n=512):
+    """Golden vectors for TEN hardware: used-bit hex strings + scores/pred."""
+    used = model.used_bits(sel)
+    bits = np.asarray(encoding.encode(jnp.asarray(x_test[:n]), jnp.asarray(thresholds)))
+    scores, pred = model.hard_forward(
+        jnp.asarray(x_test[:n]), jnp.asarray(thresholds), jnp.asarray(sel), jnp.asarray(tables), num_classes, use_ref=True
+    )
+    scores = np.asarray(scores)
+    pred = np.asarray(pred)
+    with open(path, "w") as f:
+        f.write(f"# format=ten used_bits={len(used)}\n")
+        scols = ",".join(f"s{i}" for i in range(num_classes))
+        f.write(f"bits_hex,{scols},pred,label\n")
+        for i in range(n):
+            ub = bits[i, used].astype(np.int64)
+            mask = 0
+            for j, v in enumerate(ub):
+                if v:
+                    mask |= 1 << j
+            hexlen = (len(used) + 3) // 4
+            f.write(f"{mask:0{hexlen}x}," + ",".join(str(v) for v in scores[i]) + f",{pred[i]},{int(y_test[i])}\n")
+
+
+# ------------------------------------------------------------------- driver
+def budget(cfg_name: str, quick: bool):
+    """(base_steps, batch, ft_steps, sweep_bws)."""
+    if quick:
+        return 60, 64, 20, [6, 8]
+    return {
+        "sm-10": (700, 256, 150, [4, 5, 6, 7, 8, 9, 10]),
+        "sm-50": (700, 256, 150, [4, 5, 6, 7, 8, 9, 10]),
+        "md-360": (500, 192, 120, [5, 6, 7, 8, 9, 10]),
+        "lg-2400": (300, 96, 90, [6, 7, 8, 9, 10]),
+    }[cfg_name]
+
+
+def run_config(cfg, xt, yt, xe, ye, out, quick):
+    steps, batch, ft_steps, sweep_bws = budget(cfg.name, quick)
+    th = encoding.distributive_thresholds(xt, cfg.thermo_bits)
+    th_uni = encoding.uniform_thresholds(cfg.num_features, cfg.thermo_bits)
+
+    t0 = time.time()
+    # Small models are cheap but land in bad local optima more often (the
+    # mapping is a hard discrete problem at 60 pins); use random restarts.
+    restarts = 3 if cfg.num_luts <= 50 and not quick else 1
+    params, hist, base_acc = None, None, -1.0
+    for r in range(restarts):
+        p_r, h_r = train.train(
+            cfg, xt, yt, xe, ye, th, steps=steps, batch=batch,
+            seed=7 + 11 * r, log_every=max(1, steps // 4),
+        )
+        acc_r = train.evaluate_hard(p_r, xe, ye, th, cfg, max_n=len(xe))
+        print(f"[{cfg.name}] restart {r}: acc={acc_r:.4f}")
+        if acc_r > base_acc:
+            params, hist, base_acc = p_r, h_r, acc_r
+    print(f"[{cfg.name}] TEN baseline acc={base_acc:.4f} ({time.time()-t0:.0f}s)")
+
+    sel = np.asarray(model.hard_mapping(params["w"]))
+    tables = model.binarize_tables(params["theta"])
+
+    # --- PTQ (DWN-PEN): smallest n meeting baseline without fine-tuning.
+    pen_bw, ptq_accs = quantize.ptq_sweep(params, th, xe, ye, cfg, base_acc, tol=0.004)
+    pen_acc = ptq_accs[pen_bw]
+    print(f"[{cfg.name}] PEN: frac_bits={pen_bw} acc={pen_acc:.4f}")
+
+    # --- bit-width sweep with fine-tuning (Fig 5 + PEN+FT selection).
+    sweep = []
+    ft_models = {}
+    for bw in sweep_bws:
+        acc_pen = ptq_accs.get(bw)
+        if acc_pen is None:
+            acc_pen = quantize.quantized_accuracy(params, th, bw, xe, ye, cfg)
+        ftp, th_q, acc_ft = quantize.fine_tune(
+            params, th, bw, cfg, xt, yt, xe, ye, steps=ft_steps
+        )
+        sweep.append({"frac_bits": bw, "acc_pen": float(acc_pen), "acc_penft": float(acc_ft)})
+        ft_models[bw] = (ftp, th_q, acc_ft)
+        print(f"[{cfg.name}] bw={bw}: PEN {acc_pen:.4f} -> PEN+FT {acc_ft:.4f}")
+
+    # PEN+FT bit-width: smallest bw whose fine-tuned accuracy recovers baseline.
+    penft_bw = None
+    for bw in sorted(b["frac_bits"] for b in sweep):
+        acc = next(s["acc_penft"] for s in sweep if s["frac_bits"] == bw)
+        if acc >= base_acc - 0.004:
+            penft_bw = bw
+            break
+    if penft_bw is None:
+        penft_bw = max(s["frac_bits"] for s in sweep)
+    ftp, th_q_ft, penft_acc = ft_models[penft_bw]
+    sel_ft = np.asarray(model.hard_mapping(ftp["w"]))
+    tables_ft = model.binarize_tables(ftp["theta"])
+    print(f"[{cfg.name}] PEN+FT: frac_bits={penft_bw} acc={penft_acc:.4f}")
+
+    th_q_pen = encoding.quantize_thresholds(th, pen_bw)
+
+    # ----------------------------------------------------------- exports
+    mj = {
+        "name": cfg.name,
+        "num_luts": cfg.num_luts,
+        "thermo_bits": cfg.thermo_bits,
+        "num_features": cfg.num_features,
+        "num_classes": cfg.num_classes,
+        "lut_k": cfg.lut_k,
+        "sel": sel.tolist(),
+        "tables_hex": tables_to_hex(tables),
+        "thresholds": np.asarray(th).tolist(),
+        "uniform_thresholds": np.asarray(th_uni).tolist(),
+        "history": hist,
+        "variants": {
+            "ten": {"acc": float(base_acc)},
+            "pen": {
+                "frac_bits": int(pen_bw),
+                "acc": float(pen_acc),
+                "threshold_ints": encoding.threshold_ints(th_q_pen, pen_bw).tolist(),
+            },
+            "penft": {
+                "frac_bits": int(penft_bw),
+                "acc": float(penft_acc),
+                "threshold_ints": encoding.threshold_ints(th_q_ft, penft_bw).tolist(),
+                "sel": sel_ft.tolist(),
+                "tables_hex": tables_to_hex(tables_ft),
+            },
+        },
+        "bw_sweep": sweep,
+    }
+    with open(f"{out}/models/{cfg.name}.json", "w") as f:
+        json.dump(mj, f)
+
+    n_hlo = export_hlo(
+        f"{out}/hlo/{cfg.name}_penft.hlo.txt",
+        encoding.quantize_thresholds(th, penft_bw),
+        sel_ft,
+        tables_ft,
+        cfg.num_classes,
+    )
+    print(f"[{cfg.name}] HLO exported ({n_hlo} chars)")
+
+    export_golden_pen(
+        f"{out}/golden/{cfg.name}_penft.csv", xe, ye, th_q_ft, penft_bw, sel_ft, tables_ft, cfg.num_classes
+    )
+    export_golden_pen(
+        f"{out}/golden/{cfg.name}_pen.csv", xe, ye, th_q_pen, pen_bw, sel, tables, cfg.num_classes
+    )
+    export_golden_ten(f"{out}/golden/{cfg.name}_ten.csv", xe, ye, th, sel, tables, cfg.num_classes)
+    return mj
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="sm-10,sm-50,md-360,lg-2400")
+    ap.add_argument("--quick", action="store_true", default=os.environ.get("QUICK") == "1")
+    args = ap.parse_args()
+
+    out = args.out
+    for d in ("", "/data", "/models", "/hlo", "/golden", "/results"):
+        os.makedirs(out + d, exist_ok=True)
+
+    n_train, n_test = (6000, 2000) if args.quick else (40_000, 10_000)
+    xt, yt, xe, ye = jsc_data.load_jsc(n_train, n_test)
+    jsc_data.to_csv(f"{out}/data/jsc_train.csv", xt, yt)
+    jsc_data.to_csv(f"{out}/data/jsc_test.csv", xe, ye)
+    print(f"dataset: train={len(xt)} test={len(xe)}")
+
+    # Merge into an existing manifest so configs can be (re)trained
+    # independently without clobbering the rest.
+    manifest = {"configs": [], "quick": args.quick, "hlo_batch": HLO_BATCH}
+    mpath = f"{out}/manifest.json"
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            manifest = json.load(f)
+        manifest["quick"] = args.quick
+    for name in args.configs.split(","):
+        cfg = model.CONFIGS[name.strip()]
+        mj = run_config(cfg, xt, yt, xe, ye, out, args.quick)
+        entry = {
+            "name": cfg.name,
+            "model": f"models/{cfg.name}.json",
+            "hlo_penft": f"hlo/{cfg.name}_penft.hlo.txt",
+            "acc_ten": mj["variants"]["ten"]["acc"],
+            "acc_penft": mj["variants"]["penft"]["acc"],
+            "penft_bits": mj["variants"]["penft"]["frac_bits"],
+        }
+        manifest["configs"] = [c for c in manifest["configs"] if c["name"] != cfg.name] + [entry]
+        with open(mpath, "w") as f:
+            json.dump(manifest, f, indent=1)
+    print("AOT export complete")
+
+
+if __name__ == "__main__":
+    main()

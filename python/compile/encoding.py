@@ -1,0 +1,92 @@
+"""Thermometer encodings for DWN inputs.
+
+Two threshold placement schemes (paper Fig. 2):
+
+* **distributive** — percentile-based thresholds (Bacellar et al., ESANN'22):
+  threshold i of feature f is the (i+1)/(T+1) quantile of the training
+  distribution of feature f. Non-uniform; each threshold needs its own
+  comparator in hardware (paper Fig. 3) but yields higher accuracy.
+* **uniform** — T evenly spaced thresholds over [-1, 1).
+
+A value x encodes to T bits: bit_i = (x >= t_i). Thresholds are kept sorted
+ascending so the code is a valid thermometer (prefix of ones ... actually a
+suffix: bits for thresholds below x are 1).
+
+Post-training quantization (paper §III): thresholds are quantized to signed
+fixed-point (1, n) — one sign bit, n fractional bits — i.e. integer grid
+k / 2^n with k in [-2^n, 2^n - 1]. Inputs are quantized to the same grid
+(floor), matching the positional-encoded-number (PEN) hardware interface.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def distributive_thresholds(train_x: np.ndarray, bits: int) -> np.ndarray:
+    """Percentile thresholds, shape [F, bits], per feature, sorted ascending.
+
+    train_x: [N, F] training features (already normalised to [-1, 1)).
+    """
+    qs = (np.arange(bits, dtype=np.float64) + 1.0) / (bits + 1.0)
+    th = np.quantile(train_x.astype(np.float64), qs, axis=0).T  # [F, bits]
+    return np.sort(th, axis=1).astype(np.float32)
+
+
+def uniform_thresholds(num_features: int, bits: int) -> np.ndarray:
+    """Evenly spaced thresholds over [-1, 1), shape [F, bits]."""
+    th = -1.0 + 2.0 * (np.arange(bits, dtype=np.float64) + 1.0) / (bits + 1.0)
+    return np.tile(th.astype(np.float32), (num_features, 1))
+
+
+def encode(x, thresholds):
+    """Hard thermometer encoding. x: [B, F]; thresholds: [F, T] -> [B, F*T] in {0,1}."""
+    x = jnp.asarray(x)
+    th = jnp.asarray(thresholds)
+    bits = (x[:, :, None] >= th[None, :, :]).astype(jnp.float32)
+    return bits.reshape(x.shape[0], -1)
+
+
+def encode_soft(x, thresholds, tau: float):
+    """Differentiable encoding: sigmoid((x - t)/tau), same shape contract as encode."""
+    x = jnp.asarray(x)
+    th = jnp.asarray(thresholds)
+    bits = _sigmoid((x[:, :, None] - th[None, :, :]) / tau)
+    return bits.reshape(x.shape[0], -1)
+
+
+def _sigmoid(z):
+    return 1.0 / (1.0 + jnp.exp(-z))
+
+
+def quantize_thresholds(th: np.ndarray, frac_bits: int) -> np.ndarray:
+    """Quantize thresholds to signed fixed-point (1, n) — paper §III PTQ.
+
+    Returns float thresholds on the k/2^n grid, k in [-2^n, 2^n - 1].
+    """
+    scale = float(1 << frac_bits)
+    k = np.round(th.astype(np.float64) * scale)
+    k = np.clip(k, -scale, scale - 1.0)
+    return (k / scale).astype(np.float32)
+
+
+def threshold_ints(th_q: np.ndarray, frac_bits: int) -> np.ndarray:
+    """Integer representation k = t * 2^n of quantized thresholds (int32)."""
+    scale = float(1 << frac_bits)
+    return np.round(th_q.astype(np.float64) * scale).astype(np.int32)
+
+
+def quantize_inputs(x: np.ndarray, frac_bits: int) -> np.ndarray:
+    """Quantize inputs to the PEN fixed-point grid (floor), staying in [-1, 1)."""
+    scale = float(1 << frac_bits)
+    k = np.floor(np.asarray(x, dtype=np.float64) * scale)
+    k = np.clip(k, -scale, scale - 1.0)
+    return (k / scale).astype(np.float32)
+
+
+def input_ints(x: np.ndarray, frac_bits: int) -> np.ndarray:
+    """Integer PEN representation of quantized inputs (int32), k in [-2^n, 2^n-1]."""
+    scale = float(1 << frac_bits)
+    k = np.floor(np.asarray(x, dtype=np.float64) * scale)
+    return np.clip(k, -scale, scale - 1.0).astype(np.int32)

@@ -1,0 +1,50 @@
+"""Pallas kernel: DWN LUT-layer evaluation (L1 hot-spot #2).
+
+FPGA->TPU mapping: each hardware LUT6 (Fig. 1) is a 64-entry truth table.
+On TPU we keep all L tables ([L, 64] f32; 600 KiB for lg-2400) and the
+selection matrix ([L, 6] i32) resident in VMEM and tile the batch. The
+address computation (6 gathered bits -> integer 0..63) is a tiny dense
+matvec against the powers-of-two vector; the table lookup is a row-wise
+gather, which interpret-mode lowers to plain HLO gather ops.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 128
+
+
+def _lut_kernel(bits_ref, sel_ref, tab_ref, out_ref):
+    bits = bits_ref[...]  # [TB, N]
+    sel = sel_ref[...]  # [L, K]
+    tables = tab_ref[...]  # [L, 2^K]
+    k = sel.shape[1]
+    gathered = bits[:, sel]  # [TB, L, K]
+    pows = (2 ** jnp.arange(k, dtype=jnp.int32))[None, None, :]
+    addr = jnp.sum(gathered.astype(jnp.int32) * pows, axis=-1)  # [TB, L]
+    tb = jnp.broadcast_to(tables[None], (bits.shape[0],) + tables.shape)
+    out_ref[...] = jnp.take_along_axis(tb, addr[:, :, None], axis=2)[:, :, 0]
+
+
+def lut_layer(bits, sel, tables, block_b: int = DEFAULT_BLOCK_B):
+    """bits [B, N] f32{0,1}, sel [L, K] i32, tables [L, 2^K] f32 -> [B, L] f32."""
+    b, n = bits.shape
+    l, k = sel.shape
+    if b % block_b != 0:
+        block_b = b
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _lut_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, l), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+            pl.BlockSpec((l, k), lambda i: (0, 0)),
+            pl.BlockSpec((l, tables.shape[1]), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, l), lambda i: (i, 0)),
+        interpret=True,
+    )(bits, sel, tables)

@@ -1,0 +1,42 @@
+"""Pallas kernel: per-class popcount (L1 hot-spot #3).
+
+The hardware compressor trees (FloPoCo GPCs, paper SIV) reduce each class
+group of LUT outputs to a sum; on TPU this is a segment-sum, expressed as a
+reshape + axis reduction over the contiguous class groups. Batch-tiled like
+the other kernels.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 128
+
+
+def _popcount_kernel(outs_ref, scores_ref, *, num_classes: int):
+    outs = outs_ref[...]  # [TB, L]
+    tb, l = outs.shape
+    g = l // num_classes
+    scores_ref[...] = jnp.sum(outs.reshape(tb, num_classes, g), axis=-1).astype(jnp.int32)
+
+
+def popcount(outs, num_classes: int, block_b: int = DEFAULT_BLOCK_B):
+    """outs [B, L] f32{0,1} with L = C*G -> scores [B, C] i32."""
+    b, l = outs.shape
+    if l % num_classes != 0:
+        raise ValueError(f"L={l} not divisible by num_classes={num_classes}")
+    if b % block_b != 0:
+        block_b = b
+    grid = (b // block_b,)
+    import functools
+
+    return pl.pallas_call(
+        functools.partial(_popcount_kernel, num_classes=num_classes),
+        out_shape=jax.ShapeDtypeStruct((b, num_classes), jnp.int32),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b, l), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_b, num_classes), lambda i: (i, 0)),
+        interpret=True,
+    )(outs)

@@ -1,0 +1,65 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Shapes (contract shared with the pallas kernels and the rust netlist):
+  x          [B, F]      float32 in [-1, 1)
+  thresholds [F, T]      float32, sorted ascending per feature
+  bits       [B, F*T]    float32 in {0, 1}
+  sel        [L, K]      int32 indices into the F*T bit vector (K = LUT fan-in)
+  tables     [L, 2**K]   float32 in {0, 1} (binarised truth tables)
+  scores     [B, C]      int32 per-class popcount
+  pred       [B]         int32 argmax (ties -> lower class index)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+POWS = [1, 2, 4, 8, 16, 32, 64, 128]
+
+
+def encode_ref(x, thresholds):
+    """Thermometer encode: bit (f,t) = x[:,f] >= thresholds[f,t]."""
+    b = (x[:, :, None] >= thresholds[None, :, :]).astype(jnp.float32)
+    return b.reshape(x.shape[0], -1)
+
+
+def lut_layer_ref(bits, sel, tables):
+    """Evaluate L LUTs: out[b,l] = tables[l, addr(b,l)].
+
+    addr(b,l) = sum_j bits[b, sel[l,j]] << j  (pin j is address bit j).
+    """
+    k = sel.shape[1]
+    gathered = bits[:, sel]  # [B, L, K]
+    pows = jnp.asarray(POWS[:k], dtype=jnp.int32)
+    addr = jnp.sum(gathered.astype(jnp.int32) * pows[None, None, :], axis=-1)  # [B, L]
+    return _gather_tables(tables, addr)
+
+
+def _gather_tables(tables, addr):
+    # tables [L, 2^K], addr [B, L] -> out [B, L]
+    return jnp.take_along_axis(
+        jnp.broadcast_to(tables[None], (addr.shape[0],) + tables.shape),
+        addr[:, :, None],
+        axis=2,
+    )[:, :, 0]
+
+
+def popcount_ref(outs, num_classes):
+    """Per-class popcount: outs [B, L] with L = C*G contiguous groups -> [B, C]."""
+    b, l = outs.shape
+    g = l // num_classes
+    return jnp.sum(outs.reshape(b, num_classes, g), axis=-1).astype(jnp.int32)
+
+
+def argmax_ref(scores):
+    """Argmax over classes; jnp.argmax picks the first (lowest index) maximum,
+    matching the paper's tie rule (Fig. 4: ties -> lower class index)."""
+    return jnp.argmax(scores, axis=-1).astype(jnp.int32)
+
+
+def dwn_forward_ref(x, thresholds, sel, tables, num_classes):
+    """Full hard inference path: encode -> LUT layer -> popcount -> argmax."""
+    bits = encode_ref(x, thresholds)
+    outs = lut_layer_ref(bits, sel, tables)
+    scores = popcount_ref(outs, num_classes)
+    return scores, argmax_ref(scores)

@@ -1,0 +1,49 @@
+"""Pallas kernel: thermometer encoding (L1 hot-spot #1).
+
+TPU adaptation of the paper's comparator array (Fig. 3): the F*T comparators
+become one broadcast compare of an input tile against the [F, T] threshold
+matrix resident in VMEM. BlockSpec tiles the batch dimension; the threshold
+matrix (16 x 200 f32 = 12.5 KiB at paper scale) fits VMEM whole, so each
+grid step streams one batch tile HBM->VMEM and writes the encoded bits back.
+
+interpret=True everywhere: real-TPU lowering would emit a Mosaic custom-call
+the CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_B = 128
+
+
+def _encode_kernel(x_ref, th_ref, out_ref):
+    x = x_ref[...]  # [TB, F]
+    th = th_ref[...]  # [F, T]
+    bits = (x[:, :, None] >= th[None, :, :]).astype(jnp.float32)
+    out_ref[...] = bits.reshape(x.shape[0], -1)
+
+
+def thermometer_encode(x, thresholds, block_b: int = DEFAULT_BLOCK_B):
+    """x [B, F] f32, thresholds [F, T] f32 -> bits [B, F*T] f32 in {0,1}.
+
+    B must be a multiple of block_b (callers pad); F, T are static.
+    """
+    b, f = x.shape
+    t = thresholds.shape[1]
+    if b % block_b != 0:
+        block_b = b  # fall back to a single tile for odd batches
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _encode_kernel,
+        out_shape=jax.ShapeDtypeStruct((b, f * t), jnp.float32),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, f), lambda i: (i, 0)),
+            pl.BlockSpec((f, t), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, f * t), lambda i: (i, 0)),
+        interpret=True,
+    )(x, thresholds)

@@ -1,0 +1,194 @@
+"""LogicNets-lite baseline (Umuroglu et al., FPL'20): a sparse, activation-
+quantized MLP whose neurons enumerate to LUT truth tables.
+
+Scaled-down but faithful to the idea: each neuron has a fixed random sparse
+fan-in of F inputs, activations are quantized to A bits, so a neuron is a
+lookup table over F*A input bits — with F*A <= 6 every neuron output bit is
+exactly one physical LUT6 (the regime LogicNets targets; larger F*A grows
+hardware exponentially, the scalability wall the paper's §II cites).
+
+Training: straight-through quantization, Adam, same synthetic JSC data as
+the DWN models. Export: per-neuron truth tables enumerated exhaustively
+(2^(F*A) entries) into artifacts/models/logicnets-<name>.json for the rust
+hardware generator (rust/src/baselines/logicnets.rs).
+
+Run: python -m compile.logicnets --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as jsc_data
+from . import train as dwn_train
+
+NUM_CLASSES = 5
+
+
+def quantize_ste(x, bits: float, lo: float, hi: float):
+    """Uniform quantization with a straight-through gradient."""
+    levels = 2.0**bits - 1.0
+    xc = jnp.clip(x, lo, hi)
+    q = jnp.round((xc - lo) / (hi - lo) * levels) / levels * (hi - lo) + lo
+    return xc + jax.lax.stop_gradient(q - xc)
+
+
+class LogicNetsConfig:
+    def __init__(self, name="jsc-lite", hidden=(32,), fanin=3, abits=2, ibits=2, seed=11):
+        assert fanin * abits <= 6, "neuron must fit one LUT6 per output bit"
+        self.name = name
+        self.hidden = tuple(hidden)
+        self.fanin = fanin
+        self.abits = abits
+        self.ibits = ibits  # input-feature quantization bits
+        self.seed = seed
+
+    @property
+    def layer_sizes(self):
+        return (16,) + self.hidden + (NUM_CLASSES,)
+
+
+def init(cfg: LogicNetsConfig):
+    rng = np.random.default_rng(cfg.seed)
+    params = []
+    masks = []
+    sizes = cfg.layer_sizes
+    for li in range(len(sizes) - 1):
+        n_in, n_out = sizes[li], sizes[li + 1]
+        sel = np.stack([rng.choice(n_in, size=cfg.fanin, replace=False) for _ in range(n_out)])
+        w = rng.normal(0, 0.5, size=(n_out, cfg.fanin)).astype(np.float32)
+        b = np.zeros(n_out, dtype=np.float32)
+        masks.append(sel.astype(np.int32))
+        params.append({"w": jnp.asarray(w), "b": jnp.asarray(b)})
+    return params, masks
+
+
+def forward(params, masks, x, cfg: LogicNetsConfig, hard=False):
+    """x in [-1,1); activations quantized to abits in [-1,1)."""
+    h = quantize_ste(x, cfg.ibits, -1.0, 1.0)
+    for li, (p, sel) in enumerate(zip(params, masks)):
+        gathered = h[:, sel]  # [B, n_out, fanin]
+        z = jnp.sum(gathered * p["w"][None], axis=-1) + p["b"][None]
+        if li < len(params) - 1:
+            h = jnp.tanh(z)
+            h = quantize_ste(h, cfg.abits, -1.0, 1.0)
+        else:
+            h = z  # final layer: real-valued class scores
+    return h
+
+
+def train(cfg: LogicNetsConfig, xt, yt, xe, ye, steps=500, batch=256, lr=0.01, verbose=True):
+    params, masks = init(cfg)
+    opt = dwn_train.adam_init(params)
+    rng = np.random.default_rng(cfg.seed)
+
+    @jax.jit
+    def step_fn(params, opt, xb, yb, cur_lr):
+        def loss_fn(p):
+            logits = forward(p, masks, xb, cfg)
+            return dwn_train.cross_entropy(logits * 4.0, yb)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = dwn_train.adam_step(params, grads, opt, cur_lr)
+        return params, opt, loss
+
+    for s in range(steps):
+        idx = rng.integers(0, len(xt), size=batch)
+        cur_lr = dwn_train.step_lr(lr, s, int(steps * 0.7), 0.1)
+        params, opt, loss = step_fn(params, opt, jnp.asarray(xt[idx]), jnp.asarray(yt[idx]), cur_lr)
+        if verbose and s % max(1, steps // 4) == 0:
+            acc = accuracy(params, masks, xe[:2000], ye[:2000], cfg)
+            print(f"[logicnets {cfg.name}] step {s} loss {float(loss):.4f} acc {acc:.4f}", flush=True)
+    return params, masks
+
+
+def accuracy(params, masks, x, y, cfg):
+    logits = forward(params, masks, jnp.asarray(x), cfg)
+    pred = np.asarray(jnp.argmax(logits, axis=-1))
+    return float((pred == y).mean())
+
+
+# ------------------------------------------------------------------ export
+def act_codes(bits: int) -> np.ndarray:
+    """The 2^bits quantized activation values in [-1, 1)."""
+    levels = 2**bits - 1
+    return np.array([-1.0 + 2.0 * i / levels for i in range(levels + 1)], dtype=np.float64)
+
+
+def enumerate_neuron(w, b, sel_codes, out_codes, is_last):
+    """Truth table of one neuron: input = fanin digits (each abits wide),
+    output = index into out_codes (or raw quantized score for the last
+    layer). Returns int array of length prod(len(sel_codes))."""
+    fanin = len(w)
+    n_codes = len(sel_codes)
+    total = n_codes**fanin
+    out = np.zeros(total, dtype=np.int64)
+    for addr in range(total):
+        a = addr
+        z = b
+        for j in range(fanin):
+            digit = a % n_codes
+            a //= n_codes
+            z += w[j] * sel_codes[digit]
+        if is_last:
+            out[addr] = int(np.round(z * 1000))  # milli-units, argmax-safe
+        else:
+            v = np.tanh(z)
+            # nearest quantized activation index
+            out[addr] = int(np.argmin(np.abs(out_codes - np.clip(v, -1, 1))))
+    return out
+
+
+def export(cfg: LogicNetsConfig, params, masks, acc, out_dir: str):
+    in_codes = act_codes(cfg.ibits)
+    hid_codes = act_codes(cfg.abits)
+    layers = []
+    sizes = cfg.layer_sizes
+    for li, (p, sel) in enumerate(zip(params, masks)):
+        is_last = li == len(params) - 1
+        w = np.asarray(p["w"])
+        b = np.asarray(p["b"])
+        codes_in = in_codes if li == 0 else hid_codes
+        neurons = []
+        for n in range(sizes[li + 1]):
+            table = enumerate_neuron(w[n], float(b[n]), codes_in, hid_codes, is_last)
+            neurons.append({"sel": sel[n].tolist(), "table": table.tolist()})
+        layers.append({"is_last": is_last, "neurons": neurons})
+    doc = {
+        "name": cfg.name,
+        "fanin": cfg.fanin,
+        "abits": cfg.abits,
+        "ibits": cfg.ibits,
+        "layer_sizes": list(sizes),
+        "acc": acc,
+        "layers": layers,
+    }
+    path = f"{out_dir}/models/logicnets-{cfg.name}.json"
+    with open(path, "w") as f:
+        json.dump(doc, f)
+    print(f"[logicnets {cfg.name}] exported {path} (acc {acc:.4f})")
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=500)
+    args = ap.parse_args()
+    xt, yt, xe, ye = jsc_data.load_jsc(40_000, 10_000)
+    for cfg in [
+        LogicNetsConfig("jsc-s", hidden=(16,), fanin=3, abits=2, ibits=2),
+        LogicNetsConfig("jsc-m", hidden=(32, 16), fanin=3, abits=2, ibits=2),
+    ]:
+        params, masks = train(cfg, xt, yt, xe, ye, steps=args.steps)
+        acc = accuracy(params, masks, xe, ye, cfg)
+        export(cfg, params, masks, acc, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""L2: the DWN model (Bacellar et al. 2024), JAX reimplementation.
+
+Architecture (paper Fig. 1): thermometer encoders -> one LUT layer of L
+6-input LUTs -> per-class popcount -> argmax. Two forward paths:
+
+* ``soft_forward`` — differentiable relaxation used for training:
+    - soft thermometer bits  sigmoid((x - t)/tau_enc)
+    - learnable mapping      straight-through softmax over encoder outputs
+                             (hard one-hot forward, soft softmax backward)
+    - differentiable LUTs    multilinear interpolation of a real-valued
+                             table over the 6 soft address bits
+    - class scores           mean of sigmoid(LUT values) per class group
+* ``hard_forward`` — the discrete network the hardware implements; built on
+  the L1 pallas kernels (or the jnp oracles, ``use_ref=True``). This is the
+  path AOT-lowered to HLO for the rust runtime, and the golden model the
+  netlist simulator is checked against.
+
+Model configurations follow the paper (sm-10 / sm-50 / md-360 / lg-2400,
+single LUT layer, 5 JSC classes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import encoding
+from .kernels import ref as kref
+from .kernels.lut_layer import lut_layer
+from .kernels.popcount import popcount
+from .kernels.thermometer import thermometer_encode
+
+NUM_CLASSES = 5
+NUM_FEATURES = 16
+LUT_K = 6
+
+
+@dataclasses.dataclass(frozen=True)
+class DwnConfig:
+    """Static hyper-parameters of one DWN variant."""
+
+    name: str
+    num_luts: int  # L; must be divisible by NUM_CLASSES
+    thermo_bits: int  # T per feature (paper uses 200; we prune unused bits)
+    num_features: int = NUM_FEATURES
+    num_classes: int = NUM_CLASSES
+    lut_k: int = LUT_K
+
+    @property
+    def num_bits(self) -> int:
+        return self.num_features * self.thermo_bits
+
+    @property
+    def pins(self) -> int:
+        return self.num_luts * self.lut_k
+
+
+# The paper's four JSC variants. thermo_bits is reduced from the paper's 200
+# to keep single-core CPU training tractable; hardware cost only depends on
+# *used* (connected) thresholds, which the generator prunes identically.
+CONFIGS = {
+    "sm-10": DwnConfig("sm-10", 10, 128),
+    "sm-50": DwnConfig("sm-50", 50, 128),
+    "md-360": DwnConfig("md-360", 360, 96),
+    "lg-2400": DwnConfig("lg-2400", 2400, 64),
+}
+
+
+def init_params(cfg: DwnConfig, key) -> dict:
+    """Mapping logits W [pins, num_bits] and real-valued tables theta [L, 64]."""
+    k1, k2 = jax.random.split(key)
+    w = jax.random.normal(k1, (cfg.pins, cfg.num_bits), dtype=jnp.float32) * 0.01
+    theta = jax.random.normal(k2, (cfg.num_luts, 1 << cfg.lut_k), dtype=jnp.float32) * 0.1
+    return {"w": w, "theta": theta}
+
+
+def hard_mapping(w, lut_k: int = LUT_K) -> jnp.ndarray:
+    """Discrete pin selection: argmax over encoder outputs. [P, N] -> [L, K]."""
+    sel = jnp.argmax(w, axis=-1).astype(jnp.int32)
+    return sel.reshape(-1, lut_k)
+
+
+def _st_select(bits, w, tau_map: float):
+    """Straight-through mapping: forward uses the argmax bit, backward the
+    softmax mixture. bits [B, N], w [P, N] -> [B, P]."""
+    p = jax.nn.softmax(w / tau_map, axis=-1)
+    soft = bits @ p.T  # [B, P]
+    hard = bits[:, jnp.argmax(w, axis=-1)]  # [B, P]
+    return soft + jax.lax.stop_gradient(hard - soft)
+
+
+def _multilinear_lut(theta, s):
+    """Multilinear interpolation of tables over soft address bits.
+
+    theta [L, 2^K] real-valued, s [B, L, K] soft bits -> [B, L] real value.
+    Pin j is address bit j (LSB-first), matching kref.lut_layer_ref.
+    """
+    b = s.shape[0]
+    t = jnp.broadcast_to(theta[None], (b,) + theta.shape)  # [B, L, 2^K]
+    k = s.shape[-1]
+    for j in range(k - 1, -1, -1):
+        half = t.shape[-1] // 2
+        lo = t[..., :half]  # bit j = 0
+        hi = t[..., half:]  # bit j = 1
+        sj = s[..., j : j + 1]
+        t = lo * (1.0 - sj) + hi * sj
+    return t[..., 0]
+
+
+def soft_forward(params, x, thresholds, cfg: DwnConfig, tau_enc=0.03, tau_map=0.3):
+    """Differentiable forward -> class logits [B, C]."""
+    bits = encoding.encode_soft(x, thresholds, tau_enc)  # [B, N]
+    sel_bits = _st_select(bits, params["w"], tau_map)  # [B, P]
+    s = sel_bits.reshape(x.shape[0], cfg.num_luts, cfg.lut_k)
+    vals = _multilinear_lut(params["theta"], s)  # [B, L]
+    outs = jax.nn.sigmoid(4.0 * vals)
+    g = cfg.num_luts // cfg.num_classes
+    scores = jnp.mean(outs.reshape(-1, cfg.num_classes, g), axis=-1)
+    return scores * 12.0  # temperature for cross-entropy
+
+
+def binarize_tables(theta) -> np.ndarray:
+    """Hardware truth tables: entry >= 0 -> 1."""
+    return (np.asarray(theta) >= 0.0).astype(np.float32)
+
+
+def hard_forward(x, thresholds, sel, tables, num_classes=NUM_CLASSES, use_ref=False):
+    """Discrete inference (the hardware's function). Returns (scores, pred)."""
+    if use_ref:
+        return kref.dwn_forward_ref(x, thresholds, sel, tables, num_classes)
+    bits = thermometer_encode(x, thresholds)
+    outs = lut_layer(bits, sel, tables)
+    scores = popcount(outs, num_classes)
+    return scores, kref.argmax_ref(scores)
+
+
+def hard_accuracy(x, y, thresholds, sel, tables, num_classes=NUM_CLASSES, batch=2048):
+    """Test-set accuracy of the discrete network (jnp oracle path, batched)."""
+    n = x.shape[0]
+    correct = 0
+    for i in range(0, n, batch):
+        xb = jnp.asarray(x[i : i + batch])
+        _, pred = kref.dwn_forward_ref(xb, thresholds, sel, tables, num_classes)
+        correct += int(jnp.sum(pred == jnp.asarray(y[i : i + batch])))
+    return correct / n
+
+
+def used_bits(sel: np.ndarray) -> np.ndarray:
+    """Sorted unique encoder-output indices actually connected to the LUT
+    layer — the only thresholds that need comparators in hardware."""
+    return np.unique(np.asarray(sel).ravel())

@@ -1,0 +1,72 @@
+"""Post-training quantization + fine-tuning of thermometer thresholds.
+
+Paper §III: thresholds are quantized to signed fixed-point (1, n); n is found
+by progressively reducing the fractional bits until the quantized model drops
+below its baseline accuracy (PTQ -> **DWN-PEN**). Fine-tuning then recovers
+accuracy at still lower n (**DWN-PEN+FT**): thresholds stay frozen on the
+quantized grid while LUT contents and mapping are re-trained for a few
+epochs (Adam, StepLR as in the paper).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import encoding, model, train
+
+
+def quantized_accuracy(params, thresholds, frac_bits, x_test, y_test, cfg, max_n=6000):
+    """Hard accuracy with thresholds *and inputs* on the (1, n) grid."""
+    th_q = encoding.quantize_thresholds(np.asarray(thresholds), frac_bits)
+    x_q = encoding.quantize_inputs(x_test[:max_n], frac_bits)
+    import jax.numpy as jnp
+
+    sel = np.asarray(model.hard_mapping(params["w"]))
+    tables = model.binarize_tables(params["theta"])
+    return model.hard_accuracy(
+        x_q, y_test[:max_n], jnp.asarray(th_q), jnp.asarray(sel), jnp.asarray(tables), cfg.num_classes
+    )
+
+
+def ptq_sweep(params, thresholds, x_test, y_test, cfg, baseline_acc, tol=0.002, max_bits=12, min_bits=3):
+    """Find the smallest n with acc(n) >= baseline - tol (paper's PTQ rule).
+
+    Returns (best_n, {n: acc}).
+    """
+    accs = {}
+    best = max_bits
+    for n in range(max_bits, min_bits - 1, -1):
+        acc = quantized_accuracy(params, thresholds, n, x_test, y_test, cfg)
+        accs[n] = acc
+        if acc >= baseline_acc - tol:
+            best = n
+        else:
+            break
+    return best, accs
+
+
+def fine_tune(params, thresholds, frac_bits, cfg, x_train, y_train, x_test, y_test, steps=120, lr=0.001, verbose=False):
+    """PEN+FT: freeze quantized thresholds, re-train LUTs + mapping.
+
+    Training *data* is also quantized to the input grid so the model adapts
+    to the PEN interface it will see in hardware.
+    """
+    th_q = encoding.quantize_thresholds(np.asarray(thresholds), frac_bits)
+    x_train_q = encoding.quantize_inputs(x_train, frac_bits)
+    x_test_q = encoding.quantize_inputs(x_test, frac_bits)
+    ft_params, _ = train.train(
+        cfg,
+        x_train_q,
+        y_train,
+        x_test_q,
+        y_test,
+        th_q,
+        steps=steps,
+        lr=lr,
+        params={k: v for k, v in params.items()},
+        lr_step_size=max(1, int(steps * 0.6)),
+        log_every=max(1, steps // 2),
+        verbose=verbose,
+    )
+    acc = quantized_accuracy(ft_params, thresholds, frac_bits, x_test, y_test, cfg)
+    return ft_params, th_q, acc

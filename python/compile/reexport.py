@@ -1,0 +1,54 @@
+"""Re-export HLO + golden artifacts from stored model JSON without retraining.
+
+Useful when only the export format changes (e.g. the print_large_constants
+fix): ``python -m compile.reexport --configs md-360,lg-2400``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from . import aot
+
+
+def model_from_json(path: str):
+    with open(path) as f:
+        return json.load(f)
+
+
+def tables_from_hex(hexes: list[str], lut_k: int) -> np.ndarray:
+    n = 1 << lut_k
+    out = np.zeros((len(hexes), n), np.float32)
+    for l, h in enumerate(hexes):
+        mask = int(h, 16)
+        for i in range(n):
+            out[l, i] = (mask >> i) & 1
+    return out
+
+
+def reexport(out: str, name: str) -> None:
+    m = model_from_json(f"{out}/models/{name}.json")
+    v = m["variants"]["penft"]
+    th_q = (np.array(v["threshold_ints"], dtype=np.float64) / (1 << v["frac_bits"])).astype(
+        np.float32
+    )
+    sel = np.array(v["sel"], dtype=np.int32)
+    tables = tables_from_hex(v["tables_hex"], m["lut_k"])
+    n = aot.export_hlo(f"{out}/hlo/{name}_penft.hlo.txt", th_q, sel, tables, m["num_classes"])
+    print(f"[{name}] re-exported HLO ({n} chars)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--configs", default="sm-10,sm-50,md-360,lg-2400")
+    args = ap.parse_args()
+    for name in args.configs.split(","):
+        reexport(args.out, name.strip())
+
+
+if __name__ == "__main__":
+    main()

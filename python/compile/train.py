@@ -1,0 +1,117 @@
+"""DWN training (paper §III): Adam, StepLR-style decay, straight-through
+gradients. Self-contained optimizer (optax is not available offline).
+
+The procedure mirrors the paper: features normalised to [-1, 1), distributive
+thermometer encoding, gradient-based learning of both the encoder->LUT
+mapping and the LUT contents, cross-entropy on the popcount scores.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data as jsc_data
+from . import encoding, model
+
+
+# ---------------------------------------------------------------- optimizer
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_step(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def step_lr(base_lr: float, step: int, step_size: int, gamma: float) -> float:
+    """StepLR(step_size, gamma) as in the paper (§III)."""
+    return base_lr * (gamma ** (step // step_size))
+
+
+# ---------------------------------------------------------------- training
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def _train_step(params, opt, x, y, thresholds, cfg, lr):
+    def loss_fn(p):
+        logits = model.soft_forward(p, x, thresholds, cfg)
+        return cross_entropy(logits, y)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    params, opt = adam_step(params, grads, opt, lr)
+    return params, opt, loss
+
+
+def evaluate_hard(params, x, y, thresholds, cfg, max_n=6000):
+    sel = np.asarray(model.hard_mapping(params["w"]))
+    tables = model.binarize_tables(params["theta"])
+    n = min(max_n, x.shape[0])
+    return model.hard_accuracy(x[:n], y[:n], jnp.asarray(thresholds), jnp.asarray(sel), jnp.asarray(tables), cfg.num_classes)
+
+
+def train(
+    cfg: model.DwnConfig,
+    x_train,
+    y_train,
+    x_test,
+    y_test,
+    thresholds,
+    steps: int = 400,
+    batch: int = 128,
+    lr: float = 0.01,
+    seed: int = 7,
+    params: dict | None = None,
+    lr_step_size: int | None = None,
+    lr_gamma: float = 0.1,
+    log_every: int = 100,
+    verbose: bool = True,
+):
+    """Train (or fine-tune, if ``params`` given) a DWN variant.
+
+    Returns (params, history). ``thresholds`` stay fixed during fine-tuning —
+    exactly the paper's PEN+FT procedure (quantized thresholds frozen, LUT
+    contents + mapping re-trained for a few epochs with Adam/StepLR).
+    """
+    key = jax.random.PRNGKey(seed)
+    if params is None:
+        params = model.init_params(cfg, key)
+    opt = adam_init(params)
+    th = jnp.asarray(thresholds)
+    n = x_train.shape[0]
+    rng = np.random.default_rng(seed)
+    if lr_step_size is None:
+        lr_step_size = max(1, int(steps * 0.75))
+    hist = []
+    t0 = time.time()
+    for step in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        xb = jnp.asarray(x_train[idx])
+        yb = jnp.asarray(y_train[idx])
+        cur_lr = step_lr(lr, step, lr_step_size, lr_gamma)
+        params, opt, loss = _train_step(params, opt, xb, yb, th, cfg, cur_lr)
+        if verbose and (step % log_every == 0 or step == steps - 1):
+            acc = evaluate_hard(params, x_test, y_test, thresholds, cfg, max_n=3000)
+            hist.append({"step": step, "loss": float(loss), "hard_acc": acc, "t": time.time() - t0})
+            print(f"[{cfg.name}] step {step:5d} loss {float(loss):.4f} hard-acc {acc:.4f}", flush=True)
+    return params, hist

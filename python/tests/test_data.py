@@ -1,0 +1,55 @@
+"""Synthetic JSC generator invariants (mirrored in rust/src/data/synth.rs)."""
+
+import numpy as np
+
+from compile import data
+
+
+def test_splitmix_reference_values():
+    """First value of the seed-0 stream — cross-checked with the rust mirror."""
+    r = data.SplitMix64(0)
+    assert r.next_u64() == 0xE220A8397B1DCDAF
+
+
+def test_generate_deterministic():
+    x1, y1 = data.generate_raw(50, seed=123)
+    x2, y2 = data.generate_raw(50, seed=123)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+
+
+def test_labels_valid_and_roughly_balanced():
+    _, y = data.generate_raw(5000)
+    counts = np.bincount(y, minlength=5)
+    assert counts.min() > 700
+
+
+def test_normalized_range():
+    xt, yt, xe, ye = data.load_jsc(2000, 500)
+    assert xt.shape == (2000, 16)
+    assert xe.shape == (500, 16)
+    assert xt.min() >= -1.0 and xt.max() <= 1.0
+    assert xe.min() >= -1.0 - 1e-6
+
+
+def test_classes_2_3_overlap_more_than_typical():
+    """W/Z (classes 2, 3) are designed to overlap: their class-mean distance
+    must be well below the typical pair distance (the style nonlinearities
+    distort absolute distances, so we don't require the strict minimum)."""
+    x, y = data.generate_raw(20000)
+    means = np.stack([x[y == c].mean(axis=0) for c in range(5)])
+    d = np.linalg.norm(means[:, None] - means[None, :], axis=-1)
+    pairs = [d[i, j] for i in range(5) for j in range(i + 1, 5)]
+    assert d[2, 3] < np.median(pairs), f"d23={d[2, 3]:.3f} pairs={sorted(pairs)}"
+
+
+def test_csv_roundtrip(tmp_path):
+    xt, yt, _, _ = data.load_jsc(100, 10)
+    p = tmp_path / "d.csv"
+    data.to_csv(str(p), xt, yt)
+    lines = p.read_text().strip().split("\n")
+    assert len(lines) == 101
+    assert lines[0].endswith(",label")
+    first = lines[1].split(",")
+    assert len(first) == 17
+    np.testing.assert_allclose(float(first[0]), xt[0, 0], atol=1e-6)

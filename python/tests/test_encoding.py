@@ -1,0 +1,77 @@
+"""Unit tests for thermometer encoding + fixed-point quantization."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import encoding
+
+
+def test_distributive_thresholds_are_quantiles():
+    rng = np.random.default_rng(0)
+    x = rng.uniform(-1, 1, size=(5000, 3)).astype(np.float32)
+    th = encoding.distributive_thresholds(x, 9)
+    assert th.shape == (3, 9)
+    # middle threshold ~ median
+    assert np.allclose(th[:, 4], np.median(x, axis=0), atol=0.05)
+    # sorted ascending
+    assert (np.diff(th, axis=1) >= 0).all()
+
+
+def test_uniform_thresholds_evenly_spaced():
+    th = encoding.uniform_thresholds(2, 7)
+    diffs = np.diff(th[0])
+    assert np.allclose(diffs, diffs[0])
+    assert th[0][0] > -1.0 and th[0][-1] < 1.0
+    assert np.allclose(th[0], th[1])
+
+
+def test_encode_is_thermometer():
+    th = np.array([[-0.5, 0.0, 0.5]], dtype=np.float32)
+    x = np.array([[-0.7], [-0.2], [0.2], [0.9]], dtype=np.float32)
+    bits = np.asarray(encoding.encode(jnp.asarray(x), jnp.asarray(th)))
+    assert bits.tolist() == [[0, 0, 0], [1, 0, 0], [1, 1, 0], [1, 1, 1]]
+
+
+@given(st.lists(st.floats(-1, 0.999), min_size=1, max_size=20), st.integers(2, 10))
+@settings(max_examples=30, deadline=None)
+def test_encode_monotone_in_levels(values, bits):
+    """A thermometer code never has a 1 above a 0 (w.r.t. sorted thresholds)."""
+    th = encoding.uniform_thresholds(1, bits)
+    x = np.array([[v] for v in values], dtype=np.float32)
+    enc = np.asarray(encoding.encode(jnp.asarray(x), jnp.asarray(th)))
+    for row in enc:
+        # once it drops to 0 it must stay 0
+        seen_zero = False
+        for b in row:
+            if b == 0:
+                seen_zero = True
+            assert not (seen_zero and b == 1)
+
+
+@given(st.floats(-2, 2), st.integers(2, 12))
+@settings(max_examples=100, deadline=None)
+def test_quantize_inputs_on_grid(x, n):
+    q = encoding.quantize_inputs(np.array([[x]], dtype=np.float32), n)[0, 0]
+    scale = 1 << n
+    k = round(float(q) * scale)
+    assert abs(k / scale - q) < 1e-6
+    assert -1.0 <= q <= 1.0 - 1.0 / scale + 1e-9
+
+
+@given(st.floats(-1, 1), st.integers(2, 12))
+@settings(max_examples=100, deadline=None)
+def test_threshold_int_roundtrip(t, n):
+    tq = encoding.quantize_thresholds(np.array([[t]], dtype=np.float32), n)[0, 0]
+    ti = encoding.threshold_ints(np.array([[tq]], dtype=np.float32), n)[0, 0]
+    assert abs(ti / (1 << n) - tq) < 1e-6
+    assert -(1 << n) <= ti <= (1 << n) - 1
+
+
+def test_soft_encode_approaches_hard():
+    th = np.array([[-0.5, 0.0, 0.5]], dtype=np.float32)
+    x = np.array([[0.2]], dtype=np.float32)
+    hard = np.asarray(encoding.encode(jnp.asarray(x), jnp.asarray(th)))
+    soft = np.asarray(encoding.encode_soft(jnp.asarray(x), jnp.asarray(th), tau=1e-4))
+    assert np.allclose(hard, soft, atol=1e-3)

@@ -1,0 +1,87 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles (ref.py), swept
+over shapes/dtypes with hypothesis — the core correctness signal."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref as kref
+from compile.kernels.lut_layer import lut_layer
+from compile.kernels.popcount import popcount
+from compile.kernels.thermometer import thermometer_encode
+
+
+def rand_case(rng, batch, features, tbits, luts, k):
+    x = rng.uniform(-1, 1, size=(batch, features)).astype(np.float32)
+    th = np.sort(rng.uniform(-1, 1, size=(features, tbits)).astype(np.float32), axis=1)
+    sel = rng.integers(0, features * tbits, size=(luts, k)).astype(np.int32)
+    tables = rng.integers(0, 2, size=(luts, 1 << k)).astype(np.float32)
+    return x, th, sel, tables
+
+
+@given(
+    batch=st.sampled_from([1, 3, 64, 128, 130]),
+    features=st.integers(1, 8),
+    tbits=st.integers(1, 16),
+    seed=st.integers(0, 2**31),
+)
+@settings(max_examples=20, deadline=None)
+def test_thermometer_kernel_matches_ref(batch, features, tbits, seed):
+    rng = np.random.default_rng(seed)
+    x, th, _, _ = rand_case(rng, batch, features, tbits, 1, 2)
+    got = np.asarray(thermometer_encode(jnp.asarray(x), jnp.asarray(th)))
+    want = np.asarray(kref.encode_ref(jnp.asarray(x), jnp.asarray(th)))
+    np.testing.assert_array_equal(got, want)
+
+
+@given(
+    batch=st.sampled_from([1, 5, 64, 128]),
+    luts=st.integers(1, 30),
+    k=st.integers(1, 6),
+    nbits=st.integers(2, 64),
+    seed=st.integers(0, 2**31),
+)
+@settings(max_examples=20, deadline=None)
+def test_lut_layer_kernel_matches_ref(batch, luts, k, nbits, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, size=(batch, nbits)).astype(np.float32)
+    sel = rng.integers(0, nbits, size=(luts, k)).astype(np.int32)
+    tables = rng.integers(0, 2, size=(luts, 1 << k)).astype(np.float32)
+    got = np.asarray(lut_layer(jnp.asarray(bits), jnp.asarray(sel), jnp.asarray(tables)))
+    want = np.asarray(kref.lut_layer_ref(jnp.asarray(bits), jnp.asarray(sel), jnp.asarray(tables)))
+    np.testing.assert_array_equal(got, want)
+
+
+@given(
+    batch=st.sampled_from([1, 7, 64, 128]),
+    classes=st.integers(2, 8),
+    group=st.integers(1, 12),
+    seed=st.integers(0, 2**31),
+)
+@settings(max_examples=20, deadline=None)
+def test_popcount_kernel_matches_ref(batch, classes, group, seed):
+    rng = np.random.default_rng(seed)
+    outs = rng.integers(0, 2, size=(batch, classes * group)).astype(np.float32)
+    got = np.asarray(popcount(jnp.asarray(outs), classes))
+    want = np.asarray(kref.popcount_ref(jnp.asarray(outs), classes))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_full_forward_composes():
+    rng = np.random.default_rng(42)
+    x, th, sel, tables = rand_case(rng, 64, 4, 8, 10, 6)
+    from compile import model
+
+    s_pl, p_pl = model.hard_forward(
+        jnp.asarray(x), jnp.asarray(th), jnp.asarray(sel), jnp.asarray(tables), 5
+    )
+    s_ref, p_ref = model.hard_forward(
+        jnp.asarray(x), jnp.asarray(th), jnp.asarray(sel), jnp.asarray(tables), 5, use_ref=True
+    )
+    np.testing.assert_array_equal(np.asarray(s_pl), np.asarray(s_ref))
+    np.testing.assert_array_equal(np.asarray(p_pl), np.asarray(p_ref))
+
+
+def test_argmax_tie_breaks_low():
+    scores = jnp.asarray(np.array([[3, 5, 5, 1, 5]], dtype=np.int32))
+    assert int(kref.argmax_ref(scores)[0]) == 1

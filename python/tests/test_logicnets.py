@@ -1,0 +1,75 @@
+"""LogicNets-lite: quantizer, forward, and truth-table enumeration."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import data, logicnets
+
+
+def small_cfg():
+    return logicnets.LogicNetsConfig("t", hidden=(8,), fanin=3, abits=2, ibits=2, seed=3)
+
+
+def test_quantize_ste_grid():
+    x = jnp.linspace(-1.2, 1.2, 41)
+    q = np.asarray(logicnets.quantize_ste(x, 2, -1.0, 1.0))
+    codes = logicnets.act_codes(2)
+    for v in q:
+        assert any(abs(v - c) < 1e-6 for c in codes), f"{v} off-grid"
+
+
+def test_forward_shapes():
+    cfg = small_cfg()
+    params, masks = logicnets.init(cfg)
+    x = np.random.default_rng(0).uniform(-1, 1, size=(7, 16)).astype(np.float32)
+    out = logicnets.forward(params, masks, jnp.asarray(x), cfg)
+    assert out.shape == (7, 5)
+
+
+def test_enumeration_matches_forward():
+    """The enumerated truth tables must reproduce the quantized forward pass
+    exactly (this is the contract the rust hardware relies on)."""
+    cfg = small_cfg()
+    params, masks = logicnets.init(cfg)
+    rng = np.random.default_rng(1)
+
+    in_codes = logicnets.act_codes(cfg.ibits)
+    hid_codes = logicnets.act_codes(cfg.abits)
+
+    # Python-side table walk (mirrors rust predict_codes).
+    def predict_via_tables(codes):
+        h = list(codes)
+        for li, (p, sel) in enumerate(zip(params, masks)):
+            is_last = li == len(params) - 1
+            codes_in = in_codes if li == 0 else hid_codes
+            w = np.asarray(p["w"])
+            b = np.asarray(p["b"])
+            nxt = []
+            scores = []
+            n_codes = len(codes_in)
+            for n in range(len(w)):
+                table = logicnets.enumerate_neuron(w[n], float(b[n]), codes_in, hid_codes, is_last)
+                addr = 0
+                for j, s in enumerate(sel[n]):
+                    addr += int(h[s]) * (n_codes**j)
+                v = table[addr]
+                (scores if is_last else nxt).append(v)
+            if is_last:
+                return int(np.argmax(scores))
+            h = nxt
+
+    for _ in range(20):
+        codes = rng.integers(0, 4, size=16)
+        x = np.array([in_codes[c] for c in codes], dtype=np.float32)[None]
+        logits = np.asarray(logicnets.forward(params, masks, jnp.asarray(x), cfg))[0]
+        want = int(np.argmax(np.round(logits * 1000)))
+        got = predict_via_tables(codes)
+        assert got == want
+
+
+def test_training_beats_chance():
+    cfg = small_cfg()
+    xt, yt, xe, ye = data.load_jsc(2000, 500)
+    params, masks = logicnets.train(cfg, xt, yt, xe, ye, steps=60, batch=128, verbose=False)
+    acc = logicnets.accuracy(params, masks, xe, ye, cfg)
+    assert acc > 0.35, acc

@@ -1,0 +1,81 @@
+"""L2 model tests: shapes, multilinear LUT relaxation, mapping export."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import encoding, model
+
+
+def small_cfg():
+    return model.DwnConfig("t", num_luts=10, thermo_bits=8, num_features=4)
+
+
+def test_init_shapes():
+    cfg = small_cfg()
+    p = model.init_params(cfg, jax.random.PRNGKey(0))
+    assert p["w"].shape == (cfg.pins, cfg.num_bits)
+    assert p["theta"].shape == (cfg.num_luts, 64)
+
+
+def test_soft_forward_shapes_and_grads():
+    cfg = small_cfg()
+    p = model.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    x = rng.uniform(-1, 1, size=(16, 4)).astype(np.float32)
+    th = encoding.distributive_thresholds(x, cfg.thermo_bits)
+
+    def loss(params):
+        logits = model.soft_forward(params, jnp.asarray(x), jnp.asarray(th), cfg)
+        assert logits.shape == (16, cfg.num_classes)
+        return jnp.mean(logits**2)
+
+    g = jax.grad(loss)(p)
+    assert float(jnp.abs(g["theta"]).sum()) > 0, "theta must receive gradient"
+    assert float(jnp.abs(g["w"]).sum()) > 0, "mapping must receive gradient"
+
+
+def test_multilinear_matches_hard_lut_at_corners():
+    """At binary (0/1) soft bits, the multilinear LUT equals table lookup."""
+    cfg = model.DwnConfig("t", num_luts=1, thermo_bits=8, num_features=1)
+    key = jax.random.PRNGKey(3)
+    theta = jax.random.normal(key, (1, 64))
+    for addr in [0, 1, 17, 63]:
+        s = jnp.asarray(
+            np.array([[(addr >> j) & 1 for j in range(6)]], dtype=np.float32)
+        ).reshape(1, 1, 6)
+        v = model._multilinear_lut(theta, s)
+        assert np.allclose(float(v[0, 0]), float(theta[0, addr]), atol=1e-5), f"addr={addr}"
+
+
+def test_hard_mapping_shape_and_range():
+    cfg = small_cfg()
+    p = model.init_params(cfg, jax.random.PRNGKey(0))
+    sel = np.asarray(model.hard_mapping(p["w"]))
+    assert sel.shape == (cfg.num_luts, cfg.lut_k)
+    assert sel.min() >= 0 and sel.max() < cfg.num_bits
+
+
+def test_binarize_tables():
+    theta = np.array([[-0.5, 0.0, 0.2, -0.1]])
+    t = model.binarize_tables(theta)
+    assert t.tolist() == [[0.0, 1.0, 1.0, 0.0]]
+
+
+def test_used_bits_unique_sorted():
+    sel = np.array([[3, 1, 3], [2, 1, 7]])
+    u = model.used_bits(sel)
+    assert u.tolist() == [1, 2, 3, 7]
+
+
+def test_hard_accuracy_bounds():
+    cfg = small_cfg()
+    p = model.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    x = rng.uniform(-1, 1, size=(100, 4)).astype(np.float32)
+    y = rng.integers(0, 5, size=100)
+    th = encoding.distributive_thresholds(x, cfg.thermo_bits)
+    sel = np.asarray(model.hard_mapping(p["w"]))
+    tables = model.binarize_tables(p["theta"])
+    acc = model.hard_accuracy(x, y, jnp.asarray(th), jnp.asarray(sel), jnp.asarray(tables))
+    assert 0.0 <= acc <= 1.0

@@ -1,0 +1,60 @@
+"""Training + PTQ/fine-tune smoke tests (small but real)."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import data, encoding, model, quantize, train
+
+
+def setup_small():
+    xt, yt, xe, ye = data.load_jsc(1500, 400)
+    cfg = model.DwnConfig("t", num_luts=10, thermo_bits=16)
+    th = encoding.distributive_thresholds(xt, cfg.thermo_bits)
+    return cfg, xt, yt, xe, ye, th
+
+
+def test_training_reduces_loss_and_beats_chance():
+    cfg, xt, yt, xe, ye, th = setup_small()
+    p, hist = train.train(cfg, xt, yt, xe, ye, th, steps=80, batch=64, log_every=20)
+    acc = train.evaluate_hard(p, xe, ye, th, cfg, max_n=400)
+    assert acc > 0.35, f"must beat 20% chance clearly, got {acc}"
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+def test_step_lr_schedule():
+    assert train.step_lr(0.1, 0, 30, 0.1) == 0.1
+    assert abs(train.step_lr(0.1, 30, 30, 0.1) - 0.01) < 1e-12
+    assert abs(train.step_lr(0.1, 65, 30, 0.1) - 0.001) < 1e-12
+
+
+def test_adam_converges_quadratic():
+    p = {"x": jnp.asarray(5.0)}
+    opt = train.adam_init(p)
+    for _ in range(300):
+        g = {"x": 2.0 * p["x"]}
+        p, opt = train.adam_step(p, g, opt, lr=0.1)
+    assert abs(float(p["x"])) < 0.05
+
+
+def test_ptq_monotone_band():
+    """Quantized accuracy at high bit-width ~= float accuracy."""
+    cfg, xt, yt, xe, ye, th = setup_small()
+    p, _ = train.train(cfg, xt, yt, xe, ye, th, steps=60, batch=64, verbose=False)
+    base = train.evaluate_hard(p, xe, ye, th, cfg, max_n=400)
+    acc12 = quantize.quantized_accuracy(p, th, 12, xe, ye, cfg, max_n=400)
+    assert abs(acc12 - base) < 0.03
+    # Very coarse quantization should (usually) hurt; accept no-gain too.
+    acc2 = quantize.quantized_accuracy(p, th, 2, xe, ye, cfg, max_n=400)
+    assert acc2 <= base + 0.05
+
+
+def test_fine_tune_runs_and_freezes_thresholds():
+    cfg, xt, yt, xe, ye, th = setup_small()
+    p, _ = train.train(cfg, xt, yt, xe, ye, th, steps=40, batch=64, verbose=False)
+    ftp, th_q, acc = quantize.fine_tune(p, th, 4, cfg, xt, yt, xe, ye, steps=20)
+    # thresholds stayed on the (1,4) grid
+    k = np.round(th_q * 16)
+    assert np.allclose(th_q, k / 16, atol=1e-6)
+    assert 0.0 <= acc <= 1.0
+    # parameters actually changed
+    assert not np.allclose(np.asarray(p["theta"]), np.asarray(ftp["theta"]))

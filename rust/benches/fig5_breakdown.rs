@@ -1,0 +1,58 @@
+//! Fig. 5: component LUT breakdown (encoder / LUT layer / popcount / argmax)
+//! for the PEN+FT models across input bit-widths, with the corresponding
+//! accuracy from the fine-tuning sweep. Bit-width variation re-quantizes the
+//! float thresholds at each width (PTQ), exactly like the paper's sweep.
+
+use dwn::config::Artifacts;
+use dwn::hwgen::{build_accelerator, AccelOptions, Component};
+use dwn::model::{DwnModel, Variant};
+use dwn::report::Table;
+use dwn::techmap::MapConfig;
+use dwn::util::fixed;
+
+fn main() {
+    let artifacts = Artifacts::discover();
+    if !artifacts.exists() {
+        eprintln!("no artifacts — run `make artifacts` first");
+        return;
+    }
+    let mut t = Table::new(
+        "Fig. 5 — component breakdown of DWN-PEN(+FT) vs input bit-width",
+        &["model", "bits", "acc_pen%", "acc_penft%", "encoder", "lut-layer", "popcount", "argmax", "total"],
+    );
+    for name in ["sm-10", "sm-50", "md-360", "lg-2400"] {
+        let Ok(mut model) = DwnModel::load(&artifacts.model_path(name)) else { continue };
+        let sweep = model.bw_sweep.clone();
+        for point in &sweep {
+            // Re-quantize the float thresholds at this bit-width (the PEN
+            // mapping/tables stay fixed; accuracy comes from the sweep data).
+            let bw = point.frac_bits;
+            model.pen_threshold_ints = model
+                .thresholds
+                .iter()
+                .map(|row| row.iter().map(|&t| fixed::threshold_to_int(t, bw)).collect())
+                .collect();
+            // Overwrite the PEN frac_bits for this synthetic variant.
+            model.pen.frac_bits = Some(bw);
+            let accel = build_accelerator(&model, &AccelOptions::new(Variant::Pen)).unwrap();
+            let (nl, bd) = accel.map_with_breakdown(&MapConfig::default());
+            let get = |c: Component| {
+                bd.iter().find(|(k, _)| *k == c).map(|(_, n)| *n).unwrap_or(0).to_string()
+            };
+            t.row(&[
+                name.into(),
+                bw.to_string(),
+                format!("{:.1}", point.acc_pen * 100.0),
+                format!("{:.1}", point.acc_penft * 100.0),
+                get(Component::Encoder),
+                get(Component::LutLayer),
+                get(Component::Popcount),
+                get(Component::Argmax),
+                nl.lut_count().to_string(),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    t.write_csv(&artifacts.results_dir().join("fig5_breakdown.csv")).expect("csv");
+    println!("wrote {}", artifacts.results_dir().join("fig5_breakdown.csv").display());
+}

@@ -1,0 +1,102 @@
+//! Fig. 6: Pareto frontier of LUT-based architectures on JSC — LUTs (log
+//! scale in the paper) vs accuracy. Emits every design point (our measured
+//! DWN-TEN / DWN-PEN / DWN-PEN+FT and TreeLUT baselines + the paper's
+//! published points) and marks which are Pareto-optimal.
+
+use dwn::baselines::gbdt::{self, GbdtConfig};
+use dwn::baselines::published::TABLE2_PUBLISHED;
+use dwn::baselines::treelut;
+use dwn::config::Artifacts;
+use dwn::data::Dataset;
+use dwn::model::{DwnModel, Variant};
+use dwn::report::{measure, Table};
+use dwn::techmap::map6;
+
+#[derive(Clone)]
+struct Point {
+    name: String,
+    src: &'static str,
+    acc: f64, // percent
+    luts: usize,
+}
+
+fn main() {
+    let artifacts = Artifacts::discover();
+    if !artifacts.exists() {
+        eprintln!("no artifacts — run `make artifacts` first");
+        return;
+    }
+    let mut pts: Vec<Point> = Vec::new();
+    for name in ["sm-10", "sm-50", "md-360", "lg-2400"] {
+        let Ok(model) = DwnModel::load(&artifacts.model_path(name)) else { continue };
+        for v in [Variant::Ten, Variant::Pen, Variant::PenFt] {
+            let r = measure(&model, v).unwrap();
+            pts.push(Point {
+                name: format!("DWN-{} ({name})", v.label()),
+                src: "ours",
+                acc: r.acc * 100.0,
+                luts: r.timing.luts,
+            });
+        }
+    }
+    // TreeLUT baseline sweep (our implementation).
+    let train = Dataset::load_csv(&artifacts.dataset_path("train")).unwrap();
+    let test = Dataset::load_csv(&artifacts.dataset_path("test")).unwrap();
+    for (rounds, depth) in [(2usize, 2usize), (4, 3), (8, 3), (12, 4)] {
+        let cfg = GbdtConfig { num_rounds: rounds, max_depth: depth, ..Default::default() };
+        let model = gbdt::train(&train, 5, &cfg);
+        let xt = gbdt::quantize_dataset(&test, cfg.frac_bits);
+        let acc = model.accuracy(&xt, &test.y) * 100.0;
+        let design = treelut::build_treelut(&model).unwrap();
+        let nl = map6(&design.net);
+        pts.push(Point {
+            name: format!("TreeLUT-ours (r{rounds} d{depth})"),
+            src: "ours",
+            acc,
+            luts: nl.lut_count(),
+        });
+    }
+    // LogicNets-lite baseline points.
+    for name in ["jsc-s", "jsc-m"] {
+        let p = artifacts.root.join("models").join(format!("logicnets-{name}.json"));
+        let Ok(model) = dwn::baselines::logicnets::LogicNetsModel::load(&p) else { continue };
+        let design = dwn::baselines::logicnets::build_logicnets(&model).unwrap();
+        let nl = map6(&design.net);
+        pts.push(Point {
+            name: format!("LogicNets-lite ({name})"),
+            src: "ours",
+            acc: model.accuracy(&test, test.len()) * 100.0,
+            luts: nl.lut_count(),
+        });
+    }
+    for p in TABLE2_PUBLISHED {
+        pts.push(Point { name: p.model.to_string(), src: "paper", acc: p.acc, luts: p.luts });
+    }
+
+    // Pareto: a point is optimal if no other point has >= acc and < LUTs.
+    let pareto: Vec<bool> = pts
+        .iter()
+        .map(|p| {
+            !pts.iter().any(|q| q.acc >= p.acc && q.luts < p.luts && (q.acc > p.acc || q.luts < p.luts))
+        })
+        .collect();
+
+    let mut sorted: Vec<(usize, &Point)> = pts.iter().enumerate().collect();
+    sorted.sort_by(|a, b| b.1.acc.partial_cmp(&a.1.acc).unwrap());
+    let mut t = Table::new(
+        "Fig. 6 — Pareto frontier, LUTs vs accuracy (JSC)",
+        &["design", "src", "acc%", "LUTs", "pareto"],
+    );
+    for (i, p) in sorted {
+        t.row(&[
+            p.name.clone(),
+            p.src.into(),
+            format!("{:.1}", p.acc),
+            p.luts.to_string(),
+            if pareto[i] { "*".into() } else { "".into() },
+        ]);
+    }
+    print!("{}", t.render());
+    t.write_csv(&artifacts.results_dir().join("fig6_pareto.csv")).expect("csv");
+    println!("wrote {}", artifacts.results_dir().join("fig6_pareto.csv").display());
+}

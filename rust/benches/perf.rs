@@ -1,0 +1,141 @@
+//! Performance micro/macro benches (criterion is unavailable offline; this
+//! is a hand-rolled harness with warmup + repeated timing). Covers the L3
+//! hot paths profiled in EXPERIMENTS.md §Perf:
+//!   - netlist bit-parallel simulation throughput (samples/s)
+//!   - technology-mapping time for the lg-2400 accelerator
+//!   - serving throughput/latency via the batching coordinator (netlist +
+//!     PJRT backends)
+
+use dwn::config::Artifacts;
+use dwn::coordinator::{Backend, Server, ServerConfig};
+use dwn::data::Dataset;
+use dwn::hwgen::{build_accelerator, AccelOptions};
+use dwn::model::{DwnModel, Variant};
+use dwn::runtime::Engine;
+use dwn::techmap::MapConfig;
+use dwn::util::fixed;
+use std::time::{Duration, Instant};
+
+fn time_it<F: FnMut()>(label: &str, iters: usize, mut f: F) -> Duration {
+    // warmup
+    f();
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = t0.elapsed() / iters as u32;
+    println!("{label:55} {per:>12.2?}/iter  ({iters} iters)");
+    per
+}
+
+fn main() {
+    let artifacts = Artifacts::discover();
+    if !artifacts.exists() {
+        eprintln!("no artifacts — run `make artifacts` first");
+        return;
+    }
+    println!("== perf: generation + mapping ==");
+    for name in ["sm-50", "md-360", "lg-2400"] {
+        let model = DwnModel::load(&artifacts.model_path(name)).unwrap();
+        time_it(&format!("build_accelerator({name}, PEN+FT)"), 3, || {
+            let _ = build_accelerator(&model, &AccelOptions::new(Variant::PenFt)).unwrap();
+        });
+        let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt)).unwrap();
+        time_it(&format!("techmap({name}, PEN+FT)"), 3, || {
+            let _ = accel.map(&MapConfig::default());
+        });
+    }
+
+    println!("\n== perf: netlist simulation throughput ==");
+    let test = Dataset::load_csv(&artifacts.dataset_path("test")).unwrap();
+    for name in ["sm-50", "md-360", "lg-2400"] {
+        let model = DwnModel::load(&artifacts.model_path(name)).unwrap();
+        let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt)).unwrap();
+        let nl = accel.map(&MapConfig::default());
+        let frac_bits = model.penft.frac_bits.unwrap();
+        let width = (frac_bits + 1) as usize;
+        let n = 4096.min(test.len());
+        let vectors: Vec<Vec<bool>> = (0..n)
+            .map(|i| {
+                let mut bits = Vec::with_capacity(test.num_features * width);
+                for &x in test.row(i) {
+                    let pat =
+                        fixed::int_to_bits(fixed::input_to_int(x as f64, frac_bits), frac_bits);
+                    for b in 0..width {
+                        bits.push((pat >> b) & 1 == 1);
+                    }
+                }
+                bits
+            })
+            .collect();
+        let t0 = Instant::now();
+        let iters = 3usize;
+        for _ in 0..iters {
+            let _ = nl.eval_batch(&vectors);
+        }
+        let dt = t0.elapsed().as_secs_f64() / iters as f64;
+        println!(
+            "netlist sim {name:9} {:>10.0} samples/s  ({} LUTs)",
+            n as f64 / dt,
+            nl.lut_count()
+        );
+    }
+
+    println!("\n== perf: serving (batching coordinator) ==");
+    let name = "sm-50";
+    let model = DwnModel::load(&artifacts.model_path(name)).unwrap();
+    let requests = 20_000usize;
+
+    // netlist backend
+    {
+        let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt)).unwrap();
+        let nl = accel.map(&MapConfig::default());
+        let server = Server::start_netlist(
+            nl,
+            model.penft.frac_bits.unwrap(),
+            model.num_features,
+            model.num_classes,
+            accel.index_width(),
+            ServerConfig::default(),
+        );
+        run_serving(&server, &test, requests, "netlist");
+    }
+    // PJRT backend
+    {
+        let batch = artifacts.hlo_batch().unwrap();
+        let hlo = artifacts.hlo_path(name);
+        let (features, classes) = (model.num_features, model.num_classes);
+        let server = Server::start_with(
+            move || Ok(Backend::Pjrt(Engine::load(&hlo, batch, features, classes)?)),
+            ServerConfig::default(),
+        )
+        .unwrap();
+        run_serving(&server, &test, requests, "pjrt");
+    }
+}
+
+fn run_serving(server: &Server, test: &Dataset, requests: usize, label: &str) {
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(512);
+    for i in 0..requests {
+        pending.push(server.submit(test.row(i % test.len())).unwrap());
+        if pending.len() >= 512 {
+            for rx in pending.drain(..) {
+                let _ = rx.recv().unwrap().unwrap();
+            }
+        }
+    }
+    for rx in pending.drain(..) {
+        let _ = rx.recv().unwrap().unwrap();
+    }
+    let dt = t0.elapsed();
+    let snap = server.metrics.snapshot();
+    println!(
+        "serve[{label:8}] {:>9.0} req/s  p50={}us p99={}us mean_batch={:.1} batches={}",
+        requests as f64 / dt.as_secs_f64(),
+        snap.p50_us,
+        snap.p99_us,
+        snap.mean_batch,
+        snap.batches
+    );
+}

@@ -1,0 +1,63 @@
+//! Table I: DWN-TEN vs DWN-PEN+FT hardware comparison across model sizes.
+//! Prints the paper's rows next to ours and writes CSV to artifacts/results.
+
+use dwn::baselines::published::TABLE1_PAPER;
+use dwn::config::Artifacts;
+use dwn::model::{DwnModel, Variant};
+use dwn::report::{f1, int, measure, pct, Table};
+use std::time::Instant;
+
+fn main() {
+    let artifacts = Artifacts::discover();
+    if !artifacts.exists() {
+        eprintln!("no artifacts — run `make artifacts` first");
+        return;
+    }
+    let mut t = Table::new(
+        "Table I — DWN-TEN vs DWN-PEN+FT (ours: in-repo synthesis substrate; paper: Vivado OOC)",
+        &["model", "variant", "src", "acc%", "LUT", "FF", "Fmax(MHz)", "Lat(ns)", "AxD(LUT*ns)"],
+    );
+    let t0 = Instant::now();
+    for name in ["lg-2400", "md-360", "sm-50", "sm-10"] {
+        let model = match DwnModel::load(&artifacts.model_path(name)) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("skipping {name}: {e}");
+                continue;
+            }
+        };
+        for variant in [Variant::Ten, Variant::PenFt] {
+            let row = measure(&model, variant).expect("measure");
+            t.row(&[
+                name.into(),
+                variant.label().into(),
+                "ours".into(),
+                pct(row.acc),
+                int(row.timing.luts),
+                int(row.timing.ffs),
+                f1(row.timing.fmax_mhz),
+                f1(row.timing.latency_ns),
+                f1(row.timing.area_delay),
+            ]);
+            if let Some(p) =
+                TABLE1_PAPER.iter().find(|p| p.model == name && p.variant == variant.label())
+            {
+                t.row(&[
+                    name.into(),
+                    variant.label().into(),
+                    "paper".into(),
+                    p.acc.map(|a| format!("{a:.1}")).unwrap_or_else(|| "-".into()),
+                    int(p.luts),
+                    int(p.ffs),
+                    f1(p.fmax_mhz),
+                    f1(p.latency_ns),
+                    f1(p.area_delay),
+                ]);
+            }
+        }
+    }
+    print!("{}", t.render());
+    println!("total bench time: {:.1}s", t0.elapsed().as_secs_f64());
+    t.write_csv(&artifacts.results_dir().join("table1.csv")).expect("csv");
+    println!("wrote {}", artifacts.results_dir().join("table1.csv").display());
+}

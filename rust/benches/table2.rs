@@ -1,0 +1,120 @@
+//! Table II: comparison of LUT-based architectures on JSC. Our DWN rows and
+//! our TreeLUT baseline are measured on the in-repo substrate; other rows
+//! are the paper's published numbers (tagged `paper`).
+
+use dwn::baselines::gbdt::{self, GbdtConfig};
+use dwn::baselines::logicnets;
+use dwn::baselines::published::TABLE2_PUBLISHED;
+use dwn::baselines::treelut;
+use dwn::config::Artifacts;
+use dwn::data::Dataset;
+use dwn::model::{DwnModel, Variant};
+use dwn::report::{f1, int, measure, Table};
+use dwn::techmap::map6;
+use dwn::timing::{analyze, DelayModel};
+
+fn main() {
+    let artifacts = Artifacts::discover();
+    if !artifacts.exists() {
+        eprintln!("no artifacts — run `make artifacts` first");
+        return;
+    }
+    let mut rows: Vec<(f64, Vec<String>)> = Vec::new();
+
+    // --- our DWN PEN+FT rows
+    for name in ["lg-2400", "md-360", "sm-50", "sm-10"] {
+        let Ok(model) = DwnModel::load(&artifacts.model_path(name)) else { continue };
+        let r = measure(&model, Variant::PenFt).unwrap();
+        rows.push((
+            r.acc * 100.0,
+            vec![
+                format!("DWN-PEN+FT ({name}) ({}-Bit)", r.bits.unwrap()),
+                "ours".into(),
+                format!("{:.1}", r.acc * 100.0),
+                int(r.timing.luts),
+                int(r.timing.ffs),
+                f1(r.timing.fmax_mhz),
+                f1(r.timing.latency_ns),
+                f1(r.timing.area_delay),
+            ],
+        ));
+    }
+
+    // --- our TreeLUT baseline (trained + generated in-repo)
+    let train = Dataset::load_csv(&artifacts.dataset_path("train")).unwrap();
+    let test = Dataset::load_csv(&artifacts.dataset_path("test")).unwrap();
+    for (rounds, depth) in [(8usize, 3usize), (3, 2)] {
+        let cfg = GbdtConfig { num_rounds: rounds, max_depth: depth, ..Default::default() };
+        let model = gbdt::train(&train, 5, &cfg);
+        let xt = gbdt::quantize_dataset(&test, cfg.frac_bits);
+        let acc = model.accuracy(&xt, &test.y);
+        let design = treelut::build_treelut(&model).unwrap();
+        let nl = map6(&design.net);
+        let rep = analyze(&nl, &DelayModel::default());
+        rows.push((
+            acc * 100.0,
+            vec![
+                format!("TreeLUT-ours (r{rounds} d{depth})"),
+                "ours".into(),
+                format!("{:.1}", acc * 100.0),
+                int(rep.luts),
+                int(rep.ffs),
+                f1(rep.fmax_mhz),
+                f1(rep.latency_ns),
+                f1(rep.area_delay),
+            ],
+        ));
+    }
+
+    // --- our LogicNets-lite baseline (trained in JAX, enumerated to LUTs)
+    for name in ["jsc-s", "jsc-m"] {
+        let p = artifacts.root.join("models").join(format!("logicnets-{name}.json"));
+        let Ok(model) = logicnets::LogicNetsModel::load(&p) else { continue };
+        let design = logicnets::build_logicnets(&model).unwrap();
+        let nl = map6(&design.net);
+        let rep = analyze(&nl, &DelayModel::default());
+        let acc = model.accuracy(&test, test.len());
+        rows.push((
+            acc * 100.0,
+            vec![
+                format!("LogicNets-lite ({name})"),
+                "ours".into(),
+                format!("{:.1}", acc * 100.0),
+                int(rep.luts),
+                int(rep.ffs),
+                f1(rep.fmax_mhz),
+                f1(rep.latency_ns),
+                f1(rep.area_delay),
+            ],
+        ));
+    }
+
+    // --- published rows from the paper
+    for p in TABLE2_PUBLISHED {
+        rows.push((
+            p.acc,
+            vec![
+                p.model.to_string(),
+                "paper".into(),
+                format!("{:.1}", p.acc),
+                int(p.luts),
+                int(p.ffs),
+                f1(p.fmax_mhz),
+                f1(p.latency_ns),
+                f1(p.area_delay),
+            ],
+        ));
+    }
+
+    rows.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut t = Table::new(
+        "Table II — LUT-based architectures on JSC (sorted by accuracy; 'ours' measured, 'paper' quoted)",
+        &["model", "src", "acc%", "LUT", "FF", "Fmax(MHz)", "Lat(ns)", "AxD"],
+    );
+    for (_, r) in &rows {
+        t.row(r);
+    }
+    print!("{}", t.render());
+    t.write_csv(&artifacts.results_dir().join("table2.csv")).expect("csv");
+    println!("wrote {}", artifacts.results_dir().join("table2.csv").display());
+}

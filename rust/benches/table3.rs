@@ -1,0 +1,63 @@
+//! Table III: DWN variants (TEN, PEN, PEN+FT) — accuracy, LUTs, bit-width,
+//! and the encoding-overhead factors the paper headlines (5.30x -> 3.20x for
+//! sm-10; 3.68x -> 1.41x for lg-2400).
+
+use dwn::baselines::published::TABLE3_PAPER;
+use dwn::config::Artifacts;
+use dwn::model::{DwnModel, Variant};
+use dwn::report::{int, measure, pct, Table};
+
+fn main() {
+    let artifacts = Artifacts::discover();
+    if !artifacts.exists() {
+        eprintln!("no artifacts — run `make artifacts` first");
+        return;
+    }
+    let mut t = Table::new(
+        "Table III — TEN vs PEN vs PEN+FT (overhead x relative to TEN, as in the paper)",
+        &["model", "src", "ft_acc%", "ft_LUT", "ft_over", "ft_BW", "pen_acc%", "pen_LUT", "pen_over", "pen_BW", "ten_acc%", "ten_LUT"],
+    );
+    for name in ["sm-10", "sm-50", "md-360", "lg-2400"] {
+        let Ok(model) = DwnModel::load(&artifacts.model_path(name)) else {
+            eprintln!("skipping {name}");
+            continue;
+        };
+        let ten = measure(&model, Variant::Ten).unwrap();
+        let pen = measure(&model, Variant::Pen).unwrap();
+        let ft = measure(&model, Variant::PenFt).unwrap();
+        let over = |x: usize, base: usize| format!("{:.2}x", x as f64 / base as f64);
+        t.row(&[
+            name.into(),
+            "ours".into(),
+            pct(ft.acc),
+            int(ft.timing.luts),
+            over(ft.timing.luts, ten.timing.luts),
+            ft.bits.unwrap().to_string(),
+            pct(pen.acc),
+            int(pen.timing.luts),
+            over(pen.timing.luts, ten.timing.luts),
+            pen.bits.unwrap().to_string(),
+            pct(ten.acc),
+            int(ten.timing.luts),
+        ]);
+        if let Some(p) = TABLE3_PAPER.iter().find(|p| p.model == name) {
+            t.row(&[
+                name.into(),
+                "paper".into(),
+                "-".into(),
+                int(p.penft_luts),
+                over(p.penft_luts, p.ten_luts),
+                p.penft_bits.to_string(),
+                "-".into(),
+                int(p.pen_luts),
+                over(p.pen_luts, p.ten_luts),
+                p.pen_bits.to_string(),
+                "-".into(),
+                int(p.ten_luts),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+    t.write_csv(&artifacts.results_dir().join("table3.csv")).expect("csv");
+    println!("wrote {}", artifacts.results_dir().join("table3.csv").display());
+}

@@ -1,0 +1,274 @@
+//! LogicNets-lite hardware generation from the truth tables exported by
+//! `python/compile/logicnets.py` (Umuroglu et al., FPL'20 — the paper's §II
+//! reference [14]).
+//!
+//! Every neuron arrives as an exhaustively-enumerated truth table over
+//! fanin x abits input bits (<= 6, one LUT6 per output bit). Hidden neurons
+//! output an abits-bit activation code; the last layer outputs integer
+//! class scores which a shared argmax tree (the same component as the DWN
+//! accelerator's) reduces to a prediction.
+
+use crate::hwgen::argmax;
+use crate::json::{self, Value};
+use crate::logic::net::NodeId;
+use crate::logic::Builder;
+use crate::logic::Network;
+use crate::util::bits_for;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// One neuron: selected inputs + enumerated table (values are activation
+/// code indices, or milli-unit scores in the last layer).
+#[derive(Debug, Clone)]
+pub struct Neuron {
+    pub sel: Vec<usize>,
+    pub table: Vec<i64>,
+}
+
+/// A trained LogicNets-lite model.
+#[derive(Debug, Clone)]
+pub struct LogicNetsModel {
+    pub name: String,
+    pub fanin: usize,
+    pub abits: usize,
+    pub ibits: usize,
+    pub layer_sizes: Vec<usize>,
+    pub acc: f64,
+    /// layers[l][n]; the last layer's tables hold scores.
+    pub layers: Vec<Vec<Neuron>>,
+}
+
+impl LogicNetsModel {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = json::parse(&text)?;
+        let mut layers = Vec::new();
+        for layer in v.get("layers")?.as_arr()? {
+            let mut neurons = Vec::new();
+            for n in layer.get("neurons")?.as_arr()? {
+                neurons.push(Neuron {
+                    sel: n.get("sel")?.as_i64_vec()?.iter().map(|&x| x as usize).collect(),
+                    table: n.get("table")?.as_i64_vec()?,
+                });
+            }
+            layers.push(neurons);
+        }
+        let m = Self {
+            name: v.get("name")?.as_str()?.to_string(),
+            fanin: v.get("fanin")?.as_usize()?,
+            abits: v.get("abits")?.as_usize()?,
+            ibits: v.get("ibits")?.as_usize()?,
+            layer_sizes: v.get("layer_sizes")?.as_i64_vec()?.iter().map(|&x| x as usize).collect(),
+            acc: v.get("acc")?.as_f64()?,
+            layers,
+        };
+        if m.fanin * m.abits > 6 {
+            bail!("neuron exceeds LUT6 ({}x{} bits)", m.fanin, m.abits);
+        }
+        Ok(m)
+    }
+
+    /// Quantize a feature in [-1, 1) to its input code (what the ADC feeds
+    /// the hardware) — mirrors python's quantize_ste grid.
+    pub fn input_code(&self, x: f64, first_layer: bool) -> u64 {
+        let bits = if first_layer { self.ibits } else { self.abits };
+        let levels = (1u64 << bits) - 1;
+        let xc = x.clamp(-1.0, 1.0);
+        (((xc + 1.0) / 2.0 * levels as f64).round() as i64).clamp(0, levels as i64) as u64
+    }
+
+    /// Pure-software reference forward: feature codes -> predicted class.
+    pub fn predict_codes(&self, codes: &[u64]) -> usize {
+        let mut h: Vec<u64> = codes.to_vec();
+        let mut scores: Vec<i64> = Vec::new();
+        for (li, layer) in self.layers.iter().enumerate() {
+            let is_last = li == self.layers.len() - 1;
+            let in_bits = if li == 0 { self.ibits } else { self.abits };
+            let mut next = Vec::with_capacity(layer.len());
+            for neuron in layer {
+                let mut addr = 0usize;
+                for (j, &s) in neuron.sel.iter().enumerate() {
+                    addr |= (h[s] as usize) << (j * in_bits);
+                }
+                let v = neuron.table[addr];
+                if is_last {
+                    scores.push(v);
+                } else {
+                    next.push(v as u64);
+                }
+            }
+            h = next;
+        }
+        let mut best = 0usize;
+        for c in 1..scores.len() {
+            if scores[c] > scores[best] {
+                best = c;
+            }
+        }
+        best
+    }
+
+    pub fn accuracy(&self, data: &crate::data::Dataset, n: usize) -> f64 {
+        let n = n.min(data.len());
+        let mut correct = 0usize;
+        for i in 0..n {
+            let codes: Vec<u64> =
+                data.row(i).iter().map(|&x| self.input_code(x as f64, true)).collect();
+            if self.predict_codes(&codes) == data.y[i] as usize {
+                correct += 1;
+            }
+        }
+        correct as f64 / n as f64
+    }
+}
+
+/// Generated design: same output interface as the DWN accelerator.
+pub struct LogicNetsDesign {
+    pub net: Network,
+    pub num_features: usize,
+    /// Bits per input feature word.
+    pub input_width: usize,
+    pub index_width: usize,
+}
+
+/// Build the netlist: per-neuron table gates + argmax.
+pub fn build_logicnets(model: &LogicNetsModel) -> Result<LogicNetsDesign> {
+    let mut bld = Builder::new();
+    let f = model.layer_sizes[0];
+    // Feature code words (unsigned, LSB-first).
+    let words: Vec<Vec<NodeId>> = (0..f).map(|_| bld.inputs(model.ibits)).collect();
+    let mut h: Vec<Vec<NodeId>> = words.clone();
+
+    let mut score_words: Vec<Vec<NodeId>> = Vec::new();
+    for (li, layer) in model.layers.iter().enumerate() {
+        let is_last = li == model.layers.len() - 1;
+        let in_bits = if li == 0 { model.ibits } else { model.abits };
+        // Score offset: shift all last-layer tables non-negative (uniform
+        // shift preserves the argmax).
+        let (score_off, score_width) = if is_last {
+            let lo = layer.iter().flat_map(|n| n.table.iter()).copied().min().unwrap_or(0);
+            let hi = layer.iter().flat_map(|n| n.table.iter()).copied().max().unwrap_or(0);
+            (-lo, bits_for((hi - lo).max(1) as usize + 1))
+        } else {
+            (0, model.abits)
+        };
+        let mut next: Vec<Vec<NodeId>> = Vec::with_capacity(layer.len());
+        for neuron in layer {
+            // Gather the table-gate inputs: selected code words, LSB-first
+            // per digit, digit j at bit offset j*in_bits.
+            let mut ins: Vec<NodeId> = Vec::with_capacity(neuron.sel.len() * in_bits);
+            for &s in &neuron.sel {
+                ins.extend_from_slice(&h[s]);
+            }
+            debug_assert!(ins.len() <= 6);
+            let out_width = if is_last { score_width } else { model.abits };
+            let mut out_word = Vec::with_capacity(out_width);
+            for b in 0..out_width {
+                let mut tt = 0u64;
+                for (addr, &v) in neuron.table.iter().enumerate() {
+                    let val = (v + score_off) as u64;
+                    if (val >> b) & 1 == 1 {
+                        tt |= 1 << addr;
+                    }
+                }
+                out_word.push(bld.table(ins.clone(), tt));
+            }
+            if is_last {
+                score_words.push(out_word);
+            } else {
+                next.push(out_word);
+            }
+        }
+        if !is_last {
+            h = next;
+        }
+    }
+    let am = argmax::build_argmax(&mut bld, &score_words);
+    for &b in &am.index {
+        bld.output(b);
+    }
+    for &b in &am.value {
+        bld.output(b);
+    }
+    Ok(LogicNetsDesign {
+        net: bld.finish(),
+        num_features: f,
+        input_width: model.ibits,
+        index_width: am.index.len(),
+    })
+}
+
+/// Evaluate the mapped design on feature codes (verification path).
+pub fn eval_design(
+    design: &LogicNetsDesign,
+    nl: &crate::techmap::LutNetlist,
+    codes: &[u64],
+) -> usize {
+    let mut inputs = Vec::with_capacity(design.num_features * design.input_width);
+    for &c in codes {
+        for b in 0..design.input_width {
+            inputs.push((c >> b) & 1 == 1);
+        }
+    }
+    let out = nl.eval(&inputs);
+    let mut pred = 0usize;
+    for b in 0..design.index_width {
+        if out[b] {
+            pred |= 1 << b;
+        }
+    }
+    pred
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Artifacts;
+    use crate::data::Dataset;
+    use crate::techmap::map6;
+    use crate::util::SplitMix64;
+
+    fn model_path(a: &Artifacts, name: &str) -> std::path::PathBuf {
+        a.root.join("models").join(format!("logicnets-{name}.json"))
+    }
+
+    #[test]
+    fn hardware_matches_software_reference() {
+        let a = Artifacts::discover();
+        let p = model_path(&a, "jsc-s");
+        if !p.exists() {
+            eprintln!("skipping: no logicnets artifact");
+            return;
+        }
+        let model = LogicNetsModel::load(&p).unwrap();
+        let design = build_logicnets(&model).unwrap();
+        let nl = map6(&design.net);
+        assert!(nl.lut_count() > 0);
+        let mut rng = SplitMix64::new(17);
+        for _ in 0..300 {
+            let codes: Vec<u64> =
+                (0..model.layer_sizes[0]).map(|_| rng.below(1 << model.ibits)).collect();
+            let sw = model.predict_codes(&codes);
+            let hw = eval_design(&design, &nl, &codes);
+            assert_eq!(hw, sw, "codes={codes:?}");
+        }
+    }
+
+    #[test]
+    fn netlist_accuracy_matches_reported() {
+        let a = Artifacts::discover();
+        let p = model_path(&a, "jsc-s");
+        if !p.exists() {
+            return;
+        }
+        let model = LogicNetsModel::load(&p).unwrap();
+        let test = Dataset::load_csv(&a.dataset_path("test")).unwrap();
+        let acc = model.accuracy(&test, 3000);
+        assert!(
+            (acc - model.acc).abs() < 0.03,
+            "software acc {acc} vs exported {}",
+            model.acc
+        );
+    }
+}

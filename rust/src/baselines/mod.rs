@@ -1,0 +1,8 @@
+//! Comparison baselines for Table II / Fig. 6: TreeLUT (GBDT-to-LUT, Khataei
+//! & Bazargan FPGA'25) built entirely in rust, and published numbers quoted
+//! from the paper for architectures we did not re-implement.
+
+pub mod gbdt;
+pub mod logicnets;
+pub mod published;
+pub mod treelut;

@@ -1,0 +1,104 @@
+//! Published Table II numbers quoted from the paper for architectures we do
+//! not re-implement (the paper itself mixes own measurements with published
+//! results; rows carry a `source` tag so the bench output is honest about
+//! which numbers are measured here vs transcribed).
+
+/// One Table II row as printed in the paper.
+#[derive(Debug, Clone)]
+pub struct PublishedRow {
+    pub model: &'static str,
+    pub acc: f64,
+    pub luts: usize,
+    pub ffs: usize,
+    pub fmax_mhz: f64,
+    pub latency_ns: f64,
+    pub area_delay: f64,
+}
+
+/// Paper Table II rows (excluding the DWN rows, which we measure ourselves).
+pub const TABLE2_PUBLISHED: &[PublishedRow] = &[
+    PublishedRow { model: "NeuraLUT-Assemble [19]", acc: 76.0, luts: 1780, ffs: 540, fmax_mhz: 941.0, latency_ns: 2.1, area_delay: 3738.0 },
+    PublishedRow { model: "TreeLUT [20]", acc: 76.0, luts: 2234, ffs: 347, fmax_mhz: 735.0, latency_ns: 2.7, area_delay: 6032.0 },
+    PublishedRow { model: "TreeLUT [20]", acc: 75.0, luts: 796, ffs: 74, fmax_mhz: 887.0, latency_ns: 1.1, area_delay: 876.0 },
+    PublishedRow { model: "PolyLUT-Add [16]", acc: 75.0, luts: 36484, ffs: 1209, fmax_mhz: 315.0, latency_ns: 16.0, area_delay: 583744.0 },
+    PublishedRow { model: "NeuraLUT [17]", acc: 75.0, luts: 92357, ffs: 4885, fmax_mhz: 368.0, latency_ns: 14.0, area_delay: 1292998.0 },
+    PublishedRow { model: "PolyLUT [15]", acc: 75.0, luts: 236541, ffs: 2775, fmax_mhz: 235.0, latency_ns: 21.0, area_delay: 4967361.0 },
+    PublishedRow { model: "LLNN [21]", acc: 75.0, luts: 13926, ffs: 0, fmax_mhz: 153.0, latency_ns: 6.5, area_delay: 90519.0 },
+    PublishedRow { model: "ReducedLUT [22]", acc: 74.9, luts: 58409, ffs: 0, fmax_mhz: 303.0, latency_ns: 17.0, area_delay: 992963.0 },
+    PublishedRow { model: "AmigoLUT-NeuraLUT-S [18]", acc: 74.4, luts: 42742, ffs: 4717, fmax_mhz: 520.0, latency_ns: 9.6, area_delay: 410323.0 },
+    PublishedRow { model: "LogicNets* [14]", acc: 73.1, luts: 36415, ffs: 2790, fmax_mhz: 390.0, latency_ns: 6.0, area_delay: 218490.0 },
+    PublishedRow { model: "AmigoLUT-NeuraLUT-XS [18]", acc: 72.9, luts: 1243, ffs: 1240, fmax_mhz: 1008.0, latency_ns: 5.0, area_delay: 6215.0 },
+    PublishedRow { model: "ReducedLUT [22]", acc: 72.5, luts: 2786, ffs: 0, fmax_mhz: 409.0, latency_ns: 4.9, area_delay: 13651.0 },
+    PublishedRow { model: "LogicNets* [14]", acc: 72.1, luts: 15526, ffs: 881, fmax_mhz: 577.0, latency_ns: 5.0, area_delay: 77630.0 },
+    PublishedRow { model: "PolyLUT [15]", acc: 72.0, luts: 12436, ffs: 773, fmax_mhz: 646.0, latency_ns: 5.0, area_delay: 62180.0 },
+    PublishedRow { model: "NeuraLUT [17]", acc: 72.0, luts: 4684, ffs: 341, fmax_mhz: 727.0, latency_ns: 3.0, area_delay: 14148.0 },
+    PublishedRow { model: "PolyLUT-Add [16]", acc: 72.0, luts: 895, ffs: 189, fmax_mhz: 750.0, latency_ns: 4.0, area_delay: 3580.0 },
+    PublishedRow { model: "LLNN [21]", acc: 72.0, luts: 6431, ffs: 0, fmax_mhz: 449.0, latency_ns: 2.2, area_delay: 14148.0 },
+    PublishedRow { model: "AmigoLUT-NeuraLUT-XS [18]", acc: 71.1, luts: 320, ffs: 482, fmax_mhz: 1445.0, latency_ns: 3.5, area_delay: 1120.0 },
+];
+
+/// Paper Table I DWN rows (the reference points our generator is compared
+/// against in EXPERIMENTS.md).
+#[derive(Debug, Clone)]
+pub struct PaperDwnRow {
+    pub model: &'static str,
+    pub variant: &'static str,
+    pub bits: Option<u32>,
+    pub acc: Option<f64>,
+    pub luts: usize,
+    pub ffs: usize,
+    pub fmax_mhz: f64,
+    pub latency_ns: f64,
+    pub area_delay: f64,
+}
+
+pub const TABLE1_PAPER: &[PaperDwnRow] = &[
+    PaperDwnRow { model: "lg-2400", variant: "TEN", bits: None, acc: None, luts: 4972, ffs: 3305, fmax_mhz: 827.0, latency_ns: 7.3, area_delay: 36296.0 },
+    PaperDwnRow { model: "lg-2400", variant: "PEN+FT", bits: Some(9), acc: None, luts: 7011, ffs: 961, fmax_mhz: 947.0, latency_ns: 2.1, area_delay: 14723.0 },
+    PaperDwnRow { model: "md-360", variant: "TEN", bits: None, acc: Some(75.6), luts: 720, ffs: 457, fmax_mhz: 827.0, latency_ns: 3.6, area_delay: 2592.0 },
+    PaperDwnRow { model: "md-360", variant: "PEN+FT", bits: Some(9), acc: Some(75.6), luts: 1697, ffs: 198, fmax_mhz: 696.0, latency_ns: 2.6, area_delay: 4412.0 },
+    PaperDwnRow { model: "sm-50", variant: "TEN", bits: None, acc: Some(74.0), luts: 110, ffs: 72, fmax_mhz: 1094.0, latency_ns: 1.5, area_delay: 165.0 },
+    PaperDwnRow { model: "sm-50", variant: "PEN+FT", bits: Some(8), acc: Some(74.0), luts: 311, ffs: 52, fmax_mhz: 1011.0, latency_ns: 2.0, area_delay: 622.0 },
+    PaperDwnRow { model: "sm-10", variant: "TEN", bits: None, acc: Some(71.1), luts: 20, ffs: 22, fmax_mhz: 3030.0, latency_ns: 0.6, area_delay: 12.0 },
+    PaperDwnRow { model: "sm-10", variant: "PEN+FT", bits: Some(6), acc: Some(71.2), luts: 64, ffs: 18, fmax_mhz: 1251.0, latency_ns: 1.6, area_delay: 102.0 },
+];
+
+/// Paper Table III: LUT counts and bit-widths for TEN / PEN / PEN+FT.
+#[derive(Debug, Clone)]
+pub struct PaperT3Row {
+    pub model: &'static str,
+    pub penft_luts: usize,
+    pub penft_bits: u32,
+    pub pen_luts: usize,
+    pub pen_bits: u32,
+    pub ten_luts: usize,
+}
+
+pub const TABLE3_PAPER: &[PaperT3Row] = &[
+    PaperT3Row { model: "sm-10", penft_luts: 64, penft_bits: 6, pen_luts: 106, pen_bits: 9, ten_luts: 20 },
+    PaperT3Row { model: "sm-50", penft_luts: 311, penft_bits: 8, pen_luts: 345, pen_bits: 9, ten_luts: 110 },
+    PaperT3Row { model: "md-360", penft_luts: 1697, penft_bits: 9, pen_luts: 1994, pen_bits: 11, ten_luts: 720 },
+    PaperT3Row { model: "lg-2400", penft_luts: 7011, penft_bits: 9, pen_luts: 18330, pen_bits: 12, ten_luts: 4972 },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_nonempty_and_sane() {
+        assert_eq!(TABLE1_PAPER.len(), 8);
+        assert_eq!(TABLE3_PAPER.len(), 4);
+        assert!(TABLE2_PUBLISHED.len() >= 15);
+        for r in TABLE2_PUBLISHED {
+            assert!(r.acc > 70.0 && r.acc < 77.0);
+            assert!(r.luts > 0);
+        }
+        // Paper's headline overhead factors recoverable from Table III.
+        let sm10 = &TABLE3_PAPER[0];
+        let pen_over = sm10.pen_luts as f64 / sm10.ten_luts as f64;
+        let ft_over = sm10.penft_luts as f64 / sm10.ten_luts as f64;
+        assert!((pen_over - 5.3).abs() < 0.1);
+        assert!((ft_over - 3.2).abs() < 0.1);
+    }
+}

@@ -1,0 +1,238 @@
+//! TreeLUT baseline hardware generator (Khataei & Bazargan, FPGA'25):
+//! GBDT ensembles mapped to LUT logic. Each tree becomes (a) comparators for
+//! its (feature, threshold) pairs — shared across trees via structural
+//! hashing, (b) per-leaf path indicators (AND of edge conditions), and
+//! (c) a gated-constant OR producing the tree's quantized score word (leaf
+//! paths are mutually exclusive). Per-class adder trees sum the tree words
+//! and the same argmax stage as the DWN accelerator picks the class.
+
+use super::gbdt::{GbdtModel, Node, Tree};
+use crate::hwgen::argmax;
+use crate::logic::net::NodeId;
+use crate::logic::Builder;
+use crate::logic::Network;
+use crate::util::bits_for;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Generated TreeLUT design (same output interface as the DWN accelerator:
+/// class index word + max score word).
+pub struct TreeLutDesign {
+    pub net: Network,
+    pub num_features: usize,
+    pub input_width: usize,
+    pub index_width: usize,
+    pub score_width: usize,
+}
+
+/// Integer leaf value of `tree` at array position `i`, under `step`.
+fn leaf_int(value: f64, step: f64) -> i64 {
+    if step == 0.0 {
+        0
+    } else {
+        (value / step).round() as i64
+    }
+}
+
+/// Build the hardware for a trained GBDT.
+pub fn build_treelut(model: &GbdtModel) -> Result<TreeLutDesign> {
+    if model.leaf_step == 0.0 {
+        bail!("TreeLUT requires leaf-quantized GBDT (leaf_quant_levels > 0)");
+    }
+    let num_features = model
+        .trees
+        .iter()
+        .flatten()
+        .flat_map(|t| t.thresholds())
+        .map(|(f, _)| f + 1)
+        .max()
+        .unwrap_or(1);
+    let width = (model.frac_bits + 1) as usize;
+
+    // Global leaf offset so all hardware words are unsigned. Every class has
+    // the same number of trees, so a per-tree constant shift cancels in the
+    // argmax comparison.
+    let mut min_leaf = i64::MAX;
+    let mut max_leaf = i64::MIN;
+    for t in model.trees.iter().flatten() {
+        for n in &t.nodes {
+            if let Node::Leaf { value } = n {
+                let v = leaf_int(*value, model.leaf_step);
+                min_leaf = min_leaf.min(v);
+                max_leaf = max_leaf.max(v);
+            }
+        }
+    }
+    let offset = -min_leaf;
+    let leaf_range = (max_leaf + offset).max(1) as u64;
+    let leaf_width = bits_for(leaf_range as usize + 1);
+
+    let mut bld = Builder::new();
+    let words: Vec<Vec<NodeId>> = (0..num_features).map(|_| bld.inputs(width)).collect();
+
+    // Comparator cache shared across all trees (the paper's encoder-sharing
+    // story applies to TreeLUT too).
+    let mut cmp_cache: HashMap<(usize, i32), NodeId> = HashMap::new();
+
+    // Per class, sum the tree score words.
+    let mut class_words: Vec<Vec<NodeId>> = Vec::with_capacity(model.num_classes);
+    let rounds = model.trees.len();
+    let sum_width = leaf_width + bits_for(rounds.max(1));
+    for c in 0..model.num_classes {
+        let mut acc: Option<Vec<NodeId>> = None;
+        for round in &model.trees {
+            let tree_word = build_tree_word(
+                &mut bld,
+                &round[c],
+                &words,
+                &mut cmp_cache,
+                model.leaf_step,
+                offset,
+                leaf_width,
+            );
+            acc = Some(match acc {
+                None => tree_word,
+                Some(a) => {
+                    // Pad to equal widths, add, keep sum_width bits.
+                    let w = a.len().max(tree_word.len());
+                    let pad = |bld: &mut Builder, mut v: Vec<NodeId>| {
+                        while v.len() < w {
+                            let z = bld.constant(false);
+                            v.push(z);
+                        }
+                        v
+                    };
+                    let a = pad(&mut bld, a);
+                    let t = pad(&mut bld, tree_word);
+                    let mut s = bld.add_words(&a, &t);
+                    s.truncate(sum_width);
+                    s
+                }
+            });
+        }
+        let mut w = acc.expect("at least one round");
+        while w.len() < sum_width {
+            let z = bld.constant(false);
+            w.push(z);
+        }
+        w.truncate(sum_width);
+        class_words.push(w);
+    }
+
+    let am = argmax::build_argmax(&mut bld, &class_words);
+    for &b in &am.index {
+        bld.output(b);
+    }
+    for &b in &am.value {
+        bld.output(b);
+    }
+    Ok(TreeLutDesign {
+        net: bld.finish(),
+        num_features,
+        input_width: width,
+        index_width: am.index.len(),
+        score_width: sum_width,
+    })
+}
+
+/// One tree's score word: OR over leaves of (leaf constant AND path).
+fn build_tree_word(
+    bld: &mut Builder,
+    tree: &Tree,
+    words: &[Vec<NodeId>],
+    cmp_cache: &mut HashMap<(usize, i32), NodeId>,
+    leaf_step: f64,
+    offset: i64,
+    leaf_width: usize,
+) -> Vec<NodeId> {
+    // Collect (leaf_value, path_condition) pairs by walking the tree.
+    let mut leaves: Vec<(u64, Vec<NodeId>)> = Vec::new();
+    let mut stack: Vec<(usize, Vec<NodeId>)> = vec![(0, Vec::new())];
+    while let Some((i, path)) = stack.pop() {
+        match &tree.nodes[i] {
+            Node::Leaf { value } => {
+                let v = (leaf_int(*value, leaf_step) + offset) as u64;
+                leaves.push((v, path));
+            }
+            Node::Split { feature, threshold, left, right } => {
+                // x < threshold  <=>  !(x >= threshold)
+                let ge = *cmp_cache.entry((*feature, *threshold)).or_insert_with(|| {
+                    bld.ge_const_signed(&words[*feature], *threshold as i64)
+                });
+                let lt = bld.not(ge);
+                let mut lp = path.clone();
+                lp.push(lt);
+                stack.push((*left, lp));
+                let mut rp = path;
+                rp.push(ge);
+                stack.push((*right, rp));
+            }
+        }
+    }
+    // Bit b of the word = OR over leaves with bit b set of AND(path).
+    let paths: Vec<NodeId> = leaves.iter().map(|(_, p)| bld.andn(p)).collect();
+    (0..leaf_width)
+        .map(|b| {
+            let active: Vec<NodeId> = leaves
+                .iter()
+                .zip(&paths)
+                .filter(|((v, _), _)| (v >> b) & 1 == 1)
+                .map(|(_, &p)| p)
+                .collect();
+            bld.orn(&active)
+        })
+        .collect()
+}
+
+/// Evaluate the generated design in software (for verification): returns the
+/// predicted class for quantized integer inputs.
+pub fn eval_design(design: &TreeLutDesign, netlist: &crate::techmap::LutNetlist, x: &[i32], frac_bits: u32) -> usize {
+    let width = design.input_width;
+    let mut inputs = Vec::with_capacity(design.num_features * width);
+    for f in 0..design.num_features {
+        let pat = crate::util::fixed::int_to_bits(x.get(f).copied().unwrap_or(0), frac_bits);
+        for i in 0..width {
+            inputs.push((pat >> i) & 1 == 1);
+        }
+    }
+    let out = netlist.eval(&inputs);
+    let mut pred = 0usize;
+    for i in 0..design.index_width {
+        if out[i] {
+            pred |= 1 << i;
+        }
+    }
+    pred
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::gbdt::{self, GbdtConfig};
+    use crate::data::synth;
+    use crate::techmap::map6;
+
+    #[test]
+    fn treelut_hardware_matches_software_gbdt() {
+        let (train_d, test_d) = synth::load_jsc(3000, 300, synth::DEFAULT_SEED);
+        let cfg = GbdtConfig { num_rounds: 4, max_depth: 3, ..Default::default() };
+        let model = gbdt::train(&train_d, 5, &cfg);
+        let design = build_treelut(&model).unwrap();
+        let nl = map6(&design.net);
+        assert!(nl.lut_count() > 0);
+        let xt = gbdt::quantize_dataset(&test_d, cfg.frac_bits);
+        let mut agree = 0usize;
+        for (i, x) in xt.iter().enumerate().take(200) {
+            let hw = eval_design(&design, &nl, x, cfg.frac_bits);
+            let sw = model.predict(x);
+            if hw == sw {
+                agree += 1;
+            } else {
+                // Disagreements can only come from leaf quantization ties;
+                // with the shared offset they must not occur.
+                panic!("hw={hw} sw={sw} at sample {i}");
+            }
+        }
+        assert_eq!(agree, 200);
+    }
+}

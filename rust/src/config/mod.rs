@@ -1,0 +1,148 @@
+//! Run configuration: artifact locations, model/variant selection, and the
+//! tiny argv parser the CLI + benches share (clap is unavailable offline).
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Locations of the AOT artifacts.
+#[derive(Debug, Clone)]
+pub struct Artifacts {
+    pub root: PathBuf,
+}
+
+impl Artifacts {
+    /// Default root: `$DWN_ARTIFACTS` or `./artifacts` (works from the repo
+    /// root, which is where cargo runs tests/benches).
+    pub fn discover() -> Self {
+        let root = std::env::var("DWN_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"));
+        Self { root }
+    }
+
+    pub fn at(root: impl Into<PathBuf>) -> Self {
+        Self { root: root.into() }
+    }
+
+    pub fn exists(&self) -> bool {
+        self.root.join("manifest.json").exists()
+    }
+
+    pub fn model_path(&self, name: &str) -> PathBuf {
+        self.root.join("models").join(format!("{name}.json"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.root.join("hlo").join(format!("{name}_penft.hlo.txt"))
+    }
+
+    pub fn golden_path(&self, name: &str, variant: &str) -> PathBuf {
+        self.root.join("golden").join(format!("{name}_{variant}.csv"))
+    }
+
+    pub fn dataset_path(&self, split: &str) -> PathBuf {
+        self.root.join("data").join(format!("jsc_{split}.csv"))
+    }
+
+    pub fn results_dir(&self) -> PathBuf {
+        self.root.join("results")
+    }
+
+    /// Model names listed in the manifest (trained configs).
+    pub fn manifest_models(&self) -> Result<Vec<String>> {
+        let text = std::fs::read_to_string(self.root.join("manifest.json"))?;
+        let v = crate::json::parse(&text)?;
+        let mut names = Vec::new();
+        for c in v.get("configs")?.as_arr()? {
+            names.push(c.get("name")?.as_str()?.to_string());
+        }
+        Ok(names)
+    }
+
+    /// HLO batch size recorded in the manifest.
+    pub fn hlo_batch(&self) -> Result<usize> {
+        let text = std::fs::read_to_string(self.root.join("manifest.json"))?;
+        crate::json::parse(&text)?.get("hlo_batch")?.as_usize()
+    }
+}
+
+/// Minimal `--key value` / `--flag` argv parser.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl Iterator<Item = String>, flags_known: &[&str]) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = argv.peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                if flags_known.contains(&key) {
+                    out.flags.push(key.to_string());
+                } else {
+                    let Some(val) = it.next() else {
+                        bail!("option --{key} needs a value");
+                    };
+                    out.options.insert(key.to_string(), val);
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+}
+
+/// Ensure a directory exists.
+pub fn ensure_dir(p: &Path) -> Result<()> {
+    std::fs::create_dir_all(p)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn args_parse() {
+        let a = Args::parse(
+            ["run", "--model", "sm-10", "--verbose", "x"].iter().map(|s| s.to_string()),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["run", "x"]);
+        assert_eq!(a.get("model"), Some("sm-10"));
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get_usize("batch", 128).unwrap(), 128);
+    }
+
+    #[test]
+    fn artifact_paths() {
+        let art = Artifacts::at("/tmp/a");
+        assert_eq!(art.model_path("sm-10"), PathBuf::from("/tmp/a/models/sm-10.json"));
+        assert_eq!(art.golden_path("sm-10", "ten"), PathBuf::from("/tmp/a/golden/sm-10_ten.csv"));
+    }
+}

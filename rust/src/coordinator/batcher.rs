@@ -1,0 +1,303 @@
+//! Dynamic batcher + inference loop.
+
+use super::metrics::Metrics;
+use crate::runtime::Engine;
+use crate::techmap::LutNetlist;
+use crate::util::fixed;
+use anyhow::{anyhow, Result};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Inference backend.
+pub enum Backend {
+    /// PJRT-executed AOT HLO (the golden model / production path).
+    Pjrt(Engine),
+    /// Bit-accurate simulation of the generated PEN hardware.
+    Netlist {
+        netlist: LutNetlist,
+        /// Fractional bits of the fixed-point input interface.
+        frac_bits: u32,
+        num_features: usize,
+        num_classes: usize,
+        /// Width of the class-index output word.
+        index_width: usize,
+    },
+}
+
+impl Backend {
+    fn max_batch_hint(&self) -> usize {
+        match self {
+            Backend::Pjrt(e) => e.batch,
+            Backend::Netlist { .. } => 64, // one lane word
+        }
+    }
+
+    fn num_features(&self) -> usize {
+        match self {
+            Backend::Pjrt(e) => e.features,
+            Backend::Netlist { num_features, .. } => *num_features,
+        }
+    }
+
+    /// Run a batch of feature rows; returns predicted class per row.
+    fn infer(&self, rows: &[Vec<f32>]) -> Result<Vec<i32>> {
+        match self {
+            Backend::Pjrt(engine) => {
+                let mut flat = Vec::with_capacity(rows.len() * engine.features);
+                for r in rows {
+                    flat.extend_from_slice(r);
+                }
+                let out = engine.execute_padded(&flat, rows.len())?;
+                Ok(out.pred)
+            }
+            Backend::Netlist { netlist, frac_bits, num_features, index_width, .. } => {
+                let width = (*frac_bits + 1) as usize;
+                let vectors: Vec<Vec<bool>> = rows
+                    .iter()
+                    .map(|r| {
+                        let mut bits = Vec::with_capacity(num_features * width);
+                        for &x in r.iter() {
+                            let k = fixed::input_to_int(x as f64, *frac_bits);
+                            let pat = fixed::int_to_bits(k, *frac_bits);
+                            for i in 0..width {
+                                bits.push((pat >> i) & 1 == 1);
+                            }
+                        }
+                        bits
+                    })
+                    .collect();
+                let outs = netlist.eval_batch(&vectors);
+                Ok(outs
+                    .iter()
+                    .map(|o| {
+                        let mut pred = 0i32;
+                        for i in 0..*index_width {
+                            if o[i] {
+                                pred |= 1 << i;
+                            }
+                        }
+                        pred
+                    })
+                    .collect())
+            }
+        }
+    }
+}
+
+/// Batching policy.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Max requests per executed batch.
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch after the first request.
+    pub max_wait: Duration,
+    /// Bound on queued requests (backpressure).
+    pub queue_depth: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { max_batch: 128, max_wait: Duration::from_micros(200), queue_depth: 1024 }
+    }
+}
+
+struct Job {
+    features: Vec<f32>,
+    enqueued: Instant,
+    reply: Sender<Result<i32>>,
+}
+
+/// Handle to a running inference server.
+pub struct Server {
+    tx: SyncSender<Job>,
+    pub metrics: Arc<Metrics>,
+    num_features: usize,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start the batcher thread over `backend`.
+    ///
+    /// PJRT handles are not `Send`, so the backend is built *inside* the
+    /// worker thread via `factory` (the builder closure is Send even though
+    /// the engine is not). Construction failures are reported here.
+    pub fn start_with<F>(factory: F, cfg: ServerConfig) -> Result<Server>
+    where
+        F: FnOnce() -> Result<Backend> + Send + 'static,
+    {
+        let metrics = Arc::new(Metrics::default());
+        let (tx, rx) = sync_channel::<Job>(cfg.queue_depth);
+        let (setup_tx, setup_rx) = std::sync::mpsc::channel::<Result<(usize, usize)>>();
+        let m = metrics.clone();
+        let worker = std::thread::spawn(move || {
+            let backend = match factory() {
+                Ok(b) => {
+                    let _ = setup_tx.send(Ok((b.num_features(), b.max_batch_hint())));
+                    b
+                }
+                Err(e) => {
+                    let _ = setup_tx.send(Err(e));
+                    return;
+                }
+            };
+            let max_batch = cfg.max_batch.min(backend.max_batch_hint());
+            batch_loop(backend, rx, cfg, max_batch, m);
+        });
+        let (num_features, _hint) = setup_rx
+            .recv()
+            .map_err(|_| anyhow!("backend setup thread died"))??;
+        Ok(Server { tx, metrics, num_features, worker: Some(worker) })
+    }
+
+    /// Start over netlist-emulation parts (which, unlike PJRT handles, are
+    /// plain data and can move into the worker thread).
+    pub fn start_netlist(
+        netlist: LutNetlist,
+        frac_bits: u32,
+        num_features: usize,
+        num_classes: usize,
+        index_width: usize,
+        cfg: ServerConfig,
+    ) -> Server {
+        Self::start_with(
+            move || {
+                Ok(Backend::Netlist { netlist, frac_bits, num_features, num_classes, index_width })
+            },
+            cfg,
+        )
+        .expect("infallible factory")
+    }
+
+    /// Blocking single inference (convenience; contends with other callers).
+    pub fn infer(&self, features: &[f32]) -> Result<i32> {
+        let rx = self.submit(features)?;
+        rx.recv().map_err(|_| anyhow!("server stopped"))?
+    }
+
+    /// Submit without blocking; returns the reply channel.
+    pub fn submit(&self, features: &[f32]) -> Result<Receiver<Result<i32>>> {
+        if features.len() != self.num_features {
+            return Err(anyhow!(
+                "expected {} features, got {}",
+                self.num_features,
+                features.len()
+            ));
+        }
+        let (reply, rx) = std::sync::mpsc::channel();
+        self.tx
+            .try_send(Job { features: features.to_vec(), enqueued: Instant::now(), reply })
+            .map_err(|e| anyhow!("queue full or closed: {e}"))?;
+        Ok(rx)
+    }
+
+    pub fn num_features(&self) -> usize {
+        self.num_features
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        // Closing the channel stops the batch loop.
+        let (dead_tx, _) = sync_channel(1);
+        let tx = std::mem::replace(&mut self.tx, dead_tx);
+        drop(tx);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn batch_loop(
+    backend: Backend,
+    rx: Receiver<Job>,
+    cfg: ServerConfig,
+    max_batch: usize,
+    metrics: Arc<Metrics>,
+) {
+    loop {
+        // Block for the first request of the batch.
+        let first = match rx.recv() {
+            Ok(j) => j,
+            Err(_) => return, // server dropped
+        };
+        let mut jobs = vec![first];
+        let deadline = Instant::now() + cfg.max_wait;
+        while jobs.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(j) => jobs.push(j),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        let rows: Vec<Vec<f32>> = jobs.iter().map(|j| j.features.clone()).collect();
+        let t0 = Instant::now();
+        let result = backend.infer(&rows);
+        let exec = t0.elapsed();
+        let done = Instant::now();
+        let lats: Vec<Duration> = jobs.iter().map(|j| done - j.enqueued).collect();
+        metrics.record_batch(jobs.len(), exec, &lats);
+        match result {
+            Ok(preds) => {
+                for (job, pred) in jobs.into_iter().zip(preds) {
+                    let _ = job.reply.send(Ok(pred));
+                }
+            }
+            Err(e) => {
+                for job in jobs {
+                    let _ = job.reply.send(Err(anyhow!("inference failed: {e}")));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::techmap::{LutNetlist, MappedLut, Src};
+
+    /// Tiny hand-built netlist backend: 1 feature, 2-bit input word, predicts
+    /// class = sign bit of the input (bit 1 of the 2-bit word), index_width 1.
+    fn toy_server(cfg: ServerConfig) -> Server {
+        let nl = LutNetlist {
+            num_inputs: 2,
+            luts: vec![MappedLut { inputs: vec![Src::Input(1)], table: 0b10 }],
+            outputs: vec![Src::Lut(0)],
+        };
+        Server::start_netlist(nl, 1, 1, 2, 1, cfg)
+    }
+
+    #[test]
+    fn serves_and_batches() {
+        let server = toy_server(ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            queue_depth: 64,
+        });
+        // negative input -> sign bit set -> class 1; positive -> class 0.
+        assert_eq!(server.infer(&[-0.6]).unwrap(), 1);
+        assert_eq!(server.infer(&[0.4]).unwrap(), 0);
+        // concurrent burst exercises batching
+        let rxs: Vec<_> = (0..16)
+            .map(|i| server.submit(&[if i % 2 == 0 { 0.7 } else { -0.7 }]).unwrap())
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let pred = rx.recv().unwrap().unwrap();
+            assert_eq!(pred, (i % 2) as i32);
+        }
+        let snap = server.metrics.snapshot();
+        assert!(snap.requests >= 18);
+        assert!(snap.batches >= 2);
+    }
+
+    #[test]
+    fn rejects_bad_arity() {
+        let server = toy_server(ServerConfig::default());
+        assert!(server.infer(&[0.1, 0.2]).is_err());
+    }
+}

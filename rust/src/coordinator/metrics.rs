@@ -1,0 +1,99 @@
+//! Serving metrics: latency percentiles + throughput counters.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Lock-protected metrics store (single coordinator thread writes, readers
+/// snapshot).
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    /// End-to-end request latencies (us).
+    latencies_us: Vec<u64>,
+    /// Batch sizes executed.
+    batch_sizes: Vec<usize>,
+    requests: u64,
+    batches: u64,
+    busy_us: u64,
+}
+
+/// Point-in-time metrics view.
+#[derive(Debug, Clone, Default)]
+pub struct Snapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub mean_batch: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+    pub busy_us: u64,
+}
+
+impl Metrics {
+    pub fn record_batch(&self, size: usize, exec: Duration, latencies: &[Duration]) {
+        let mut m = self.inner.lock().unwrap();
+        m.batches += 1;
+        m.requests += size as u64;
+        m.batch_sizes.push(size);
+        m.busy_us += exec.as_micros() as u64;
+        for l in latencies {
+            m.latencies_us.push(l.as_micros() as u64);
+        }
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let m = self.inner.lock().unwrap();
+        let mut lat = m.latencies_us.clone();
+        lat.sort_unstable();
+        let pick = |q: f64| -> u64 {
+            if lat.is_empty() {
+                0
+            } else {
+                lat[((lat.len() - 1) as f64 * q) as usize]
+            }
+        };
+        Snapshot {
+            requests: m.requests,
+            batches: m.batches,
+            mean_batch: if m.batches == 0 {
+                0.0
+            } else {
+                m.batch_sizes.iter().sum::<usize>() as f64 / m.batches as f64
+            },
+            p50_us: pick(0.5),
+            p99_us: pick(0.99),
+            max_us: lat.last().copied().unwrap_or(0),
+            busy_us: m.busy_us,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_percentiles() {
+        let m = Metrics::default();
+        let lats: Vec<Duration> = (1..=100).map(Duration::from_micros).collect();
+        m.record_batch(100, Duration::from_micros(500), &lats);
+        let s = m.snapshot();
+        assert_eq!(s.requests, 100);
+        assert_eq!(s.batches, 1);
+        assert_eq!(s.mean_batch, 100.0);
+        assert!(s.p50_us >= 45 && s.p50_us <= 55, "p50={}", s.p50_us);
+        assert!(s.p99_us >= 95, "p99={}", s.p99_us);
+        assert_eq!(s.max_us, 100);
+    }
+
+    #[test]
+    fn empty_snapshot() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.requests, 0);
+        assert_eq!(s.p99_us, 0);
+    }
+}

@@ -1,0 +1,17 @@
+//! Serving coordinator: a batching inference server over either the PJRT
+//! runtime (golden model) or the bit-accurate netlist simulator (hardware
+//! emulation). Python never runs here — the engine executes the AOT HLO.
+//!
+//! The paper's contribution is the hardware generator, so this layer is a
+//! deliberately thin driver (system-prompt L3 note): request queue, dynamic
+//! batcher with a deadline, metrics. Everything is plain std threads —
+//! tokio is not available offline, and one inference thread matches both
+//! the single PJRT CPU device and the paper's single-accelerator setting.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+
+pub use batcher::{Backend, Server, ServerConfig};
+pub use metrics::{Metrics, Snapshot};
+pub use router::Router;

@@ -1,0 +1,132 @@
+//! Multi-model request router: one batching [`Server`] per deployed model,
+//! requests routed by model name (vllm-router-style, scaled to this
+//! repo's single-node setting). Tracks per-model and aggregate stats and
+//! applies backpressure per model queue.
+
+use super::batcher::{Server, ServerConfig};
+use super::metrics::Snapshot;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::mpsc::Receiver;
+
+/// A named collection of model servers.
+pub struct Router {
+    servers: BTreeMap<String, Server>,
+}
+
+impl Default for Router {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Router {
+    pub fn new() -> Self {
+        Self { servers: BTreeMap::new() }
+    }
+
+    /// Deploy a model under `name`. Replaces any previous deployment with
+    /// the same name (the old server drains on drop).
+    pub fn deploy(&mut self, name: &str, server: Server) {
+        self.servers.insert(name.to_string(), server);
+    }
+
+    pub fn undeploy(&mut self, name: &str) -> bool {
+        self.servers.remove(name).is_some()
+    }
+
+    pub fn models(&self) -> Vec<&str> {
+        self.servers.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Route a request to `model`; returns the reply channel.
+    pub fn submit(&self, model: &str, features: &[f32]) -> Result<Receiver<Result<i32>>> {
+        let server = self
+            .servers
+            .get(model)
+            .ok_or_else(|| anyhow!("unknown model '{model}' (deployed: {:?})", self.models()))?;
+        server.submit(features)
+    }
+
+    /// Blocking inference convenience.
+    pub fn infer(&self, model: &str, features: &[f32]) -> Result<i32> {
+        let rx = self.submit(model, features)?;
+        rx.recv().map_err(|_| anyhow!("server for '{model}' stopped"))?
+    }
+
+    /// Per-model metric snapshots.
+    pub fn stats(&self) -> BTreeMap<String, Snapshot> {
+        self.servers.iter().map(|(k, s)| (k.clone(), s.metrics.snapshot())).collect()
+    }
+
+    /// Aggregate requests served across models.
+    pub fn total_requests(&self) -> u64 {
+        self.servers.values().map(|s| s.metrics.snapshot().requests).sum()
+    }
+}
+
+/// Convenience: standard router config for netlist-emulation deployments.
+pub fn emulation_server_config() -> ServerConfig {
+    ServerConfig::default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::Server;
+    use crate::techmap::{LutNetlist, MappedLut, Src};
+
+    /// Identity-ish toy model: predicts sign bit of the single feature.
+    fn toy_server(invert: bool) -> Server {
+        let table = if invert { 0b01 } else { 0b10 };
+        let nl = LutNetlist {
+            num_inputs: 2,
+            luts: vec![MappedLut { inputs: vec![Src::Input(1)], table }],
+            outputs: vec![Src::Lut(0)],
+        };
+        Server::start_netlist(nl, 1, 1, 2, 1, ServerConfig::default())
+    }
+
+    #[test]
+    fn routes_by_model_name() {
+        let mut router = Router::new();
+        router.deploy("a", toy_server(false));
+        router.deploy("b", toy_server(true));
+        assert_eq!(router.models(), vec!["a", "b"]);
+        // model a: negative -> 1; model b inverts.
+        assert_eq!(router.infer("a", &[-0.9]).unwrap(), 1);
+        assert_eq!(router.infer("b", &[-0.9]).unwrap(), 0);
+        assert_eq!(router.infer("a", &[0.9]).unwrap(), 0);
+        assert_eq!(router.infer("b", &[0.9]).unwrap(), 1);
+    }
+
+    #[test]
+    fn unknown_model_is_an_error() {
+        let router = Router::new();
+        assert!(router.infer("nope", &[0.0]).is_err());
+    }
+
+    #[test]
+    fn undeploy_and_stats() {
+        let mut router = Router::new();
+        router.deploy("a", toy_server(false));
+        for _ in 0..5 {
+            let _ = router.infer("a", &[0.5]).unwrap();
+        }
+        let stats = router.stats();
+        assert_eq!(stats["a"].requests, 5);
+        assert_eq!(router.total_requests(), 5);
+        assert!(router.undeploy("a"));
+        assert!(!router.undeploy("a"));
+        assert!(router.infer("a", &[0.5]).is_err());
+    }
+
+    #[test]
+    fn redeploy_replaces() {
+        let mut router = Router::new();
+        router.deploy("m", toy_server(false));
+        assert_eq!(router.infer("m", &[-0.5]).unwrap(), 1);
+        router.deploy("m", toy_server(true));
+        assert_eq!(router.infer("m", &[-0.5]).unwrap(), 0);
+    }
+}

@@ -1,0 +1,156 @@
+//! Golden-vector loaders (`artifacts/golden/*.csv`) — the cross-layer
+//! verification contract: inputs plus the JAX hard-forward's scores/pred.
+
+use crate::util::BitVec;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// One PEN golden vector: integer inputs + expected outputs.
+#[derive(Debug, Clone)]
+pub struct PenVector {
+    pub x_ints: Vec<i32>,
+    pub scores: Vec<i32>,
+    pub pred: usize,
+    pub label: usize,
+}
+
+/// One TEN golden vector: pruned thermometer bits + expected outputs.
+#[derive(Debug, Clone)]
+pub struct TenVector {
+    pub bits: BitVec,
+    pub scores: Vec<i32>,
+    pub pred: usize,
+    pub label: usize,
+}
+
+/// PEN golden file: `# frac_bits=N format=pen` header then CSV.
+pub struct PenGolden {
+    pub frac_bits: u32,
+    pub vectors: Vec<PenVector>,
+    pub num_features: usize,
+    pub num_classes: usize,
+}
+
+/// TEN golden file: `# format=ten used_bits=N` header then CSV.
+pub struct TenGolden {
+    pub used_bits: usize,
+    pub vectors: Vec<TenVector>,
+    pub num_classes: usize,
+}
+
+pub fn load_pen(path: &Path) -> Result<PenGolden> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading golden {}", path.display()))?;
+    let mut lines = text.lines();
+    let meta = lines.next().context("empty golden file")?;
+    let frac_bits = parse_meta(meta, "frac_bits")?.parse::<u32>()?;
+    let header = lines.next().context("missing header")?;
+    let cols: Vec<&str> = header.split(',').collect();
+    let num_features = cols.iter().filter(|c| c.starts_with('x')).count();
+    let num_classes = cols.iter().filter(|c| c.starts_with('s')).count();
+    if num_features == 0 || num_classes == 0 {
+        bail!("bad golden header: {header}");
+    }
+    let mut vectors = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let vals: Vec<i64> = line
+            .split(',')
+            .map(|v| v.trim().parse::<i64>())
+            .collect::<Result<_, _>>()
+            .with_context(|| format!("bad golden line: {line}"))?;
+        if vals.len() != num_features + num_classes + 2 {
+            bail!("golden line has {} cols, want {}", vals.len(), num_features + num_classes + 2);
+        }
+        vectors.push(PenVector {
+            x_ints: vals[..num_features].iter().map(|&v| v as i32).collect(),
+            scores: vals[num_features..num_features + num_classes]
+                .iter()
+                .map(|&v| v as i32)
+                .collect(),
+            pred: vals[num_features + num_classes] as usize,
+            label: vals[num_features + num_classes + 1] as usize,
+        });
+    }
+    Ok(PenGolden { frac_bits, vectors, num_features, num_classes })
+}
+
+pub fn load_ten(path: &Path) -> Result<TenGolden> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading golden {}", path.display()))?;
+    let mut lines = text.lines();
+    let meta = lines.next().context("empty golden file")?;
+    let used_bits = parse_meta(meta, "used_bits")?.parse::<usize>()?;
+    let header = lines.next().context("missing header")?;
+    let num_classes = header.split(',').filter(|c| c.starts_with('s')).count();
+    let mut vectors = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let parts: Vec<&str> = line.split(',').collect();
+        if parts.len() != num_classes + 3 {
+            bail!("ten golden line has {} cols", parts.len());
+        }
+        vectors.push(TenVector {
+            bits: BitVec::from_hex(parts[0], used_bits),
+            scores: parts[1..1 + num_classes]
+                .iter()
+                .map(|v| v.trim().parse::<i32>())
+                .collect::<Result<_, _>>()?,
+            pred: parts[1 + num_classes].trim().parse()?,
+            label: parts[2 + num_classes].trim().parse()?,
+        });
+    }
+    Ok(TenGolden { used_bits, vectors, num_classes })
+}
+
+fn parse_meta<'a>(line: &'a str, key: &str) -> Result<&'a str> {
+    for tok in line.trim_start_matches('#').split_whitespace() {
+        if let Some((k, v)) = tok.split_once('=') {
+            if k == key {
+                return Ok(v);
+            }
+        }
+    }
+    bail!("meta key '{key}' not found in {line:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_pen_golden() {
+        let dir = std::env::temp_dir().join("dwn_golden_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.csv");
+        std::fs::write(
+            &p,
+            "# frac_bits=6 format=pen\nx0,x1,s0,s1,pred,label\n-3,5,2,1,0,1\n",
+        )
+        .unwrap();
+        let g = load_pen(&p).unwrap();
+        assert_eq!(g.frac_bits, 6);
+        assert_eq!(g.num_features, 2);
+        assert_eq!(g.num_classes, 2);
+        assert_eq!(g.vectors[0].x_ints, vec![-3, 5]);
+        assert_eq!(g.vectors[0].pred, 0);
+    }
+
+    #[test]
+    fn parses_ten_golden() {
+        let dir = std::env::temp_dir().join("dwn_golden_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.csv");
+        std::fs::write(&p, "# format=ten used_bits=6\nbits_hex,s0,s1,pred,label\n2a,1,2,1,1\n")
+            .unwrap();
+        let g = load_ten(&p).unwrap();
+        assert_eq!(g.used_bits, 6);
+        let b = &g.vectors[0].bits;
+        assert_eq!(b.get_uint(0, 6), 0x2a);
+        assert_eq!(g.vectors[0].pred, 1);
+    }
+}

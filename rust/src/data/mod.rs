@@ -1,0 +1,101 @@
+//! Dataset handling: CSV loaders for the artifacts written by
+//! `python/compile/aot.py` and a bit-for-bit rust mirror of the synthetic
+//! JSC generator (see `python/compile/data.py` — same SplitMix64 stream).
+
+pub mod golden;
+pub mod synth;
+
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// A loaded (or generated) dataset split.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Row-major features, `num_features` per sample, in [-1, 1).
+    pub x: Vec<f32>,
+    pub y: Vec<u8>,
+    pub num_features: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.x[i * self.num_features..(i + 1) * self.num_features]
+    }
+
+    /// Load `fN,...,label` CSV written by the python side.
+    pub fn load_csv(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading dataset {}", path.display()))?;
+        let mut lines = text.lines();
+        let header = lines.next().context("empty csv")?;
+        let cols: Vec<&str> = header.split(',').collect();
+        if cols.last() != Some(&"label") {
+            bail!("expected trailing 'label' column, got {header:?}");
+        }
+        let num_features = cols.len() - 1;
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for (ln, line) in lines.enumerate() {
+            if line.is_empty() {
+                continue;
+            }
+            let mut parts = line.split(',');
+            for c in 0..num_features {
+                let v: f32 = parts
+                    .next()
+                    .with_context(|| format!("line {}: missing feature {c}", ln + 2))?
+                    .parse()
+                    .with_context(|| format!("line {}: bad float", ln + 2))?;
+                x.push(v);
+            }
+            let lab: u8 = parts
+                .next()
+                .with_context(|| format!("line {}: missing label", ln + 2))?
+                .trim()
+                .parse()
+                .with_context(|| format!("line {}: bad label", ln + 2))?;
+            if parts.next().is_some() {
+                bail!("line {}: extra columns", ln + 2);
+            }
+            y.push(lab);
+        }
+        Ok(Self { x, y, num_features })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("dwn_test_csv");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("d.csv");
+        std::fs::write(&p, "f0,f1,label\n0.5,-0.25,3\n-1.0,0.0,0\n").unwrap();
+        let d = Dataset::load_csv(&p).unwrap();
+        assert_eq!(d.len(), 2);
+        assert_eq!(d.num_features, 2);
+        assert_eq!(d.row(0), &[0.5, -0.25]);
+        assert_eq!(d.y, vec![3, 0]);
+    }
+
+    #[test]
+    fn csv_rejects_bad() {
+        let dir = std::env::temp_dir().join("dwn_test_csv2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.csv");
+        std::fs::write(&p, "f0,f1,label\n0.5,3\n").unwrap();
+        assert!(Dataset::load_csv(&p).is_err());
+        std::fs::write(&p, "f0,f1\n0.5,3\n").unwrap();
+        assert!(Dataset::load_csv(&p).is_err());
+    }
+}

@@ -1,0 +1,167 @@
+//! Rust mirror of the synthetic JSC generator (`python/compile/data.py`).
+//!
+//! Consumes the same SplitMix64 stream in the same order, so both sides
+//! generate identical datasets for a given seed (verified by
+//! `tests/data_parity.rs` against the CSV artifact).
+
+use super::Dataset;
+use crate::util::SplitMix64;
+
+pub const NUM_FEATURES: usize = 16;
+pub const NUM_CLASSES: usize = 5;
+pub const DEFAULT_SEED: u64 = 0xD5C0DE;
+
+struct ClassParams {
+    lat_means: [[f64; 3]; NUM_CLASSES],
+    load: [[f64; 3]; NUM_FEATURES],
+    noise: [f64; NUM_FEATURES],
+    style: [u64; NUM_FEATURES],
+}
+
+fn class_params(rng: &mut SplitMix64) -> ClassParams {
+    let mut lat_means = [[0.0; 3]; NUM_CLASSES];
+    for c in 0..NUM_CLASSES {
+        for k in 0..3 {
+            lat_means[c][k] = rng.next_normal() * 2.2;
+        }
+    }
+    for k in 0..3 {
+        lat_means[3][k] = lat_means[2][k] + 0.55 * rng.next_normal();
+    }
+    let mut load = [[0.0; 3]; NUM_FEATURES];
+    for f in 0..NUM_FEATURES {
+        for k in 0..3 {
+            load[f][k] = rng.next_normal();
+        }
+    }
+    let mut noise = [0.0; NUM_FEATURES];
+    for n in noise.iter_mut() {
+        *n = 0.5 + 0.7 * rng.next_f64();
+    }
+    let mut style = [0u64; NUM_FEATURES];
+    for s in style.iter_mut() {
+        *s = rng.next_u64() % 3;
+    }
+    ClassParams { lat_means, load, noise, style }
+}
+
+/// Generate raw (unnormalised) features + labels, identical to python's
+/// `generate_raw`.
+pub fn generate_raw(num_samples: usize, seed: u64) -> (Vec<[f64; NUM_FEATURES]>, Vec<u8>) {
+    let mut rng = SplitMix64::new(seed);
+    let p = class_params(&mut rng);
+    let mut xs = Vec::with_capacity(num_samples);
+    let mut ys = Vec::with_capacity(num_samples);
+    for _ in 0..num_samples {
+        let c = (rng.next_u64() % NUM_CLASSES as u64) as usize;
+        ys.push(c as u8);
+        let mut z = [0.0f64; 3];
+        for k in 0..3 {
+            z[k] = p.lat_means[c][k] + rng.next_normal();
+        }
+        let mut row = [0.0f64; NUM_FEATURES];
+        for f in 0..NUM_FEATURES {
+            let mut v = p.load[f][0] * z[0] + p.load[f][1] * z[1] + p.load[f][2] * z[2]
+                + p.noise[f] * rng.next_normal();
+            match p.style[f] {
+                1 => {
+                    v = if v > 0.0 { (0.55 * v).exp_m1() } else { -(-0.25 * v).exp_m1() };
+                }
+                2 => {
+                    v = (v * 2.0).floor() / 2.0;
+                }
+                _ => {}
+            }
+            row[f] = v;
+        }
+        xs.push(row);
+    }
+    (xs, ys)
+}
+
+/// Percentile (linear interpolation, numpy-style) of sorted data.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let pos = q / 100.0 * (n - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Full mirrored pipeline of python `load_jsc`: raw -> split -> percentile
+/// clip bounds from the training split -> normalise both splits to [-1, 1).
+pub fn load_jsc(num_train: usize, num_test: usize, seed: u64) -> (Dataset, Dataset) {
+    let (xs, ys) = generate_raw(num_train + num_test, seed);
+    let (train_x, test_x) = xs.split_at(num_train);
+    let (train_y, test_y) = ys.split_at(num_train);
+
+    let mut lo = [0.0f64; NUM_FEATURES];
+    let mut hi = [0.0f64; NUM_FEATURES];
+    for f in 0..NUM_FEATURES {
+        let mut col: Vec<f64> = train_x.iter().map(|r| r[f]).collect();
+        col.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        lo[f] = percentile(&col, 0.5);
+        hi[f] = percentile(&col, 99.5);
+    }
+    let norm = |rows: &[[f64; NUM_FEATURES]], labels: &[u8]| {
+        let mut x = Vec::with_capacity(rows.len() * NUM_FEATURES);
+        for row in rows {
+            for f in 0..NUM_FEATURES {
+                let span = (hi[f] - lo[f]).max(1e-9);
+                let z = 2.0 * (row[f] - lo[f]) / span - 1.0;
+                let z = z.clamp(-1.0, f64::from_bits(1.0f64.to_bits() - 1));
+                x.push(z as f32);
+            }
+        }
+        Dataset { x, y: labels.to_vec(), num_features: NUM_FEATURES }
+    };
+    (norm(train_x, train_y), norm(test_x, test_y))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let (a, _) = generate_raw(10, 7);
+        let (b, _) = generate_raw(10, 7);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn labels_balanced_and_valid() {
+        let (_, y) = generate_raw(5000, DEFAULT_SEED);
+        let mut counts = [0usize; NUM_CLASSES];
+        for &c in &y {
+            counts[c as usize] += 1;
+        }
+        for &c in &counts {
+            assert!(c > 700, "class too rare: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn normalised_range() {
+        let (train, test) = load_jsc(2000, 500, DEFAULT_SEED);
+        assert_eq!(train.len(), 2000);
+        assert_eq!(test.len(), 500);
+        for &v in train.x.iter().chain(test.x.iter()) {
+            // f64 nextafter(1.0, 0) rounds to 1.0f32 (mirroring the python
+            // normaliser exactly), so the f32 range is closed at 1.0.
+            assert!((-1.0..=1.0).contains(&v), "value {v} out of [-1,1]");
+        }
+    }
+
+    #[test]
+    fn percentile_matches_numpy_convention() {
+        let data = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&data, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&data, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&data, 50.0) - 2.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,247 @@
+//! Full-accelerator composition (paper Fig. 1) with per-component node
+//! attribution for the Fig. 5 breakdown.
+
+use super::{argmax, encoder, lutlayer, popcount};
+use crate::logic::net::NodeId;
+use crate::logic::{Builder, Network};
+use crate::model::{DwnModel, Variant};
+use crate::techmap::{self, LutNetlist, MapConfig};
+use anyhow::Result;
+
+/// Hardware interface of a generated accelerator.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum InputKind {
+    /// TEN: inputs are the pruned thermometer bits themselves, in the order
+    /// given (sorted used-bit indices).
+    ThermometerBits { used_bits: Vec<u32> },
+    /// PEN: one signed fixed-point word per feature, `width` bits each.
+    FixedPoint { features: usize, width: usize },
+}
+
+/// Component labels for area attribution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Component {
+    Encoder,
+    LutLayer,
+    Popcount,
+    Argmax,
+}
+
+impl Component {
+    pub const ALL: [Component; 4] =
+        [Component::Encoder, Component::LutLayer, Component::Popcount, Component::Argmax];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Component::Encoder => "encoder",
+            Component::LutLayer => "lut-layer",
+            Component::Popcount => "popcount",
+            Component::Argmax => "argmax",
+        }
+    }
+}
+
+/// Generation options.
+#[derive(Debug, Clone)]
+pub struct AccelOptions {
+    pub variant: Variant,
+    /// Also route the raw class scores to outputs (verification builds).
+    pub expose_scores: bool,
+    /// Use the uniform threshold set instead of the distributive one
+    /// (ablation; PEN-family only). Thresholds are quantized on the fly.
+    pub uniform_encoding: bool,
+}
+
+impl AccelOptions {
+    pub fn new(variant: Variant) -> Self {
+        Self { variant, expose_scores: false, uniform_encoding: false }
+    }
+}
+
+/// A generated accelerator: gate network + interface + attribution ranges.
+pub struct Accelerator {
+    pub net: Network,
+    pub input_kind: InputKind,
+    /// Gate-index ranges per component (for attributing mapped LUTs).
+    pub ranges: Vec<(Component, std::ops::Range<usize>)>,
+    /// Distinct comparators in the encoder stage (0 for TEN).
+    pub distinct_comparators: usize,
+    pub num_classes: usize,
+    /// Width of each class score word.
+    pub score_width: usize,
+}
+
+/// Build the accelerator for `model` under `opts`.
+pub fn build_accelerator(model: &DwnModel, opts: &AccelOptions) -> Result<Accelerator> {
+    let mut bld = Builder::new();
+    let (sel, tables) = model.mapping_for(opts.variant);
+    let used = model.used_bits(opts.variant);
+    let mut ranges = Vec::new();
+
+    // ---- Stage 1: thermometer encoding (PEN family) or direct bits (TEN).
+    let mark0 = bld.net.len();
+    let (bit_of, input_kind, distinct): (Box<dyn Fn(u32) -> NodeId>, InputKind, usize) =
+        match opts.variant {
+            Variant::Ten => {
+                let ins = bld.inputs(used.len());
+                let map: std::collections::HashMap<u32, NodeId> =
+                    used.iter().copied().zip(ins).collect();
+                (
+                    Box::new(move |b| map[&b]),
+                    InputKind::ThermometerBits { used_bits: used.clone() },
+                    0,
+                )
+            }
+            Variant::Pen | Variant::PenFt => {
+                let (ints, frac_bits) = model.threshold_ints_for(opts.variant)?;
+                let ints_owned: Vec<Vec<i32>>;
+                let ints = if opts.uniform_encoding {
+                    ints_owned = quantize_uniform(model, frac_bits);
+                    &ints_owned[..]
+                } else {
+                    ints
+                };
+                let bank = encoder::build_encoders(
+                    &mut bld,
+                    ints,
+                    frac_bits,
+                    &used,
+                    model.thermo_bits,
+                );
+                let map = bank.bit_nodes;
+                let width = (frac_bits + 1) as usize;
+                (
+                    Box::new(move |b| map[&b]),
+                    InputKind::FixedPoint { features: model.num_features, width },
+                    bank.distinct_comparators,
+                )
+            }
+        };
+    ranges.push((Component::Encoder, mark0..bld.net.len()));
+
+    // ---- Stage 2: LUT layer.
+    let mark1 = bld.net.len();
+    let lut_outs = lutlayer::build_lut_layer(&mut bld, sel, tables, bit_of.as_ref());
+    ranges.push((Component::LutLayer, mark1..bld.net.len()));
+
+    // ---- Stage 3: per-class popcount.
+    let mark2 = bld.net.len();
+    let scores = popcount::build_class_popcounts(&mut bld, &lut_outs, model.num_classes);
+    let score_width = scores[0].len();
+    ranges.push((Component::Popcount, mark2..bld.net.len()));
+
+    // ---- Stage 4: argmax.
+    let mark3 = bld.net.len();
+    let am = argmax::build_argmax(&mut bld, &scores);
+    ranges.push((Component::Argmax, mark3..bld.net.len()));
+
+    // Outputs: class index + max value (paper Fig. 4) [+ debug scores].
+    for &b in &am.index {
+        bld.output(b);
+    }
+    for &b in &am.value {
+        bld.output(b);
+    }
+    if opts.expose_scores {
+        for w in &scores {
+            for &b in w {
+                bld.output(b);
+            }
+        }
+    }
+
+    Ok(Accelerator {
+        net: bld.finish(),
+        input_kind,
+        ranges,
+        distinct_comparators: distinct,
+        num_classes: model.num_classes,
+        score_width,
+    })
+}
+
+/// Quantize the model's uniform thresholds to the same fixed-point grid.
+fn quantize_uniform(model: &DwnModel, frac_bits: u32) -> Vec<Vec<i32>> {
+    model
+        .uniform_thresholds
+        .iter()
+        .map(|row| {
+            row.iter()
+                .map(|&t| crate::util::fixed::threshold_to_int(t, frac_bits))
+                .collect()
+        })
+        .collect()
+}
+
+impl Accelerator {
+    /// Technology-map the accelerator.
+    pub fn map(&self, cfg: &MapConfig) -> LutNetlist {
+        techmap::map(&self.net, cfg)
+    }
+
+    /// Map and attribute each physical LUT to the component whose gate range
+    /// contains its root node. Returns (netlist, per-component LUT counts).
+    pub fn map_with_breakdown(&self, cfg: &MapConfig) -> (LutNetlist, Vec<(Component, usize)>) {
+        // Re-run the cover extraction while tracking roots: we re-map and
+        // attribute by walking the mapped netlist in step with a fresh map
+        // of node -> component.
+        let nl = techmap::map_tracked(&self.net, cfg);
+        let mut counts: Vec<(Component, usize)> =
+            Component::ALL.iter().map(|&c| (c, 0)).collect();
+        for &root in &nl.roots {
+            for (comp, range) in &self.ranges {
+                if range.contains(&(root as usize)) {
+                    let slot = counts.iter_mut().find(|(c, _)| c == comp).unwrap();
+                    slot.1 += 1;
+                    break;
+                }
+            }
+        }
+        (nl.netlist, counts)
+    }
+
+    /// Number of primary input bits of the generated design.
+    pub fn input_bits(&self) -> usize {
+        match &self.input_kind {
+            InputKind::ThermometerBits { used_bits } => used_bits.len(),
+            InputKind::FixedPoint { features, width } => features * width,
+        }
+    }
+
+    /// Width of the class-index output word.
+    pub fn index_width(&self) -> usize {
+        crate::util::bits_for(self.num_classes).max(1)
+    }
+
+    /// Decode one evaluation result into (pred, max value, scores if exposed).
+    pub fn decode_outputs(&self, out: &[bool], expose_scores: bool) -> (usize, u64, Vec<u64>) {
+        let iw = self.index_width();
+        let vw = self.score_width;
+        let mut pred = 0usize;
+        for i in 0..iw {
+            if out[i] {
+                pred |= 1 << i;
+            }
+        }
+        let mut maxv = 0u64;
+        for i in 0..vw {
+            if out[iw + i] {
+                maxv |= 1 << i;
+            }
+        }
+        let mut scores = Vec::new();
+        if expose_scores {
+            for c in 0..self.num_classes {
+                let base = iw + vw + c * vw;
+                let mut v = 0u64;
+                for i in 0..vw {
+                    if out[base + i] {
+                        v |= 1 << i;
+                    }
+                }
+                scores.push(v);
+            }
+        }
+        (pred, maxv, scores)
+    }
+}

@@ -1,0 +1,120 @@
+//! Argmax stage (paper Fig. 4): pairwise compare-select tree over the class
+//! popcount words. Each comparator propagates the larger value and its class
+//! index; on ties the lower class index wins (paper §IV).
+
+use crate::logic::net::NodeId;
+use crate::logic::Builder;
+use crate::util::bits_for;
+
+/// Result wires of the argmax tree.
+#[derive(Debug, Clone)]
+pub struct ArgmaxOut {
+    /// Winning class index, little-endian.
+    pub index: Vec<NodeId>,
+    /// Winning popcount value, little-endian.
+    pub value: Vec<NodeId>,
+}
+
+/// Build the reduction tree. `scores[c]` is class c's popcount word; all
+/// words must have equal width.
+pub fn build_argmax(bld: &mut Builder, scores: &[Vec<NodeId>]) -> ArgmaxOut {
+    assert!(!scores.is_empty());
+    let idx_width = bits_for(scores.len()).max(1);
+    // Leaves: (constant index, value).
+    let mut items: Vec<(Vec<NodeId>, Vec<NodeId>)> = scores
+        .iter()
+        .enumerate()
+        .map(|(c, w)| {
+            let idx: Vec<NodeId> =
+                (0..idx_width).map(|i| bld.constant((c >> i) & 1 == 1)).collect();
+            (idx, w.clone())
+        })
+        .collect();
+    // Left-biased pairwise reduction keeps the tie rule: the left operand
+    // always carries the lower class index, and `left >= right` selects left.
+    while items.len() > 1 {
+        let mut next = Vec::with_capacity(items.len().div_ceil(2));
+        let mut it = items.into_iter();
+        while let Some(left) = it.next() {
+            match it.next() {
+                Some(right) => {
+                    let take_left = bld.ge_words(&left.1, &right.1);
+                    let idx = bld.mux_word(take_left, &right.0, &left.0);
+                    let val = bld.mux_word(take_left, &right.1, &left.1);
+                    next.push((idx, val));
+                }
+                None => next.push(left),
+            }
+        }
+        items = next;
+    }
+    let (index, value) = items.pop().unwrap();
+    ArgmaxOut { index, value }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::Simulator;
+    use crate::util::SplitMix64;
+
+    fn run_argmax(values: &[u64], width: usize) -> (usize, u64) {
+        let mut bld = Builder::new();
+        let words: Vec<Vec<NodeId>> = values.iter().map(|_| bld.inputs(width)).collect();
+        let out = build_argmax(&mut bld, &words);
+        for &b in &out.index {
+            bld.output(b);
+        }
+        for &b in &out.value {
+            bld.output(b);
+        }
+        let net = bld.finish();
+        let mut inputs = Vec::new();
+        for &v in values {
+            for i in 0..width {
+                inputs.push((v >> i) & 1 == 1);
+            }
+        }
+        let res = Simulator::new(&net).eval(&inputs);
+        let iw = out.index.len();
+        let mut idx = 0usize;
+        for i in 0..iw {
+            if res[i] {
+                idx |= 1 << i;
+            }
+        }
+        let mut val = 0u64;
+        for i in 0..width {
+            if res[iw + i] {
+                val |= 1 << i;
+            }
+        }
+        (idx, val)
+    }
+
+    #[test]
+    fn argmax_five_classes_random() {
+        let mut rng = SplitMix64::new(11);
+        for _ in 0..200 {
+            let vals: Vec<u64> = (0..5).map(|_| rng.below(16)).collect();
+            let (idx, val) = run_argmax(&vals, 4);
+            let best = *vals.iter().max().unwrap();
+            let want_idx = vals.iter().position(|&v| v == best).unwrap();
+            assert_eq!(val, best, "vals={vals:?}");
+            assert_eq!(idx, want_idx, "tie must pick lowest index; vals={vals:?}");
+        }
+    }
+
+    #[test]
+    fn argmax_all_equal_picks_class0() {
+        let (idx, val) = run_argmax(&[7, 7, 7, 7, 7], 4);
+        assert_eq!(idx, 0);
+        assert_eq!(val, 7);
+    }
+
+    #[test]
+    fn argmax_two_classes() {
+        assert_eq!(run_argmax(&[3, 9], 4), (1, 9));
+        assert_eq!(run_argmax(&[9, 3], 4), (0, 9));
+    }
+}

@@ -1,0 +1,126 @@
+//! Thermometer-encoder generation (paper Fig. 3).
+//!
+//! Distributive (percentile) thresholds are non-uniform, so every threshold
+//! level needs its own comparator against the signed fixed-point input word.
+//! Two cost reducers the paper's generator applies are reproduced here:
+//!
+//! * **pruning** — only encoder outputs actually connected to the LUT layer
+//!   are generated (the mapping is taken from the trained model);
+//! * **sharing** — duplicate thresholds (common after coarse quantization,
+//!   where neighbouring percentiles collapse onto the same grid point)
+//!   resolve to a single comparator via the network's structural hashing.
+
+use crate::logic::Builder;
+use crate::logic::net::NodeId;
+use std::collections::HashMap;
+
+/// Generated encoder bank: maps used thermometer-bit indices to net nodes.
+#[derive(Debug)]
+pub struct EncoderBank {
+    /// Input words, one per feature (LSB-first, two's complement).
+    pub feature_words: Vec<Vec<NodeId>>,
+    /// bit index (feature * T + level) -> comparator output node.
+    pub bit_nodes: HashMap<u32, NodeId>,
+    /// Number of distinct comparators instantiated (after sharing).
+    pub distinct_comparators: usize,
+}
+
+/// Build encoders for the used bits of a PEN-variant model.
+///
+/// * `threshold_ints[f][t]` — quantized threshold grid integers.
+/// * `frac_bits` — fractional bits n of the (1, n) input format; input words
+///   are n+1 bits wide.
+/// * `used_bits` — sorted thermometer-bit indices to generate (pruned set).
+/// * `thermo_bits` — T, for decomposing bit indices.
+pub fn build_encoders(
+    bld: &mut Builder,
+    threshold_ints: &[Vec<i32>],
+    frac_bits: u32,
+    used_bits: &[u32],
+    thermo_bits: usize,
+) -> EncoderBank {
+    let width = (frac_bits + 1) as usize;
+    let num_features = threshold_ints.len();
+    let feature_words: Vec<Vec<NodeId>> =
+        (0..num_features).map(|_| bld.inputs(width)).collect();
+
+    let mut bit_nodes = HashMap::new();
+    let mut seen: HashMap<(usize, i32), NodeId> = HashMap::new();
+    for &bit in used_bits {
+        let f = bit as usize / thermo_bits;
+        let t = bit as usize % thermo_bits;
+        let k = threshold_ints[f][t];
+        // Duplicate (feature, threshold) pairs share one comparator. The
+        // structural hasher would catch this too; tracking it here lets us
+        // report the distinct-comparator count (encoder cost driver).
+        let node = *seen
+            .entry((f, k))
+            .or_insert_with(|| bld.ge_const_signed(&feature_words[f], k as i64));
+        bit_nodes.insert(bit, node);
+    }
+    EncoderBank { feature_words, bit_nodes, distinct_comparators: seen.len() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::Simulator;
+    use crate::util::fixed;
+
+    #[test]
+    fn encoder_matches_reference() {
+        // 2 features, T=4, 3-bit fractional grid.
+        let th = vec![vec![-4, -1, 0, 3], vec![-2, 0, 1, 5]];
+        let used: Vec<u32> = vec![0, 1, 3, 4, 6, 7];
+        let mut bld = Builder::new();
+        let bank = build_encoders(&mut bld, &th, 3, &used, 4);
+        let mut order = used.clone();
+        order.sort_unstable();
+        for &b in &order {
+            let n = bank.bit_nodes[&b];
+            bld.output(n);
+        }
+        let net = bld.finish();
+        let mut sim = Simulator::new(&net);
+
+        for x0 in -8i32..8 {
+            for x1 in -8i32..8 {
+                let mut inputs = Vec::new();
+                for (x, _) in [(x0, 0), (x1, 1)] {
+                    let bits = fixed::int_to_bits(x, 3);
+                    for i in 0..4 {
+                        inputs.push((bits >> i) & 1 == 1);
+                    }
+                }
+                let out = sim.eval(&inputs);
+                for (i, &b) in order.iter().enumerate() {
+                    let f = b as usize / 4;
+                    let t = b as usize % 4;
+                    let x = if f == 0 { x0 } else { x1 };
+                    assert_eq!(out[i], x >= th[f][t], "bit {b} x0={x0} x1={x1}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_thresholds_share() {
+        // All four levels quantize to the same grid point -> 1 comparator.
+        let th = vec![vec![2, 2, 2, 2]];
+        let used: Vec<u32> = vec![0, 1, 2, 3];
+        let mut bld = Builder::new();
+        let bank = build_encoders(&mut bld, &th, 3, &used, 4);
+        assert_eq!(bank.distinct_comparators, 1);
+        let nodes: std::collections::HashSet<_> = bank.bit_nodes.values().collect();
+        assert_eq!(nodes.len(), 1);
+    }
+
+    #[test]
+    fn pruning_generates_only_used() {
+        let th = vec![vec![-4, -1, 0, 3]];
+        let mut bld = Builder::new();
+        let bank = build_encoders(&mut bld, &th, 3, &[2], 4);
+        assert_eq!(bank.distinct_comparators, 1);
+        assert_eq!(bank.bit_nodes.len(), 1);
+    }
+}

@@ -1,0 +1,67 @@
+//! LUT-layer generation: each trained 6-input truth table becomes one native
+//! table gate (which the mapper covers with exactly one physical 6-LUT —
+//! the defining efficiency property of DWNs, paper §II).
+
+use crate::logic::net::NodeId;
+use crate::logic::Builder;
+
+/// Instantiate the LUT layer. `sel[l][j]` indexes `bit_nodes`; pin j is
+/// truth-table address bit j. Returns one output node per LUT.
+pub fn build_lut_layer(
+    bld: &mut Builder,
+    sel: &[Vec<u32>],
+    tables: &[u64],
+    bit_of: &dyn Fn(u32) -> NodeId,
+) -> Vec<NodeId> {
+    assert_eq!(sel.len(), tables.len());
+    sel.iter()
+        .zip(tables)
+        .map(|(pins, &table)| {
+            let inputs: Vec<NodeId> = pins.iter().map(|&b| bit_of(b)).collect();
+            bld.table(inputs, table)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::Simulator;
+
+    #[test]
+    fn lut_layer_evaluates_tables() {
+        let mut bld = Builder::new();
+        let bits = bld.inputs(4);
+        let sel = vec![vec![0u32, 1], vec![2, 3], vec![0, 3]];
+        let tables = vec![0b1000u64, 0b0110, 0b0001];
+        let outs = build_lut_layer(&mut bld, &sel, &tables, &|b| bits[b as usize]);
+        for &o in &outs {
+            bld.output(o);
+        }
+        let net = bld.finish();
+        let mut sim = Simulator::new(&net);
+        for p in 0..16u32 {
+            let inputs: Vec<bool> = (0..4).map(|i| (p >> i) & 1 == 1).collect();
+            let out = sim.eval(&inputs);
+            let addr = |a: u32, b: u32| ((inputs[a as usize] as u64) | ((inputs[b as usize] as u64) << 1)) as u64;
+            assert_eq!(out[0], (tables[0] >> addr(0, 1)) & 1 == 1);
+            assert_eq!(out[1], (tables[1] >> addr(2, 3)) & 1 == 1);
+            assert_eq!(out[2], (tables[2] >> addr(0, 3)) & 1 == 1);
+        }
+    }
+
+    #[test]
+    fn repeated_pin_still_works() {
+        // DWN training can select the same encoder bit on two pins.
+        let mut bld = Builder::new();
+        let bits = bld.inputs(1);
+        let sel = vec![vec![0u32, 0]];
+        // table: out = pin0 AND pin1 => reduces to identity on the bit.
+        let outs = build_lut_layer(&mut bld, &sel, &[0b1000], &|b| bits[b as usize]);
+        bld.output(outs[0]);
+        let net = bld.finish();
+        let mut sim = Simulator::new(&net);
+        assert!(!sim.eval(&[false])[0]);
+        assert!(sim.eval(&[true])[0]);
+    }
+}

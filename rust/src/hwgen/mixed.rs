@@ -1,0 +1,165 @@
+//! Mixed-precision input quantization (paper future work iii): assign each
+//! *feature* its own fractional bit-width instead of one global n.
+//!
+//! Greedy descent: starting from a uniform bit-width, repeatedly try to
+//! shave one bit off the feature whose reduction costs the least accuracy
+//! (measured on a held-out slice via the jnp-equivalent rust evaluation of
+//! the discrete network) while staying within `tolerance` of the baseline.
+//! Encoder hardware cost falls directly with per-feature width because each
+//! comparator's input word narrows.
+
+use crate::data::Dataset;
+use crate::model::{DwnModel, Variant};
+use crate::util::fixed;
+use anyhow::Result;
+
+/// Result of the mixed-precision search.
+#[derive(Debug, Clone)]
+pub struct MixedPrecision {
+    /// Fractional bits per feature.
+    pub bits: Vec<u32>,
+    /// Accuracy at the chosen assignment.
+    pub acc: f64,
+    /// Baseline (uniform) accuracy the search started from.
+    pub base_acc: f64,
+}
+
+/// Discrete-network accuracy with per-feature input quantization.
+/// Thresholds stay on the model's float grid; inputs are floored to each
+/// feature's grid (the PEN ADC interface).
+pub fn eval_mixed(model: &DwnModel, variant: Variant, data: &Dataset, bits: &[u32], n: usize) -> f64 {
+    let (sel, tables) = model.mapping_for(variant);
+    let n = n.min(data.len());
+    let mut correct = 0usize;
+    let g = model.group_size();
+    for i in 0..n {
+        let row = data.row(i);
+        // encode: bit (f, t) = x_q[f] >= threshold[f][t]
+        let mut scores = vec![0i64; model.num_classes];
+        for (l, pins) in sel.iter().enumerate() {
+            let mut addr = 0usize;
+            for (j, &pin) in pins.iter().enumerate() {
+                let (f, t) = model.bit_to_feature_level(pin);
+                let xq = fixed::int_to_real(fixed::input_to_int(row[f] as f64, bits[f]), bits[f]);
+                let th = fixed::int_to_real(
+                    fixed::threshold_to_int(model.thresholds[f][t], bits[f]),
+                    bits[f],
+                );
+                if xq >= th {
+                    addr |= 1 << j;
+                }
+            }
+            if (tables[l] >> addr) & 1 == 1 {
+                scores[l / g] += 1;
+            }
+        }
+        let mut pred = 0usize;
+        for c in 1..model.num_classes {
+            if scores[c] > scores[pred] {
+                pred = c;
+            }
+        }
+        if pred == data.y[i] as usize {
+            correct += 1;
+        }
+    }
+    correct as f64 / n as f64
+}
+
+/// Greedy per-feature bit-width reduction.
+pub fn search(
+    model: &DwnModel,
+    variant: Variant,
+    data: &Dataset,
+    start_bits: u32,
+    min_bits: u32,
+    tolerance: f64,
+    eval_n: usize,
+) -> Result<MixedPrecision> {
+    let f = model.num_features;
+    let mut bits = vec![start_bits; f];
+    let base_acc = eval_mixed(model, variant, data, &bits, eval_n);
+    let mut acc = base_acc;
+    loop {
+        // Try shaving one bit from each feature; keep the best that stays
+        // within tolerance.
+        let mut best: Option<(usize, f64)> = None;
+        for feat in 0..f {
+            if bits[feat] <= min_bits {
+                continue;
+            }
+            bits[feat] -= 1;
+            let a = eval_mixed(model, variant, data, &bits, eval_n);
+            bits[feat] += 1;
+            if a >= base_acc - tolerance && best.map_or(true, |(_, b)| a > b) {
+                best = Some((feat, a));
+            }
+        }
+        match best {
+            Some((feat, a)) => {
+                bits[feat] -= 1;
+                acc = a;
+            }
+            None => break,
+        }
+    }
+    Ok(MixedPrecision { bits, acc, base_acc })
+}
+
+/// Encoder input-bit total (the hardware driver of mixed precision): sum of
+/// per-feature word widths over features that actually have comparators.
+pub fn encoder_input_bits(model: &DwnModel, variant: Variant, bits: &[u32]) -> usize {
+    let used = model.used_bits(variant);
+    let mut feature_used = vec![false; model.num_features];
+    for &b in &used {
+        feature_used[model.bit_to_feature_level(b).0] = true;
+    }
+    feature_used
+        .iter()
+        .zip(bits)
+        .filter(|(u, _)| **u)
+        .map(|(_, &b)| (b + 1) as usize)
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Artifacts;
+    use crate::data::Dataset;
+
+    #[test]
+    fn mixed_precision_never_increases_bits() {
+        let a = Artifacts::discover();
+        if !a.exists() {
+            return;
+        }
+        let model = DwnModel::load(&a.model_path("sm-10")).unwrap();
+        let test = Dataset::load_csv(&a.dataset_path("test")).unwrap();
+        let start = 8u32;
+        let mp = search(&model, Variant::Ten, &test, start, 3, 0.01, 600).unwrap();
+        assert!(mp.bits.iter().all(|&b| b <= start && b >= 3));
+        assert!(mp.bits.iter().any(|&b| b < start), "greedy search should shave something");
+        assert!(mp.acc >= mp.base_acc - 0.011);
+        let total_mixed = encoder_input_bits(&model, Variant::Ten, &mp.bits);
+        let total_uniform = encoder_input_bits(&model, Variant::Ten, &vec![start; 16]);
+        assert!(total_mixed < total_uniform);
+    }
+
+    #[test]
+    fn eval_mixed_matches_reported_at_uniform() {
+        let a = Artifacts::discover();
+        if !a.exists() {
+            return;
+        }
+        let model = DwnModel::load(&a.model_path("sm-50")).unwrap();
+        let test = Dataset::load_csv(&a.dataset_path("test")).unwrap();
+        // At a generous uniform width, accuracy ~ float TEN accuracy.
+        let acc = eval_mixed(&model, Variant::Ten, &test, &vec![12; 16], 3000);
+        assert!(
+            (acc - model.ten.acc).abs() < 0.03,
+            "12-bit uniform {acc} vs float {}",
+            model.ten.acc
+        );
+    }
+}

@@ -1,0 +1,24 @@
+//! The DWN hardware generator — the paper's contribution (§IV).
+//!
+//! Generates a gate-level design for a trained [`DwnModel`](crate::model::DwnModel):
+//!
+//! * [`encoder`] — the thermometer encoding stage (paper Fig. 3): one signed
+//!   fixed-point comparator per *used* threshold (unused encoder outputs are
+//!   pruned, exactly like the paper's generator, which derives the mapping
+//!   "directly from the trained software model").
+//! * [`lutlayer`] — the trained 6-input truth tables, one native LUT each.
+//! * [`popcount`] — per-class compressor-tree popcounts (FloPoCo-style).
+//! * [`argmax`] — pairwise compare-select reduction (paper Fig. 4), ties to
+//!   the lower class index.
+//! * [`accel`] — composition into full TEN / PEN / PEN+FT accelerators with
+//!   per-component node attribution for the Fig. 5 breakdown.
+
+pub mod accel;
+pub mod argmax;
+pub mod encoder;
+pub mod lutlayer;
+pub mod mixed;
+pub mod popcount;
+pub mod rtl;
+
+pub use accel::{build_accelerator, AccelOptions, Accelerator, Component, InputKind};

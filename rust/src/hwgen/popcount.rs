@@ -1,0 +1,71 @@
+//! Per-class popcount stage: compressor-tree reduction of each class group's
+//! LUT outputs to a binary score word (paper §IV reuses FloPoCo's compressor
+//! trees [24, p.153-156]; `Builder::popcount` implements the same
+//! column-compression scheme).
+
+use crate::logic::net::NodeId;
+use crate::logic::Builder;
+
+/// Reduce `lut_outs` (length C * G, contiguous class groups) to C score
+/// words. All words have equal width (that of the group size).
+pub fn build_class_popcounts(
+    bld: &mut Builder,
+    lut_outs: &[NodeId],
+    num_classes: usize,
+) -> Vec<Vec<NodeId>> {
+    assert_eq!(lut_outs.len() % num_classes, 0);
+    let g = lut_outs.len() / num_classes;
+    let width = crate::util::bits_for(g + 1);
+    (0..num_classes)
+        .map(|c| {
+            let mut w = bld.popcount(&lut_outs[c * g..(c + 1) * g]);
+            // Pad to the common width so the argmax comparators line up.
+            while w.len() < width {
+                let zero = bld.constant(false);
+                w.push(zero);
+            }
+            w.truncate(width);
+            w
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::Simulator;
+    use crate::util::SplitMix64;
+
+    #[test]
+    fn popcounts_per_group() {
+        let c = 3;
+        let g = 7;
+        let mut bld = Builder::new();
+        let ins = bld.inputs(c * g);
+        let words = build_class_popcounts(&mut bld, &ins, c);
+        assert!(words.iter().all(|w| w.len() == words[0].len()));
+        for w in &words {
+            for &b in w {
+                bld.output(b);
+            }
+        }
+        let net = bld.finish();
+        let mut sim = Simulator::new(&net);
+        let mut rng = SplitMix64::new(5);
+        let width = words[0].len();
+        for _ in 0..50 {
+            let pattern: Vec<bool> = (0..c * g).map(|_| rng.below(2) == 1).collect();
+            let out = sim.eval(&pattern);
+            for cls in 0..c {
+                let expect = pattern[cls * g..(cls + 1) * g].iter().filter(|&&b| b).count();
+                let mut got = 0usize;
+                for i in 0..width {
+                    if out[cls * width + i] {
+                        got |= 1 << i;
+                    }
+                }
+                assert_eq!(got, expect, "class {cls}");
+            }
+        }
+    }
+}

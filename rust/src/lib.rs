@@ -1,0 +1,30 @@
+//! # dwn — DWN FPGA accelerator generator with explicit thermometer encoding
+//!
+//! Reproduction of Mecik & Kumm, *"Implementation and Analysis of Thermometer
+//! Encoding in DWN FPGA Accelerators"* (CS.AR 2025). See DESIGN.md for the
+//! architecture and the substitution table (no Vivado / no FPGA in this
+//! environment: LUT/FF/Fmax numbers come from the in-repo logic-synthesis
+//! substrate — `logic` + `techmap` + `timing`).
+//!
+//! Layer map:
+//! * [`runtime`] — PJRT execution of the AOT-lowered JAX model (golden path)
+//! * [`logic`], [`techmap`], [`timing`] — the logic-synthesis substrate
+//! * [`hwgen`] — the paper's contribution: the DWN hardware generator
+//!   including the thermometer-encoding stage
+//! * [`coordinator`] — batching inference server on top of [`runtime`]
+//! * [`baselines`] — TreeLUT + LogicNets-lite comparison points (Table II)
+
+pub mod baselines;
+pub mod coordinator;
+pub mod config;
+pub mod data;
+pub mod hwgen;
+pub mod json;
+pub mod logic;
+pub mod model;
+pub mod report;
+pub mod runtime;
+pub mod techmap;
+pub mod timing;
+pub mod util;
+pub mod verify;

@@ -1,0 +1,489 @@
+//! High-level construction helpers over [`Network`]: Boolean ops, muxes,
+//! ripple/compressor arithmetic, and constant comparators — the primitives
+//! the DWN hardware generators are written in.
+
+use super::net::{table_mask, Gate, Network, NodeId};
+
+/// Thin wrapper that owns a [`Network`] under construction.
+#[derive(Debug, Default)]
+pub struct Builder {
+    pub net: Network,
+}
+
+impl Builder {
+    pub fn new() -> Self {
+        Self { net: Network::new() }
+    }
+
+    pub fn finish(self) -> Network {
+        self.net
+    }
+
+    // ------------------------------------------------------------ leaves
+    pub fn input(&mut self) -> NodeId {
+        self.net.add_input()
+    }
+
+    pub fn inputs(&mut self, n: usize) -> Vec<NodeId> {
+        (0..n).map(|_| self.input()).collect()
+    }
+
+    pub fn constant(&mut self, v: bool) -> NodeId {
+        self.net.constant(v)
+    }
+
+    pub fn output(&mut self, id: NodeId) {
+        self.net.mark_output(id);
+    }
+
+    // -------------------------------------------------------------- gates
+    pub fn and2(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.net.add(Gate::And2(a, b))
+    }
+
+    pub fn xor2(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.net.add(Gate::Xor2(a, b))
+    }
+
+    pub fn not(&mut self, a: NodeId) -> NodeId {
+        self.net.add(Gate::Table { inputs: vec![a], table: 0b01 })
+    }
+
+    pub fn or2(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        // a | b = !(!a & !b); expressed as a 2-input table to stay one node.
+        self.net.add(Gate::Table { inputs: vec![a, b], table: 0b1110 })
+    }
+
+    pub fn nand2(&mut self, a: NodeId, b: NodeId) -> NodeId {
+        self.net.add(Gate::Table { inputs: vec![a, b], table: 0b0111 })
+    }
+
+    pub fn andn(&mut self, xs: &[NodeId]) -> NodeId {
+        self.reduce_balanced(xs, true)
+    }
+
+    pub fn orn(&mut self, xs: &[NodeId]) -> NodeId {
+        self.reduce_balanced(xs, false)
+    }
+
+    fn reduce_balanced(&mut self, xs: &[NodeId], is_and: bool) -> NodeId {
+        match xs.len() {
+            0 => self.constant(is_and),
+            1 => xs[0],
+            _ => {
+                let mid = xs.len() / 2;
+                let l = self.reduce_balanced(&xs[..mid], is_and);
+                let r = self.reduce_balanced(&xs[mid..], is_and);
+                if is_and {
+                    self.and2(l, r)
+                } else {
+                    self.or2(l, r)
+                }
+            }
+        }
+    }
+
+    /// 2:1 mux: `s ? a1 : a0`, one table node.
+    pub fn mux(&mut self, s: NodeId, a0: NodeId, a1: NodeId) -> NodeId {
+        // inputs [s, a0, a1]: addr bit0=s, bit1=a0, bit2=a1.
+        // out = s ? a1 : a0 -> truth table over (a1 a0 s):
+        let mut t = 0u64;
+        for addr in 0..8u64 {
+            let s_v = addr & 1;
+            let a0_v = (addr >> 1) & 1;
+            let a1_v = (addr >> 2) & 1;
+            if (if s_v == 1 { a1_v } else { a0_v }) == 1 {
+                t |= 1 << addr;
+            }
+        }
+        self.net.add(Gate::Table { inputs: vec![s, a0, a1], table: t })
+    }
+
+    /// Arbitrary truth table (k <= 6).
+    pub fn table(&mut self, inputs: Vec<NodeId>, table: u64) -> NodeId {
+        let k = inputs.len();
+        self.net.add(Gate::Table { inputs, table: table & table_mask(k) })
+    }
+
+    // --------------------------------------------------------- arithmetic
+    /// Full adder: returns (sum, carry).
+    pub fn full_adder(&mut self, a: NodeId, b: NodeId, c: NodeId) -> (NodeId, NodeId) {
+        let ab = self.xor2(a, b);
+        let sum = self.xor2(ab, c);
+        // majority(a,b,c) as a single 3-input table (matches a LUT3).
+        let mut t = 0u64;
+        for addr in 0..8u64 {
+            if (addr & 1) + ((addr >> 1) & 1) + ((addr >> 2) & 1) >= 2 {
+                t |= 1 << addr;
+            }
+        }
+        let carry = self.net.add(Gate::Table { inputs: vec![a, b, c], table: t });
+        (sum, carry)
+    }
+
+    /// Half adder: returns (sum, carry).
+    pub fn half_adder(&mut self, a: NodeId, b: NodeId) -> (NodeId, NodeId) {
+        (self.xor2(a, b), self.and2(a, b))
+    }
+
+    /// Unsigned ripple-carry add of two little-endian words (equal width),
+    /// returning width+1 bits.
+    pub fn add_words(&mut self, a: &[NodeId], b: &[NodeId]) -> Vec<NodeId> {
+        assert_eq!(a.len(), b.len());
+        let mut out = Vec::with_capacity(a.len() + 1);
+        let mut carry = self.constant(false);
+        for i in 0..a.len() {
+            let (s, c) = self.full_adder(a[i], b[i], carry);
+            out.push(s);
+            carry = c;
+        }
+        out.push(carry);
+        out
+    }
+
+    /// 6:3 generalized parallel counter: three table gates computing the
+    /// 3-bit count of six input bits. Each output is one 6-input truth
+    /// table, so the mapper realises it as exactly one physical LUT6 — the
+    /// same building block FloPoCo's LUT-oriented compressor trees use
+    /// ([24, p.153-156], reused by the paper's popcount).
+    pub fn compress63(&mut self, bits: &[NodeId]) -> (NodeId, NodeId, NodeId) {
+        assert_eq!(bits.len(), 6);
+        let mut tables = [0u64; 3];
+        for addr in 0..64u64 {
+            let count = addr.count_ones() as u64;
+            for (j, t) in tables.iter_mut().enumerate() {
+                if (count >> j) & 1 == 1 {
+                    *t |= 1 << addr;
+                }
+            }
+        }
+        let b0 = self.table(bits.to_vec(), tables[0]);
+        let b1 = self.table(bits.to_vec(), tables[1]);
+        let b2 = self.table(bits.to_vec(), tables[2]);
+        (b0, b1, b2)
+    }
+
+    /// Popcount of `bits` as a little-endian word: column-based compressor
+    /// tree using 6:3 GPCs (1 LUT6 per output bit) with full/half adders for
+    /// the column tails (FloPoCo-style reduction — paper §IV reuses
+    /// FloPoCo's compressor trees for the popcount).
+    pub fn popcount(&mut self, bits: &[NodeId]) -> Vec<NodeId> {
+        if bits.is_empty() {
+            return vec![self.constant(false)];
+        }
+        // columns[w] = bits of weight 2^w.
+        let mut columns: Vec<Vec<NodeId>> = vec![bits.to_vec()];
+        loop {
+            let max_h = columns.iter().map(|c| c.len()).max().unwrap();
+            if max_h <= 1 {
+                break;
+            }
+            let mut next: Vec<Vec<NodeId>> = vec![Vec::new(); columns.len() + 3];
+            for (w, col) in columns.iter().enumerate() {
+                let mut i = 0;
+                while col.len() - i >= 6 {
+                    let (b0, b1, b2) = self.compress63(&col[i..i + 6]);
+                    next[w].push(b0);
+                    next[w + 1].push(b1);
+                    next[w + 2].push(b2);
+                    i += 6;
+                }
+                while col.len() - i >= 3 {
+                    let (s, c) = self.full_adder(col[i], col[i + 1], col[i + 2]);
+                    next[w].push(s);
+                    next[w + 1].push(c);
+                    i += 3;
+                }
+                if col.len() - i == 2 {
+                    let (s, c) = self.half_adder(col[i], col[i + 1]);
+                    next[w].push(s);
+                    next[w + 1].push(c);
+                } else if col.len() - i == 1 {
+                    next[w].push(col[i]);
+                }
+            }
+            while next.last().is_some_and(|c| c.is_empty()) {
+                next.pop();
+            }
+            columns = next;
+        }
+        columns.iter().map(|c| c[0]).collect()
+    }
+
+    /// Unsigned comparator `word >= k` for a constant k (little-endian word).
+    /// This is the thermometer-encoder primitive (paper Fig. 3): one
+    /// comparator per (distinct) threshold.
+    ///
+    /// Built as the classic LSB->MSB select chain: `ge_i = x_i ? (k_i ?
+    /// ge_{i-1} : 1) : (k_i ? 0 : ge_{i-1})`. The chain's 2-input gates pack
+    /// densely into 6-LUTs (the mapper covers ~5 chain steps per LUT), which
+    /// measures smaller than a gt/eq group tree — constant comparators are
+    /// the encoder's dominant cost, so area wins over one level of depth.
+    pub fn ge_const(&mut self, word: &[NodeId], k: u64) -> NodeId {
+        if k == 0 {
+            return self.constant(true);
+        }
+        if word.len() < 64 && k >= 1u64 << word.len() {
+            return self.constant(false);
+        }
+        let mut acc = self.constant(true); // empty suffix: equal -> >= holds
+        for (i, &xi) in word.iter().enumerate() {
+            let ki = (k >> i) & 1 == 1;
+            if ki {
+                acc = self.and2(xi, acc);
+            } else {
+                acc = self.or2(xi, acc);
+            }
+        }
+        acc
+    }
+
+    /// Balanced-tree combine of (gt, eq) pairs (LSB-first order):
+    /// gt = gt_hi | eq_hi & gt_lo;  eq = eq_hi & eq_lo.
+    fn combine_pairs(&mut self, pairs: &[(NodeId, NodeId)]) -> (NodeId, NodeId) {
+        match pairs.len() {
+            0 => {
+                let t = self.constant(true);
+                let f = self.constant(false);
+                (f, t)
+            }
+            1 => pairs[0],
+            _ => {
+                let mid = pairs.len() / 2;
+                let (gt_lo, eq_lo) = self.combine_pairs(&pairs[..mid]);
+                let (gt_hi, eq_hi) = self.combine_pairs(&pairs[mid..]);
+                // gt = gt_hi | (eq_hi & gt_lo) — one 3-input table.
+                let mut t = 0u64;
+                for addr in 0..8u64 {
+                    let (g_hi, e_hi, g_lo) = (addr & 1, (addr >> 1) & 1, (addr >> 2) & 1);
+                    if g_hi == 1 || (e_hi == 1 && g_lo == 1) {
+                        t |= 1 << addr;
+                    }
+                }
+                let gt = self.table(vec![gt_hi, eq_hi, gt_lo], t);
+                let eq = self.and2(eq_hi, eq_lo);
+                (gt, eq)
+            }
+        }
+    }
+
+    /// Signed (two's-complement) comparator `word >= k` for constant k.
+    pub fn ge_const_signed(&mut self, word: &[NodeId], k: i64) -> NodeId {
+        // Flip the sign bit to map two's complement onto unsigned order.
+        let n = word.len();
+        let sign = word[n - 1];
+        let flipped_sign = self.not(sign);
+        let mut uns = word.to_vec();
+        uns[n - 1] = flipped_sign;
+        let ku = (k + (1i64 << (n - 1))) as u64;
+        self.ge_const(&uns, ku)
+    }
+
+    /// Unsigned comparator between two variable words: a >= b. Tree-shaped
+    /// like [`Self::ge_const`]: 3-bit-position groups (6 table inputs) give
+    /// (gt, eq) in one level, then a balanced combine — the parallel
+    /// comparator of the paper's argmax stage (Fig. 4).
+    pub fn ge_words(&mut self, a: &[NodeId], b: &[NodeId]) -> NodeId {
+        assert_eq!(a.len(), b.len());
+        if a.is_empty() {
+            return self.constant(true);
+        }
+        let mut pairs: Vec<(NodeId, NodeId)> = Vec::new();
+        for lo in (0..a.len()).step_by(3) {
+            let n = (a.len() - lo).min(3);
+            // inputs: a_lo..a_hi then b_lo..b_hi (each <=3) -> one 6-in table.
+            let mut ins: Vec<NodeId> = Vec::with_capacity(2 * n);
+            ins.extend_from_slice(&a[lo..lo + n]);
+            ins.extend_from_slice(&b[lo..lo + n]);
+            let mut t_gt = 0u64;
+            let mut t_eq = 0u64;
+            for addr in 0..(1u64 << (2 * n)) {
+                let av = addr & ((1 << n) - 1);
+                let bv = addr >> n;
+                if av > bv {
+                    t_gt |= 1 << addr;
+                }
+                if av == bv {
+                    t_eq |= 1 << addr;
+                }
+            }
+            let gt = self.table(ins.clone(), t_gt);
+            let eq = self.table(ins, t_eq);
+            pairs.push((gt, eq));
+        }
+        let (gt, eq) = self.combine_pairs(&pairs);
+        self.or2(gt, eq)
+    }
+
+    /// Word-level 2:1 mux.
+    pub fn mux_word(&mut self, s: NodeId, a0: &[NodeId], a1: &[NodeId]) -> Vec<NodeId> {
+        assert_eq!(a0.len(), a1.len());
+        (0..a0.len()).map(|i| self.mux(s, a0[i], a1[i])).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::sim::Simulator;
+
+    fn eval(net: &Network, inputs: &[bool]) -> Vec<bool> {
+        Simulator::new(net).eval(inputs)
+    }
+
+    #[test]
+    fn full_adder_truth() {
+        for a in 0..2u8 {
+            for b in 0..2u8 {
+                for c in 0..2u8 {
+                    let mut bld = Builder::new();
+                    let ia = bld.input();
+                    let ib = bld.input();
+                    let ic = bld.input();
+                    let (s, cy) = bld.full_adder(ia, ib, ic);
+                    bld.output(s);
+                    bld.output(cy);
+                    let net = bld.finish();
+                    let out = eval(&net, &[a == 1, b == 1, c == 1]);
+                    let total = a + b + c;
+                    assert_eq!(out[0], total & 1 == 1);
+                    assert_eq!(out[1], total >= 2);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn popcount_exhaustive_small() {
+        for n in 1..=9usize {
+            let mut bld = Builder::new();
+            let ins = bld.inputs(n);
+            let pc = bld.popcount(&ins);
+            for &b in &pc {
+                bld.output(b);
+            }
+            let net = bld.finish();
+            for pattern in 0..(1u32 << n) {
+                let inputs: Vec<bool> = (0..n).map(|i| (pattern >> i) & 1 == 1).collect();
+                let out = eval(&net, &inputs);
+                let mut v = 0u32;
+                for (i, &o) in out.iter().enumerate() {
+                    if o {
+                        v |= 1 << i;
+                    }
+                }
+                assert_eq!(v, pattern.count_ones(), "n={n} pattern={pattern:b}");
+            }
+        }
+    }
+
+    #[test]
+    fn ge_const_exhaustive() {
+        for width in 1..=6usize {
+            for k in 0..(1u64 << width) + 1 {
+                let mut bld = Builder::new();
+                let w = bld.inputs(width);
+                let o = bld.ge_const(&w, k);
+                bld.output(o);
+                let net = bld.finish();
+                for x in 0..(1u64 << width) {
+                    let inputs: Vec<bool> = (0..width).map(|i| (x >> i) & 1 == 1).collect();
+                    let out = eval(&net, &inputs);
+                    assert_eq!(out[0], x >= k, "width={width} k={k} x={x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ge_const_signed_exhaustive() {
+        let width = 5usize;
+        for k in -(1i64 << (width - 1))..(1i64 << (width - 1)) {
+            let mut bld = Builder::new();
+            let w = bld.inputs(width);
+            let o = bld.ge_const_signed(&w, k);
+            bld.output(o);
+            let net = bld.finish();
+            for x in -(1i64 << (width - 1))..(1i64 << (width - 1)) {
+                let ux = (x as u64) & ((1 << width) - 1);
+                let inputs: Vec<bool> = (0..width).map(|i| (ux >> i) & 1 == 1).collect();
+                let out = eval(&net, &inputs);
+                assert_eq!(out[0], x >= k, "k={k} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn ge_words_exhaustive() {
+        let width = 4usize;
+        let mut bld = Builder::new();
+        let a = bld.inputs(width);
+        let b = bld.inputs(width);
+        let o = bld.ge_words(&a, &b);
+        bld.output(o);
+        let net = bld.finish();
+        for x in 0..(1u64 << width) {
+            for y in 0..(1u64 << width) {
+                let mut inputs = Vec::new();
+                for i in 0..width {
+                    inputs.push((x >> i) & 1 == 1);
+                }
+                for i in 0..width {
+                    inputs.push((y >> i) & 1 == 1);
+                }
+                assert_eq!(eval(&net, &inputs)[0], x >= y, "x={x} y={y}");
+            }
+        }
+    }
+
+    #[test]
+    fn add_words_exhaustive() {
+        let width = 4usize;
+        let mut bld = Builder::new();
+        let a = bld.inputs(width);
+        let b = bld.inputs(width);
+        let s = bld.add_words(&a, &b);
+        for &bit in &s {
+            bld.output(bit);
+        }
+        let net = bld.finish();
+        for x in 0..(1u64 << width) {
+            for y in 0..(1u64 << width) {
+                let mut inputs = Vec::new();
+                for i in 0..width {
+                    inputs.push((x >> i) & 1 == 1);
+                }
+                for i in 0..width {
+                    inputs.push((y >> i) & 1 == 1);
+                }
+                let out = eval(&net, &inputs);
+                let mut v = 0u64;
+                for (i, &o) in out.iter().enumerate() {
+                    if o {
+                        v |= 1 << i;
+                    }
+                }
+                assert_eq!(v, x + y);
+            }
+        }
+    }
+
+    #[test]
+    fn mux_truth() {
+        let mut bld = Builder::new();
+        let s = bld.input();
+        let a0 = bld.input();
+        let a1 = bld.input();
+        let m = bld.mux(s, a0, a1);
+        bld.output(m);
+        let net = bld.finish();
+        for sv in [false, true] {
+            for v0 in [false, true] {
+                for v1 in [false, true] {
+                    let out = eval(&net, &[sv, v0, v1]);
+                    assert_eq!(out[0], if sv { v1 } else { v0 });
+                }
+            }
+        }
+    }
+}

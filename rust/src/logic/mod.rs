@@ -1,0 +1,16 @@
+//! Logic-synthesis substrate: a Boolean gate network IR with structural
+//! hashing and constant folding ([`net`]), arithmetic/comparison builders
+//! ([`build`]), and a bit-parallel functional simulator ([`sim`]).
+//!
+//! This replaces Vivado's synthesis front-end in the reproduction: the
+//! hardware generators in [`crate::hwgen`] emit gate networks, the
+//! [`crate::techmap`] mapper covers them with 6-LUTs, and [`crate::timing`]
+//! runs STA over the mapped netlist (DESIGN.md §2).
+
+pub mod build;
+pub mod net;
+pub mod sim;
+
+pub use build::Builder;
+pub use net::{Gate, Network, NodeId};
+pub use sim::Simulator;

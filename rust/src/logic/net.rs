@@ -1,0 +1,298 @@
+//! Gate-network IR.
+//!
+//! Nodes are created in topological order (a gate may only reference already
+//! existing nodes), which every downstream pass relies on. Three gate kinds
+//! cover everything the generators need:
+//!
+//! * `And2` / `Xor2` — the arithmetic workhorses (compressor trees,
+//!   comparators);
+//! * `Table` — a native k-input truth table (k <= 6), used for the DWN LUT
+//!   layer's trained truth tables, inverters, muxes, and majority gates.
+//!
+//! Construction applies constant folding and structural hashing (CSE), so
+//! identical logic — e.g. two comparators against the same threshold, which
+//! is exactly the sharing the paper's encoder generator exploits — is built
+//! once.
+
+use std::collections::HashMap;
+
+/// Index of a node in the network.
+pub type NodeId = u32;
+
+/// Maximum native truth-table fan-in (one physical 6-LUT).
+pub const MAX_TABLE_K: usize = 6;
+
+/// A gate in the network.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Gate {
+    /// Primary input `i`.
+    Input(u32),
+    /// Constant 0 or 1.
+    Const(bool),
+    And2(NodeId, NodeId),
+    Xor2(NodeId, NodeId),
+    /// k-input truth table; bit `a` of `table` is the output for input
+    /// pattern `a` (input j is address bit j, LSB-first).
+    Table { inputs: Vec<NodeId>, table: u64 },
+}
+
+/// A combinational gate network with named outputs.
+#[derive(Debug, Clone, Default)]
+pub struct Network {
+    pub gates: Vec<Gate>,
+    /// Primary outputs (node ids) in declaration order.
+    pub outputs: Vec<NodeId>,
+    pub num_inputs: u32,
+    hash: HashMap<Gate, NodeId>,
+}
+
+impl Network {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.gates.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.gates.is_empty()
+    }
+
+    /// Count of non-trivial gates (excludes inputs and constants).
+    pub fn gate_count(&self) -> usize {
+        self.gates
+            .iter()
+            .filter(|g| !matches!(g, Gate::Input(_) | Gate::Const(_)))
+            .count()
+    }
+
+    pub fn add_input(&mut self) -> NodeId {
+        let g = Gate::Input(self.num_inputs);
+        self.num_inputs += 1;
+        self.push_raw(g)
+    }
+
+    pub fn constant(&mut self, v: bool) -> NodeId {
+        self.intern(Gate::Const(v))
+    }
+
+    /// Add a gate with folding + hashing. Callers should prefer the
+    /// [`crate::logic::Builder`] helpers.
+    pub fn add(&mut self, gate: Gate) -> NodeId {
+        match self.fold(&gate) {
+            Some(id) => id,
+            None => self.intern(gate),
+        }
+    }
+
+    pub fn mark_output(&mut self, id: NodeId) {
+        self.outputs.push(id);
+    }
+
+    fn push_raw(&mut self, gate: Gate) -> NodeId {
+        let id = self.gates.len() as NodeId;
+        self.gates.push(gate);
+        id
+    }
+
+    fn intern(&mut self, gate: Gate) -> NodeId {
+        if let Some(&id) = self.hash.get(&gate) {
+            return id;
+        }
+        let id = self.push_raw(gate.clone());
+        self.hash.insert(gate, id);
+        id
+    }
+
+    fn const_of(&self, id: NodeId) -> Option<bool> {
+        match self.gates[id as usize] {
+            Gate::Const(b) => Some(b),
+            _ => None,
+        }
+    }
+
+    /// Constant folding / algebraic simplification at construction time.
+    fn fold(&mut self, gate: &Gate) -> Option<NodeId> {
+        match gate {
+            Gate::And2(a, b) => {
+                let (a, b) = (*a, *b);
+                if a == b {
+                    return Some(a);
+                }
+                match (self.const_of(a), self.const_of(b)) {
+                    (Some(false), _) | (_, Some(false)) => Some(self.constant(false)),
+                    (Some(true), _) => Some(b),
+                    (_, Some(true)) => Some(a),
+                    _ => {
+                        // Canonical operand order for hashing.
+                        if a > b {
+                            Some(self.add(Gate::And2(b, a)))
+                        } else {
+                            None
+                        }
+                    }
+                }
+            }
+            Gate::Xor2(a, b) => {
+                let (a, b) = (*a, *b);
+                if a == b {
+                    return Some(self.constant(false));
+                }
+                match (self.const_of(a), self.const_of(b)) {
+                    (Some(false), _) => Some(b),
+                    (_, Some(false)) => Some(a),
+                    (Some(true), _) => Some(self.add(not_table(b))),
+                    (_, Some(true)) => Some(self.add(not_table(a))),
+                    _ => {
+                        if a > b {
+                            Some(self.add(Gate::Xor2(b, a)))
+                        } else {
+                            None
+                        }
+                    }
+                }
+            }
+            Gate::Table { inputs, table } => {
+                assert!(inputs.len() <= MAX_TABLE_K, "table fan-in {} > 6", inputs.len());
+                let k = inputs.len();
+                let full = table_mask(k);
+                let t = table & full;
+                if t == 0 {
+                    return Some(self.constant(false));
+                }
+                if t == full {
+                    return Some(self.constant(true));
+                }
+                // Substitute constant inputs (cofactor) and drop don't-care pins.
+                for (j, &inp) in inputs.iter().enumerate() {
+                    if let Some(c) = self.const_of(inp) {
+                        let (ins, tt) = cofactor(inputs, t, j, c);
+                        return Some(self.add(Gate::Table { inputs: ins, table: tt }));
+                    }
+                }
+                for j in 0..k {
+                    if !depends_on(t, k, j) {
+                        let (ins, tt) = cofactor(inputs, t, j, false);
+                        return Some(self.add(Gate::Table { inputs: ins, table: tt }));
+                    }
+                }
+                // Identity table: output == one input.
+                if k == 1 && t == 0b10 {
+                    return Some(inputs[0]);
+                }
+                None
+            }
+            _ => None,
+        }
+    }
+}
+
+/// 1-input NOT as a table gate.
+pub fn not_table(a: NodeId) -> Gate {
+    Gate::Table { inputs: vec![a], table: 0b01 }
+}
+
+/// All-ones mask over 2^k table entries.
+pub fn table_mask(k: usize) -> u64 {
+    if k >= 6 {
+        u64::MAX
+    } else {
+        (1u64 << (1usize << k)) - 1
+    }
+}
+
+/// Does `table` (over k inputs) depend on input `j`?
+pub fn depends_on(table: u64, k: usize, j: usize) -> bool {
+    let (c0, c1) = cofactor_tables(table, k, j);
+    c0 != c1
+}
+
+/// Positive/negative cofactor tables (each over k-1 inputs, pin j removed).
+pub fn cofactor_tables(table: u64, k: usize, j: usize) -> (u64, u64) {
+    let mut c0 = 0u64;
+    let mut c1 = 0u64;
+    let mut n0 = 0;
+    let mut n1 = 0;
+    for a in 0..(1usize << k) {
+        let bit = (table >> a) & 1;
+        if (a >> j) & 1 == 0 {
+            c0 |= bit << n0;
+            n0 += 1;
+        } else {
+            c1 |= bit << n1;
+            n1 += 1;
+        }
+    }
+    (c0, c1)
+}
+
+fn cofactor(inputs: &[NodeId], table: u64, j: usize, value: bool) -> (Vec<NodeId>, u64) {
+    let k = inputs.len();
+    let (c0, c1) = cofactor_tables(table, k, j);
+    let mut ins = inputs.to_vec();
+    ins.remove(j);
+    (ins, if value { c1 } else { c0 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn structural_hashing_dedups() {
+        let mut n = Network::new();
+        let a = n.add_input();
+        let b = n.add_input();
+        let x = n.add(Gate::And2(a, b));
+        let y = n.add(Gate::And2(b, a)); // canonicalised
+        assert_eq!(x, y);
+        assert_eq!(n.gate_count(), 1);
+    }
+
+    #[test]
+    fn const_folding_and() {
+        let mut n = Network::new();
+        let a = n.add_input();
+        let t = n.constant(true);
+        let f = n.constant(false);
+        assert_eq!(n.add(Gate::And2(a, t)), a);
+        let z = n.add(Gate::And2(a, f));
+        assert_eq!(n.const_of(z), Some(false));
+        assert_eq!(n.add(Gate::And2(a, a)), a);
+    }
+
+    #[test]
+    fn xor_folding() {
+        let mut n = Network::new();
+        let a = n.add_input();
+        let z = n.add(Gate::Xor2(a, a));
+        assert_eq!(n.const_of(z), Some(false));
+        let f = n.constant(false);
+        assert_eq!(n.add(Gate::Xor2(a, f)), a);
+    }
+
+    #[test]
+    fn table_simplification() {
+        let mut n = Network::new();
+        let a = n.add_input();
+        let b = n.add_input();
+        // Table that ignores pin 1 -> collapses to a function of pin 0 only.
+        let t = n.add(Gate::Table { inputs: vec![a, b], table: 0b0101 & 0b1111 });
+        match &n.gates[t as usize] {
+            Gate::Table { inputs, .. } => assert_eq!(inputs.len(), 1),
+            g => panic!("expected table, got {g:?} (id {t})"),
+        }
+        // Identity collapses to the input itself.
+        let id = n.add(Gate::Table { inputs: vec![a], table: 0b10 });
+        assert_eq!(id, a);
+    }
+
+    #[test]
+    fn cofactor_tables_correct() {
+        // f(x0,x1) = x0 AND x1 -> table 0b1000.
+        let (c0, c1) = cofactor_tables(0b1000, 2, 1);
+        assert_eq!(c0, 0b00); // x1=0 -> 0
+        assert_eq!(c1, 0b10); // x1=1 -> x0
+    }
+}

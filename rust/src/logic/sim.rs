@@ -1,0 +1,146 @@
+//! Bit-parallel functional simulation of gate networks.
+//!
+//! Values are u64 lanes: 64 independent test vectors evaluate per pass. This
+//! is the workhorse for (a) golden-model verification of generated hardware
+//! against the PJRT-executed JAX model and (b) truth-table extraction during
+//! technology mapping.
+
+use super::net::{Gate, Network};
+
+/// Reusable simulator over a network (scratch buffer kept between calls).
+pub struct Simulator<'a> {
+    net: &'a Network,
+    values: Vec<u64>,
+}
+
+impl<'a> Simulator<'a> {
+    pub fn new(net: &'a Network) -> Self {
+        Self { net, values: vec![0; net.gates.len()] }
+    }
+
+    /// Evaluate one vector of input bits; returns output bits.
+    pub fn eval(&mut self, inputs: &[bool]) -> Vec<bool> {
+        let lanes: Vec<u64> = inputs.iter().map(|&b| if b { 1 } else { 0 }).collect();
+        let out = self.eval_lanes(&lanes);
+        out.iter().map(|&w| w & 1 == 1).collect()
+    }
+
+    /// Evaluate 64 vectors at once: `inputs[i]` holds lane-packed values of
+    /// primary input i. Returns lane-packed outputs.
+    pub fn eval_lanes(&mut self, inputs: &[u64]) -> Vec<u64> {
+        assert_eq!(inputs.len(), self.net.num_inputs as usize, "input arity mismatch");
+        let v = &mut self.values;
+        for (i, g) in self.net.gates.iter().enumerate() {
+            v[i] = match g {
+                Gate::Input(j) => inputs[*j as usize],
+                Gate::Const(b) => {
+                    if *b {
+                        u64::MAX
+                    } else {
+                        0
+                    }
+                }
+                Gate::And2(a, b) => v[*a as usize] & v[*b as usize],
+                Gate::Xor2(a, b) => v[*a as usize] ^ v[*b as usize],
+                Gate::Table { inputs: ins, table } => eval_table(v, ins, *table),
+            };
+        }
+        self.net.outputs.iter().map(|&o| v[o as usize]).collect()
+    }
+}
+
+/// Evaluate a table gate lane-wise without unpacking.
+#[inline]
+fn eval_table(values: &[u64], ins: &[u32], table: u64) -> u64 {
+    let mut lane_ins = [0u64; 6];
+    for (j, &i) in ins.iter().enumerate() {
+        lane_ins[j] = values[i as usize];
+    }
+    eval_table_lanes(table, &lane_ins[..ins.len()])
+}
+
+/// Shannon-cofactor evaluation of a k-input truth table over lane words:
+/// recursively split on the highest variable — `f = (v & f_hi) | (!v &
+/// f_lo)` — with constant-cofactor shortcuts. ~3x fewer bit-ops than
+/// enumerating all 2^k addresses (the netlist simulator's hot loop; see
+/// EXPERIMENTS.md §Perf).
+#[inline]
+pub fn eval_table_lanes(table: u64, ins: &[u64]) -> u64 {
+    let k = ins.len();
+    let full = crate::logic::net::table_mask(k);
+    let t = table & full;
+    if t == 0 {
+        return 0;
+    }
+    if t == full {
+        return u64::MAX;
+    }
+    match k {
+        0 => 0, // t==0 handled above; non-empty const tables fold earlier
+        1 => {
+            let a = ins[0];
+            match t {
+                0b01 => !a,
+                0b10 => a,
+                _ => unreachable!("0/3 handled by const shortcuts"),
+            }
+        }
+        _ => {
+            let v = ins[k - 1];
+            let half = 1usize << (k - 1);
+            let lo = t & crate::logic::net::table_mask(k - 1);
+            let hi = t >> half;
+            let f_lo = eval_table_lanes(lo, &ins[..k - 1]);
+            let f_hi = eval_table_lanes(hi, &ins[..k - 1]);
+            (v & f_hi) | (!v & f_lo)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::Builder;
+
+    #[test]
+    fn lane_parallel_matches_scalar() {
+        // Build a small random-ish circuit and compare lane vs scalar eval.
+        let mut bld = Builder::new();
+        let ins = bld.inputs(6);
+        let a = bld.and2(ins[0], ins[1]);
+        let b = bld.xor2(ins[2], ins[3]);
+        let c = bld.or2(a, b);
+        let d = bld.mux(ins[4], c, ins[5]);
+        let e = bld.xor2(d, a);
+        bld.output(d);
+        bld.output(e);
+        let net = bld.finish();
+        let mut sim = Simulator::new(&net);
+
+        // 64 random vectors packed into lanes.
+        let mut rng = crate::util::SplitMix64::new(9);
+        let lane_inputs: Vec<u64> = (0..6).map(|_| rng.next_u64()).collect();
+        let packed = sim.eval_lanes(&lane_inputs);
+
+        for lane in 0..64 {
+            let scalar: Vec<bool> =
+                (0..6).map(|i| (lane_inputs[i] >> lane) & 1 == 1).collect();
+            let out = Simulator::new(&net).eval(&scalar);
+            for (o, &p) in out.iter().zip(packed.iter()) {
+                assert_eq!(*o, (p >> lane) & 1 == 1, "lane {lane}");
+            }
+        }
+    }
+
+    #[test]
+    fn const_eval() {
+        let mut bld = Builder::new();
+        let t = bld.constant(true);
+        let f = bld.constant(false);
+        bld.output(t);
+        bld.output(f);
+        let net = bld.finish();
+        let out = Simulator::new(&net).eval(&[]);
+        assert_eq!(out, vec![true, false]);
+    }
+}

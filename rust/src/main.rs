@@ -1,0 +1,389 @@
+//! `dwn` CLI — leader entrypoint for the DWN accelerator toolkit.
+//!
+//! Subcommands:
+//!   generate  --model sm-10 --variant penft [--uniform]   generate + map + STA, print the report
+//!   breakdown --model sm-10 --variant penft               Fig.5-style component LUT breakdown
+//!   verify    --model sm-10 --variant penft [--n 512]     netlist sim vs golden vectors
+//!   serve     --model sm-10 [--backend pjrt|netlist] [--requests N]
+//!   accuracy  --model sm-10 --variant penft               netlist accuracy on the test set
+//!   info                                                  artifact/manifest summary
+//!
+//! Artifacts root: --artifacts PATH or $DWN_ARTIFACTS (default ./artifacts).
+
+use anyhow::{anyhow, bail, Context, Result};
+use dwn::config::{Args, Artifacts};
+use dwn::coordinator::{Backend, Server, ServerConfig};
+use dwn::data::Dataset;
+use dwn::hwgen::{build_accelerator, AccelOptions};
+use dwn::model::{DwnModel, Variant};
+use dwn::report::{f1, int, Table};
+use dwn::runtime::Engine;
+use dwn::techmap::MapConfig;
+use dwn::timing::{analyze, DelayModel};
+use dwn::util::fixed;
+use std::time::{Duration, Instant};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_variant(s: &str) -> Result<Variant> {
+    Ok(match s {
+        "ten" => Variant::Ten,
+        "pen" => Variant::Pen,
+        "penft" => Variant::PenFt,
+        _ => bail!("unknown variant '{s}' (ten|pen|penft)"),
+    })
+}
+
+fn run() -> Result<()> {
+    let mut argv = std::env::args().skip(1);
+    let cmd = argv.next().unwrap_or_else(|| "help".to_string());
+    let args = Args::parse(argv, &["uniform", "scores", "quiet"])?;
+    let artifacts = match args.get("artifacts") {
+        Some(p) => Artifacts::at(p),
+        None => Artifacts::discover(),
+    };
+    match cmd.as_str() {
+        "generate" => cmd_generate(&artifacts, &args),
+        "breakdown" => cmd_breakdown(&artifacts, &args),
+        "verify" => cmd_verify(&artifacts, &args),
+        "serve" => cmd_serve(&artifacts, &args),
+        "accuracy" => cmd_accuracy(&artifacts, &args),
+        "emit-rtl" => cmd_emit_rtl(&artifacts, &args),
+        "mixed" => cmd_mixed(&artifacts, &args),
+        "info" => cmd_info(&artifacts),
+        "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'; try 'dwn help'"),
+    }
+}
+
+const HELP: &str = "dwn — DWN FPGA accelerator generator (thermometer-encoding reproduction)
+commands: generate | breakdown | verify | serve | accuracy | emit-rtl | mixed | info | help
+common options: --artifacts PATH --model NAME --variant ten|pen|penft
+emit-rtl: --out design.v [--tb design_tb.v]    mixed: --start 8 --min 3 --tol 0.01";
+
+fn load_model(artifacts: &Artifacts, args: &Args) -> Result<DwnModel> {
+    let name = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
+    DwnModel::load(&artifacts.model_path(name))
+}
+
+fn cmd_generate(artifacts: &Artifacts, args: &Args) -> Result<()> {
+    let model = load_model(artifacts, args)?;
+    let variant = parse_variant(&args.get_or("variant", "penft"))?;
+    let mut opts = AccelOptions::new(variant);
+    opts.uniform_encoding = args.has_flag("uniform");
+    let t0 = Instant::now();
+    let accel = build_accelerator(&model, &opts)?;
+    let nl = accel.map(&MapConfig::default());
+    let rep = analyze(&nl, &DelayModel::default());
+    let dt = t0.elapsed();
+    let mut t = Table::new(
+        &format!("DWN-{} ({}) hardware report", variant.label(), model.name),
+        &["metric", "value"],
+    );
+    t.row(&["LUTs".into(), int(rep.luts)]);
+    t.row(&["FFs".into(), int(rep.ffs)]);
+    t.row(&["logic depth (levels)".into(), rep.depth.to_string()]);
+    t.row(&["pipeline stages".into(), rep.stages.to_string()]);
+    t.row(&["Fmax (MHz)".into(), f1(rep.fmax_mhz)]);
+    t.row(&["latency (ns)".into(), f1(rep.latency_ns)]);
+    t.row(&["AxD (LUT*ns)".into(), f1(rep.area_delay)]);
+    t.row(&["gate network size".into(), int(accel.net.len())]);
+    t.row(&["distinct comparators".into(), int(accel.distinct_comparators)]);
+    t.row(&["input bits".into(), int(accel.input_bits())]);
+    t.row(&["gen+map+sta time (ms)".into(), format!("{}", dt.as_millis())]);
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_breakdown(artifacts: &Artifacts, args: &Args) -> Result<()> {
+    let model = load_model(artifacts, args)?;
+    let variant = parse_variant(&args.get_or("variant", "penft"))?;
+    let accel = build_accelerator(&model, &AccelOptions::new(variant))?;
+    let (nl, counts) = accel.map_with_breakdown(&MapConfig::default());
+    let mut t = Table::new(
+        &format!("Component breakdown {} ({})", model.name, variant.label()),
+        &["component", "LUTs", "share"],
+    );
+    let total = nl.lut_count().max(1);
+    for (comp, n) in &counts {
+        t.row(&[
+            comp.label().into(),
+            int(*n),
+            format!("{:.1}%", 100.0 * *n as f64 / total as f64),
+        ]);
+    }
+    t.row(&["total".into(), int(nl.lut_count()), "100%".into()]);
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_verify(artifacts: &Artifacts, args: &Args) -> Result<()> {
+    let model = load_model(artifacts, args)?;
+    let variant = parse_variant(&args.get_or("variant", "penft"))?;
+    let n = args.get_usize("n", 512)?;
+    let out = dwn::verify::verify_against_golden(artifacts, &model, variant, n)?;
+    println!(
+        "verify {} ({}): {}/{} vectors bit-exact vs JAX golden",
+        model.name,
+        variant.label(),
+        out.checked - out.mismatches,
+        out.checked
+    );
+    if !out.ok() {
+        bail!("{} golden mismatches", out.mismatches);
+    }
+    Ok(())
+}
+
+fn cmd_accuracy(artifacts: &Artifacts, args: &Args) -> Result<()> {
+    let model = load_model(artifacts, args)?;
+    let variant = parse_variant(&args.get_or("variant", "penft"))?;
+    let test = Dataset::load_csv(&artifacts.dataset_path("test"))?;
+    let accel = build_accelerator(&model, &AccelOptions::new(variant))?;
+    let nl = accel.map(&MapConfig::default());
+    let (ints, frac_bits) = model.threshold_ints_for(variant)?;
+    let _ = ints;
+    let width = (frac_bits + 1) as usize;
+    let vectors: Vec<Vec<bool>> = (0..test.len())
+        .map(|i| {
+            let mut bits = Vec::with_capacity(test.num_features * width);
+            for &x in test.row(i) {
+                let pat = fixed::int_to_bits(fixed::input_to_int(x as f64, frac_bits), frac_bits);
+                for b in 0..width {
+                    bits.push((pat >> b) & 1 == 1);
+                }
+            }
+            bits
+        })
+        .collect();
+    let outs = nl.eval_batch(&vectors);
+    let iw = accel.index_width();
+    let mut correct = 0usize;
+    for (i, o) in outs.iter().enumerate() {
+        let mut pred = 0usize;
+        for b in 0..iw {
+            if o[b] {
+                pred |= 1 << b;
+            }
+        }
+        if pred == test.y[i] as usize {
+            correct += 1;
+        }
+    }
+    println!(
+        "netlist accuracy {} ({}): {:.4} on {} samples (JSON says {:.4})",
+        model.name,
+        variant.label(),
+        correct as f64 / test.len() as f64,
+        test.len(),
+        match variant {
+            Variant::Ten => model.ten.acc,
+            Variant::Pen => model.pen.acc,
+            Variant::PenFt => model.penft.acc,
+        }
+    );
+    Ok(())
+}
+
+fn cmd_serve(artifacts: &Artifacts, args: &Args) -> Result<()> {
+    let model = load_model(artifacts, args)?;
+    let backend_kind = args.get_or("backend", "pjrt");
+    let requests = args.get_usize("requests", 2000)?;
+    let test = Dataset::load_csv(&artifacts.dataset_path("test"))?;
+    let server = match backend_kind.as_str() {
+        "pjrt" => {
+            let batch = artifacts.hlo_batch()?;
+            let hlo = artifacts.hlo_path(&model.name);
+            let (features, classes) = (model.num_features, model.num_classes);
+            Server::start_with(
+                move || {
+                    let engine = Engine::load(&hlo, batch, features, classes)?;
+                    println!("PJRT engine up on platform '{}'", engine.platform());
+                    Ok(Backend::Pjrt(engine))
+                },
+                ServerConfig::default(),
+            )?
+        }
+        "netlist" => {
+            let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt))?;
+            let nl = accel.map(&MapConfig::default());
+            Server::start_netlist(
+                nl,
+                model.penft.frac_bits.context("penft bits")?,
+                model.num_features,
+                model.num_classes,
+                accel.index_width(),
+                ServerConfig::default(),
+            )
+        }
+        other => bail!("unknown backend '{other}' (pjrt|netlist)"),
+    };
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    let mut correct = 0usize;
+    for i in 0..requests {
+        let row = test.row(i % test.len());
+        pending.push((i % test.len(), server.submit(row)?));
+        // Drain in windows to bound memory while keeping the batcher busy.
+        if pending.len() >= 256 {
+            for (j, rx) in pending.drain(..) {
+                let pred = rx
+                    .recv_timeout(Duration::from_secs(30))
+                    .map_err(|_| anyhow!("timeout"))??;
+                if pred as usize == test.y[j] as usize {
+                    correct += 1;
+                }
+            }
+        }
+    }
+    for (j, rx) in pending.drain(..) {
+        let pred =
+            rx.recv_timeout(Duration::from_secs(30)).map_err(|_| anyhow!("timeout"))??;
+        if pred as usize == test.y[j] as usize {
+            correct += 1;
+        }
+    }
+    let dt = t0.elapsed();
+    let snap = server.metrics.snapshot();
+    println!(
+        "served {} requests in {:.2}s  ({:.0} req/s, accuracy {:.4})",
+        requests,
+        dt.as_secs_f64(),
+        requests as f64 / dt.as_secs_f64(),
+        correct as f64 / requests as f64
+    );
+    println!(
+        "batches={} mean_batch={:.1} p50={}us p99={}us max={}us busy={}ms",
+        snap.batches,
+        snap.mean_batch,
+        snap.p50_us,
+        snap.p99_us,
+        snap.max_us,
+        snap.busy_us / 1000
+    );
+    Ok(())
+}
+
+fn cmd_emit_rtl(artifacts: &Artifacts, args: &Args) -> Result<()> {
+    use dwn::hwgen::rtl;
+    let model = load_model(artifacts, args)?;
+    let variant = parse_variant(&args.get_or("variant", "penft"))?;
+    let accel = build_accelerator(&model, &AccelOptions::new(variant))?;
+    let nl = accel.map(&MapConfig::default());
+    let opts = rtl::RtlOptions {
+        module_name: format!("dwn_{}_{}", model.name.replace('-', "_"), variant.label().to_lowercase().replace('+', "_")),
+        io_registers: true,
+    };
+    let v = rtl::emit_verilog(&nl, &opts);
+    let out = args.get_or("out", &format!("{}_{}.v", model.name, variant.label().to_lowercase()));
+    std::fs::write(&out, &v)?;
+    println!("wrote {out} ({} LUTs as truth-table assigns)", nl.lut_count());
+    if let Some(tb_path) = args.get("tb") {
+        // Testbench vectors from the golden file when available.
+        let vecs = golden_vectors(artifacts, &model, variant, &accel, &nl, 32)?;
+        let tb = rtl::emit_testbench(&nl, &opts, &vecs);
+        std::fs::write(tb_path, tb)?;
+        println!("wrote {tb_path} ({} vectors)", 32);
+    }
+    Ok(())
+}
+
+/// Build (input bits, expected output bits) pairs for the RTL testbench by
+/// replaying golden inputs through the netlist simulator.
+fn golden_vectors(
+    artifacts: &Artifacts,
+    model: &DwnModel,
+    variant: Variant,
+    _accel: &dwn::hwgen::Accelerator,
+    nl: &dwn::techmap::LutNetlist,
+    n: usize,
+) -> Result<Vec<(Vec<bool>, Vec<bool>)>> {
+    let mut out = Vec::new();
+    match variant {
+        Variant::Ten => {
+            let g = dwn::data::golden::load_ten(&artifacts.golden_path(&model.name, "ten"))?;
+            for v in g.vectors.iter().take(n) {
+                let inputs: Vec<bool> = (0..g.used_bits).map(|i| v.bits.get(i)).collect();
+                let outputs = nl.eval(&inputs);
+                out.push((inputs, outputs));
+            }
+        }
+        Variant::Pen | Variant::PenFt => {
+            let tag = if variant == Variant::Pen { "pen" } else { "penft" };
+            let g = dwn::data::golden::load_pen(&artifacts.golden_path(&model.name, tag))?;
+            let width = (g.frac_bits + 1) as usize;
+            for v in g.vectors.iter().take(n) {
+                let mut inputs = Vec::with_capacity(v.x_ints.len() * width);
+                for &xi in &v.x_ints {
+                    let pat = fixed::int_to_bits(xi, g.frac_bits);
+                    for i in 0..width {
+                        inputs.push((pat >> i) & 1 == 1);
+                    }
+                }
+                let outputs = nl.eval(&inputs);
+                out.push((inputs, outputs));
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn cmd_mixed(artifacts: &Artifacts, args: &Args) -> Result<()> {
+    use dwn::hwgen::mixed;
+    let model = load_model(artifacts, args)?;
+    let variant = parse_variant(&args.get_or("variant", "ten"))?;
+    let test = Dataset::load_csv(&artifacts.dataset_path("test"))?;
+    let start = args.get_usize("start", 8)? as u32;
+    let min = args.get_usize("min", 3)? as u32;
+    let tol: f64 = args.get_or("tol", "0.01").parse()?;
+    let mp = mixed::search(&model, variant, &test, start, min, tol, 2000)?;
+    println!(
+        "mixed-precision {} ({}): base acc {:.4} @ uniform {}b -> acc {:.4} with per-feature bits:",
+        model.name,
+        variant.label(),
+        mp.base_acc,
+        start,
+        mp.acc
+    );
+    println!("  {:?}", mp.bits);
+    println!(
+        "  encoder input bits: {} (uniform) -> {} (mixed)",
+        mixed::encoder_input_bits(&model, variant, &vec![start; model.num_features]),
+        mixed::encoder_input_bits(&model, variant, &mp.bits)
+    );
+    Ok(())
+}
+
+fn cmd_info(artifacts: &Artifacts) -> Result<()> {
+    if !artifacts.exists() {
+        bail!(
+            "no artifacts at {} — run `make artifacts` first",
+            artifacts.root.display()
+        );
+    }
+    let names = artifacts.manifest_models()?;
+    println!("artifacts: {} (hlo batch {})", artifacts.root.display(), artifacts.hlo_batch()?);
+    for n in names {
+        let m = DwnModel::load(&artifacts.model_path(&n))?;
+        println!(
+            "  {:8} luts={:5} T={:3} acc: TEN {:.4} | PEN {:.4} @{}b | PEN+FT {:.4} @{}b",
+            m.name,
+            m.num_luts,
+            m.thermo_bits,
+            m.ten.acc,
+            m.pen.acc,
+            m.pen.frac_bits.unwrap_or(0),
+            m.penft.acc,
+            m.penft.frac_bits.unwrap_or(0)
+        );
+    }
+    Ok(())
+}

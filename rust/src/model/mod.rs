@@ -1,0 +1,263 @@
+//! Trained DWN model description, loaded from `artifacts/models/<cfg>.json`
+//! (written by `python/compile/aot.py`). This is the hardware generator's
+//! input: thresholds, encoder->LUT mapping, binarised truth tables, and the
+//! TEN / PEN / PEN+FT variant metadata.
+
+use crate::json::{self, Value};
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::Path;
+
+/// Accuracy + quantization metadata of one model variant.
+#[derive(Debug, Clone)]
+pub struct VariantInfo {
+    pub acc: f64,
+    /// Fractional bits of the (1, n) fixed-point input format (None for TEN).
+    pub frac_bits: Option<u32>,
+}
+
+/// One point of the bit-width sweep (paper Fig. 5 x-axis).
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub frac_bits: u32,
+    pub acc_pen: f64,
+    pub acc_penft: f64,
+}
+
+/// Everything the hardware generator needs for one DWN variant.
+#[derive(Debug, Clone)]
+pub struct DwnModel {
+    pub name: String,
+    pub num_luts: usize,
+    pub thermo_bits: usize,
+    pub num_features: usize,
+    pub num_classes: usize,
+    pub lut_k: usize,
+    /// Encoder->LUT mapping: sel[l][j] indexes the F*T thermometer bit space.
+    pub sel: Vec<Vec<u32>>,
+    /// Binarised truth tables, 64-bit LSB-first masks.
+    pub tables: Vec<u64>,
+    /// Float thresholds [F][T] (distributive, sorted ascending).
+    pub thresholds: Vec<Vec<f64>>,
+    /// Uniform thresholds [F][T] (for the Fig. 2 comparison).
+    pub uniform_thresholds: Vec<Vec<f64>>,
+    pub ten: VariantInfo,
+    pub pen: VariantInfo,
+    pub penft: VariantInfo,
+    /// Quantized thresholds (grid integers) for the PEN variant.
+    pub pen_threshold_ints: Vec<Vec<i32>>,
+    /// Quantized thresholds, mapping and tables for the PEN+FT variant
+    /// (fine-tuning re-learns mapping + tables).
+    pub penft_threshold_ints: Vec<Vec<i32>>,
+    pub penft_sel: Vec<Vec<u32>>,
+    pub penft_tables: Vec<u64>,
+    pub bw_sweep: Vec<SweepPoint>,
+}
+
+/// Which trained network a generator should target.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// Thermometer-encoded inputs (no encoder hardware) — the DWN paper's
+    /// original reporting.
+    Ten,
+    /// Positional (fixed-point) inputs + encoder hardware, PTQ only.
+    Pen,
+    /// PEN after fine-tuning at a reduced bit-width.
+    PenFt,
+}
+
+impl Variant {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Variant::Ten => "TEN",
+            Variant::Pen => "PEN",
+            Variant::PenFt => "PEN+FT",
+        }
+    }
+}
+
+impl DwnModel {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading model {}", path.display()))?;
+        let v = json::parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+        Self::from_json(&v)
+    }
+
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let name = v.get("name")?.as_str()?.to_string();
+        let num_luts = v.get("num_luts")?.as_usize()?;
+        let lut_k = v.get("lut_k")?.as_usize()?;
+        let sel = parse_sel(v.get("sel")?, lut_k)?;
+        let tables = parse_tables(v.get("tables_hex")?)?;
+        if sel.len() != num_luts || tables.len() != num_luts {
+            bail!("inconsistent model: {} sel rows / {} tables for {} luts", sel.len(), tables.len(), num_luts);
+        }
+        let variants = v.get("variants")?;
+        let ten = variants.get("ten")?;
+        let pen = variants.get("pen")?;
+        let penft = variants.get("penft")?;
+        let mut bw_sweep = Vec::new();
+        for p in v.get("bw_sweep")?.as_arr()? {
+            bw_sweep.push(SweepPoint {
+                frac_bits: p.get("frac_bits")?.as_usize()? as u32,
+                acc_pen: p.get("acc_pen")?.as_f64()?,
+                acc_penft: p.get("acc_penft")?.as_f64()?,
+            });
+        }
+        Ok(Self {
+            name,
+            num_luts,
+            thermo_bits: v.get("thermo_bits")?.as_usize()?,
+            num_features: v.get("num_features")?.as_usize()?,
+            num_classes: v.get("num_classes")?.as_usize()?,
+            lut_k,
+            sel,
+            tables,
+            thresholds: parse_matrix(v.get("thresholds")?)?,
+            uniform_thresholds: parse_matrix(v.get("uniform_thresholds")?)?,
+            ten: VariantInfo { acc: ten.get("acc")?.as_f64()?, frac_bits: None },
+            pen: VariantInfo {
+                acc: pen.get("acc")?.as_f64()?,
+                frac_bits: Some(pen.get("frac_bits")?.as_usize()? as u32),
+            },
+            penft: VariantInfo {
+                acc: penft.get("acc")?.as_f64()?,
+                frac_bits: Some(penft.get("frac_bits")?.as_usize()? as u32),
+            },
+            pen_threshold_ints: parse_int_matrix(pen.get("threshold_ints")?)?,
+            penft_threshold_ints: parse_int_matrix(penft.get("threshold_ints")?)?,
+            penft_sel: parse_sel(penft.get("sel")?, lut_k)?,
+            penft_tables: parse_tables(penft.get("tables_hex")?)?,
+            bw_sweep,
+        })
+    }
+
+    /// (sel, tables) for a variant — fine-tuning re-learns both.
+    pub fn mapping_for(&self, variant: Variant) -> (&[Vec<u32>], &[u64]) {
+        match variant {
+            Variant::Ten | Variant::Pen => (&self.sel, &self.tables),
+            Variant::PenFt => (&self.penft_sel, &self.penft_tables),
+        }
+    }
+
+    /// Quantized threshold grid for a PEN-family variant.
+    pub fn threshold_ints_for(&self, variant: Variant) -> Result<(&[Vec<i32>], u32)> {
+        match variant {
+            Variant::Pen => Ok((
+                &self.pen_threshold_ints,
+                self.pen.frac_bits.ok_or_else(|| anyhow!("pen missing frac_bits"))?,
+            )),
+            Variant::PenFt => Ok((
+                &self.penft_threshold_ints,
+                self.penft.frac_bits.ok_or_else(|| anyhow!("penft missing frac_bits"))?,
+            )),
+            Variant::Ten => bail!("TEN variant has no quantized thresholds"),
+        }
+    }
+
+    /// Sorted unique thermometer-bit indices connected to the LUT layer —
+    /// the only thresholds that need hardware comparators.
+    pub fn used_bits(&self, variant: Variant) -> Vec<u32> {
+        let (sel, _) = self.mapping_for(variant);
+        let mut used: Vec<u32> = sel.iter().flatten().copied().collect();
+        used.sort_unstable();
+        used.dedup();
+        used
+    }
+
+    /// Decompose a thermometer-bit index into (feature, level).
+    pub fn bit_to_feature_level(&self, bit: u32) -> (usize, usize) {
+        ((bit as usize) / self.thermo_bits, (bit as usize) % self.thermo_bits)
+    }
+
+    /// LUTs per class group (LUT l belongs to class l / group_size).
+    pub fn group_size(&self) -> usize {
+        self.num_luts / self.num_classes
+    }
+}
+
+fn parse_sel(v: &Value, lut_k: usize) -> Result<Vec<Vec<u32>>> {
+    let mut out = Vec::new();
+    for row in v.as_arr()? {
+        let r: Vec<u32> = row.as_i64_vec()?.iter().map(|&x| x as u32).collect();
+        if r.len() != lut_k {
+            bail!("sel row has {} pins, want {}", r.len(), lut_k);
+        }
+        out.push(r);
+    }
+    Ok(out)
+}
+
+fn parse_tables(v: &Value) -> Result<Vec<u64>> {
+    v.as_arr()?
+        .iter()
+        .map(|s| {
+            let h = s.as_str()?;
+            u64::from_str_radix(h, 16).map_err(|e| anyhow!("bad table hex '{h}': {e}"))
+        })
+        .collect()
+}
+
+fn parse_matrix(v: &Value) -> Result<Vec<Vec<f64>>> {
+    v.as_arr()?.iter().map(|r| r.as_f64_vec()).collect()
+}
+
+fn parse_int_matrix(v: &Value) -> Result<Vec<Vec<i32>>> {
+    Ok(parse_matrix(v)?
+        .into_iter()
+        .map(|r| r.into_iter().map(|x| x as i32).collect())
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A small synthetic model JSON for unit tests (2 classes, 4 luts).
+    pub fn test_model_json() -> String {
+        r#"{
+          "name": "tiny", "num_luts": 4, "thermo_bits": 4, "num_features": 2,
+          "num_classes": 2, "lut_k": 2,
+          "sel": [[0,1],[2,3],[4,5],[6,7]],
+          "tables_hex": ["8","e","6","1"],
+          "thresholds": [[-0.5,0.0,0.25,0.5],[-0.25,0.0,0.5,0.75]],
+          "uniform_thresholds": [[-0.6,-0.2,0.2,0.6],[-0.6,-0.2,0.2,0.6]],
+          "variants": {
+            "ten": {"acc": 0.8},
+            "pen": {"frac_bits": 4, "acc": 0.79,
+              "threshold_ints": [[-8,0,4,8],[-4,0,8,12]]},
+            "penft": {"frac_bits": 3, "acc": 0.8,
+              "threshold_ints": [[-4,0,2,4],[-2,0,4,6]],
+              "sel": [[0,1],[2,3],[4,5],[6,7]],
+              "tables_hex": ["8","e","6","1"]}
+          },
+          "bw_sweep": [{"frac_bits":3,"acc_pen":0.7,"acc_penft":0.8},
+                       {"frac_bits":4,"acc_pen":0.79,"acc_penft":0.8}]
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_test_model() {
+        let v = json::parse(&test_model_json()).unwrap();
+        let m = DwnModel::from_json(&v).unwrap();
+        assert_eq!(m.name, "tiny");
+        assert_eq!(m.num_luts, 4);
+        assert_eq!(m.tables, vec![8, 0xe, 6, 1]);
+        assert_eq!(m.used_bits(Variant::Ten).len(), 8);
+        assert_eq!(m.bit_to_feature_level(5), (1, 1));
+        assert_eq!(m.group_size(), 2);
+        assert_eq!(m.pen.frac_bits, Some(4));
+        let (ints, bw) = m.threshold_ints_for(Variant::PenFt).unwrap();
+        assert_eq!(bw, 3);
+        assert_eq!(ints[0], vec![-4, 0, 2, 4]);
+        assert_eq!(m.bw_sweep.len(), 2);
+    }
+
+    #[test]
+    fn rejects_inconsistent() {
+        let bad = test_model_json().replace("\"num_luts\": 4", "\"num_luts\": 5");
+        let v = json::parse(&bad).unwrap();
+        assert!(DwnModel::from_json(&v).is_err());
+    }
+}

@@ -1,0 +1,66 @@
+//! Shared measurement harness used by the table/figure benches: generate,
+//! map, time-analyze one DWN design point and return a paper-style row.
+
+use crate::hwgen::{build_accelerator, AccelOptions, Component};
+use crate::model::{DwnModel, Variant};
+use crate::techmap::MapConfig;
+use crate::timing::{analyze, DelayModel, TimingReport};
+use anyhow::Result;
+
+/// One measured design point (a Table I/II/III row).
+#[derive(Debug, Clone)]
+pub struct MeasuredRow {
+    pub model: String,
+    pub variant: Variant,
+    /// Input fractional bits (None for TEN).
+    pub bits: Option<u32>,
+    /// Test accuracy (fraction, from the trained model JSON).
+    pub acc: f64,
+    pub timing: TimingReport,
+    /// Per-component LUT counts (encoder, lut-layer, popcount, argmax).
+    pub breakdown: Vec<(Component, usize)>,
+}
+
+/// Generate + map + analyze one variant of a trained model.
+pub fn measure(model: &DwnModel, variant: Variant) -> Result<MeasuredRow> {
+    measure_opts(model, AccelOptions::new(variant))
+}
+
+/// Like [`measure`] but with explicit generator options (uniform ablation).
+pub fn measure_opts(model: &DwnModel, opts: AccelOptions) -> Result<MeasuredRow> {
+    let variant = opts.variant;
+    let accel = build_accelerator(model, &opts)?;
+    let (nl, breakdown) = accel.map_with_breakdown(&MapConfig::default());
+    let timing = analyze(&nl, &DelayModel::default());
+    let (acc, bits) = match variant {
+        Variant::Ten => (model.ten.acc, None),
+        Variant::Pen => (model.pen.acc, model.pen.frac_bits),
+        Variant::PenFt => (model.penft.acc, model.penft.frac_bits),
+    };
+    Ok(MeasuredRow { model: model.name.clone(), variant, bits, acc, timing, breakdown })
+}
+
+impl MeasuredRow {
+    pub fn component_luts(&self, c: Component) -> usize {
+        self.breakdown.iter().find(|(k, _)| *k == c).map(|(_, n)| *n).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Artifacts;
+
+    #[test]
+    fn measure_smoke_if_artifacts() {
+        let a = Artifacts::discover();
+        if !a.exists() {
+            return;
+        }
+        let m = DwnModel::load(&a.model_path("sm-10")).unwrap();
+        let row = measure(&m, Variant::PenFt).unwrap();
+        assert!(row.timing.luts > 0);
+        assert!(row.component_luts(Component::LutLayer) > 0);
+        assert_eq!(row.bits, m.penft.frac_bits);
+    }
+}

@@ -1,0 +1,137 @@
+//! Table/CSV reporting: renders the paper's tables next to our measured
+//! rows and writes figure data as CSV into `artifacts/results/`.
+
+pub mod measure;
+
+pub use measure::{measure, measure_opts, MeasuredRow};
+
+use anyhow::Result;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A simple fixed-column text table.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut s = String::new();
+        let _ = writeln!(s, "== {} ==", self.title);
+        let line = |s: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(s, "{:<w$}  ", c, w = widths[i]);
+            }
+            let _ = writeln!(s);
+        };
+        line(&mut s, &self.headers);
+        let total: usize = widths.iter().sum::<usize>() + 2 * widths.len();
+        let _ = writeln!(s, "{}", "-".repeat(total));
+        for row in &self.rows {
+            line(&mut s, row);
+        }
+        s
+    }
+
+    /// Write as CSV (for the figure data consumed by plotting).
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut s = String::new();
+        let esc = |c: &str| {
+            if c.contains(',') || c.contains('"') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.to_string()
+            }
+        };
+        let _ = writeln!(s, "{}", self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+        for row in &self.rows {
+            let _ = writeln!(s, "{}", row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        std::fs::write(path, s)?;
+        Ok(())
+    }
+}
+
+/// Format helpers shared by the benches.
+pub fn pct(x: f64) -> String {
+    format!("{:.1}", 100.0 * x)
+}
+
+pub fn f1(x: f64) -> String {
+    format!("{x:.1}")
+}
+
+pub fn f0(x: f64) -> String {
+    format!("{x:.0}")
+}
+
+pub fn int(x: usize) -> String {
+    // thousands separators like the paper tables
+    let s = x.to_string();
+    let mut out = String::new();
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T", &["a", "bbbb"]);
+        t.row(&["1".into(), "2".into()]);
+        t.row(&["100".into(), "x".into()]);
+        let r = t.render();
+        assert!(r.contains("== T =="));
+        assert!(r.lines().count() >= 4);
+    }
+
+    #[test]
+    fn csv_escaping() {
+        let dir = std::env::temp_dir().join("dwn_report_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.csv");
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(&["x,y".into(), "q\"z".into()]);
+        t.write_csv(&p).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "a,b\n\"x,y\",\"q\"\"z\"\n");
+    }
+
+    #[test]
+    fn int_separators() {
+        assert_eq!(int(12), "12");
+        assert_eq!(int(1234), "1,234");
+        assert_eq!(int(1234567), "1,234,567");
+    }
+}

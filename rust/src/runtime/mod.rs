@@ -1,0 +1,98 @@
+//! PJRT runtime: load AOT-compiled HLO text and execute it on the CPU client.
+//!
+//! This is the only place the `xla` crate is touched. The interchange format
+//! is HLO **text** (not serialized `HloModuleProto`): jax >= 0.5 emits protos
+//! with 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids and round-trips cleanly (see DESIGN.md §2 and
+//! /opt/xla-example/README.md).
+
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// A compiled DWN inference executable plus its static batch geometry.
+pub struct Engine {
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+    /// Static batch size the HLO was lowered with (inputs must be padded).
+    pub batch: usize,
+    /// Number of input features (x is f32[batch, features]).
+    pub features: usize,
+    /// Number of classes (scores are s32[batch, classes]).
+    pub classes: usize,
+}
+
+/// One batch of inference results.
+#[derive(Debug, Clone)]
+pub struct BatchOutput {
+    /// Per-class popcount scores, row-major [batch, classes].
+    pub scores: Vec<i32>,
+    /// Argmax class per sample.
+    pub pred: Vec<i32>,
+}
+
+impl Engine {
+    /// Load HLO text from `path`, compile it on the PJRT CPU client.
+    pub fn load(path: &Path, batch: usize, features: usize, classes: usize) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(wrap)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(wrap)
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(wrap).context("PJRT compile")?;
+        Ok(Self { client, exe, batch, features, classes })
+    }
+
+    /// Name of the PJRT platform backing this engine (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Run one padded batch. `x` must hold exactly `batch * features` f32s.
+    pub fn execute(&self, x: &[f32]) -> Result<BatchOutput> {
+        if x.len() != self.batch * self.features {
+            return Err(anyhow!(
+                "bad input length {} (want {}x{})",
+                x.len(),
+                self.batch,
+                self.features
+            ));
+        }
+        let lit = xla::Literal::vec1(x)
+            .reshape(&[self.batch as i64, self.features as i64])
+            .map_err(wrap)?;
+        let result = self.exe.execute::<xla::Literal>(&[lit]).map_err(wrap)?[0][0]
+            .to_literal_sync()
+            .map_err(wrap)?;
+        // aot.py lowers with return_tuple=True: (scores s32[B,C], pred s32[B]).
+        let elems = result.to_tuple().map_err(wrap)?;
+        if elems.len() != 2 {
+            return Err(anyhow!("expected 2-tuple output, got {}", elems.len()));
+        }
+        let scores = elems[0].to_vec::<i32>().map_err(wrap)?;
+        let pred = elems[1].to_vec::<i32>().map_err(wrap)?;
+        if scores.len() != self.batch * self.classes || pred.len() != self.batch {
+            return Err(anyhow!("unexpected output shapes"));
+        }
+        Ok(BatchOutput { scores, pred })
+    }
+
+    /// Run `n <= batch` samples, padding the tail with zeros and truncating
+    /// the outputs back to `n` rows.
+    pub fn execute_padded(&self, x: &[f32], n: usize) -> Result<BatchOutput> {
+        if n > self.batch {
+            return Err(anyhow!("n={} exceeds batch={}", n, self.batch));
+        }
+        let mut padded = vec![0f32; self.batch * self.features];
+        padded[..x.len()].copy_from_slice(x);
+        let mut out = self.execute(&padded)?;
+        out.scores.truncate(n * self.classes);
+        out.pred.truncate(n);
+        Ok(out)
+    }
+}
+
+fn wrap(e: xla::Error) -> anyhow::Error {
+    anyhow!("xla: {e}")
+}

@@ -1,0 +1,153 @@
+//! Cut representation and priority-cut set management for the mapper.
+
+use crate::logic::net::NodeId;
+
+/// A k-feasible cut: sorted leaf set (k <= 6) plus scoring fields.
+#[derive(Debug, Clone)]
+pub struct Cut {
+    leaves: [NodeId; 6],
+    n: u8,
+    /// Arrival level if this cut is chosen (1 + max leaf arrival).
+    pub depth: u32,
+    /// Area flow estimate.
+    pub aflow: f32,
+}
+
+impl Cut {
+    pub fn from_leaves(leaves: &[NodeId]) -> Self {
+        debug_assert!(leaves.len() <= 6);
+        debug_assert!(leaves.windows(2).all(|w| w[0] < w[1]), "leaves must be sorted/unique");
+        let mut arr = [0; 6];
+        arr[..leaves.len()].copy_from_slice(leaves);
+        Self { leaves: arr, n: leaves.len() as u8, depth: 0, aflow: 0.0 }
+    }
+
+    pub fn leaves(&self) -> &[NodeId] {
+        &self.leaves[..self.n as usize]
+    }
+
+    fn dominates(&self, other: &Cut) -> bool {
+        // self dominates other if self's leaves are a subset of other's.
+        if self.n > other.n {
+            return false;
+        }
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < self.n as usize {
+            if j >= other.n as usize {
+                return false;
+            }
+            if self.leaves[i] == other.leaves[j] {
+                i += 1;
+                j += 1;
+            } else if self.leaves[i] > other.leaves[j] {
+                j += 1;
+            } else {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// Merge two sorted leaf sets; None if the union exceeds k.
+pub fn merge_leaves(a: &[NodeId], b: &[NodeId], k: usize) -> Option<Vec<NodeId>> {
+    let mut out = Vec::with_capacity(k);
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() || j < b.len() {
+        let take_a = j >= b.len() || (i < a.len() && a[i] <= b[j]);
+        let v = if take_a {
+            let v = a[i];
+            if j < b.len() && b[j] == v {
+                j += 1;
+            }
+            i += 1;
+            v
+        } else {
+            let v = b[j];
+            j += 1;
+            v
+        };
+        if out.len() == k {
+            return None;
+        }
+        out.push(v);
+    }
+    Some(out)
+}
+
+/// Bounded best-first cut collection for one node.
+#[derive(Debug, Clone, Default)]
+pub struct CutSet {
+    pub cuts: Vec<Cut>,
+}
+
+impl CutSet {
+    /// Insert unless an identical or dominating cut is present; drop cuts the
+    /// new one dominates.
+    pub fn push_dedup(&mut self, cut: Cut) {
+        for c in &self.cuts {
+            if c.dominates(&cut) {
+                return;
+            }
+        }
+        self.cuts.retain(|c| !cut.dominates(c));
+        self.cuts.push(cut);
+    }
+
+    /// Keep the best `limit` cuts. `depth_mode` orders by (depth, aflow);
+    /// otherwise by (aflow, depth) among cuts meeting `required` depth (a
+    /// cut slower than the node's current arrival is deprioritised so area
+    /// recovery never degrades the critical path).
+    pub fn sort_and_trim(&mut self, limit: usize, depth_mode: bool, required: u32) {
+        if depth_mode {
+            self.cuts.sort_by(|a, b| {
+                a.depth.cmp(&b.depth).then(a.aflow.partial_cmp(&b.aflow).unwrap())
+            });
+        } else {
+            let req = if required == 0 { u32::MAX } else { required };
+            self.cuts.sort_by(|a, b| {
+                let am = a.depth > req;
+                let bm = b.depth > req;
+                am.cmp(&bm)
+                    .then(a.aflow.partial_cmp(&b.aflow).unwrap())
+                    .then(a.depth.cmp(&b.depth))
+            });
+        }
+        self.cuts.truncate(limit.max(1));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_dedups_and_bounds() {
+        assert_eq!(merge_leaves(&[1, 3], &[2, 3], 4), Some(vec![1, 2, 3]));
+        assert_eq!(merge_leaves(&[1, 2, 3], &[4, 5, 6], 6), Some(vec![1, 2, 3, 4, 5, 6]));
+        assert_eq!(merge_leaves(&[1, 2, 3, 4], &[5, 6, 7], 6), None);
+        assert_eq!(merge_leaves(&[], &[], 6), Some(vec![]));
+    }
+
+    #[test]
+    fn domination() {
+        let small = Cut::from_leaves(&[1, 2]);
+        let big = Cut::from_leaves(&[1, 2, 3]);
+        assert!(small.dominates(&big));
+        assert!(!big.dominates(&small));
+        let other = Cut::from_leaves(&[1, 4]);
+        assert!(!small.dominates(&other));
+        assert!(small.dominates(&small.clone()));
+    }
+
+    #[test]
+    fn push_dedup_keeps_minimal() {
+        let mut s = CutSet::default();
+        s.push_dedup(Cut::from_leaves(&[1, 2, 3]));
+        s.push_dedup(Cut::from_leaves(&[1, 2])); // dominates previous
+        assert_eq!(s.cuts.len(), 1);
+        assert_eq!(s.cuts[0].leaves(), &[1, 2]);
+        s.push_dedup(Cut::from_leaves(&[1, 2, 4])); // dominated by {1,2}
+        assert_eq!(s.cuts.len(), 1);
+    }
+}

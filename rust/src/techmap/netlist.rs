@@ -1,0 +1,168 @@
+//! The mapped LUT netlist: what the paper counts as "LUTs".
+
+use crate::util::ceil_div;
+
+/// Signal source in a mapped netlist.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Src {
+    /// Primary input index.
+    Input(u32),
+    /// Output of LUT `i` (index into [`LutNetlist::luts`]).
+    Lut(u32),
+    Const(bool),
+}
+
+/// One mapped k-LUT.
+#[derive(Debug, Clone)]
+pub struct MappedLut {
+    /// Input pins (pin j is truth-table address bit j). len <= 6.
+    pub inputs: Vec<Src>,
+    /// Truth table over the pins, LSB-first.
+    pub table: u64,
+}
+
+/// A technology-mapped netlist (topologically ordered LUTs).
+#[derive(Debug, Clone)]
+pub struct LutNetlist {
+    pub num_inputs: usize,
+    pub luts: Vec<MappedLut>,
+    pub outputs: Vec<Src>,
+}
+
+impl LutNetlist {
+    /// LUT count — the paper's primary area metric.
+    pub fn lut_count(&self) -> usize {
+        self.luts.len()
+    }
+
+    /// Logic depth in LUT levels (inputs are level 0).
+    pub fn depth(&self) -> usize {
+        self.levels().iter().copied().max().unwrap_or(0)
+    }
+
+    /// Level of each LUT (1 = fed only by primary inputs).
+    pub fn levels(&self) -> Vec<usize> {
+        let mut lv = vec![0usize; self.luts.len()];
+        for (i, lut) in self.luts.iter().enumerate() {
+            let mut m = 0usize;
+            for s in &lut.inputs {
+                if let Src::Lut(j) = s {
+                    m = m.max(lv[*j as usize]);
+                }
+            }
+            lv[i] = m + 1;
+        }
+        lv
+    }
+
+    /// Evaluate 64 vectors at once; `inputs[i]` lane-packs primary input i.
+    pub fn eval_lanes(&self, inputs: &[u64]) -> Vec<u64> {
+        assert_eq!(inputs.len(), self.num_inputs);
+        let mut v = vec![0u64; self.luts.len()];
+        for (i, lut) in self.luts.iter().enumerate() {
+            v[i] = eval_lut(lut, inputs, &v);
+        }
+        self.outputs
+            .iter()
+            .map(|s| match s {
+                Src::Input(j) => inputs[*j as usize],
+                Src::Lut(j) => v[*j as usize],
+                Src::Const(true) => u64::MAX,
+                Src::Const(false) => 0,
+            })
+            .collect()
+    }
+
+    /// Scalar convenience wrapper over [`Self::eval_lanes`].
+    pub fn eval(&self, inputs: &[bool]) -> Vec<bool> {
+        let lanes: Vec<u64> = inputs.iter().map(|&b| if b { 1 } else { 0 }).collect();
+        self.eval_lanes(&lanes).iter().map(|&w| w & 1 == 1).collect()
+    }
+
+    /// Evaluate a stream of vectors, 64 lanes at a time.
+    /// `vectors[v][i]` = input i of vector v; returns `out[v][o]`.
+    pub fn eval_batch(&self, vectors: &[Vec<bool>]) -> Vec<Vec<bool>> {
+        let mut results = Vec::with_capacity(vectors.len());
+        for chunk in vectors.chunks(64) {
+            let mut lanes = vec![0u64; self.num_inputs];
+            for (lane, vec) in chunk.iter().enumerate() {
+                assert_eq!(vec.len(), self.num_inputs);
+                for (i, &b) in vec.iter().enumerate() {
+                    if b {
+                        lanes[i] |= 1 << lane;
+                    }
+                }
+            }
+            let packed = self.eval_lanes(&lanes);
+            for lane in 0..chunk.len() {
+                results.push(packed.iter().map(|&w| (w >> lane) & 1 == 1).collect());
+            }
+        }
+        results
+    }
+
+    /// Rough BRAM-free packing estimate: number of logic slices (8 LUTs each)
+    /// — informational only.
+    pub fn slice_estimate(&self) -> usize {
+        ceil_div(self.luts.len(), 8)
+    }
+}
+
+#[inline]
+fn eval_lut(lut: &MappedLut, inputs: &[u64], values: &[u64]) -> u64 {
+    let mut ins = [0u64; 6];
+    for (j, s) in lut.inputs.iter().enumerate() {
+        ins[j] = match s {
+            Src::Input(i) => inputs[*i as usize],
+            Src::Lut(i) => values[*i as usize],
+            Src::Const(true) => u64::MAX,
+            Src::Const(false) => 0,
+        };
+    }
+    let k = lut.inputs.len();
+    crate::logic::sim::eval_table_lanes(lut.table, &ins[..k])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth_and_levels() {
+        // in0 -> lut0 -> lut1 -> out, plus lut2 from inputs only.
+        let nl = LutNetlist {
+            num_inputs: 2,
+            luts: vec![
+                MappedLut { inputs: vec![Src::Input(0)], table: 0b01 },
+                MappedLut { inputs: vec![Src::Lut(0), Src::Input(1)], table: 0b1000 },
+                MappedLut { inputs: vec![Src::Input(0), Src::Input(1)], table: 0b0110 },
+            ],
+            outputs: vec![Src::Lut(1), Src::Lut(2)],
+        };
+        assert_eq!(nl.levels(), vec![1, 2, 1]);
+        assert_eq!(nl.depth(), 2);
+        // lut1 = NOT(in0) AND in1; lut2 = in0 XOR in1
+        assert_eq!(nl.eval(&[false, true]), vec![true, true]);
+        assert_eq!(nl.eval(&[true, true]), vec![false, false]);
+    }
+
+    #[test]
+    fn batch_eval_matches_scalar() {
+        let nl = LutNetlist {
+            num_inputs: 3,
+            luts: vec![MappedLut {
+                inputs: vec![Src::Input(0), Src::Input(1), Src::Input(2)],
+                table: 0b1110_1000, // majority
+            }],
+            outputs: vec![Src::Lut(0)],
+        };
+        let vectors: Vec<Vec<bool>> = (0..8u8)
+            .map(|p| (0..3).map(|i| (p >> i) & 1 == 1).collect())
+            .collect();
+        let got = nl.eval_batch(&vectors);
+        for (p, out) in got.iter().enumerate() {
+            let maj = (p.count_ones() >= 2) as u8 == 1;
+            assert_eq!(out[0], maj, "pattern {p}");
+        }
+    }
+}

@@ -1,0 +1,215 @@
+//! Static timing + resource estimation over mapped LUT netlists.
+//!
+//! Replaces Vivado's OOC timing report in this reproduction (DESIGN.md §2/§7).
+//! Model: UltraScale+ (xcvu9p, -2) flavoured constants — LUT logic delay,
+//! size-dependent average routing delay per level (larger designs route
+//! slower, which is what drives the paper's Fmax spread of 827 MHz for
+//! lg-2400 up to 3 GHz for sm-10), FF clk->Q + setup.
+//!
+//! Designs are pipelined the way the paper's generator does it: register
+//! stages inserted every `levels_per_stage` LUT levels so each stage meets
+//! the 700 MHz operating clock used in the paper's methodology (§V). The FF
+//! count is the exact register width at each stage boundary (signals
+//! produced at or before the boundary and consumed after it) plus the
+//! output registers.
+
+pub mod pipeline;
+
+use crate::techmap::{LutNetlist, Src};
+
+/// Delay model constants (ns). One global calibration, reused for every
+/// design point (DESIGN.md §7).
+#[derive(Debug, Clone)]
+pub struct DelayModel {
+    /// LUT6 logic delay (T_ILO-ish).
+    pub t_lut: f64,
+    /// Base routing delay per level.
+    pub t_net_base: f64,
+    /// Routing delay growth per log2(LUT count) — congestion proxy.
+    pub t_net_per_log2: f64,
+    /// FF clk->Q + setup.
+    pub t_ff: f64,
+    /// Operating clock the paper's methodology targets (MHz).
+    pub target_clock_mhz: f64,
+    /// Fmax cap from the clocking network (BUFG), MHz.
+    pub fmax_cap_mhz: f64,
+}
+
+impl Default for DelayModel {
+    fn default() -> Self {
+        Self {
+            t_lut: 0.08,
+            t_net_base: 0.10,
+            t_net_per_log2: 0.045,
+            t_ff: 0.10,
+            target_clock_mhz: 700.0,
+            fmax_cap_mhz: 3030.0,
+        }
+    }
+}
+
+impl DelayModel {
+    /// Average per-level delay (LUT + routing) for a design of `luts` LUTs.
+    pub fn level_delay(&self, luts: usize) -> f64 {
+        let l2 = (luts.max(2) as f64).log2();
+        self.t_lut + self.t_net_base + self.t_net_per_log2 * l2
+    }
+
+    /// How many LUT levels fit in one stage at the target clock.
+    pub fn levels_per_stage(&self, luts: usize) -> usize {
+        let period = 1000.0 / self.target_clock_mhz;
+        (((period - self.t_ff) / self.level_delay(luts)).floor() as usize).max(1)
+    }
+}
+
+/// Timing/area report for one design (one paper table row).
+#[derive(Debug, Clone)]
+pub struct TimingReport {
+    pub luts: usize,
+    pub ffs: usize,
+    pub depth: usize,
+    pub stages: usize,
+    pub fmax_mhz: f64,
+    /// End-to-end latency in ns (stages x achieved period).
+    pub latency_ns: f64,
+    /// Area x delay in LUT*ns — the paper's efficiency metric.
+    pub area_delay: f64,
+}
+
+/// Analyse a mapped netlist under `model`.
+pub fn analyze(nl: &LutNetlist, model: &DelayModel) -> TimingReport {
+    let depth = nl.depth();
+    let luts = nl.lut_count();
+    let lps = model.levels_per_stage(luts);
+    let stages = if depth == 0 { 1 } else { depth.div_ceil(lps) };
+    // Worst stage: every stage has `lps` levels except possibly the last,
+    // so the critical stage has min(depth, lps) levels.
+    let worst_levels = depth.min(lps);
+    let period = worst_levels as f64 * model.level_delay(luts) + model.t_ff;
+    let fmax = (1000.0 / period).min(model.fmax_cap_mhz);
+    let latency = stages as f64 * 1000.0 / fmax;
+    let ffs = pipeline_ffs(nl, lps);
+    TimingReport {
+        luts,
+        ffs,
+        depth,
+        stages,
+        fmax_mhz: fmax,
+        latency_ns: latency,
+        area_delay: luts as f64 * latency,
+    }
+}
+
+/// Exact pipeline register count for boundaries every `lps` levels, plus
+/// output registers (the paper's designs register their outputs).
+fn pipeline_ffs(nl: &LutNetlist, lps: usize) -> usize {
+    let levels = nl.levels();
+    let depth = levels.iter().copied().max().unwrap_or(0);
+    let boundaries: Vec<usize> = (1..).map(|s| s * lps).take_while(|&b| b < depth).collect();
+    let mut ffs = nl.outputs.len(); // output registers
+    if boundaries.is_empty() {
+        return ffs;
+    }
+    // For each LUT output, it crosses boundary b if level(lut) <= b and it
+    // has a consumer with level > b (or feeds a primary output, which sits
+    // past the last boundary).
+    let mut max_consumer_level = vec![0usize; nl.luts.len()];
+    let mut feeds_output = vec![false; nl.luts.len()];
+    for (i, lut) in nl.luts.iter().enumerate() {
+        for s in &lut.inputs {
+            if let Src::Lut(j) = s {
+                max_consumer_level[*j as usize] = max_consumer_level[*j as usize].max(levels[i]);
+            }
+        }
+    }
+    for s in &nl.outputs {
+        if let Src::Lut(j) = s {
+            feeds_output[*j as usize] = true;
+        }
+    }
+    // Primary inputs crossing boundaries: consumed by a LUT past a boundary.
+    let mut input_max_consumer = vec![0usize; nl.num_inputs];
+    for (i, lut) in nl.luts.iter().enumerate() {
+        for s in &lut.inputs {
+            if let Src::Input(j) = s {
+                input_max_consumer[*j as usize] = input_max_consumer[*j as usize].max(levels[i]);
+            }
+        }
+    }
+    for &b in &boundaries {
+        for i in 0..nl.luts.len() {
+            let crosses = levels[i] <= b
+                && (max_consumer_level[i] > b || (feeds_output[i] && b >= levels[i]));
+            if crosses {
+                ffs += 1;
+            }
+        }
+        for j in 0..nl.num_inputs {
+            if input_max_consumer[j] > b {
+                ffs += 1;
+            }
+        }
+    }
+    ffs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::Builder;
+    use crate::techmap::map6;
+
+    #[test]
+    fn single_lut_design() {
+        let mut bld = Builder::new();
+        let ins = bld.inputs(6);
+        let t = bld.table(ins, 0x8000_0000_0000_0001);
+        bld.output(t);
+        let nl = map6(&bld.finish());
+        let rep = analyze(&nl, &DelayModel::default());
+        assert_eq!(rep.luts, 1);
+        assert_eq!(rep.depth, 1);
+        assert_eq!(rep.stages, 1);
+        assert!(rep.fmax_mhz > 1000.0, "tiny design should clock fast: {}", rep.fmax_mhz);
+        assert!(rep.latency_ns < 1.0);
+    }
+
+    #[test]
+    fn deeper_design_slower_and_pipelined() {
+        let mut bld = Builder::new();
+        let ins = bld.inputs(256);
+        let pc = bld.popcount(&ins);
+        for b in pc {
+            bld.output(b);
+        }
+        let nl = map6(&bld.finish());
+        let rep = analyze(&nl, &DelayModel::default());
+        assert!(rep.depth >= 4);
+        assert!(rep.stages >= 1);
+        assert!(rep.ffs > rep.stages, "pipeline FFs expected");
+        assert!(rep.fmax_mhz >= DelayModel::default().target_clock_mhz * 0.8);
+        let shallow = {
+            let mut b2 = Builder::new();
+            let i2 = b2.inputs(8);
+            let p2 = b2.popcount(&i2);
+            for b in p2 {
+                b2.output(b);
+            }
+            analyze(&map6(&b2.finish()), &DelayModel::default())
+        };
+        assert!(shallow.latency_ns < rep.latency_ns);
+    }
+
+    #[test]
+    fn area_delay_product() {
+        let mut bld = Builder::new();
+        let ins = bld.inputs(12);
+        let pc = bld.popcount(&ins);
+        for b in pc {
+            bld.output(b);
+        }
+        let nl = map6(&bld.finish());
+        let rep = analyze(&nl, &DelayModel::default());
+        assert!((rep.area_delay - rep.luts as f64 * rep.latency_ns).abs() < 1e-9);
+    }
+}

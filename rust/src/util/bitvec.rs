@@ -1,0 +1,114 @@
+//! Packed bit vector used by the netlist simulator's value planes and by the
+//! golden-vector loaders.
+
+/// Fixed-length bit vector packed into u64 words (LSB-first).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitVec {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitVec {
+    /// All-zero vector of `len` bits.
+    pub fn zeros(len: usize) -> Self {
+        Self { words: vec![0; (len + 63) / 64], len }
+    }
+
+    /// Parse from a hex string (LSB-first bit order: hex digit 0 holds bits 0..3).
+    pub fn from_hex(hex: &str, len: usize) -> Self {
+        let mut v = Self::zeros(len);
+        // hex string is written MSB-first: last char holds bits 0..3.
+        for (i, c) in hex.chars().rev().enumerate() {
+            let d = c.to_digit(16).expect("invalid hex digit") as u64;
+            for b in 0..4 {
+                let bit = i * 4 + b;
+                if bit < len && (d >> b) & 1 == 1 {
+                    v.set(bit, true);
+                }
+            }
+        }
+        v
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, v: bool) {
+        debug_assert!(i < self.len);
+        let w = &mut self.words[i / 64];
+        if v {
+            *w |= 1 << (i % 64);
+        } else {
+            *w &= !(1 << (i % 64));
+        }
+    }
+
+    /// Number of set bits.
+    pub fn popcount(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Interpret bits [lo, lo+n) as an unsigned little-endian integer.
+    pub fn get_uint(&self, lo: usize, n: usize) -> u64 {
+        debug_assert!(n <= 64);
+        let mut v = 0u64;
+        for i in 0..n {
+            if self.get(lo + i) {
+                v |= 1 << i;
+            }
+        }
+        v
+    }
+
+    /// Write integer `v` into bits [lo, lo+n), little-endian.
+    pub fn set_uint(&mut self, lo: usize, n: usize, v: u64) {
+        for i in 0..n {
+            self.set(lo + i, (v >> i) & 1 == 1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut v = BitVec::zeros(130);
+        for i in (0..130).step_by(3) {
+            v.set(i, true);
+        }
+        for i in 0..130 {
+            assert_eq!(v.get(i), i % 3 == 0);
+        }
+        assert_eq!(v.popcount(), (0..130).step_by(3).count());
+    }
+
+    #[test]
+    fn hex_roundtrip() {
+        let v = BitVec::from_hex("1a3", 12); // 0b0001_1010_0011
+        assert_eq!(v.get_uint(0, 12), 0x1a3);
+        assert!(v.get(0) && v.get(1) && !v.get(2));
+        assert!(v.get(5) && v.get(7) && v.get(8));
+    }
+
+    #[test]
+    fn uint_roundtrip() {
+        let mut v = BitVec::zeros(40);
+        v.set_uint(5, 17, 0x1_5a5a);
+        assert_eq!(v.get_uint(5, 17), 0x1_5a5a);
+        assert_eq!(v.get_uint(0, 5), 0);
+    }
+}

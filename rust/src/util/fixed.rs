@@ -1,0 +1,56 @@
+//! Signed fixed-point (1, n) conversions matching `python/compile/encoding.py`:
+//! one sign bit, `n` fractional bits, values k / 2^n with k in [-2^n, 2^n - 1].
+
+/// Quantize a real input to the PEN integer grid (floor), clamped.
+pub fn input_to_int(x: f64, frac_bits: u32) -> i32 {
+    let scale = (1i64 << frac_bits) as f64;
+    let k = (x * scale).floor();
+    k.max(-scale).min(scale - 1.0) as i32
+}
+
+/// Quantize a threshold to the grid (round-to-nearest), clamped.
+pub fn threshold_to_int(t: f64, frac_bits: u32) -> i32 {
+    let scale = (1i64 << frac_bits) as f64;
+    let k = (t * scale).round();
+    k.max(-scale).min(scale - 1.0) as i32
+}
+
+/// Integer grid value back to a real number.
+pub fn int_to_real(k: i32, frac_bits: u32) -> f64 {
+    k as f64 / (1i64 << frac_bits) as f64
+}
+
+/// Two's-complement bit pattern of a grid integer in `frac_bits + 1` bits.
+pub fn int_to_bits(k: i32, frac_bits: u32) -> u32 {
+    let width = frac_bits + 1;
+    (k as u32) & ((1u32 << width) - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn input_floor_and_clamp() {
+        assert_eq!(input_to_int(0.0, 3), 0);
+        assert_eq!(input_to_int(0.124, 3), 0); // floor(0.992)=0
+        assert_eq!(input_to_int(0.126, 3), 1);
+        assert_eq!(input_to_int(-0.126, 3), -2); // floor(-1.008)
+        assert_eq!(input_to_int(1.5, 3), 7); // clamp to 2^3 - 1
+        assert_eq!(input_to_int(-2.0, 3), -8);
+    }
+
+    #[test]
+    fn threshold_round() {
+        assert_eq!(threshold_to_int(0.124, 3), 1); // round(0.992)
+        assert_eq!(threshold_to_int(-0.9999, 3), -8);
+        assert_eq!(threshold_to_int(0.9999, 3), 7);
+    }
+
+    #[test]
+    fn bit_pattern_twos_complement() {
+        assert_eq!(int_to_bits(-1, 3), 0b1111);
+        assert_eq!(int_to_bits(-8, 3), 0b1000);
+        assert_eq!(int_to_bits(7, 3), 0b0111);
+    }
+}

@@ -1,0 +1,48 @@
+//! Small shared utilities: a deterministic PRNG (mirrors the python side),
+//! bit-vector helpers, and fixed-point conversions.
+
+pub mod bitvec;
+pub mod fixed;
+pub mod rng;
+
+pub use bitvec::BitVec;
+pub use rng::SplitMix64;
+
+/// Ceil division for usize.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    (a + b - 1) / b
+}
+
+/// Number of bits needed to represent `n` distinct values (>= 1).
+#[inline]
+pub fn bits_for(n: usize) -> usize {
+    if n <= 1 {
+        1
+    } else {
+        (usize::BITS - (n - 1).leading_zeros()) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(4, 4), 1);
+        assert_eq!(ceil_div(5, 4), 2);
+    }
+
+    #[test]
+    fn bits_for_basic() {
+        assert_eq!(bits_for(1), 1);
+        assert_eq!(bits_for(2), 1);
+        assert_eq!(bits_for(3), 2);
+        assert_eq!(bits_for(5), 3);
+        assert_eq!(bits_for(64), 6);
+        assert_eq!(bits_for(65), 7);
+    }
+}

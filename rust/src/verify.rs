@@ -1,0 +1,77 @@
+//! Cross-layer verification: run the generated hardware (bit-accurate
+//! netlist simulation) on the golden vectors exported by the JAX side and
+//! compare scores + predictions. This is the reproduction's stand-in for
+//! RTL simulation against the reference model.
+
+use crate::config::Artifacts;
+use crate::data::golden;
+use crate::hwgen::{build_accelerator, AccelOptions};
+use crate::model::{DwnModel, Variant};
+use crate::techmap::MapConfig;
+use crate::util::fixed;
+use anyhow::Result;
+
+/// Result of a golden-vector run.
+#[derive(Debug, Clone, Copy)]
+pub struct VerifyOutcome {
+    pub checked: usize,
+    pub mismatches: usize,
+}
+
+impl VerifyOutcome {
+    pub fn ok(&self) -> bool {
+        self.checked > 0 && self.mismatches == 0
+    }
+}
+
+/// Simulate the mapped netlist for `variant` over up to `n` golden vectors.
+/// Compares the per-class popcount scores *and* the argmax prediction.
+pub fn verify_against_golden(
+    artifacts: &Artifacts,
+    model: &DwnModel,
+    variant: Variant,
+    n: usize,
+) -> Result<VerifyOutcome> {
+    let mut opts = AccelOptions::new(variant);
+    opts.expose_scores = true;
+    let accel = build_accelerator(model, &opts)?;
+    let nl = accel.map(&MapConfig::default());
+    let mut mismatches = 0usize;
+    let mut checked = 0usize;
+    match variant {
+        Variant::Ten => {
+            let g = golden::load_ten(&artifacts.golden_path(&model.name, "ten"))?;
+            let used = model.used_bits(variant);
+            for v in g.vectors.iter().take(n) {
+                let inputs: Vec<bool> = (0..used.len()).map(|i| v.bits.get(i)).collect();
+                let out = nl.eval(&inputs);
+                let (pred, _maxv, scores) = accel.decode_outputs(&out, true);
+                checked += 1;
+                if pred != v.pred || scores.iter().zip(&v.scores).any(|(&a, &b)| a != b as u64) {
+                    mismatches += 1;
+                }
+            }
+        }
+        Variant::Pen | Variant::PenFt => {
+            let tag = if variant == Variant::Pen { "pen" } else { "penft" };
+            let g = golden::load_pen(&artifacts.golden_path(&model.name, tag))?;
+            let width = (g.frac_bits + 1) as usize;
+            for v in g.vectors.iter().take(n) {
+                let mut inputs = Vec::with_capacity(v.x_ints.len() * width);
+                for &xi in &v.x_ints {
+                    let pat = fixed::int_to_bits(xi, g.frac_bits);
+                    for i in 0..width {
+                        inputs.push((pat >> i) & 1 == 1);
+                    }
+                }
+                let out = nl.eval(&inputs);
+                let (pred, _maxv, scores) = accel.decode_outputs(&out, true);
+                checked += 1;
+                if pred != v.pred || scores.iter().zip(&v.scores).any(|(&a, &b)| a != b as u64) {
+                    mismatches += 1;
+                }
+            }
+        }
+    }
+    Ok(VerifyOutcome { checked, mismatches })
+}

@@ -1,0 +1,104 @@
+//! Coordinator integration: PJRT-backed serving end-to-end (artifacts
+//! required) + netlist-backed serving consistency between the two backends.
+
+use dwn::config::Artifacts;
+use dwn::coordinator::{Backend, Server, ServerConfig};
+use dwn::data::Dataset;
+use dwn::hwgen::{build_accelerator, AccelOptions};
+use dwn::model::{DwnModel, Variant};
+use dwn::runtime::Engine;
+use dwn::techmap::MapConfig;
+use std::time::Duration;
+
+fn artifacts() -> Option<Artifacts> {
+    let a = Artifacts::discover();
+    if a.exists() {
+        Some(a)
+    } else {
+        eprintln!("skipping: no artifacts");
+        None
+    }
+}
+
+#[test]
+fn pjrt_and_netlist_backends_agree() {
+    let Some(a) = artifacts() else { return };
+    let name = "sm-50";
+    let model = DwnModel::load(&a.model_path(name)).unwrap();
+    let test = Dataset::load_csv(&a.dataset_path("test")).unwrap();
+    let frac_bits = model.penft.frac_bits.unwrap();
+
+    // PJRT server over the AOT HLO.
+    let batch = a.hlo_batch().unwrap();
+    let hlo = a.hlo_path(name);
+    let (features, classes) = (model.num_features, model.num_classes);
+    let pjrt = Server::start_with(
+        move || Ok(Backend::Pjrt(Engine::load(&hlo, batch, features, classes)?)),
+        ServerConfig::default(),
+    )
+    .unwrap();
+
+    // Netlist server over the generated hardware.
+    let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt)).unwrap();
+    let nl = accel.map(&MapConfig::default());
+    let netlist = Server::start_netlist(
+        nl,
+        frac_bits,
+        model.num_features,
+        model.num_classes,
+        accel.index_width(),
+        ServerConfig::default(),
+    );
+
+    // The HLO path encodes x on the quantized-threshold grid with *float*
+    // inputs; feed it pre-quantized features so both backends see the same
+    // grid (this is the PEN hardware interface).
+    let scale = 1.0 / (1u64 << frac_bits) as f32;
+    let mut agree = 0usize;
+    let n = 300usize;
+    for i in 0..n {
+        let row: Vec<f32> = test
+            .row(i)
+            .iter()
+            .map(|&x| dwn::util::fixed::input_to_int(x as f64, frac_bits) as f32 * scale)
+            .collect();
+        let p1 = pjrt.infer(&row).unwrap();
+        let p2 = netlist.infer(&row).unwrap();
+        if p1 == p2 {
+            agree += 1;
+        }
+    }
+    assert_eq!(agree, n, "backends disagree on {} of {} samples", n - agree, n);
+}
+
+#[test]
+fn backpressure_bounded_queue() {
+    let Some(a) = artifacts() else { return };
+    let model = DwnModel::load(&a.model_path("sm-10")).unwrap();
+    let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt)).unwrap();
+    let nl = accel.map(&MapConfig::default());
+    let server = Server::start_netlist(
+        nl,
+        model.penft.frac_bits.unwrap(),
+        model.num_features,
+        model.num_classes,
+        accel.index_width(),
+        ServerConfig { max_batch: 16, max_wait: Duration::from_micros(50), queue_depth: 8 },
+    );
+    // Flood; some submissions may be rejected (bounded queue) but none may
+    // hang or panic, and all accepted ones must complete.
+    let test = Dataset::load_csv(&a.dataset_path("test")).unwrap();
+    let mut accepted = Vec::new();
+    let mut rejected = 0usize;
+    for i in 0..200 {
+        match server.submit(test.row(i % test.len())) {
+            Ok(rx) => accepted.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+    for rx in accepted {
+        let r = rx.recv_timeout(Duration::from_secs(10)).expect("no reply").expect("infer err");
+        assert!((0..5).contains(&r));
+    }
+    eprintln!("accepted {} rejected {rejected}", 200 - rejected);
+}

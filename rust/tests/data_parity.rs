@@ -1,0 +1,47 @@
+//! Cross-language parity: the rust synthetic-JSC mirror must reproduce the
+//! CSV artifacts written by python bit-for-bit (within CSV float precision).
+
+use dwn::config::Artifacts;
+use dwn::data::{synth, Dataset};
+
+#[test]
+fn rust_generator_matches_python_csv() {
+    let a = Artifacts::discover();
+    if !a.exists() {
+        eprintln!("skipping: no artifacts");
+        return;
+    }
+    let test_csv = Dataset::load_csv(&a.dataset_path("test")).unwrap();
+    let train_csv = Dataset::load_csv(&a.dataset_path("train")).unwrap();
+    let (train_rs, test_rs) =
+        synth::load_jsc(train_csv.len(), test_csv.len(), synth::DEFAULT_SEED);
+
+    assert_eq!(train_rs.len(), train_csv.len());
+    assert_eq!(test_rs.len(), test_csv.len());
+    // Labels must match exactly.
+    assert_eq!(train_rs.y, train_csv.y, "train labels diverge");
+    assert_eq!(test_rs.y, test_csv.y, "test labels diverge");
+    // Features match to CSV print precision (7 decimals).
+    for (i, (a_, b)) in train_rs.x.iter().zip(train_csv.x.iter()).enumerate() {
+        assert!(
+            (a_ - b).abs() < 2e-6,
+            "train feature {} diverges: rust {} python {}",
+            i,
+            a_,
+            b
+        );
+    }
+    for (a_, b) in test_rs.x.iter().zip(test_csv.x.iter()) {
+        assert!((a_ - b).abs() < 2e-6, "test feature diverges: {a_} vs {b}");
+    }
+}
+
+#[test]
+fn generator_independent_of_split_sizes_prefix() {
+    // The raw stream is split-independent: the first N raw samples are the
+    // same regardless of how many more are drawn afterwards.
+    let (x1, y1) = synth::generate_raw(100, 42);
+    let (x2, y2) = synth::generate_raw(300, 42);
+    assert_eq!(&x1[..], &x2[..100]);
+    assert_eq!(&y1[..], &y2[..100]);
+}

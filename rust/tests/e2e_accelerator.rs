@@ -1,0 +1,160 @@
+//! End-to-end integration over the generator stack: trained artifacts ->
+//! gate network -> 6-LUT mapping -> bit-accurate simulation vs JAX goldens,
+//! plus breakdown/timing invariants. Skips gracefully when artifacts are
+//! missing (run `make artifacts`).
+
+use dwn::config::Artifacts;
+use dwn::hwgen::{build_accelerator, AccelOptions, Component};
+use dwn::model::{DwnModel, Variant};
+use dwn::techmap::MapConfig;
+use dwn::timing::{analyze, DelayModel};
+use dwn::verify::verify_against_golden;
+
+fn artifacts() -> Option<Artifacts> {
+    let a = Artifacts::discover();
+    if a.exists() {
+        Some(a)
+    } else {
+        eprintln!("skipping: no artifacts");
+        None
+    }
+}
+
+#[test]
+fn golden_bit_exact_all_variants_small_models() {
+    let Some(a) = artifacts() else { return };
+    for name in ["sm-10", "sm-50"] {
+        let model = DwnModel::load(&a.model_path(name)).unwrap();
+        for variant in [Variant::Ten, Variant::Pen, Variant::PenFt] {
+            let out = verify_against_golden(&a, &model, variant, 256).unwrap();
+            assert!(
+                out.ok(),
+                "{name} {}: {}/{} mismatched",
+                variant.label(),
+                out.mismatches,
+                out.checked
+            );
+        }
+    }
+}
+
+#[test]
+fn golden_bit_exact_md360_penft() {
+    let Some(a) = artifacts() else { return };
+    let model = DwnModel::load(&a.model_path("md-360")).unwrap();
+    let out = verify_against_golden(&a, &model, Variant::PenFt, 128).unwrap();
+    assert!(out.ok(), "{} mismatches", out.mismatches);
+}
+
+#[test]
+fn pen_larger_than_ten_and_breakdown_consistent() {
+    let Some(a) = artifacts() else { return };
+    for name in ["sm-10", "sm-50", "md-360"] {
+        let model = DwnModel::load(&a.model_path(name)).unwrap();
+        let ten = build_accelerator(&model, &AccelOptions::new(Variant::Ten)).unwrap();
+        let penft = build_accelerator(&model, &AccelOptions::new(Variant::PenFt)).unwrap();
+        let cfg = MapConfig::default();
+        let (nl_ten, bd_ten) = ten.map_with_breakdown(&cfg);
+        let (nl_pen, bd_pen) = penft.map_with_breakdown(&cfg);
+        // Paper's core finding: encoding inflates LUT usage.
+        assert!(
+            nl_pen.lut_count() > nl_ten.lut_count(),
+            "{name}: PEN {} <= TEN {}",
+            nl_pen.lut_count(),
+            nl_ten.lut_count()
+        );
+        // Breakdown sums to the total; TEN has no encoder LUTs, PEN does.
+        let sum_ten: usize = bd_ten.iter().map(|(_, n)| n).sum();
+        let sum_pen: usize = bd_pen.iter().map(|(_, n)| n).sum();
+        assert_eq!(sum_ten, nl_ten.lut_count());
+        assert_eq!(sum_pen, nl_pen.lut_count());
+        let enc = |bd: &[(Component, usize)]| {
+            bd.iter().find(|(c, _)| *c == Component::Encoder).unwrap().1
+        };
+        assert_eq!(enc(&bd_ten), 0, "{name}: TEN must have no encoder LUTs");
+        assert!(enc(&bd_pen) > 0, "{name}: PEN must have encoder LUTs");
+        // The LUT layer occupies at least ~num_luts/2 physical LUTs.
+        let layer = |bd: &[(Component, usize)]| {
+            bd.iter().find(|(c, _)| *c == Component::LutLayer).unwrap().1
+        };
+        assert!(layer(&bd_ten) >= model.num_luts / 2, "{name}: LUT layer missing?");
+    }
+}
+
+#[test]
+fn timing_reports_sane() {
+    let Some(a) = artifacts() else { return };
+    let dm = DelayModel::default();
+    let mut last_luts = 0usize;
+    for name in ["sm-10", "sm-50", "md-360"] {
+        let model = DwnModel::load(&a.model_path(name)).unwrap();
+        let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt)).unwrap();
+        let nl = accel.map(&MapConfig::default());
+        let rep = analyze(&nl, &dm);
+        assert!(rep.fmax_mhz > 100.0 && rep.fmax_mhz <= dm.fmax_cap_mhz);
+        assert!(rep.latency_ns > 0.0);
+        assert!(rep.ffs > 0);
+        assert!((rep.area_delay - rep.luts as f64 * rep.latency_ns).abs() < 1e-6);
+        assert!(rep.luts > last_luts, "LUTs must grow with model size");
+        last_luts = rep.luts;
+    }
+}
+
+#[test]
+fn uniform_encoding_ablation_builds() {
+    let Some(a) = artifacts() else { return };
+    let model = DwnModel::load(&a.model_path("sm-50")).unwrap();
+    let mut opts = AccelOptions::new(Variant::PenFt);
+    opts.uniform_encoding = true;
+    let accel = build_accelerator(&model, &opts).unwrap();
+    let nl = accel.map(&MapConfig::default());
+    assert!(nl.lut_count() > 0);
+}
+
+#[test]
+fn netlist_accuracy_close_to_reported() {
+    let Some(a) = artifacts() else { return };
+    let model = DwnModel::load(&a.model_path("sm-50")).unwrap();
+    let test = dwn::data::Dataset::load_csv(&a.dataset_path("test")).unwrap();
+    let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt)).unwrap();
+    let nl = accel.map(&MapConfig::default());
+    let frac_bits = model.penft.frac_bits.unwrap();
+    let width = (frac_bits + 1) as usize;
+    let n = 2000.min(test.len());
+    let vectors: Vec<Vec<bool>> = (0..n)
+        .map(|i| {
+            let mut bits = Vec::with_capacity(test.num_features * width);
+            for &x in test.row(i) {
+                let pat = dwn::util::fixed::int_to_bits(
+                    dwn::util::fixed::input_to_int(x as f64, frac_bits),
+                    frac_bits,
+                );
+                for b in 0..width {
+                    bits.push((pat >> b) & 1 == 1);
+                }
+            }
+            bits
+        })
+        .collect();
+    let outs = nl.eval_batch(&vectors);
+    let iw = accel.index_width();
+    let correct = outs
+        .iter()
+        .enumerate()
+        .filter(|(i, o)| {
+            let mut pred = 0usize;
+            for b in 0..iw {
+                if o[b] {
+                    pred |= 1 << b;
+                }
+            }
+            pred == test.y[*i] as usize
+        })
+        .count();
+    let acc = correct as f64 / n as f64;
+    assert!(
+        (acc - model.penft.acc).abs() < 0.03,
+        "netlist acc {acc} vs reported {}",
+        model.penft.acc
+    );
+}

@@ -1,0 +1,194 @@
+//! Property-based tests over the logic substrate (hand-rolled generator —
+//! proptest is unavailable offline): random circuit construction, mapping
+//! equivalence, popcount/comparator algebraic identities, simulator lane
+//! consistency, and netlist structural invariants.
+
+use dwn::logic::{Builder, Network, Simulator};
+use dwn::techmap::{map, map6, MapConfig, Src};
+use dwn::util::SplitMix64;
+
+/// Random DAG circuit over `inputs` inputs with `gates` gates.
+fn random_circuit(rng: &mut SplitMix64, inputs: usize, gates: usize, outputs: usize) -> Network {
+    let mut bld = Builder::new();
+    let ins = bld.inputs(inputs);
+    let mut pool = ins;
+    let t = bld.constant(true);
+    let f = bld.constant(false);
+    pool.push(t);
+    pool.push(f);
+    for _ in 0..gates {
+        let pick = |rng: &mut SplitMix64, pool: &[u32]| pool[rng.below(pool.len() as u64) as usize];
+        let a = pick(rng, &pool);
+        let b = pick(rng, &pool);
+        let n = match rng.below(6) {
+            0 => bld.and2(a, b),
+            1 => bld.xor2(a, b),
+            2 => bld.or2(a, b),
+            3 => bld.not(a),
+            4 => {
+                let s = pick(rng, &pool);
+                bld.mux(s, a, b)
+            }
+            _ => {
+                let c = pick(rng, &pool);
+                let k = rng.below(3) as usize + 1;
+                let mut ins3 = vec![a, b, c];
+                ins3.truncate(k);
+                let tt = rng.next_u64();
+                bld.table(ins3, tt)
+            }
+        };
+        pool.push(n);
+    }
+    for _ in 0..outputs {
+        let o = pool[rng.below(pool.len() as u64) as usize];
+        bld.output(o);
+    }
+    bld.finish()
+}
+
+#[test]
+fn prop_mapping_preserves_function() {
+    let mut rng = SplitMix64::new(0xfeed);
+    for trial in 0..40 {
+        let net = random_circuit(&mut rng, 10, 80, 6);
+        let mapped = map6(&net);
+        let mut sim = Simulator::new(&net);
+        for _ in 0..4 {
+            let lanes: Vec<u64> = (0..10).map(|_| rng.next_u64()).collect();
+            assert_eq!(sim.eval_lanes(&lanes), mapped.eval_lanes(&lanes), "trial {trial}");
+        }
+    }
+}
+
+#[test]
+fn prop_mapping_preserves_function_k4() {
+    // Different LUT size exercises the cut bound.
+    let cfg = MapConfig { k: 4, cut_set_size: 6, area_passes: 1 };
+    let mut rng = SplitMix64::new(0xbeef);
+    for _ in 0..20 {
+        let net = random_circuit(&mut rng, 8, 50, 4);
+        let mapped = map(&net, &cfg);
+        for lut in &mapped.luts {
+            assert!(lut.inputs.len() <= 4, "cut bound violated");
+        }
+        let mut sim = Simulator::new(&net);
+        let lanes: Vec<u64> = (0..8).map(|_| rng.next_u64()).collect();
+        assert_eq!(sim.eval_lanes(&lanes), mapped.eval_lanes(&lanes));
+    }
+}
+
+#[test]
+fn prop_netlist_topologically_ordered() {
+    let mut rng = SplitMix64::new(7);
+    for _ in 0..20 {
+        let net = random_circuit(&mut rng, 6, 60, 5);
+        let mapped = map6(&net);
+        for (i, lut) in mapped.luts.iter().enumerate() {
+            for s in &lut.inputs {
+                if let Src::Lut(j) = s {
+                    assert!((*j as usize) < i, "forward reference in netlist");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_popcount_equals_native_count() {
+    let mut rng = SplitMix64::new(0xabc);
+    for width in [1usize, 3, 17, 64, 100, 480] {
+        let mut bld = Builder::new();
+        let ins = bld.inputs(width);
+        let pc = bld.popcount(&ins);
+        for b in pc {
+            bld.output(b);
+        }
+        let net = bld.finish();
+        let mut sim = Simulator::new(&net);
+        let lanes: Vec<u64> = (0..width).map(|_| rng.next_u64()).collect();
+        let out = sim.eval_lanes(&lanes);
+        for lane in 0..64 {
+            let count = (0..width).filter(|&i| (lanes[i] >> lane) & 1 == 1).count() as u64;
+            let mut got = 0u64;
+            for (b, &w) in out.iter().enumerate() {
+                if (w >> lane) & 1 == 1 {
+                    got |= 1 << b;
+                }
+            }
+            assert_eq!(got, count, "width={width} lane={lane}");
+        }
+    }
+}
+
+#[test]
+fn prop_ge_const_random_wide() {
+    // 12-bit comparators, random constants, random inputs.
+    let mut rng = SplitMix64::new(0x5eed);
+    for _ in 0..30 {
+        let k = rng.below(1 << 12);
+        let mut bld = Builder::new();
+        let w = bld.inputs(12);
+        let o = bld.ge_const(&w, k);
+        bld.output(o);
+        let net = bld.finish();
+        let mut sim = Simulator::new(&net);
+        let lanes: Vec<u64> = (0..12).map(|_| rng.next_u64()).collect();
+        let out = sim.eval_lanes(&lanes)[0];
+        for lane in 0..64 {
+            let x: u64 = (0..12).map(|i| ((lanes[i] >> lane) & 1) << i).sum();
+            assert_eq!((out >> lane) & 1 == 1, x >= k, "x={x} k={k}");
+        }
+    }
+}
+
+#[test]
+fn prop_structural_hash_idempotent_build() {
+    // Building the same function twice yields identical gate counts.
+    let mut rng = SplitMix64::new(3);
+    let thresholds: Vec<u64> = (0..20).map(|_| rng.below(512)).collect();
+    let build = |ths: &[u64]| {
+        let mut bld = Builder::new();
+        let w = bld.inputs(9);
+        for &t in ths {
+            let o = bld.ge_const(&w, t);
+            bld.output(o);
+        }
+        bld.finish().gate_count()
+    };
+    let a = build(&thresholds);
+    let doubled: Vec<u64> = thresholds.iter().chain(thresholds.iter()).copied().collect();
+    let b = build(&doubled);
+    assert_eq!(a, b, "duplicate comparators must be CSE'd to zero extra gates");
+}
+
+#[test]
+fn prop_const_inputs_propagate() {
+    // A circuit fed only constants must map to constant outputs (no LUTs).
+    let mut bld = Builder::new();
+    let t = bld.constant(true);
+    let f = bld.constant(false);
+    let x = bld.and2(t, f);
+    let y = bld.or2(x, t);
+    bld.output(x);
+    bld.output(y);
+    let mapped = map6(&bld.finish());
+    assert_eq!(mapped.lut_count(), 0);
+    assert!(matches!(mapped.outputs[0], Src::Const(false)));
+    assert!(matches!(mapped.outputs[1], Src::Const(true)));
+}
+
+#[test]
+fn prop_mapped_area_never_exceeds_gates() {
+    let mut rng = SplitMix64::new(0x777);
+    for _ in 0..10 {
+        let net = random_circuit(&mut rng, 12, 120, 8);
+        let mapped = map6(&net);
+        assert!(
+            mapped.lut_count() <= net.gate_count().max(1),
+            "mapping should never inflate area: {} luts vs {} gates",
+            mapped.lut_count(),
+            net.gate_count()
+        );
+    }
+}

@@ -1,0 +1,42 @@
+//! Integration: the PJRT-executed AOT HLO must match the JAX golden vectors.
+use dwn::config::Artifacts;
+use dwn::data::golden;
+use dwn::model::DwnModel;
+use dwn::runtime::Engine;
+
+#[test]
+fn pjrt_matches_golden_penft() {
+    let artifacts = Artifacts::discover();
+    if !artifacts.exists() {
+        eprintln!("skipping: no artifacts (run `make artifacts`)");
+        return;
+    }
+    let name = "md-360";
+    let model = DwnModel::load(&artifacts.model_path(name)).unwrap();
+    let g = golden::load_pen(&artifacts.golden_path(name, "penft")).unwrap();
+    let batch = artifacts.hlo_batch().unwrap();
+    let engine =
+        Engine::load(&artifacts.hlo_path(name), batch, model.num_features, model.num_classes)
+            .unwrap();
+    let scale = 1.0 / (1u64 << g.frac_bits) as f32;
+    let n = batch.min(g.vectors.len());
+    let mut x = vec![0f32; batch * model.num_features];
+    for (i, v) in g.vectors.iter().take(n).enumerate() {
+        for (j, &xi) in v.x_ints.iter().enumerate() {
+            x[i * model.num_features + j] = xi as f32 * scale;
+        }
+    }
+    let out = engine.execute(&x).unwrap();
+    let mut bad = 0;
+    for (i, v) in g.vectors.iter().take(n).enumerate() {
+        let got: Vec<i32> =
+            out.scores[i * model.num_classes..(i + 1) * model.num_classes].to_vec();
+        if got != v.scores || out.pred[i] as usize != v.pred {
+            if bad < 3 {
+                eprintln!("vec {i}: got {:?} pred {} want {:?} pred {}", got, out.pred[i], v.scores, v.pred);
+            }
+            bad += 1;
+        }
+    }
+    assert_eq!(bad, 0, "{bad}/{n} PJRT mismatches vs golden");
+}
