@@ -1,11 +1,18 @@
 //! Fig. 2: distributive vs uniform thermometer encoding of the first JSC
 //! test sample — per-feature activated-bit counts under both schemes, plus
-//! the accuracy impact (the reason the paper pays for distributive encoders).
+//! the accuracy impact (the reason the paper pays for distributive encoders)
+//! and, since the encoding subsystem landed, a side-by-side comparison of
+//! every encoder micro-architecture on the same model.
+//!
+//! `DWN_FIG2_VARIANT=pen|penft` selects the encoder variant (default penft).
 
 use dwn::config::Artifacts;
 use dwn::data::Dataset;
-use dwn::model::DwnModel;
+use dwn::encoding::EncoderStrategy;
+use dwn::hwgen::{build_accelerator, AccelOptions, Component};
+use dwn::model::{DwnModel, Variant};
 use dwn::report::Table;
+use dwn::techmap::MapConfig;
 
 fn encode_counts(x: &[f32], thresholds: &[Vec<f64>]) -> Vec<usize> {
     x.iter()
@@ -67,4 +74,57 @@ fn main() {
     print!("{}", spread.render());
     t.write_csv(&artifacts.results_dir().join("fig2_encoding.csv")).expect("csv");
     println!("wrote {}", artifacts.results_dir().join("fig2_encoding.csv").display());
+
+    // Encoder micro-architecture sweep: the same trained model lowered with
+    // every encoder strategy, mapped, and attributed (DESIGN.md §encoding).
+    let variant: Variant = std::env::var("DWN_FIG2_VARIANT")
+        .unwrap_or_else(|_| "penft".to_string())
+        .parse()
+        .expect("DWN_FIG2_VARIANT");
+    assert!(
+        variant != Variant::Ten,
+        "DWN_FIG2_VARIANT must be a PEN-family variant (pen|penft): TEN has no encoder stage"
+    );
+    let mut archs = Table::new(
+        &format!(
+            "Fig. 2c — encoder micro-architectures on {} ({})",
+            model.name,
+            variant.label()
+        ),
+        &["strategy", "encoder LUTs", "total LUTs", "depth", "modeled enc LUTs", "distinct cmp"],
+    );
+    for strategy in [
+        EncoderStrategy::Bank,
+        EncoderStrategy::Chain,
+        EncoderStrategy::Mux,
+        EncoderStrategy::Lut,
+        EncoderStrategy::Auto,
+    ] {
+        let accel = build_accelerator(&model, &AccelOptions::new(variant).with_encoder(strategy))
+            .expect("build");
+        let (nl, counts) = accel.map_with_breakdown(&MapConfig::default());
+        let enc = counts
+            .iter()
+            .find(|(c, _)| *c == Component::Encoder)
+            .map(|(_, n)| *n)
+            .unwrap_or(0);
+        let modeled = accel
+            .encoder_plan
+            .as_ref()
+            .map(|p| p.total_modeled().luts.to_string())
+            .unwrap_or_else(|| "-".into());
+        archs.row(&[
+            strategy.label().into(),
+            enc.to_string(),
+            nl.lut_count().to_string(),
+            nl.depth().to_string(),
+            modeled,
+            accel.distinct_comparators.to_string(),
+        ]);
+    }
+    print!("{}", archs.render());
+    archs
+        .write_csv(&artifacts.results_dir().join("fig2_encoder_archs.csv"))
+        .expect("csv");
+    println!("wrote {}", artifacts.results_dir().join("fig2_encoder_archs.csv").display());
 }

@@ -1,7 +1,7 @@
 //! Run configuration: artifact locations, model/variant selection, and the
 //! tiny argv parser the CLI + benches share (clap is unavailable offline).
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
@@ -114,6 +114,31 @@ impl Args {
             None => Ok(default),
         }
     }
+
+    /// Parse any `FromStr` option, falling back to `default` when absent —
+    /// used for `--variant` and `--encoder`.
+    pub fn get_parse<T>(&self, key: &str, default: T) -> Result<T>
+    where
+        T: std::str::FromStr,
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get_parse_opt(key)?.unwrap_or(default))
+    }
+
+    /// Parse any `FromStr` option that has no default (`None` when absent) —
+    /// used for `--depth-budget`.
+    pub fn get_parse_opt<T>(&self, key: &str) -> Result<Option<T>>
+    where
+        T: std::str::FromStr,
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            Some(v) => {
+                v.parse::<T>().map(Some).map_err(|e| anyhow!("bad --{key} '{v}': {e}"))
+            }
+            None => Ok(None),
+        }
+    }
 }
 
 /// Ensure a directory exists.
@@ -137,6 +162,14 @@ mod tests {
         assert_eq!(a.get("model"), Some("sm-10"));
         assert!(a.has_flag("verbose"));
         assert_eq!(a.get_usize("batch", 128).unwrap(), 128);
+    }
+
+    #[test]
+    fn get_parse_with_default() {
+        let a = Args::parse(["--n", "7"].iter().map(|s| s.to_string()), &[]).unwrap();
+        assert_eq!(a.get_parse::<u32>("n", 3).unwrap(), 7);
+        assert_eq!(a.get_parse::<u32>("missing", 3).unwrap(), 3);
+        assert!(a.get_parse::<crate::model::Variant>("n", crate::model::Variant::Ten).is_err());
     }
 
     #[test]

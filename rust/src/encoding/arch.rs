@@ -1,0 +1,433 @@
+//! Encoder micro-architectures: interchangeable lowerings of a
+//! [`FeatureIr`] into the [`logic::Builder`](crate::logic::Builder) network.
+//!
+//! All four produce bit-exact thermometer outputs (property-tested against
+//! each other); they differ in how the per-threshold comparisons are shared:
+//!
+//! * [`BankArch`] — the reference: one LSB-first signed comparator chain per
+//!   distinct threshold (the circuit the paper's generator emits, moved here
+//!   from `hwgen::encoder`).
+//! * [`ChainArch`] — sorted-threshold chain: each level is "previous level
+//!   AND incremental compare"; compares scan MSB-first so thresholds with a
+//!   common high-bit prefix share their (gt, eq) state via structural
+//!   hashing.
+//! * [`MuxArch`] — binary-search/MUX-tree: computes the feature's thermometer
+//!   *level* once with log2(D) variable comparisons against muxed threshold
+//!   constants, then decodes each used output from the small level word.
+//! * [`LutArch`] — precomputed truth tables: for narrow words (<= 6 bits)
+//!   each distinct threshold is one native LUT, depth 1 — the NeuraLUT-style
+//!   "fold the function into the fabric" endpoint.
+
+use super::cost::{self, CostEstimate};
+use super::ir::FeatureIr;
+use crate::logic::net::{NodeId, MAX_TABLE_K};
+use crate::logic::Builder;
+use crate::util::bits_for;
+use std::collections::HashMap;
+
+/// Identifier of a micro-architecture.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArchKind {
+    Bank,
+    Chain,
+    Mux,
+    Lut,
+}
+
+impl ArchKind {
+    pub const ALL: [ArchKind; 4] =
+        [ArchKind::Bank, ArchKind::Chain, ArchKind::Mux, ArchKind::Lut];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            ArchKind::Bank => "bank",
+            ArchKind::Chain => "chain",
+            ArchKind::Mux => "mux",
+            ArchKind::Lut => "lut",
+        }
+    }
+
+    /// Can this architecture encode a `width`-bit input word?
+    pub fn supports(&self, width: usize) -> bool {
+        arch_for(*self).supports(width)
+    }
+
+    /// Analytic cost model (see [`crate::encoding::cost`]).
+    pub fn estimate(&self, feat: &FeatureIr, width: usize) -> CostEstimate {
+        arch_for(*self).estimate(feat, width)
+    }
+}
+
+/// A pluggable encoder micro-architecture.
+pub trait EncoderArch: Sync {
+    fn kind(&self) -> ArchKind;
+
+    /// Whether the architecture can handle a `width`-bit input word.
+    fn supports(&self, width: usize) -> bool {
+        let _ = width;
+        true
+    }
+
+    /// Analytic LUT/depth estimate for one feature.
+    fn estimate(&self, feat: &FeatureIr, width: usize) -> CostEstimate;
+
+    /// Lower the feature's encoder. `word` is the signed fixed-point input
+    /// (LSB-first, two's complement). Returns one output node per entry of
+    /// `feat.used_levels`, in the same order.
+    fn emit(&self, bld: &mut Builder, word: &[NodeId], feat: &FeatureIr) -> Vec<NodeId>;
+}
+
+/// Singleton lookup for each architecture.
+pub fn arch_for(kind: ArchKind) -> &'static dyn EncoderArch {
+    match kind {
+        ArchKind::Bank => &BankArch,
+        ArchKind::Chain => &ChainArch,
+        ArchKind::Mux => &MuxArch,
+        ArchKind::Lut => &LutArch,
+    }
+}
+
+// --------------------------------------------------------------- helpers
+
+/// Map a signed two's-complement word onto the unsigned comparison domain by
+/// flipping the sign bit (shared across call sites via structural hashing).
+fn unsigned_word(bld: &mut Builder, word: &[NodeId]) -> Vec<NodeId> {
+    let mut w = word.to_vec();
+    let n = w.len();
+    w[n - 1] = bld.not(word[n - 1]);
+    w
+}
+
+/// Grid integer -> unsigned-domain constant (sign-bit-flipped encoding).
+fn unsigned_const(k: i32, width: usize) -> u64 {
+    (k as i64 + (1i64 << (width - 1))) as u64
+}
+
+/// MSB-first `word >= k` over the unsigned domain: (gt, eq) scan whose
+/// intermediate states CSE across thresholds sharing high-bit prefixes.
+fn ge_const_msb(bld: &mut Builder, word: &[NodeId], k: u64) -> NodeId {
+    let mut gt = bld.constant(false);
+    let mut eq = bld.constant(true);
+    for i in (0..word.len()).rev() {
+        let x = word[i];
+        if (k >> i) & 1 == 1 {
+            // k-bit is 1: x cannot exceed it; equality needs x = 1.
+            eq = bld.and2(eq, x);
+        } else {
+            // k-bit is 0: x = 1 decides greater; equality needs x = 0.
+            let win = bld.and2(eq, x);
+            gt = bld.or2(gt, win);
+            let nx = bld.not(x);
+            eq = bld.and2(eq, nx);
+        }
+    }
+    bld.or2(gt, eq)
+}
+
+/// Boolean function of the selector bits given as a pattern predicate:
+/// a single table when it fits, a Shannon mux tree otherwise.
+fn const_fn_of_sels(bld: &mut Builder, sels: &[NodeId], f: &dyn Fn(u64) -> bool) -> NodeId {
+    let s = sels.len();
+    if s == 0 {
+        return bld.constant(f(0));
+    }
+    if s <= MAX_TABLE_K {
+        let mut t = 0u64;
+        for p in 0..(1u64 << s) {
+            if f(p) {
+                t |= 1 << p;
+            }
+        }
+        return bld.table(sels.to_vec(), t);
+    }
+    let top = sels[s - 1];
+    let lo = const_fn_of_sels(bld, &sels[..s - 1], &|p| f(p));
+    let hi = const_fn_of_sels(bld, &sels[..s - 1], &|p| f(p | (1u64 << (s - 1))));
+    bld.mux(top, lo, hi)
+}
+
+// ----------------------------------------------------------------- bank
+
+/// Reference comparator bank (paper Fig. 3): one signed fixed-point
+/// comparator per distinct used threshold, duplicates shared.
+pub struct BankArch;
+
+impl EncoderArch for BankArch {
+    fn kind(&self) -> ArchKind {
+        ArchKind::Bank
+    }
+
+    fn estimate(&self, feat: &FeatureIr, width: usize) -> CostEstimate {
+        cost::estimate_bank(feat, width)
+    }
+
+    fn emit(&self, bld: &mut Builder, word: &[NodeId], feat: &FeatureIr) -> Vec<NodeId> {
+        let mut seen: HashMap<i32, NodeId> = HashMap::new();
+        feat.used_levels
+            .iter()
+            .map(|&l| {
+                let t = feat.thresholds[l];
+                *seen.entry(t).or_insert_with(|| bld.ge_const_signed(word, t as i64))
+            })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------- chain
+
+/// Sorted-threshold chain: level_i = level_{i-1} AND compare_i, with
+/// MSB-first compares so common prefixes collapse structurally.
+pub struct ChainArch;
+
+impl EncoderArch for ChainArch {
+    fn kind(&self) -> ArchKind {
+        ArchKind::Chain
+    }
+
+    fn estimate(&self, feat: &FeatureIr, width: usize) -> CostEstimate {
+        cost::estimate_chain(feat, width)
+    }
+
+    fn emit(&self, bld: &mut Builder, word: &[NodeId], feat: &FeatureIr) -> Vec<NodeId> {
+        let distinct = feat.distinct_used();
+        if distinct.is_empty() {
+            return Vec::new();
+        }
+        let width = word.len();
+        let uns = unsigned_word(bld, word);
+        let mut level_node: HashMap<i32, NodeId> = HashMap::new();
+        let mut prev: Option<NodeId> = None;
+        for &t in &distinct {
+            let cmp = ge_const_msb(bld, &uns, unsigned_const(t, width));
+            // x >= t implies x >= (all smaller thresholds), so ANDing with
+            // the previous level preserves the function while letting the
+            // mapper reuse the shared prefix logic.
+            let node = match prev {
+                Some(p) => bld.and2(p, cmp),
+                None => cmp,
+            };
+            level_node.insert(t, node);
+            prev = Some(node);
+        }
+        feat.used_levels.iter().map(|&l| level_node[&feat.thresholds[l]]).collect()
+    }
+}
+
+// ------------------------------------------------------------------ mux
+
+/// Binary-search/MUX-tree encoder: compute the thermometer level L(x) =
+/// |{i : x >= d_i}| bit-by-bit (each round selects a threshold constant by
+/// the level bits found so far and runs one variable comparison), then
+/// decode every used output as `L >= rank + 1`.
+pub struct MuxArch;
+
+impl EncoderArch for MuxArch {
+    fn kind(&self) -> ArchKind {
+        ArchKind::Mux
+    }
+
+    fn estimate(&self, feat: &FeatureIr, width: usize) -> CostEstimate {
+        cost::estimate_mux(feat, width)
+    }
+
+    fn emit(&self, bld: &mut Builder, word: &[NodeId], feat: &FeatureIr) -> Vec<NodeId> {
+        let distinct = feat.distinct_used();
+        if distinct.is_empty() {
+            return Vec::new();
+        }
+        let width = word.len();
+        let d = distinct.len();
+        let consts: Vec<u64> =
+            distinct.iter().map(|&t| unsigned_const(t, width)).collect();
+        let uns = unsigned_word(bld, word);
+
+        // Binary search for L in [0, D]: at each round, with the high bits
+        // fixed to `acc`, test L >= acc + 2^k, which for v = acc + 2^k <= D
+        // is exactly x >= d[v - 1].
+        let nb = bits_for(d + 1);
+        let mut bits_msb: Vec<NodeId> = Vec::new();
+        for k in (0..nb).rev() {
+            // Selector inputs: already-fixed higher bits, LSB-first, so a
+            // selector pattern p corresponds to acc = p << (k + 1).
+            let sels: Vec<NodeId> = bits_msb.iter().rev().copied().collect();
+            let threshold_index = |p: u64| -> Option<usize> {
+                let v = (p << (k + 1)) + (1u64 << k);
+                if v <= d as u64 {
+                    Some(v as usize - 1)
+                } else {
+                    None
+                }
+            };
+            let valid = const_fn_of_sels(bld, &sels, &|p| threshold_index(p).is_some());
+            let sel_word: Vec<NodeId> = (0..width)
+                .map(|j| {
+                    const_fn_of_sels(bld, &sels, &|p| {
+                        let idx = threshold_index(p).unwrap_or(d - 1);
+                        (consts[idx] >> j) & 1 == 1
+                    })
+                })
+                .collect();
+            let cmp = bld.ge_words(&uns, &sel_word);
+            let bit = bld.and2(cmp, valid);
+            bits_msb.push(bit);
+        }
+        let level: Vec<NodeId> = bits_msb.iter().rev().copied().collect();
+
+        // Decode: output for the threshold of rank r is L >= r + 1.
+        let rank: HashMap<i32, usize> =
+            distinct.iter().enumerate().map(|(i, &t)| (t, i)).collect();
+        feat.used_levels
+            .iter()
+            .map(|&l| {
+                let r = rank[&feat.thresholds[l]];
+                bld.ge_const(&level, (r + 1) as u64)
+            })
+            .collect()
+    }
+}
+
+// ------------------------------------------------------------------ lut
+
+/// Precomputed-LUT encoder: each distinct threshold folded into one native
+/// truth table over the whole input word. Narrow features only (width <= 6).
+pub struct LutArch;
+
+impl EncoderArch for LutArch {
+    fn kind(&self) -> ArchKind {
+        ArchKind::Lut
+    }
+
+    fn supports(&self, width: usize) -> bool {
+        width <= MAX_TABLE_K
+    }
+
+    fn estimate(&self, feat: &FeatureIr, width: usize) -> CostEstimate {
+        cost::estimate_lut(feat, width)
+    }
+
+    fn emit(&self, bld: &mut Builder, word: &[NodeId], feat: &FeatureIr) -> Vec<NodeId> {
+        let width = word.len();
+        assert!(width <= MAX_TABLE_K, "LutArch requires width <= {MAX_TABLE_K}, got {width}");
+        let mut seen: HashMap<i32, NodeId> = HashMap::new();
+        feat.used_levels
+            .iter()
+            .map(|&l| {
+                let t = feat.thresholds[l];
+                *seen.entry(t).or_insert_with(|| {
+                    let mut table = 0u64;
+                    for addr in 0..(1u64 << width) {
+                        // Interpret the address as a width-bit two's-complement value.
+                        let v = if addr >= 1u64 << (width - 1) {
+                            addr as i64 - (1i64 << width)
+                        } else {
+                            addr as i64
+                        };
+                        if v >= t as i64 {
+                            table |= 1 << addr;
+                        }
+                    }
+                    bld.table(word.to_vec(), table)
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::Simulator;
+    use crate::util::fixed;
+
+    /// Exhaustively compare one architecture against direct evaluation.
+    fn check_arch(kind: ArchKind, thresholds: Vec<i32>, used: Vec<usize>, frac_bits: u32) {
+        let width = (frac_bits + 1) as usize;
+        let feat = FeatureIr { index: 0, thresholds: thresholds.clone(), used_levels: used.clone() };
+        let mut bld = Builder::new();
+        let word = bld.inputs(width);
+        let outs = arch_for(kind).emit(&mut bld, &word, &feat);
+        assert_eq!(outs.len(), used.len());
+        for &o in &outs {
+            bld.output(o);
+        }
+        let net = bld.finish();
+        let mut sim = Simulator::new(&net);
+        let lo = -(1i32 << frac_bits);
+        let hi = 1i32 << frac_bits;
+        for x in lo..hi {
+            let bits = fixed::int_to_bits(x, frac_bits);
+            let inputs: Vec<bool> = (0..width).map(|i| (bits >> i) & 1 == 1).collect();
+            let out = sim.eval(&inputs);
+            for (j, &l) in used.iter().enumerate() {
+                assert_eq!(
+                    out[j],
+                    x >= thresholds[l],
+                    "{} x={x} level={l} th={}",
+                    kind.label(),
+                    thresholds[l]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_archs_match_direct_evaluation() {
+        let cases: Vec<(Vec<i32>, Vec<usize>, u32)> = vec![
+            (vec![-4, -1, 0, 3], vec![0, 1, 2, 3], 3),
+            (vec![-4, -1, 0, 3], vec![1, 3], 3),
+            (vec![2, 2, 2, 2], vec![0, 1, 2, 3], 3),
+            (vec![-8, -8, 0, 7, 7], vec![0, 2, 3, 4], 3),
+            (vec![0], vec![0], 2),
+            (vec![-16, -9, -2, 0, 1, 5, 11, 15], vec![0, 1, 2, 3, 4, 5, 6, 7], 4),
+        ];
+        for (th, used, fb) in cases {
+            for kind in ArchKind::ALL {
+                if !kind.supports((fb + 1) as usize) {
+                    continue;
+                }
+                check_arch(kind, th.clone(), used.clone(), fb);
+            }
+        }
+    }
+
+    #[test]
+    fn duplicate_thresholds_share_one_comparison() {
+        for kind in ArchKind::ALL {
+            let feat = FeatureIr {
+                index: 0,
+                thresholds: vec![2, 2, 2, 2],
+                used_levels: vec![0, 1, 2, 3],
+            };
+            let mut bld = Builder::new();
+            let word = bld.inputs(4);
+            let outs = arch_for(kind).emit(&mut bld, &word, &feat);
+            let uniq: std::collections::HashSet<_> = outs.iter().collect();
+            assert_eq!(uniq.len(), 1, "{}: duplicates must share", kind.label());
+        }
+    }
+
+    #[test]
+    fn lut_arch_rejects_wide_words() {
+        assert!(ArchKind::Lut.supports(6));
+        assert!(!ArchKind::Lut.supports(7));
+        assert!(ArchKind::Mux.supports(12));
+    }
+
+    #[test]
+    fn msb_first_compare_matches_reference() {
+        for width in 2..=5usize {
+            for k in 0..(1u64 << width) {
+                let mut bld = Builder::new();
+                let w = bld.inputs(width);
+                let o = ge_const_msb(&mut bld, &w, k);
+                bld.output(o);
+                let net = bld.finish();
+                let mut sim = Simulator::new(&net);
+                for x in 0..(1u64 << width) {
+                    let inputs: Vec<bool> = (0..width).map(|i| (x >> i) & 1 == 1).collect();
+                    assert_eq!(sim.eval(&inputs)[0], x >= k, "width={width} k={k} x={x}");
+                }
+            }
+        }
+    }
+}

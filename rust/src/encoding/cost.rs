@@ -1,0 +1,177 @@
+//! Encoder cost models.
+//!
+//! Two tiers:
+//! * **analytic** (`estimate_*`) — closed-form LUT/depth heuristics per
+//!   micro-architecture, cheap enough to print for every candidate. These are
+//!   pre-mapping approximations: good for ordering intuition and reports.
+//! * **measured** ([`measure_feature`]) — lower one feature's encoder in
+//!   isolation and run the real priority-cuts mapper on it. Per-feature
+//!   encoders share nothing across features (disjoint input words), so the
+//!   sum of per-feature measurements tracks the mapped full-design encoder
+//!   cost closely; the auto-selector uses this tier so its choices are backed
+//!   by the same mapper that produces the reported numbers.
+
+use super::arch::{arch_for, ArchKind};
+use super::ir::FeatureIr;
+use crate::logic::Builder;
+use crate::techmap;
+use crate::util::{bits_for, ceil_div};
+use std::collections::HashSet;
+
+/// Modeled or measured cost of one encoder lowering.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CostEstimate {
+    /// Physical 6-LUT count.
+    pub luts: usize,
+    /// Logic depth in LUT levels.
+    pub depth: usize,
+}
+
+impl CostEstimate {
+    pub const ZERO: CostEstimate = CostEstimate { luts: 0, depth: 0 };
+
+    /// Combine feature-level costs into a design-level cost (LUTs add,
+    /// depths max — features evaluate in parallel).
+    pub fn merge(self, other: CostEstimate) -> CostEstimate {
+        CostEstimate { luts: self.luts + other.luts, depth: self.depth.max(other.depth) }
+    }
+}
+
+/// LUTs to cover a serial chain of `steps` 2-input gates (each step adds one
+/// fresh primary input): a 6-LUT absorbs ~5 consecutive steps.
+pub(crate) fn chain_luts(steps: usize) -> usize {
+    ceil_div(steps.max(1), 5)
+}
+
+/// Distinct MSB-first prefixes over the feature's comparison constants — the
+/// number of shared comparator states the chain architecture instantiates.
+pub(crate) fn trie_nodes(consts: &[u64], width: usize) -> usize {
+    let mut set: HashSet<(usize, u64)> = HashSet::new();
+    for &k in consts {
+        for len in 1..=width {
+            set.insert((len, k >> (width - len)));
+        }
+    }
+    set.len()
+}
+
+/// Analytic cost of the reference comparator bank: one LSB-first select
+/// chain per distinct threshold, all in parallel.
+pub fn estimate_bank(feat: &FeatureIr, width: usize) -> CostEstimate {
+    let d = feat.distinct_used().len();
+    if d == 0 {
+        return CostEstimate::ZERO;
+    }
+    CostEstimate { luts: d * chain_luts(width), depth: chain_luts(width) }
+}
+
+/// Analytic cost of the sorted-threshold chain: MSB-first (gt, eq) scans
+/// share trie prefixes between thresholds; the thermometer AND chain links
+/// consecutive levels.
+pub fn estimate_chain(feat: &FeatureIr, width: usize) -> CostEstimate {
+    let distinct = feat.distinct_used();
+    let d = distinct.len();
+    if d == 0 {
+        return CostEstimate::ZERO;
+    }
+    let consts: Vec<u64> = distinct
+        .iter()
+        .map(|&t| (t as i64 + (1i64 << (width - 1))) as u64)
+        .collect();
+    // ~2 gates per trie state (gt/eq updates), 2 gates per threshold for the
+    // AND link + final ge; mapper packs ~4 of these irregular gates per LUT.
+    let gates = 2 * trie_nodes(&consts, width) + 2 * d;
+    CostEstimate {
+        luts: ceil_div(gates, 4).max(1),
+        depth: chain_luts(2 * width) + ceil_div(d, 5),
+    }
+}
+
+/// Analytic cost of the binary-search/MUX-tree encoder: log2(D+1) rounds of
+/// {select threshold constant, variable compare}, then one small decode LUT
+/// per used output.
+pub fn estimate_mux(feat: &FeatureIr, width: usize) -> CostEstimate {
+    let d = feat.distinct_used().len();
+    let u = feat.used_count();
+    if d == 0 {
+        return CostEstimate::ZERO;
+    }
+    let nb = bits_for(d + 1);
+    // Per round: ~2*ceil(w/3) compare tables + ~w/2 selector tables (first
+    // round selects constants, which fold away).
+    let per_round = 2 * ceil_div(width, 3) + width / 2;
+    CostEstimate {
+        luts: nb * per_round + u,
+        depth: nb * (2 + bits_for(width)) + 1,
+    }
+}
+
+/// Analytic (exact) cost of the precomputed-LUT encoder: one native truth
+/// table per distinct threshold, depth 1. Only valid for width <= 6.
+pub fn estimate_lut(feat: &FeatureIr, _width: usize) -> CostEstimate {
+    let d = feat.distinct_used().len();
+    if d == 0 {
+        return CostEstimate::ZERO;
+    }
+    CostEstimate { luts: d, depth: 1 }
+}
+
+/// Lower one feature's encoder in isolation and map it: the measured tier.
+pub fn measure_feature(kind: ArchKind, feat: &FeatureIr, width: usize) -> CostEstimate {
+    if feat.used_levels.is_empty() {
+        return CostEstimate::ZERO;
+    }
+    let mut bld = Builder::new();
+    let word = bld.inputs(width);
+    let outs = arch_for(kind).emit(&mut bld, &word, feat);
+    for o in outs {
+        bld.output(o);
+    }
+    let nl = techmap::map6(&bld.finish());
+    CostEstimate { luts: nl.lut_count(), depth: nl.depth() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feat(thresholds: Vec<i32>, used: Vec<usize>) -> FeatureIr {
+        FeatureIr { index: 0, thresholds, used_levels: used }
+    }
+
+    #[test]
+    fn zero_cost_for_unused_feature() {
+        let f = feat(vec![1, 2, 3], vec![]);
+        for kind in ArchKind::ALL {
+            assert_eq!(kind.estimate(&f, 4), CostEstimate::ZERO);
+            assert_eq!(measure_feature(kind, &f, 4), CostEstimate::ZERO);
+        }
+    }
+
+    #[test]
+    fn lut_estimate_is_exact() {
+        let f = feat(vec![-3, 0, 2, 5], vec![0, 1, 2, 3]);
+        let est = estimate_lut(&f, 4);
+        let meas = measure_feature(ArchKind::Lut, &f, 4);
+        assert_eq!(est.luts, 4);
+        assert_eq!(est.depth, 1);
+        assert_eq!(meas.luts, 4);
+        assert_eq!(meas.depth, 1);
+    }
+
+    #[test]
+    fn trie_shares_prefixes() {
+        // Same top bits -> far fewer nodes than width * count.
+        let n = trie_nodes(&[0b1000, 0b1001, 0b1010], 4);
+        assert!(n < 12, "trie must share the common '10' prefix, got {n}");
+        // Full sharing for identical constants.
+        assert_eq!(trie_nodes(&[0b0110, 0b0110], 4), 4);
+    }
+
+    #[test]
+    fn merge_adds_luts_maxes_depth() {
+        let a = CostEstimate { luts: 3, depth: 2 };
+        let b = CostEstimate { luts: 5, depth: 4 };
+        assert_eq!(a.merge(b), CostEstimate { luts: 8, depth: 4 });
+    }
+}

@@ -1,0 +1,154 @@
+//! Encoder intermediate representation: the synthesis problem, independent of
+//! any particular encoder circuit.
+//!
+//! One [`FeatureIr`] per input feature records the quantized threshold grid
+//! (one integer per thermometer level) and the pruned set of levels actually
+//! connected to the LUT layer. The [`EncoderIr`] adds the shared fixed-point
+//! format. Micro-architectures ([`crate::encoding::arch`]) lower this IR into
+//! gate networks; the planner ([`crate::encoding::plan`]) picks which one.
+
+use crate::model::{DwnModel, Variant};
+use crate::util::fixed;
+use anyhow::Result;
+
+/// Per-feature slice of the encoder synthesis problem.
+#[derive(Debug, Clone)]
+pub struct FeatureIr {
+    /// Feature index in the model's input order.
+    pub index: usize,
+    /// Quantized threshold grid integer per thermometer level (length T).
+    pub thresholds: Vec<i32>,
+    /// Sorted level indices whose encoder outputs the LUT layer consumes.
+    pub used_levels: Vec<usize>,
+}
+
+impl FeatureIr {
+    /// Sorted distinct threshold integers among the used levels — the number
+    /// of comparisons any encoder for this feature fundamentally needs.
+    pub fn distinct_used(&self) -> Vec<i32> {
+        let mut d: Vec<i32> = self.used_levels.iter().map(|&l| self.thresholds[l]).collect();
+        d.sort_unstable();
+        d.dedup();
+        d
+    }
+
+    /// Number of used encoder output bits.
+    pub fn used_count(&self) -> usize {
+        self.used_levels.len()
+    }
+}
+
+/// The full encoder synthesis problem for one model variant.
+#[derive(Debug, Clone)]
+pub struct EncoderIr {
+    pub features: Vec<FeatureIr>,
+    /// Fractional bits n of the (1, n) signed fixed-point input format.
+    pub frac_bits: u32,
+    /// Thermometer levels per feature (T) — decomposes global bit indices.
+    pub thermo_bits: usize,
+}
+
+impl EncoderIr {
+    /// Input word width in bits (sign + fraction).
+    pub fn width(&self) -> usize {
+        self.frac_bits as usize + 1
+    }
+
+    /// Global thermometer-bit index of (feature, level).
+    pub fn bit_index(&self, feature: usize, level: usize) -> u32 {
+        (feature * self.thermo_bits + level) as u32
+    }
+
+    /// Assemble the IR from raw generator inputs (the historical
+    /// `build_encoders` signature).
+    pub fn new(
+        threshold_ints: &[Vec<i32>],
+        frac_bits: u32,
+        used_bits: &[u32],
+        thermo_bits: usize,
+    ) -> Self {
+        let mut features: Vec<FeatureIr> = threshold_ints
+            .iter()
+            .enumerate()
+            .map(|(index, row)| FeatureIr {
+                index,
+                thresholds: row.clone(),
+                used_levels: Vec::new(),
+            })
+            .collect();
+        let mut sorted = used_bits.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        for &bit in &sorted {
+            let f = bit as usize / thermo_bits;
+            let t = bit as usize % thermo_bits;
+            features[f].used_levels.push(t);
+        }
+        EncoderIr { features, frac_bits, thermo_bits }
+    }
+
+    /// Build the IR for a trained model variant. `uniform` swaps in the
+    /// uniform threshold grid (ablation; quantized on the fly).
+    pub fn from_model(model: &DwnModel, variant: Variant, uniform: bool) -> Result<Self> {
+        let (ints, frac_bits) = model.threshold_ints_for(variant)?;
+        let used = model.used_bits(variant);
+        if uniform {
+            let quantized: Vec<Vec<i32>> = model
+                .uniform_thresholds
+                .iter()
+                .map(|row| {
+                    row.iter().map(|&t| fixed::threshold_to_int(t, frac_bits)).collect()
+                })
+                .collect();
+            Ok(Self::new(&quantized, frac_bits, &used, model.thermo_bits))
+        } else {
+            Ok(Self::new(ints, frac_bits, &used, model.thermo_bits))
+        }
+    }
+
+    /// Total distinct comparisons across features (the bank's comparator
+    /// count — the encoder cost driver the paper reports).
+    pub fn total_distinct(&self) -> usize {
+        self.features.iter().map(|f| f.distinct_used().len()).sum()
+    }
+
+    /// Total used encoder output bits.
+    pub fn total_used(&self) -> usize {
+        self.features.iter().map(|f| f.used_count()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assembles_per_feature_levels() {
+        let th = vec![vec![-4, -1, 0, 3], vec![-2, 0, 1, 5]];
+        let used: Vec<u32> = vec![0, 1, 3, 4, 6, 7];
+        let ir = EncoderIr::new(&th, 3, &used, 4);
+        assert_eq!(ir.width(), 4);
+        assert_eq!(ir.features.len(), 2);
+        assert_eq!(ir.features[0].used_levels, vec![0, 1, 3]);
+        assert_eq!(ir.features[1].used_levels, vec![0, 2, 3]);
+        assert_eq!(ir.bit_index(1, 2), 6);
+        assert_eq!(ir.total_used(), 6);
+        assert_eq!(ir.total_distinct(), 6);
+    }
+
+    #[test]
+    fn distinct_collapses_duplicates() {
+        let th = vec![vec![2, 2, 2, 2]];
+        let ir = EncoderIr::new(&th, 3, &[0, 1, 2, 3], 4);
+        assert_eq!(ir.features[0].distinct_used(), vec![2]);
+        assert_eq!(ir.total_distinct(), 1);
+    }
+
+    #[test]
+    fn pruning_keeps_only_used() {
+        let th = vec![vec![-4, -1, 0, 3]];
+        let ir = EncoderIr::new(&th, 3, &[2], 4);
+        assert_eq!(ir.features[0].used_levels, vec![2]);
+        assert_eq!(ir.features[0].distinct_used(), vec![0]);
+    }
+}

@@ -1,0 +1,152 @@
+//! Encoding-aware encoder synthesis (DESIGN.md §encoding).
+//!
+//! The paper's core finding is that thermometer encoders can dominate small
+//! DWN accelerators (up to 3.20x LUT inflation). This subsystem turns
+//! encoder generation from one baked-in circuit into a synthesis problem:
+//!
+//! * [`ir`] — the encoder IR: per-feature threshold sets, bit widths, and
+//!   the pruned used-bit mask, decoupled from any circuit;
+//! * [`arch`] — four interchangeable micro-architectures (reference
+//!   comparator bank, shared-prefix sorted chain, binary-search/MUX tree,
+//!   precomputed-LUT folding);
+//! * [`cost`] — analytic and mapper-measured LUT/depth cost models;
+//! * [`plan`] — the [`EncoderPlan`] auto-selector: cheapest architecture
+//!   per feature under an optional depth budget.
+//!
+//! [`synthesize`] lowers an IR + plan into the [`logic::Builder`] network;
+//! `hwgen` consumes it via [`AccelOptions`](crate::hwgen::AccelOptions)'
+//! `encoder` strategy, and the `dwn encoders` CLI subcommand reports the
+//! per-feature selection and costs.
+
+pub mod arch;
+pub mod cost;
+pub mod ir;
+pub mod plan;
+
+pub use arch::{arch_for, ArchKind, EncoderArch};
+pub use cost::CostEstimate;
+pub use ir::{EncoderIr, FeatureIr};
+pub use plan::{plan_encoders, EncoderPlan, EncoderStrategy, FeaturePlan};
+
+use crate::logic::net::NodeId;
+use crate::logic::Builder;
+use std::collections::HashMap;
+
+/// Synthesized encoder stage: the interface `hwgen` builds the LUT layer on.
+#[derive(Debug)]
+pub struct EncodedBits {
+    /// Input words, one per feature (LSB-first, two's complement) — created
+    /// feature-major so primary-input ordering matches golden vectors.
+    pub feature_words: Vec<Vec<NodeId>>,
+    /// Global thermometer-bit index -> encoder output node (used bits only).
+    pub bit_nodes: HashMap<u32, NodeId>,
+    /// Distinct threshold comparisons the encoders must realize (the
+    /// paper's encoder cost driver). Architecture-independent: alternative
+    /// architectures realize the same comparisons with shared logic.
+    pub distinct_comparators: usize,
+}
+
+/// Lower `ir` into `bld` following `plan` (one architecture per feature).
+pub fn synthesize(bld: &mut Builder, ir: &EncoderIr, plan: &EncoderPlan) -> EncodedBits {
+    assert_eq!(
+        plan.per_feature.len(),
+        ir.features.len(),
+        "plan/IR feature count mismatch"
+    );
+    let width = ir.width();
+    // All input words first: primary-input indices must be feature-major
+    // regardless of per-feature architecture (matches the reference bank).
+    let feature_words: Vec<Vec<NodeId>> =
+        ir.features.iter().map(|_| bld.inputs(width)).collect();
+
+    let mut bit_nodes = HashMap::new();
+    let mut distinct_comparators = 0usize;
+    for (f, feat) in ir.features.iter().enumerate() {
+        let kind = plan.arch_for(f);
+        let outs = arch_for(kind).emit(bld, &feature_words[f], feat);
+        assert_eq!(outs.len(), feat.used_levels.len(), "arch emitted wrong arity");
+        for (&level, &node) in feat.used_levels.iter().zip(&outs) {
+            bit_nodes.insert(ir.bit_index(f, level), node);
+        }
+        distinct_comparators += feat.distinct_used().len();
+    }
+    EncodedBits { feature_words, bit_nodes, distinct_comparators }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::logic::Simulator;
+    use crate::util::fixed;
+
+    /// Build a strategy's encoder network with outputs in sorted used-bit
+    /// order and return (network, sorted used bits).
+    fn build(
+        th: &[Vec<i32>],
+        frac_bits: u32,
+        used: &[u32],
+        thermo: usize,
+        strategy: EncoderStrategy,
+    ) -> (crate::logic::Network, Vec<u32>) {
+        let ir = EncoderIr::new(th, frac_bits, used, thermo);
+        let plan = plan_encoders(&ir, strategy, None);
+        let mut bld = Builder::new();
+        let enc = synthesize(&mut bld, &ir, &plan);
+        let mut order: Vec<u32> = enc.bit_nodes.keys().copied().collect();
+        order.sort_unstable();
+        for &b in &order {
+            bld.output(enc.bit_nodes[&b]);
+        }
+        (bld.finish(), order)
+    }
+
+    #[test]
+    fn every_strategy_matches_the_reference_bank() {
+        let th = vec![vec![-4, -1, 0, 3], vec![-2, 0, 0, 5]];
+        let used: Vec<u32> = vec![0, 1, 3, 4, 5, 6, 7];
+        let frac_bits = 3u32;
+        let width = (frac_bits + 1) as usize;
+        let (ref_net, ref_order) = build(&th, frac_bits, &used, 4, EncoderStrategy::Bank);
+        let mut ref_sim = Simulator::new(&ref_net);
+        for strategy in [
+            EncoderStrategy::Chain,
+            EncoderStrategy::Mux,
+            EncoderStrategy::Lut,
+            EncoderStrategy::Auto,
+        ] {
+            let (net, order) = build(&th, frac_bits, &used, 4, strategy);
+            assert_eq!(order, ref_order);
+            let mut sim = Simulator::new(&net);
+            for x0 in -8i32..8 {
+                for x1 in -8i32..8 {
+                    let mut inputs = Vec::new();
+                    for x in [x0, x1] {
+                        let bits = fixed::int_to_bits(x, frac_bits);
+                        for i in 0..width {
+                            inputs.push((bits >> i) & 1 == 1);
+                        }
+                    }
+                    assert_eq!(
+                        sim.eval(&inputs),
+                        ref_sim.eval(&inputs),
+                        "{} x0={x0} x1={x1}",
+                        strategy.label()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn distinct_comparator_count_matches_reference_semantics() {
+        let th = vec![vec![2, 2, 2, 2]];
+        let ir = EncoderIr::new(&th, 3, &[0, 1, 2, 3], 4);
+        for strategy in [EncoderStrategy::Bank, EncoderStrategy::Chain] {
+            let plan = plan_encoders(&ir, strategy, None);
+            let mut bld = Builder::new();
+            let enc = synthesize(&mut bld, &ir, &plan);
+            assert_eq!(enc.distinct_comparators, 1);
+            assert_eq!(enc.bit_nodes.len(), 4);
+        }
+    }
+}

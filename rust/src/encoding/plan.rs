@@ -1,0 +1,302 @@
+//! Encoder planning: strategy selection per feature under an optional depth
+//! budget.
+//!
+//! A fixed strategy pins every feature to one micro-architecture (falling
+//! back to the reference bank where unsupported, e.g. `lut` on wide words).
+//! `auto` measures every candidate per feature with the real mapper
+//! ([`crate::encoding::cost::measure_feature`]) and picks the cheapest; the
+//! bank is always a candidate and wins ties, so an unbudgeted auto plan
+//! never selects an architecture that measures worse than the reference on
+//! any feature. Two caveats bound that guarantee: (1) a depth budget
+//! deliberately trades area for depth — if the bank itself misses the
+//! budget, auto may pick a shallower-but-larger architecture; (2) the
+//! guarantee is over isolated per-feature mappings (the quantity planning
+//! can actually observe) — full-design component attribution assigns each
+//! physical LUT by its cone root, and cones straddling the encoder/LUT-layer
+//! boundary can shift a few LUTs either way between architectures.
+
+use super::arch::ArchKind;
+use super::cost::{self, CostEstimate};
+use super::ir::{EncoderIr, FeatureIr};
+use anyhow::bail;
+
+/// User-facing encoder selection knob (`--encoder` on the CLI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EncoderStrategy {
+    /// Per-feature cheapest architecture by measured cost.
+    Auto,
+    Bank,
+    Chain,
+    Mux,
+    Lut,
+}
+
+impl Default for EncoderStrategy {
+    /// The reference bank, so existing flows are bit- and cost-identical to
+    /// the seed generator unless a strategy is requested.
+    fn default() -> Self {
+        EncoderStrategy::Bank
+    }
+}
+
+impl EncoderStrategy {
+    pub fn label(&self) -> &'static str {
+        match self {
+            EncoderStrategy::Auto => "auto",
+            EncoderStrategy::Bank => "bank",
+            EncoderStrategy::Chain => "chain",
+            EncoderStrategy::Mux => "mux",
+            EncoderStrategy::Lut => "lut",
+        }
+    }
+
+    /// The pinned architecture, if this is a fixed strategy.
+    pub fn arch(&self) -> Option<ArchKind> {
+        match self {
+            EncoderStrategy::Auto => None,
+            EncoderStrategy::Bank => Some(ArchKind::Bank),
+            EncoderStrategy::Chain => Some(ArchKind::Chain),
+            EncoderStrategy::Mux => Some(ArchKind::Mux),
+            EncoderStrategy::Lut => Some(ArchKind::Lut),
+        }
+    }
+}
+
+impl std::str::FromStr for EncoderStrategy {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "auto" => EncoderStrategy::Auto,
+            "bank" => EncoderStrategy::Bank,
+            "chain" => EncoderStrategy::Chain,
+            "mux" => EncoderStrategy::Mux,
+            "lut" => EncoderStrategy::Lut,
+            _ => bail!("unknown encoder strategy '{s}' (auto|bank|chain|mux|lut)"),
+        })
+    }
+}
+
+/// Planned lowering for one feature.
+#[derive(Debug, Clone)]
+pub struct FeaturePlan {
+    pub feature: usize,
+    /// Chosen micro-architecture.
+    pub arch: ArchKind,
+    /// Analytic cost of the chosen architecture.
+    pub modeled: CostEstimate,
+    /// Mapper-measured cost of the chosen architecture (populated by `auto`
+    /// planning; `None` for fixed strategies, which skip measurement).
+    pub measured: Option<CostEstimate>,
+    /// Every candidate considered, with the cost used for selection.
+    pub candidates: Vec<(ArchKind, CostEstimate)>,
+    /// True when an unsupported fixed strategy fell back to the bank.
+    pub fallback: bool,
+    /// Distinct thresholds (fundamental comparison count).
+    pub distinct: usize,
+    /// Used encoder output bits.
+    pub used: usize,
+}
+
+/// A complete encoder plan for one model variant.
+#[derive(Debug, Clone)]
+pub struct EncoderPlan {
+    pub strategy: EncoderStrategy,
+    /// Depth budget used for selection. Only consulted by `auto` planning;
+    /// a fixed strategy is an explicit pin and ignores it.
+    pub depth_budget: Option<usize>,
+    pub per_feature: Vec<FeaturePlan>,
+}
+
+impl EncoderPlan {
+    /// Architecture chosen for a feature index.
+    pub fn arch_for(&self, feature: usize) -> ArchKind {
+        self.per_feature[feature].arch
+    }
+
+    /// Design-level analytic cost (LUTs add, depth is the feature max).
+    pub fn total_modeled(&self) -> CostEstimate {
+        self.per_feature
+            .iter()
+            .fold(CostEstimate::ZERO, |acc, f| acc.merge(f.modeled))
+    }
+
+    /// Design-level measured cost, when every feature was measured.
+    pub fn total_measured(&self) -> Option<CostEstimate> {
+        let mut acc = CostEstimate::ZERO;
+        for f in &self.per_feature {
+            acc = acc.merge(f.measured?);
+        }
+        Some(acc)
+    }
+}
+
+/// Plan every feature of `ir` under `strategy`.
+pub fn plan_encoders(
+    ir: &EncoderIr,
+    strategy: EncoderStrategy,
+    depth_budget: Option<usize>,
+) -> EncoderPlan {
+    let width = ir.width();
+    let per_feature = ir
+        .features
+        .iter()
+        .map(|feat| plan_feature(feat, width, strategy, depth_budget))
+        .collect();
+    EncoderPlan { strategy, depth_budget, per_feature }
+}
+
+fn plan_feature(
+    feat: &FeatureIr,
+    width: usize,
+    strategy: EncoderStrategy,
+    depth_budget: Option<usize>,
+) -> FeaturePlan {
+    let distinct = feat.distinct_used().len();
+    let used = feat.used_count();
+
+    if let Some(pinned) = strategy.arch() {
+        let (arch, fallback) = if pinned.supports(width) {
+            (pinned, false)
+        } else {
+            (ArchKind::Bank, true)
+        };
+        let modeled = arch.estimate(feat, width);
+        return FeaturePlan {
+            feature: feat.index,
+            arch,
+            modeled,
+            measured: None,
+            candidates: vec![(arch, modeled)],
+            fallback,
+            distinct,
+            used,
+        };
+    }
+
+    // Auto: measure every supported candidate with the real mapper.
+    let candidates: Vec<(ArchKind, CostEstimate)> = ArchKind::ALL
+        .iter()
+        .filter(|k| k.supports(width))
+        .map(|&k| (k, cost::measure_feature(k, feat, width)))
+        .collect();
+
+    // Depth budget filters candidates; if nothing fits, fall back to the
+    // shallowest candidate (the budget is best-effort, not a hard error).
+    let eligible: Vec<(ArchKind, CostEstimate)> = match depth_budget {
+        Some(b) => candidates.iter().copied().filter(|(_, c)| c.depth <= b).collect(),
+        None => candidates.clone(),
+    };
+    let chosen = if eligible.is_empty() {
+        // No candidate meets the budget: minimize depth, then LUTs.
+        *candidates
+            .iter()
+            .min_by_key(|(_, c)| (c.depth, c.luts))
+            .expect("at least the bank is always a candidate")
+    } else {
+        // Minimize LUTs; strict comparison keeps the bank (listed first) on
+        // ties, preserving the never-worse-than-reference guarantee.
+        let mut best = eligible[0];
+        for &(k, c) in &eligible[1..] {
+            if c.luts < best.1.luts {
+                best = (k, c);
+            }
+        }
+        best
+    };
+
+    FeaturePlan {
+        feature: feat.index,
+        arch: chosen.0,
+        modeled: chosen.0.estimate(feat, width),
+        measured: Some(chosen.1),
+        candidates,
+        fallback: false,
+        distinct,
+        used,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::encoding::ir::EncoderIr;
+
+    fn test_ir(frac_bits: u32) -> EncoderIr {
+        let th = vec![
+            vec![-4, -1, 0, 3, 3, 5],
+            vec![-2, 0, 1, 5, 6, 7],
+            vec![0, 0, 0, 0, 0, 0],
+        ];
+        let used: Vec<u32> = (0..18).collect();
+        EncoderIr::new(&th, frac_bits, &used, 6)
+    }
+
+    #[test]
+    fn strategy_parses() {
+        for s in ["auto", "bank", "chain", "mux", "lut"] {
+            let st: EncoderStrategy = s.parse().unwrap();
+            assert_eq!(st.label(), s);
+        }
+        assert!("vivado".parse::<EncoderStrategy>().is_err());
+        assert_eq!(EncoderStrategy::default(), EncoderStrategy::Bank);
+    }
+
+    #[test]
+    fn auto_never_exceeds_bank_measured() {
+        let ir = test_ir(3);
+        let plan = plan_encoders(&ir, EncoderStrategy::Auto, None);
+        for fp in &plan.per_feature {
+            let bank = fp
+                .candidates
+                .iter()
+                .find(|(k, _)| *k == ArchKind::Bank)
+                .expect("bank always considered")
+                .1;
+            let chosen = fp.measured.expect("auto measures");
+            assert!(
+                chosen.luts <= bank.luts,
+                "feature {}: {} luts {} > bank {}",
+                fp.feature,
+                fp.arch.label(),
+                chosen.luts,
+                bank.luts
+            );
+        }
+        assert!(plan.total_measured().is_some());
+    }
+
+    #[test]
+    fn fixed_lut_falls_back_on_wide_words() {
+        let ir = test_ir(7); // width 8 > 6
+        let plan = plan_encoders(&ir, EncoderStrategy::Lut, None);
+        for fp in &plan.per_feature {
+            assert_eq!(fp.arch, ArchKind::Bank);
+            assert!(fp.fallback);
+        }
+        let narrow = plan_encoders(&test_ir(3), EncoderStrategy::Lut, None);
+        for fp in &narrow.per_feature {
+            assert_eq!(fp.arch, ArchKind::Lut);
+            assert!(!fp.fallback);
+        }
+    }
+
+    #[test]
+    fn unsatisfiable_depth_budget_minimizes_depth() {
+        let ir = test_ir(3);
+        let plan = plan_encoders(&ir, EncoderStrategy::Auto, Some(0));
+        for fp in &plan.per_feature {
+            let min_depth = fp.candidates.iter().map(|(_, c)| c.depth).min().unwrap();
+            assert_eq!(fp.measured.unwrap().depth, min_depth);
+        }
+    }
+
+    #[test]
+    fn generous_depth_budget_matches_unbudgeted() {
+        let ir = test_ir(3);
+        let a = plan_encoders(&ir, EncoderStrategy::Auto, None);
+        let b = plan_encoders(&ir, EncoderStrategy::Auto, Some(1000));
+        let archs = |p: &EncoderPlan| p.per_feature.iter().map(|f| f.arch).collect::<Vec<_>>();
+        assert_eq!(archs(&a), archs(&b));
+    }
+}

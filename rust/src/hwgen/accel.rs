@@ -1,7 +1,8 @@
 //! Full-accelerator composition (paper Fig. 1) with per-component node
 //! attribution for the Fig. 5 breakdown.
 
-use super::{argmax, encoder, lutlayer, popcount};
+use super::{argmax, lutlayer, popcount};
+use crate::encoding::{self, EncoderIr, EncoderPlan, EncoderStrategy};
 use crate::logic::net::NodeId;
 use crate::logic::{Builder, Network};
 use crate::model::{DwnModel, Variant};
@@ -50,11 +51,35 @@ pub struct AccelOptions {
     /// Use the uniform threshold set instead of the distributive one
     /// (ablation; PEN-family only). Thresholds are quantized on the fly.
     pub uniform_encoding: bool,
+    /// Encoder micro-architecture selection (PEN-family only). Defaults to
+    /// the reference comparator bank; `auto` picks the cheapest measured
+    /// architecture per feature (see [`crate::encoding`]).
+    pub encoder: EncoderStrategy,
+    /// Optional LUT-depth budget for `auto` encoder selection.
+    pub encoder_depth_budget: Option<usize>,
+    /// Precomputed encoder plan to reuse (skips re-planning — `auto`
+    /// planning runs the mapper per feature, so callers that already
+    /// planned, like `dwn encoders`, pass it in). Must match the model
+    /// variant's IR feature count.
+    pub encoder_plan: Option<EncoderPlan>,
 }
 
 impl AccelOptions {
     pub fn new(variant: Variant) -> Self {
-        Self { variant, expose_scores: false, uniform_encoding: false }
+        Self {
+            variant,
+            expose_scores: false,
+            uniform_encoding: false,
+            encoder: EncoderStrategy::default(),
+            encoder_depth_budget: None,
+            encoder_plan: None,
+        }
+    }
+
+    /// Builder-style encoder strategy override.
+    pub fn with_encoder(mut self, encoder: EncoderStrategy) -> Self {
+        self.encoder = encoder;
+        self
     }
 }
 
@@ -64,8 +89,13 @@ pub struct Accelerator {
     pub input_kind: InputKind,
     /// Gate-index ranges per component (for attributing mapped LUTs).
     pub ranges: Vec<(Component, std::ops::Range<usize>)>,
-    /// Distinct comparators in the encoder stage (0 for TEN).
+    /// Distinct threshold comparisons the encoder stage must realize (0 for
+    /// TEN). Architecture-independent: the bank instantiates exactly this
+    /// many comparators, while chain/mux/lut realize the same comparisons
+    /// with shared or restructured logic.
     pub distinct_comparators: usize,
+    /// Encoder plan used for the PEN-family encoder stage (None for TEN).
+    pub encoder_plan: Option<EncoderPlan>,
     pub num_classes: usize,
     /// Width of each class score word.
     pub score_width: usize,
@@ -75,45 +105,40 @@ pub struct Accelerator {
 pub fn build_accelerator(model: &DwnModel, opts: &AccelOptions) -> Result<Accelerator> {
     let mut bld = Builder::new();
     let (sel, tables) = model.mapping_for(opts.variant);
-    let used = model.used_bits(opts.variant);
     let mut ranges = Vec::new();
 
     // ---- Stage 1: thermometer encoding (PEN family) or direct bits (TEN).
     let mark0 = bld.net.len();
+    let mut encoder_plan = None;
     let (bit_of, input_kind, distinct): (Box<dyn Fn(u32) -> NodeId>, InputKind, usize) =
         match opts.variant {
             Variant::Ten => {
+                let used = model.used_bits(opts.variant);
                 let ins = bld.inputs(used.len());
                 let map: std::collections::HashMap<u32, NodeId> =
                     used.iter().copied().zip(ins).collect();
                 (
                     Box::new(move |b| map[&b]),
-                    InputKind::ThermometerBits { used_bits: used.clone() },
+                    InputKind::ThermometerBits { used_bits: used },
                     0,
                 )
             }
             Variant::Pen | Variant::PenFt => {
-                let (ints, frac_bits) = model.threshold_ints_for(opts.variant)?;
-                let ints_owned: Vec<Vec<i32>>;
-                let ints = if opts.uniform_encoding {
-                    ints_owned = quantize_uniform(model, frac_bits);
-                    &ints_owned[..]
-                } else {
-                    ints
+                let ir = EncoderIr::from_model(model, opts.variant, opts.uniform_encoding)?;
+                let plan = match &opts.encoder_plan {
+                    Some(p) => p.clone(),
+                    None => {
+                        encoding::plan_encoders(&ir, opts.encoder, opts.encoder_depth_budget)
+                    }
                 };
-                let bank = encoder::build_encoders(
-                    &mut bld,
-                    ints,
-                    frac_bits,
-                    &used,
-                    model.thermo_bits,
-                );
-                let map = bank.bit_nodes;
-                let width = (frac_bits + 1) as usize;
+                let enc = encoding::synthesize(&mut bld, &ir, &plan);
+                let width = ir.width();
+                let map = enc.bit_nodes;
+                encoder_plan = Some(plan);
                 (
                     Box::new(move |b| map[&b]),
                     InputKind::FixedPoint { features: model.num_features, width },
-                    bank.distinct_comparators,
+                    enc.distinct_comparators,
                 )
             }
         };
@@ -155,22 +180,10 @@ pub fn build_accelerator(model: &DwnModel, opts: &AccelOptions) -> Result<Accele
         input_kind,
         ranges,
         distinct_comparators: distinct,
+        encoder_plan,
         num_classes: model.num_classes,
         score_width,
     })
-}
-
-/// Quantize the model's uniform thresholds to the same fixed-point grid.
-fn quantize_uniform(model: &DwnModel, frac_bits: u32) -> Vec<Vec<i32>> {
-    model
-        .uniform_thresholds
-        .iter()
-        .map(|row| {
-            row.iter()
-                .map(|&t| crate::util::fixed::threshold_to_int(t, frac_bits))
-                .collect()
-        })
-        .collect()
 }
 
 impl Accelerator {

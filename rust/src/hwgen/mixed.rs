@@ -106,6 +106,35 @@ pub fn search(
     Ok(MixedPrecision { bits, acc, base_acc })
 }
 
+/// Modeled encoder LUT cost at a per-feature bit assignment, using the
+/// encoding subsystem's analytic bank model (the PEN-family reference): each
+/// feature's thresholds re-quantize to its own grid, so cost falls with both
+/// narrower words and collapsing duplicate thresholds.
+pub fn encoder_cost_estimate(model: &DwnModel, variant: Variant, bits: &[u32]) -> usize {
+    use crate::encoding::{ArchKind, FeatureIr};
+    let used = model.used_bits(variant);
+    let mut per_feature: Vec<Vec<usize>> = vec![Vec::new(); model.num_features];
+    for &b in &used {
+        let (f, t) = model.bit_to_feature_level(b);
+        per_feature[f].push(t);
+    }
+    per_feature
+        .iter()
+        .enumerate()
+        .map(|(f, levels)| {
+            if levels.is_empty() {
+                return 0;
+            }
+            let thresholds: Vec<i32> = model.thresholds[f]
+                .iter()
+                .map(|&t| fixed::threshold_to_int(t, bits[f]))
+                .collect();
+            let feat = FeatureIr { index: f, thresholds, used_levels: levels.clone() };
+            ArchKind::Bank.estimate(&feat, bits[f] as usize + 1).luts
+        })
+        .sum()
+}
+
 /// Encoder input-bit total (the hardware driver of mixed precision): sum of
 /// per-feature word widths over features that actually have comparators.
 pub fn encoder_input_bits(model: &DwnModel, variant: Variant, bits: &[u32]) -> usize {

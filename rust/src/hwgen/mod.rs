@@ -2,10 +2,11 @@
 //!
 //! Generates a gate-level design for a trained [`DwnModel`](crate::model::DwnModel):
 //!
-//! * [`encoder`] — the thermometer encoding stage (paper Fig. 3): one signed
-//!   fixed-point comparator per *used* threshold (unused encoder outputs are
-//!   pruned, exactly like the paper's generator, which derives the mapping
-//!   "directly from the trained software model").
+//! * the thermometer encoding stage (paper Fig. 3) is lowered through
+//!   [`crate::encoding`]: by default one signed fixed-point comparator per
+//!   *used* threshold (unused encoder outputs are pruned, exactly like the
+//!   paper's generator), with alternative micro-architectures selectable
+//!   via [`AccelOptions`]' `encoder` field.
 //! * [`lutlayer`] — the trained 6-input truth tables, one native LUT each.
 //! * [`popcount`] — per-class compressor-tree popcounts (FloPoCo-style).
 //! * [`argmax`] — pairwise compare-select reduction (paper Fig. 4), ties to
@@ -15,7 +16,6 @@
 
 pub mod accel;
 pub mod argmax;
-pub mod encoder;
 pub mod lutlayer;
 pub mod mixed;
 pub mod popcount;

@@ -9,6 +9,9 @@
 //! Layer map:
 //! * [`runtime`] — PJRT execution of the AOT-lowered JAX model (golden path)
 //! * [`logic`], [`techmap`], [`timing`] — the logic-synthesis substrate
+//! * [`encoding`] — encoder synthesis: the encoder IR, four pluggable
+//!   micro-architectures (bank/chain/mux/lut), cost models, and the
+//!   per-feature auto-selector (DESIGN.md §encoding)
 //! * [`hwgen`] — the paper's contribution: the DWN hardware generator
 //!   including the thermometer-encoding stage
 //! * [`coordinator`] — batching inference server on top of [`runtime`]
@@ -18,6 +21,7 @@ pub mod baselines;
 pub mod coordinator;
 pub mod config;
 pub mod data;
+pub mod encoding;
 pub mod hwgen;
 pub mod json;
 pub mod logic;

@@ -1,12 +1,13 @@
 //! `dwn` CLI — leader entrypoint for the DWN accelerator toolkit.
 //!
 //! Subcommands:
-//!   generate  --model sm-10 --variant penft [--uniform]   generate + map + STA, print the report
-//!   breakdown --model sm-10 --variant penft               Fig.5-style component LUT breakdown
-//!   verify    --model sm-10 --variant penft [--n 512]     netlist sim vs golden vectors
+//!   generate  --model sm-10 --variant penft [--uniform] [--encoder S]   generate + map + STA, print the report
+//!   breakdown --model sm-10 --variant penft [--encoder S]               Fig.5-style component LUT breakdown
+//!   encoders  --model sm-10 --variant penft [--encoder auto]            per-feature encoder architecture/cost table
+//!   verify    --model sm-10 --variant penft [--n 512]                   netlist sim vs golden vectors
 //!   serve     --model sm-10 [--backend pjrt|netlist] [--requests N]
-//!   accuracy  --model sm-10 --variant penft               netlist accuracy on the test set
-//!   info                                                  artifact/manifest summary
+//!   accuracy  --model sm-10 --variant penft                             netlist accuracy on the test set
+//!   info                                                                artifact/manifest summary
 //!
 //! Artifacts root: --artifacts PATH or $DWN_ARTIFACTS (default ./artifacts).
 
@@ -14,7 +15,8 @@ use anyhow::{anyhow, bail, Context, Result};
 use dwn::config::{Args, Artifacts};
 use dwn::coordinator::{Backend, Server, ServerConfig};
 use dwn::data::Dataset;
-use dwn::hwgen::{build_accelerator, AccelOptions};
+use dwn::encoding::{self, ArchKind, EncoderIr, EncoderStrategy};
+use dwn::hwgen::{build_accelerator, AccelOptions, Component};
 use dwn::model::{DwnModel, Variant};
 use dwn::report::{f1, int, Table};
 use dwn::runtime::Engine;
@@ -30,15 +32,6 @@ fn main() {
     }
 }
 
-fn parse_variant(s: &str) -> Result<Variant> {
-    Ok(match s {
-        "ten" => Variant::Ten,
-        "pen" => Variant::Pen,
-        "penft" => Variant::PenFt,
-        _ => bail!("unknown variant '{s}' (ten|pen|penft)"),
-    })
-}
-
 fn run() -> Result<()> {
     let mut argv = std::env::args().skip(1);
     let cmd = argv.next().unwrap_or_else(|| "help".to_string());
@@ -50,6 +43,7 @@ fn run() -> Result<()> {
     match cmd.as_str() {
         "generate" => cmd_generate(&artifacts, &args),
         "breakdown" => cmd_breakdown(&artifacts, &args),
+        "encoders" => cmd_encoders(&artifacts, &args),
         "verify" => cmd_verify(&artifacts, &args),
         "serve" => cmd_serve(&artifacts, &args),
         "accuracy" => cmd_accuracy(&artifacts, &args),
@@ -65,8 +59,11 @@ fn run() -> Result<()> {
 }
 
 const HELP: &str = "dwn — DWN FPGA accelerator generator (thermometer-encoding reproduction)
-commands: generate | breakdown | verify | serve | accuracy | emit-rtl | mixed | info | help
+commands: generate | breakdown | encoders | verify | serve | accuracy | emit-rtl | mixed | info | help
 common options: --artifacts PATH --model NAME --variant ten|pen|penft
+generate/breakdown: --encoder auto|bank|chain|mux|lut (default bank = reference comparator bank)
+encoders: per-feature encoder architecture selection + modeled vs mapped LUT cost
+          --encoder auto|bank|chain|mux|lut (default auto) --depth-budget N (auto only)
 emit-rtl: --out design.v [--tb design_tb.v]    mixed: --start 8 --min 3 --tol 0.01";
 
 fn load_model(artifacts: &Artifacts, args: &Args) -> Result<DwnModel> {
@@ -76,9 +73,11 @@ fn load_model(artifacts: &Artifacts, args: &Args) -> Result<DwnModel> {
 
 fn cmd_generate(artifacts: &Artifacts, args: &Args) -> Result<()> {
     let model = load_model(artifacts, args)?;
-    let variant = parse_variant(&args.get_or("variant", "penft"))?;
+    let variant: Variant = args.get_parse("variant", Variant::PenFt)?;
     let mut opts = AccelOptions::new(variant);
     opts.uniform_encoding = args.has_flag("uniform");
+    opts.encoder = args.get_parse("encoder", EncoderStrategy::default())?;
+    opts.encoder_depth_budget = args.get_parse_opt("depth-budget")?;
     let t0 = Instant::now();
     let accel = build_accelerator(&model, &opts)?;
     let nl = accel.map(&MapConfig::default());
@@ -96,7 +95,12 @@ fn cmd_generate(artifacts: &Artifacts, args: &Args) -> Result<()> {
     t.row(&["latency (ns)".into(), f1(rep.latency_ns)]);
     t.row(&["AxD (LUT*ns)".into(), f1(rep.area_delay)]);
     t.row(&["gate network size".into(), int(accel.net.len())]);
-    t.row(&["distinct comparators".into(), int(accel.distinct_comparators)]);
+    t.row(&["distinct threshold cmps".into(), int(accel.distinct_comparators)]);
+    if let Some(plan) = &accel.encoder_plan {
+        t.row(&["encoder strategy".into(), plan.strategy.label().into()]);
+        let modeled = plan.total_modeled();
+        t.row(&["modeled encoder LUTs".into(), int(modeled.luts)]);
+    }
     t.row(&["input bits".into(), int(accel.input_bits())]);
     t.row(&["gen+map+sta time (ms)".into(), format!("{}", dt.as_millis())]);
     print!("{}", t.render());
@@ -105,11 +109,19 @@ fn cmd_generate(artifacts: &Artifacts, args: &Args) -> Result<()> {
 
 fn cmd_breakdown(artifacts: &Artifacts, args: &Args) -> Result<()> {
     let model = load_model(artifacts, args)?;
-    let variant = parse_variant(&args.get_or("variant", "penft"))?;
-    let accel = build_accelerator(&model, &AccelOptions::new(variant))?;
+    let variant: Variant = args.get_parse("variant", Variant::PenFt)?;
+    let encoder: EncoderStrategy = args.get_parse("encoder", EncoderStrategy::default())?;
+    let mut opts = AccelOptions::new(variant).with_encoder(encoder);
+    opts.encoder_depth_budget = args.get_parse_opt("depth-budget")?;
+    let accel = build_accelerator(&model, &opts)?;
     let (nl, counts) = accel.map_with_breakdown(&MapConfig::default());
     let mut t = Table::new(
-        &format!("Component breakdown {} ({})", model.name, variant.label()),
+        &format!(
+            "Component breakdown {} ({}, encoder {})",
+            model.name,
+            variant.label(),
+            encoder.label()
+        ),
         &["component", "LUTs", "share"],
     );
     let total = nl.lut_count().max(1);
@@ -125,9 +137,131 @@ fn cmd_breakdown(artifacts: &Artifacts, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Per-feature encoder synthesis report: architecture selection plus modeled
+/// (analytic) vs mapped (measured) LUT cost, with every candidate shown.
+fn cmd_encoders(artifacts: &Artifacts, args: &Args) -> Result<()> {
+    let model = load_model(artifacts, args)?;
+    let variant: Variant = args.get_parse("variant", Variant::PenFt)?;
+    let strategy: EncoderStrategy = args.get_parse("encoder", EncoderStrategy::Auto)?;
+    let depth_budget: Option<usize> = args.get_parse_opt("depth-budget")?;
+    if depth_budget.is_some() && strategy != EncoderStrategy::Auto {
+        println!("note: --depth-budget only influences selection under --encoder auto");
+    }
+    let ir = EncoderIr::from_model(&model, variant, args.has_flag("uniform"))?;
+    let plan = encoding::plan_encoders(&ir, strategy, depth_budget);
+    let width = ir.width();
+
+    let mut t = Table::new(
+        &format!(
+            "Encoder synthesis {} ({}, strategy {}, {}-bit words)",
+            model.name,
+            variant.label(),
+            strategy.label(),
+            width
+        ),
+        &["feature", "distinct", "used", "arch", "modeled LUTs", "mapped LUTs", "depth",
+          "bank", "chain", "mux", "lut"],
+    );
+    let mut total_modeled = 0usize;
+    let mut total_mapped = 0usize;
+    for fp in &plan.per_feature {
+        let feat = &ir.features[fp.feature];
+        // Mapper-measured cost per supported architecture, computed once per
+        // feature: auto planning already measured every candidate; fixed
+        // strategies stored analytic estimates, so measure here instead —
+        // every column stays in mapper-measured units with no duplicate runs.
+        let measured: Vec<(ArchKind, encoding::CostEstimate)> = ArchKind::ALL
+            .iter()
+            .filter(|k| k.supports(width))
+            .map(|&kind| {
+                let c = fp
+                    .measured
+                    .and_then(|_| {
+                        fp.candidates.iter().find(|(k, _)| *k == kind).map(|&(_, c)| c)
+                    })
+                    .unwrap_or_else(|| encoding::cost::measure_feature(kind, feat, width));
+                (kind, c)
+            })
+            .collect();
+        let mapped = measured
+            .iter()
+            .find(|(k, _)| *k == fp.arch)
+            .map(|&(_, c)| c)
+            .expect("chosen arch is always supported");
+        let col = |kind: ArchKind| -> String {
+            measured
+                .iter()
+                .find(|(k, _)| *k == kind)
+                .map(|(_, c)| c.luts.to_string())
+                .unwrap_or_else(|| "-".into())
+        };
+        total_modeled += fp.modeled.luts;
+        total_mapped += mapped.luts;
+        t.row(&[
+            format!("f{}{}", fp.feature, if fp.fallback { "*" } else { "" }),
+            fp.distinct.to_string(),
+            fp.used.to_string(),
+            fp.arch.label().into(),
+            fp.modeled.luts.to_string(),
+            mapped.luts.to_string(),
+            mapped.depth.to_string(),
+            col(ArchKind::Bank),
+            col(ArchKind::Chain),
+            col(ArchKind::Mux),
+            col(ArchKind::Lut),
+        ]);
+    }
+    t.row(&[
+        "total".into(),
+        int(ir.total_distinct()),
+        int(ir.total_used()),
+        "".into(),
+        int(total_modeled),
+        int(total_mapped),
+        "".into(),
+        "".into(),
+        "".into(),
+        "".into(),
+        "".into(),
+    ]);
+    print!("{}", t.render());
+    if plan.per_feature.iter().any(|f| f.fallback) {
+        println!("(* fixed strategy unsupported at this width; fell back to bank)");
+    }
+
+    // Whole-design cross-check: mapped encoder attribution within the full
+    // accelerator, against the reference bank. Reuse the plan printed above
+    // so the numbers describe the same architecture choices (incl. budget).
+    let mut opts = AccelOptions::new(variant).with_encoder(strategy);
+    opts.uniform_encoding = args.has_flag("uniform");
+    opts.encoder_depth_budget = depth_budget;
+    opts.encoder_plan = Some(plan.clone());
+    let accel = build_accelerator(&model, &opts)?;
+    let (_, counts) = accel.map_with_breakdown(&MapConfig::default());
+    let enc_of = |c: &[(Component, usize)]| {
+        c.iter().find(|(k, _)| *k == Component::Encoder).map(|(_, n)| *n).unwrap_or(0)
+    };
+    let reference_luts = if plan.per_feature.iter().all(|f| f.arch == ArchKind::Bank) {
+        enc_of(&counts) // this build already is the bank reference
+    } else {
+        let mut ref_opts = AccelOptions::new(variant);
+        ref_opts.uniform_encoding = args.has_flag("uniform");
+        let reference = build_accelerator(&model, &ref_opts)?;
+        let (_, ref_counts) = reference.map_with_breakdown(&MapConfig::default());
+        enc_of(&ref_counts)
+    };
+    println!(
+        "full-design encoder LUTs: {} ({}) vs {} (bank reference)",
+        enc_of(&counts),
+        strategy.label(),
+        reference_luts
+    );
+    Ok(())
+}
+
 fn cmd_verify(artifacts: &Artifacts, args: &Args) -> Result<()> {
     let model = load_model(artifacts, args)?;
-    let variant = parse_variant(&args.get_or("variant", "penft"))?;
+    let variant: Variant = args.get_parse("variant", Variant::PenFt)?;
     let n = args.get_usize("n", 512)?;
     let out = dwn::verify::verify_against_golden(artifacts, &model, variant, n)?;
     println!(
@@ -145,7 +279,7 @@ fn cmd_verify(artifacts: &Artifacts, args: &Args) -> Result<()> {
 
 fn cmd_accuracy(artifacts: &Artifacts, args: &Args) -> Result<()> {
     let model = load_model(artifacts, args)?;
-    let variant = parse_variant(&args.get_or("variant", "penft"))?;
+    let variant: Variant = args.get_parse("variant", Variant::PenFt)?;
     let test = Dataset::load_csv(&artifacts.dataset_path("test"))?;
     let accel = build_accelerator(&model, &AccelOptions::new(variant))?;
     let nl = accel.map(&MapConfig::default());
@@ -275,7 +409,7 @@ fn cmd_serve(artifacts: &Artifacts, args: &Args) -> Result<()> {
 fn cmd_emit_rtl(artifacts: &Artifacts, args: &Args) -> Result<()> {
     use dwn::hwgen::rtl;
     let model = load_model(artifacts, args)?;
-    let variant = parse_variant(&args.get_or("variant", "penft"))?;
+    let variant: Variant = args.get_parse("variant", Variant::PenFt)?;
     let accel = build_accelerator(&model, &AccelOptions::new(variant))?;
     let nl = accel.map(&MapConfig::default());
     let opts = rtl::RtlOptions {
@@ -339,7 +473,7 @@ fn golden_vectors(
 fn cmd_mixed(artifacts: &Artifacts, args: &Args) -> Result<()> {
     use dwn::hwgen::mixed;
     let model = load_model(artifacts, args)?;
-    let variant = parse_variant(&args.get_or("variant", "ten"))?;
+    let variant: Variant = args.get_parse("variant", Variant::Ten)?;
     let test = Dataset::load_csv(&artifacts.dataset_path("test"))?;
     let start = args.get_usize("start", 8)? as u32;
     let min = args.get_usize("min", 3)? as u32;
@@ -358,6 +492,11 @@ fn cmd_mixed(artifacts: &Artifacts, args: &Args) -> Result<()> {
         "  encoder input bits: {} (uniform) -> {} (mixed)",
         mixed::encoder_input_bits(&model, variant, &vec![start; model.num_features]),
         mixed::encoder_input_bits(&model, variant, &mp.bits)
+    );
+    println!(
+        "  modeled encoder LUTs (bank): {} (uniform) -> {} (mixed)",
+        mixed::encoder_cost_estimate(&model, variant, &vec![start; model.num_features]),
+        mixed::encoder_cost_estimate(&model, variant, &mp.bits)
     );
     Ok(())
 }

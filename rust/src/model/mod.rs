@@ -75,6 +75,21 @@ impl Variant {
     }
 }
 
+impl std::str::FromStr for Variant {
+    type Err = anyhow::Error;
+
+    /// Parse the CLI/bench spelling of a variant (shared by `dwn --variant`
+    /// and the figure drivers).
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "ten" => Variant::Ten,
+            "pen" => Variant::Pen,
+            "penft" | "pen+ft" | "pen-ft" => Variant::PenFt,
+            _ => bail!("unknown variant '{s}' (ten|pen|penft)"),
+        })
+    }
+}
+
 impl DwnModel {
     pub fn load(path: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(path)

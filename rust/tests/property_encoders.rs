@@ -1,0 +1,178 @@
+//! Property tests over the encoder synthesis subsystem: every micro-
+//! architecture must be bit-exact against the reference comparator bank on
+//! random threshold grids (duplicates and pruning included), across random
+//! and boundary fixed-point inputs; and `auto` planning must never choose an
+//! architecture that maps to more LUTs than the bank for any feature.
+
+use dwn::encoding::{plan_encoders, synthesize, ArchKind, EncoderIr, EncoderStrategy};
+use dwn::logic::{Network, Simulator};
+use dwn::logic::Builder;
+use dwn::util::fixed;
+use dwn::util::SplitMix64;
+
+/// Random encoder IR: 1-3 features, T 1-8 levels, width 3-7 bits, threshold
+/// grids drawn coarse enough to force duplicates, used bits randomly pruned.
+fn random_ir(rng: &mut SplitMix64) -> EncoderIr {
+    let num_features = 1 + rng.below(3) as usize;
+    let frac_bits = 2 + rng.below(5) as u32; // width 3..=7
+    let thermo = 1 + rng.below(8) as usize;
+    let lo = -(1i64 << frac_bits);
+    let hi = (1i64 << frac_bits) - 1;
+    let thresholds: Vec<Vec<i32>> = (0..num_features)
+        .map(|_| {
+            let mut row: Vec<i32> = (0..thermo)
+                .map(|_| (lo + rng.below((hi - lo + 1) as u64) as i64) as i32)
+                .collect();
+            row.sort_unstable(); // model thresholds arrive sorted ascending
+            row
+        })
+        .collect();
+    let mut used: Vec<u32> = (0..(num_features * thermo) as u32)
+        .filter(|_| rng.below(4) != 0) // keep ~75%
+        .collect();
+    if used.is_empty() {
+        used.push(rng.below((num_features * thermo) as u64) as u32);
+    }
+    EncoderIr::new(&thresholds, frac_bits, &used, thermo)
+}
+
+/// Lower `ir` under `strategy` with outputs in sorted used-bit order.
+fn build(ir: &EncoderIr, strategy: EncoderStrategy) -> Network {
+    let plan = plan_encoders(ir, strategy, None);
+    let mut bld = Builder::new();
+    let enc = synthesize(&mut bld, ir, &plan);
+    let mut order: Vec<u32> = enc.bit_nodes.keys().copied().collect();
+    order.sort_unstable();
+    for &b in &order {
+        bld.output(enc.bit_nodes[&b]);
+    }
+    bld.finish()
+}
+
+/// Scalar input vector from per-feature grid integers.
+fn vector(ints: &[i32], frac_bits: u32) -> Vec<bool> {
+    let width = (frac_bits + 1) as usize;
+    let mut v = Vec::with_capacity(ints.len() * width);
+    for &x in ints {
+        let bits = fixed::int_to_bits(x, frac_bits);
+        for i in 0..width {
+            v.push((bits >> i) & 1 == 1);
+        }
+    }
+    v
+}
+
+#[test]
+fn prop_every_architecture_matches_bank() {
+    let mut rng = SplitMix64::new(0xE2C0DE);
+    for trial in 0..25 {
+        let ir = random_ir(&mut rng);
+        let frac_bits = ir.frac_bits;
+        let lo = -(1i32 << frac_bits);
+        let hi = (1i32 << frac_bits) - 1;
+        let reference = build(&ir, EncoderStrategy::Bank);
+        let mut ref_sim = Simulator::new(&reference);
+        for strategy in [
+            EncoderStrategy::Chain,
+            EncoderStrategy::Mux,
+            EncoderStrategy::Lut, // falls back to bank where width > 6
+            EncoderStrategy::Auto,
+        ] {
+            let net = build(&ir, strategy);
+            assert_eq!(net.num_inputs, reference.num_inputs, "trial {trial}");
+            let mut sim = Simulator::new(&net);
+
+            // 8 x 64 random lane-packed vectors.
+            for _ in 0..8 {
+                let lanes: Vec<u64> =
+                    (0..net.num_inputs).map(|_| rng.next_u64()).collect();
+                assert_eq!(
+                    sim.eval_lanes(&lanes),
+                    ref_sim.eval_lanes(&lanes),
+                    "{} trial {trial} (random lanes)",
+                    strategy.label()
+                );
+            }
+
+            // Boundary vectors: each feature pinned to t and t-1 for each of
+            // its thresholds, the other features random.
+            for (f, feat) in ir.features.iter().enumerate() {
+                for &t in &feat.thresholds {
+                    for x in [t, t.saturating_sub(1).max(lo)] {
+                        let ints: Vec<i32> = (0..ir.features.len())
+                            .map(|g| {
+                                if g == f {
+                                    x.clamp(lo, hi)
+                                } else {
+                                    lo + rng.below((hi - lo + 1) as u64) as i32
+                                }
+                            })
+                            .collect();
+                        let v = vector(&ints, frac_bits);
+                        assert_eq!(
+                            sim.eval(&v),
+                            ref_sim.eval(&v),
+                            "{} trial {trial} boundary f{f} x={x}",
+                            strategy.label()
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_auto_never_maps_worse_than_bank_per_feature() {
+    let mut rng = SplitMix64::new(0xA07D);
+    for trial in 0..10 {
+        let ir = random_ir(&mut rng);
+        let plan = plan_encoders(&ir, EncoderStrategy::Auto, None);
+        for fp in &plan.per_feature {
+            let bank = fp
+                .candidates
+                .iter()
+                .find(|(k, _)| *k == ArchKind::Bank)
+                .expect("bank is always a candidate")
+                .1;
+            let chosen = fp.measured.expect("auto planning measures");
+            assert!(
+                chosen.luts <= bank.luts,
+                "trial {trial} feature {}: {} mapped {} LUTs > bank {}",
+                fp.feature,
+                fp.arch.label(),
+                chosen.luts,
+                bank.luts
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_shared_thresholds_collapse_in_every_architecture() {
+    // All levels of the feature quantize to one grid point.
+    let th = vec![vec![3, 3, 3, 3, 3, 3]];
+    let ir = EncoderIr::new(&th, 3, &[0, 1, 2, 3, 4, 5], 6);
+    for strategy in [
+        EncoderStrategy::Bank,
+        EncoderStrategy::Chain,
+        EncoderStrategy::Mux,
+        EncoderStrategy::Lut,
+    ] {
+        let plan = plan_encoders(&ir, strategy, None);
+        let mut bld = Builder::new();
+        let enc = synthesize(&mut bld, &ir, &plan);
+        assert_eq!(enc.distinct_comparators, 1, "{}", strategy.label());
+        let uniq: std::collections::HashSet<_> = enc.bit_nodes.values().collect();
+        assert_eq!(uniq.len(), 1, "{}: all outputs must share one node", strategy.label());
+        // And the single shared output must still be correct.
+        let node = *enc.bit_nodes.values().next().unwrap();
+        bld.output(node);
+        let net = bld.finish();
+        let mut sim = Simulator::new(&net);
+        for x in -8i32..8 {
+            let v = vector(&[x], 3);
+            assert_eq!(sim.eval(&v)[0], x >= 3, "{} x={x}", strategy.label());
+        }
+    }
+}

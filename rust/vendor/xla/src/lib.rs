@@ -1,0 +1,119 @@
+//! Stub of the `xla` (xla_extension) PJRT bindings used by `dwn::runtime`.
+//!
+//! The real crate links a prebuilt libxla_extension which is not present in
+//! this container. This stub keeps every call site type-checking; the entry
+//! point ([`PjRtClient::cpu`]) fails with a clear message, so PJRT-backed
+//! paths report "backend unavailable" at runtime instead of breaking the
+//! build. Tests that need PJRT also need trained artifacts and already skip
+//! (or are `#[ignore]`d) when those are absent.
+
+use std::fmt;
+
+/// Error type mirroring `xla::Error`'s display behaviour.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Self {
+        Error(format!(
+            "{what}: PJRT backend unavailable (built against the in-tree xla stub; \
+             install xla_extension and swap the real `xla` crate in to enable it)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+type Result<T> = std::result::Result<T, Error>;
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Parsed HLO module (stub: parsing always fails).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<Self> {
+        Err(Error::unavailable("HloModuleProto::from_text_file"))
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation(())
+    }
+}
+
+/// Host literal (stub: carries no data).
+pub struct Literal(());
+
+impl Literal {
+    pub fn vec1<T>(_data: &[T]) -> Self {
+        Literal(())
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::unavailable("Literal::reshape"))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("Literal::to_tuple"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable("Literal::to_vec"))
+    }
+}
+
+/// Device buffer returned by execution.
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Loaded executable (stub: never constructible via public API, but the type
+/// and methods must exist for call sites to type-check).
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_construction_fails_cleanly() {
+        let e = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(e.to_string().contains("PJRT backend unavailable"));
+    }
+}
