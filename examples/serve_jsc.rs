@@ -1,15 +1,22 @@
-//! Serving scenario: stand up the batching coordinator over the AOT-compiled
-//! DWN model (PJRT backend) and drive it with an open-loop Poisson-ish
-//! arrival process at several request rates, reporting latency percentiles
-//! vs throughput — the classic serving curve, here for the JSC classifier.
+//! Serving scenario: stand up the batching coordinator over the JSC
+//! classifier and drive it with an open-loop Poisson-ish arrival process at
+//! several request rates, reporting latency percentiles vs throughput — the
+//! classic serving curve.
 //!
-//!     cargo run --release --example serve_jsc [-- --model sm-50]
+//! Backends: `pjrt` (AOT-compiled golden model), `netlist` (bit-accurate
+//! interpreter of the generated hardware), `compiled` (the netlist compiled
+//! into the wide/parallel execution engine — see DESIGN.md §engine).
+//!
+//!     cargo run --release --example serve_jsc -- \
+//!         [--model sm-50] [--backend pjrt|netlist|compiled] [--lanes 256] [--threads N]
 
 use dwn::config::{Args, Artifacts};
 use dwn::coordinator::{Backend, Server, ServerConfig};
 use dwn::data::Dataset;
-use dwn::model::DwnModel;
+use dwn::hwgen::{build_accelerator, AccelOptions};
+use dwn::model::{DwnModel, Variant};
 use dwn::runtime::Engine;
+use dwn::techmap::MapConfig;
 use dwn::util::SplitMix64;
 use std::time::{Duration, Instant};
 
@@ -18,21 +25,68 @@ fn main() -> anyhow::Result<()> {
     let artifacts = Artifacts::discover();
     anyhow::ensure!(artifacts.exists(), "run `make artifacts` first");
     let name = args.get_or("model", "sm-50");
+    let backend = args.get_or("backend", "pjrt");
     let model = DwnModel::load(&artifacts.model_path(&name))?;
     let test = Dataset::load_csv(&artifacts.dataset_path("test"))?;
 
-    let batch = artifacts.hlo_batch()?;
-    let hlo = artifacts.hlo_path(&name);
-    let (features, classes) = (model.num_features, model.num_classes);
-    let server = Server::start_with(
-        move || Ok(Backend::Pjrt(Engine::load(&hlo, batch, features, classes)?)),
-        ServerConfig {
-            max_batch: batch,
-            max_wait: Duration::from_micros(300),
-            queue_depth: 4096,
-        },
-    )?;
-    println!("serving {} via PJRT (batch {batch})", name);
+    let cfg = |max_batch: usize| ServerConfig {
+        max_batch,
+        max_wait: Duration::from_micros(300),
+        queue_depth: 4096,
+    };
+    let server = match backend.as_str() {
+        "pjrt" => {
+            let batch = artifacts.hlo_batch()?;
+            let hlo = artifacts.hlo_path(&name);
+            let (features, classes) = (model.num_features, model.num_classes);
+            let server = Server::start_with(
+                move || Ok(Backend::Pjrt(Engine::load(&hlo, batch, features, classes)?)),
+                cfg(batch),
+            )?;
+            println!("serving {name} via PJRT (batch {batch})");
+            server
+        }
+        "netlist" => {
+            let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt))?;
+            let nl = accel.map(&MapConfig::default());
+            println!("serving {name} via netlist interpreter ({} LUTs)", nl.lut_count());
+            Server::start_netlist(
+                nl,
+                model.penft.frac_bits.expect("penft bits"),
+                model.num_features,
+                model.num_classes,
+                accel.index_width(),
+                cfg(512),
+            )
+        }
+        "compiled" => {
+            let lanes = args.get_usize("lanes", 256)?;
+            let threads = args.get_usize(
+                "threads",
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            )?;
+            let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt))?;
+            let (nl, tags) = accel.map_with_stages(&MapConfig::default());
+            let plan = dwn::engine::compile_with_stages(&nl, Some(&tags));
+            println!(
+                "serving {name} via compiled engine ({} ops / {} levels, {lanes} lanes x {threads} threads)",
+                plan.ops.len(),
+                plan.depth()
+            );
+            let max_batch = lanes * threads.max(1);
+            Server::start_compiled(
+                plan,
+                model.penft.frac_bits.expect("penft bits"),
+                model.num_features,
+                model.num_classes,
+                accel.index_width(),
+                lanes,
+                threads,
+                cfg(max_batch),
+            )
+        }
+        other => anyhow::bail!("unknown backend '{other}' (pjrt|netlist|compiled)"),
+    };
     println!("{:>12} {:>12} {:>10} {:>10} {:>10} {:>11}", "target req/s", "achieved", "p50 us", "p99 us", "max us", "mean batch");
 
     let mut rng = SplitMix64::new(42);

@@ -1,0 +1,134 @@
+//! Serving-throughput bench: interpreter (`LutNetlist::eval_lanes`) vs the
+//! compiled execution engine (`dwn::engine`) across batch sizes, in rows/sec,
+//! on a JSC-sized PEN+FT accelerator. Falls back to a synthetic model of the
+//! same shape when trained artifacts are absent, so it runs anywhere.
+//!
+//!     cargo bench --bench serve_throughput
+//!     (or: target/release/serve_throughput after `cargo build --benches`)
+
+use dwn::config::Artifacts;
+use dwn::coordinator::Backend;
+use dwn::hwgen::{build_accelerator, AccelOptions, Component};
+use dwn::model::{DwnModel, SynthSpec, Variant};
+use dwn::techmap::MapConfig;
+use dwn::util::SplitMix64;
+use std::time::Instant;
+
+fn main() {
+    let artifacts = Artifacts::discover();
+    let model = if artifacts.exists() {
+        match DwnModel::load(&artifacts.model_path("md-360")) {
+            Ok(m) => {
+                println!("model: md-360 (trained artifacts)");
+                m
+            }
+            Err(_) => synth(),
+        }
+    } else {
+        synth()
+    };
+
+    let frac_bits = model.penft.frac_bits.expect("penft bits");
+    let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt)).unwrap();
+    let (nl, tags) = accel.map_with_stages(&MapConfig::default());
+    let plan = dwn::engine::compile_with_stages(&nl, Some(&tags));
+    let index_width = accel.index_width();
+    println!(
+        "accelerator: {} LUTs -> {} compiled ops / {} levels ({} const-folded, {} dead, {} pins folded)",
+        nl.lut_count(),
+        plan.ops.len(),
+        plan.depth(),
+        plan.stats.const_folded,
+        plan.stats.dead_eliminated,
+        plan.stats.pins_folded
+    );
+
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let interp = Backend::Netlist {
+        netlist: nl,
+        frac_bits,
+        num_features: model.num_features,
+        num_classes: model.num_classes,
+        index_width,
+    };
+    let mk_compiled = |lanes: usize, threads: usize| Backend::Compiled {
+        plan: plan.clone(),
+        frac_bits,
+        num_features: model.num_features,
+        num_classes: model.num_classes,
+        index_width,
+        lanes,
+        threads,
+    };
+    let compiled_1t = mk_compiled(256, 1);
+    let compiled_nt = mk_compiled(256, cores);
+
+    // Random feature rows (eval cost is data-independent).
+    let mut rng = SplitMix64::new(0xBEEF);
+    let rows: Vec<Vec<f32>> = (0..4096)
+        .map(|_| {
+            (0..model.num_features).map(|_| (2.0 * rng.next_f64() - 1.0) as f32).collect()
+        })
+        .collect();
+
+    println!(
+        "\n{:>7} {:>18} {:>18} {:>18} {:>9}",
+        "batch", "interp rows/s", "compiled-1t rows/s", &format!("compiled-{cores}t rows/s"), "speedup"
+    );
+    for batch in [64usize, 256, 1024, 4096] {
+        let slice = &rows[..batch];
+        let interp_rps = rows_per_sec(&interp, slice);
+        let c1_rps = rows_per_sec(&compiled_1t, slice);
+        let cn_rps = rows_per_sec(&compiled_nt, slice);
+        println!(
+            "{:>7} {:>18.0} {:>18.0} {:>18.0} {:>8.2}x",
+            batch,
+            interp_rps,
+            c1_rps,
+            cn_rps,
+            cn_rps.max(c1_rps) / interp_rps
+        );
+    }
+
+    // Per-stage runtime attribution (the paper's area breakdown, extended to
+    // emulation throughput).
+    let mut fill_rng = SplitMix64::new(0xA77);
+    let runtime =
+        dwn::engine::measure_stages(&plan, 256, 64, |ex, _| {
+            for i in 0..plan.num_inputs {
+                for w in ex.input_words_mut(i) {
+                    *w = fill_rng.next_u64();
+                }
+            }
+        });
+    println!("\nper-stage runtime attribution (ns/row over {} lanes):", runtime.lanes);
+    let total: f64 = Component::ALL.iter().map(|&c| runtime.ns_per_row(c)).sum();
+    for c in Component::ALL {
+        let ns = runtime.ns_per_row(c);
+        println!("  {:9} {:>8.2} ns/row  ({:>5.1}%)", c.label(), ns, 100.0 * ns / total.max(1e-9));
+    }
+}
+
+fn synth() -> DwnModel {
+    let spec = SynthSpec::jsc_sized();
+    println!("model: {} (synthetic, no artifacts)", spec.name);
+    DwnModel::synthetic(&spec)
+}
+
+/// Median-of-3 timed repetitions, enough iterations to amortize noise.
+fn rows_per_sec(backend: &Backend, rows: &[Vec<f32>]) -> f64 {
+    let iters = (65_536 / rows.len()).max(1);
+    let _ = backend.infer(rows).unwrap(); // warmup
+    let mut samples: Vec<f64> = (0..3)
+        .map(|_| {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                let preds = backend.infer(rows).unwrap();
+                assert_eq!(preds.len(), rows.len());
+            }
+            (iters * rows.len()) as f64 / t0.elapsed().as_secs_f64()
+        })
+        .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[1]
+}

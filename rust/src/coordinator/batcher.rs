@@ -1,6 +1,7 @@
 //! Dynamic batcher + inference loop.
 
 use super::metrics::Metrics;
+use crate::engine::{self, ExecPlan};
 use crate::runtime::Engine;
 use crate::techmap::LutNetlist;
 use crate::util::fixed;
@@ -23,25 +24,45 @@ pub enum Backend {
         /// Width of the class-index output word.
         index_width: usize,
     },
+    /// The netlist compiled into a flat execution plan
+    /// ([`crate::engine`]) — wide lanes + thread-sharded batches.
+    Compiled {
+        plan: ExecPlan,
+        frac_bits: u32,
+        num_features: usize,
+        num_classes: usize,
+        index_width: usize,
+        /// Vectors per evaluation pass (rounded up to a multiple of 64).
+        lanes: usize,
+        /// Worker threads for batch sharding (1 = inline).
+        threads: usize,
+    },
 }
 
 impl Backend {
-    fn max_batch_hint(&self) -> usize {
+    pub fn max_batch_hint(&self) -> usize {
         match self {
             Backend::Pjrt(e) => e.batch,
-            Backend::Netlist { .. } => 64, // one lane word
+            // The interpreter evaluates one 64-lane word per pass; several
+            // words per batch amortize the batcher loop without hurting
+            // latency at these eval costs.
+            Backend::Netlist { .. } => 8 * 64,
+            // One full pass per shard of every thread.
+            Backend::Compiled { lanes, threads, .. } => *lanes * (*threads).max(1),
         }
     }
 
-    fn num_features(&self) -> usize {
+    pub fn num_features(&self) -> usize {
         match self {
             Backend::Pjrt(e) => e.features,
             Backend::Netlist { num_features, .. } => *num_features,
+            Backend::Compiled { num_features, .. } => *num_features,
         }
     }
 
     /// Run a batch of feature rows; returns predicted class per row.
-    fn infer(&self, rows: &[Vec<f32>]) -> Result<Vec<i32>> {
+    /// (Public so benches and tests can drive backends without the queue.)
+    pub fn infer(&self, rows: &[Vec<f32>]) -> Result<Vec<i32>> {
         match self {
             Backend::Pjrt(engine) => {
                 let mut flat = Vec::with_capacity(rows.len() * engine.features);
@@ -51,36 +72,37 @@ impl Backend {
                 let out = engine.execute_padded(&flat, rows.len())?;
                 Ok(out.pred)
             }
-            Backend::Netlist { netlist, frac_bits, num_features, index_width, .. } => {
+            Backend::Netlist { netlist, frac_bits, index_width, .. } => {
+                // Pack fixed-point inputs straight into lane words, one
+                // 64-row chunk per eval pass — no per-row bit vectors.
                 let width = (*frac_bits + 1) as usize;
-                let vectors: Vec<Vec<bool>> = rows
-                    .iter()
-                    .map(|r| {
-                        let mut bits = Vec::with_capacity(num_features * width);
-                        for &x in r.iter() {
-                            let k = fixed::input_to_int(x as f64, *frac_bits);
-                            let pat = fixed::int_to_bits(k, *frac_bits);
-                            for i in 0..width {
-                                bits.push((pat >> i) & 1 == 1);
-                            }
-                        }
-                        bits
-                    })
-                    .collect();
-                let outs = netlist.eval_batch(&vectors);
-                Ok(outs
-                    .iter()
-                    .map(|o| {
-                        let mut pred = 0i32;
-                        for i in 0..*index_width {
-                            if o[i] {
-                                pred |= 1 << i;
-                            }
-                        }
-                        pred
-                    })
-                    .collect())
+                let mut lanes = vec![0u64; netlist.num_inputs];
+                let mut scratch = Vec::new();
+                let mut outs = Vec::new();
+                let mut preds = Vec::with_capacity(rows.len());
+                for chunk in rows.chunks(64) {
+                    lanes.iter_mut().for_each(|w| *w = 0);
+                    for (lane, r) in chunk.iter().enumerate() {
+                        // Same dimension check the old eval_batch path made.
+                        assert_eq!(
+                            r.len() * width,
+                            netlist.num_inputs,
+                            "row does not match the netlist input interface"
+                        );
+                        fixed::pack_row_bits(r, *frac_bits, |bit| lanes[bit] |= 1u64 << lane);
+                    }
+                    netlist.eval_lanes_with(&lanes, &mut scratch, &mut outs);
+                    for lane in 0..chunk.len() {
+                        preds.push(crate::util::decode_index_bits(*index_width, |i| {
+                            (outs[i] >> lane) & 1 == 1
+                        }));
+                    }
+                }
+                Ok(preds)
             }
+            Backend::Compiled { plan, frac_bits, index_width, lanes, threads, .. } => Ok(
+                engine::infer_fixed_batch(plan, rows, *frac_bits, *index_width, *lanes, *threads),
+            ),
         }
     }
 }
@@ -163,6 +185,37 @@ impl Server {
         Self::start_with(
             move || {
                 Ok(Backend::Netlist { netlist, frac_bits, num_features, num_classes, index_width })
+            },
+            cfg,
+        )
+        .expect("infallible factory")
+    }
+
+    /// Start over a compiled execution plan ([`crate::engine`]). `lanes`
+    /// and `threads` size the engine's evaluation passes; the batcher's
+    /// effective max batch derives from them via `max_batch_hint`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn start_compiled(
+        plan: ExecPlan,
+        frac_bits: u32,
+        num_features: usize,
+        num_classes: usize,
+        index_width: usize,
+        lanes: usize,
+        threads: usize,
+        cfg: ServerConfig,
+    ) -> Server {
+        Self::start_with(
+            move || {
+                Ok(Backend::Compiled {
+                    plan,
+                    frac_bits,
+                    num_features,
+                    num_classes,
+                    index_width,
+                    lanes,
+                    threads,
+                })
             },
             cfg,
         )
@@ -299,5 +352,68 @@ mod tests {
     fn rejects_bad_arity() {
         let server = toy_server(ServerConfig::default());
         assert!(server.infer(&[0.1, 0.2]).is_err());
+    }
+
+    #[test]
+    fn compiled_backend_matches_netlist_server() {
+        let nl = LutNetlist {
+            num_inputs: 2,
+            luts: vec![MappedLut { inputs: vec![Src::Input(1)], table: 0b10 }],
+            outputs: vec![Src::Lut(0)],
+        };
+        let plan = crate::engine::compile(&nl);
+        let server = Server::start_compiled(
+            plan,
+            1,
+            1,
+            2,
+            1,
+            128,
+            2,
+            ServerConfig {
+                max_batch: 512,
+                max_wait: Duration::from_millis(1),
+                queue_depth: 1024,
+            },
+        );
+        assert_eq!(server.infer(&[-0.6]).unwrap(), 1);
+        assert_eq!(server.infer(&[0.4]).unwrap(), 0);
+        let rxs: Vec<_> = (0..200)
+            .map(|i| server.submit(&[if i % 2 == 0 { 0.7 } else { -0.7 }]).unwrap())
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap().unwrap(), (i % 2) as i32);
+        }
+    }
+
+    #[test]
+    fn backend_infer_parity_netlist_vs_compiled() {
+        // Direct Backend::infer parity on a batch spanning several lane
+        // words and a partial tail.
+        let nl = LutNetlist {
+            num_inputs: 2,
+            luts: vec![MappedLut { inputs: vec![Src::Input(1)], table: 0b10 }],
+            outputs: vec![Src::Lut(0)],
+        };
+        let plan = crate::engine::compile(&nl);
+        let netlist = Backend::Netlist {
+            netlist: nl,
+            frac_bits: 1,
+            num_features: 1,
+            num_classes: 2,
+            index_width: 1,
+        };
+        let compiled = Backend::Compiled {
+            plan,
+            frac_bits: 1,
+            num_features: 1,
+            num_classes: 2,
+            index_width: 1,
+            lanes: 64,
+            threads: 2,
+        };
+        let rows: Vec<Vec<f32>> =
+            (0..333).map(|i| vec![if i % 3 == 0 { -0.5 } else { 0.5 }]).collect();
+        assert_eq!(netlist.infer(&rows).unwrap(), compiled.infer(&rows).unwrap());
     }
 }

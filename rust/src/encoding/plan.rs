@@ -19,6 +19,15 @@ use super::arch::ArchKind;
 use super::cost::{self, CostEstimate};
 use super::ir::{EncoderIr, FeatureIr};
 use anyhow::bail;
+use std::collections::HashMap;
+
+/// Memo key for mapper measurements: a feature's lowering (and therefore its
+/// measured cost) is fully determined by its threshold grid and used-level
+/// set at a given width, so features sharing both map once
+/// (ROADMAP "cache measurements"). The whole candidate list caches under one
+/// key — one probe and one key clone per feature.
+type MeasureKey = (Vec<i32>, Vec<usize>);
+type MeasureMemo = HashMap<MeasureKey, Vec<(ArchKind, CostEstimate)>>;
 
 /// User-facing encoder selection knob (`--encoder` on the CLI).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -106,6 +115,9 @@ pub struct EncoderPlan {
     /// a fixed strategy is an explicit pin and ignores it.
     pub depth_budget: Option<usize>,
     pub per_feature: Vec<FeaturePlan>,
+    /// Real mapper runs performed during planning (memoized measurements
+    /// excluded) — observable proof the measurement cache works.
+    pub measurements: usize,
 }
 
 impl EncoderPlan {
@@ -138,12 +150,14 @@ pub fn plan_encoders(
     depth_budget: Option<usize>,
 ) -> EncoderPlan {
     let width = ir.width();
+    let mut memo: MeasureMemo = HashMap::new();
+    let mut measurements = 0usize;
     let per_feature = ir
         .features
         .iter()
-        .map(|feat| plan_feature(feat, width, strategy, depth_budget))
+        .map(|feat| plan_feature(feat, width, strategy, depth_budget, &mut memo, &mut measurements))
         .collect();
-    EncoderPlan { strategy, depth_budget, per_feature }
+    EncoderPlan { strategy, depth_budget, per_feature, measurements }
 }
 
 fn plan_feature(
@@ -151,6 +165,8 @@ fn plan_feature(
     width: usize,
     strategy: EncoderStrategy,
     depth_budget: Option<usize>,
+    memo: &mut MeasureMemo,
+    measurements: &mut usize,
 ) -> FeaturePlan {
     let distinct = feat.distinct_used().len();
     let used = feat.used_count();
@@ -174,12 +190,23 @@ fn plan_feature(
         };
     }
 
-    // Auto: measure every supported candidate with the real mapper.
-    let candidates: Vec<(ArchKind, CostEstimate)> = ArchKind::ALL
-        .iter()
-        .filter(|k| k.supports(width))
-        .map(|&k| (k, cost::measure_feature(k, feat, width)))
-        .collect();
+    // Auto: measure every supported candidate with the real mapper,
+    // memoizing the full candidate list across features with identical
+    // threshold/used-level sets.
+    let key = (feat.thresholds.clone(), feat.used_levels.clone());
+    let candidates: Vec<(ArchKind, CostEstimate)> = match memo.get(&key) {
+        Some(c) => c.clone(),
+        None => {
+            let c: Vec<(ArchKind, CostEstimate)> = ArchKind::ALL
+                .iter()
+                .filter(|k| k.supports(width))
+                .map(|&k| (k, cost::measure_feature(k, feat, width)))
+                .collect();
+            *measurements += c.len();
+            memo.insert(key, c.clone());
+            c
+        }
+    };
 
     // Depth budget filters candidates; if nothing fits, fall back to the
     // shallowest candidate (the budget is best-effort, not a hard error).
@@ -289,6 +316,25 @@ mod tests {
             let min_depth = fp.candidates.iter().map(|(_, c)| c.depth).min().unwrap();
             assert_eq!(fp.measured.unwrap().depth, min_depth);
         }
+    }
+
+    #[test]
+    fn measurement_cache_dedups_identical_features() {
+        // Three features, two with identical threshold/used-level sets.
+        let th = vec![vec![-4, -1, 0, 3], vec![-4, -1, 0, 3], vec![-2, 0, 1, 5]];
+        let used: Vec<u32> = (0..12).collect();
+        let ir = EncoderIr::new(&th, 3, &used, 4);
+        let plan = plan_encoders(&ir, EncoderStrategy::Auto, None);
+        // Without the memo this would be 3 features x candidates; with it,
+        // the duplicate feature costs nothing.
+        let candidates = plan.per_feature[0].candidates.len();
+        assert_eq!(plan.measurements, 2 * candidates);
+        // And the duplicate features agree on architecture + measured cost.
+        assert_eq!(plan.per_feature[0].arch, plan.per_feature[1].arch);
+        assert_eq!(plan.per_feature[0].measured, plan.per_feature[1].measured);
+        // Fixed strategies never measure.
+        let fixed = plan_encoders(&ir, EncoderStrategy::Bank, None);
+        assert_eq!(fixed.measurements, 0);
     }
 
     #[test]

@@ -1,0 +1,207 @@
+//! Lower a [`LutNetlist`] into an [`ExecPlan`]: constant folding, duplicate
+//! pin merging, dead-LUT elimination, levelization, and flat slot
+//! resolution.
+//!
+//! The passes run in one topological sweep each (the netlist is
+//! topologically ordered by construction):
+//! 1. **fold** — resolve `Src::Const` pins and pins fed by LUTs already
+//!    proved constant into the truth table (cofactoring); merge duplicate
+//!    pins; a table that collapses to all-0/all-1 makes the LUT itself a
+//!    constant, which propagates forward.
+//! 2. **DCE** — mark LUTs reachable from the (non-constant) outputs.
+//! 3. **levelize + order** — compute levels over surviving LUTs, then sort
+//!    by (level, stage, source index) so segments are contiguous.
+//! 4. **resolve** — assign each surviving LUT a slot and rewrite every pin
+//!    to a flat slot index.
+
+use super::plan::{CompileStats, ExecPlan, OutSrc, PlanOp, Segment};
+use crate::hwgen::Component;
+use crate::logic::net::{cofactor_tables, table_mask};
+use crate::techmap::{LutNetlist, Src};
+
+/// Compile without stage metadata (single anonymous stage per level).
+pub fn compile(nl: &LutNetlist) -> ExecPlan {
+    compile_with_stages(nl, None)
+}
+
+/// Compile with an optional per-source-LUT stage tag (see
+/// [`crate::hwgen::Accelerator::map_with_stages`]). Tag order must match
+/// `nl.luts`.
+pub fn compile_with_stages(nl: &LutNetlist, tags: Option<&[Component]>) -> ExecPlan {
+    if let Some(t) = tags {
+        assert_eq!(t.len(), nl.luts.len(), "one stage tag per source LUT");
+    }
+    let n = nl.luts.len();
+    let mut stats = CompileStats { source_luts: n, ..CompileStats::default() };
+
+    // Pass 1: constant folding. `folded[i]` is the surviving (pins, table)
+    // of source LUT i, `const_val[i]` its value when proved constant.
+    #[derive(Clone, Copy, PartialEq, Eq)]
+    enum Pin {
+        In(u32),
+        Op(u32), // source LUT index
+    }
+    let mut folded: Vec<Option<(Vec<Pin>, u64)>> = vec![None; n];
+    let mut const_val: Vec<Option<bool>> = vec![None; n];
+    for (i, lut) in nl.luts.iter().enumerate() {
+        // Walk original pins left to right, keeping a running table over
+        // (kept pins ++ unprocessed pins) and cofactoring at the kept
+        // boundary whenever a constant (or duplicate) pin is met.
+        let mut pins: Vec<Pin> = Vec::with_capacity(lut.inputs.len());
+        let mut table = lut.table & table_mask(lut.inputs.len());
+        let mut live = lut.inputs.len();
+        for src in &lut.inputs {
+            let cval = match src {
+                Src::Const(b) => Some(*b),
+                Src::Lut(j) => const_val[*j as usize],
+                Src::Input(_) => None,
+            };
+            match cval {
+                Some(b) => {
+                    let (c0, c1) = cofactor_tables(table, live, pins.len());
+                    table = if b { c1 } else { c0 };
+                    live -= 1;
+                    stats.pins_folded += 1;
+                }
+                None => {
+                    let p = match src {
+                        Src::Input(j) => Pin::In(*j),
+                        Src::Lut(j) => Pin::Op(*j),
+                        Src::Const(_) => unreachable!(),
+                    };
+                    // Merge duplicate pins: same source twice means the two
+                    // address bits always agree.
+                    if let Some(prev) = pins.iter().position(|&q| q == p) {
+                        table = merge_dup_pins(table, live, prev, pins.len());
+                        live -= 1;
+                        stats.pins_folded += 1;
+                    } else {
+                        pins.push(p);
+                    }
+                }
+            }
+        }
+        debug_assert_eq!(live, pins.len());
+        table &= table_mask(pins.len());
+        if table == 0 || table == table_mask(pins.len()) {
+            const_val[i] = Some(table != 0);
+            stats.const_folded += 1;
+        } else {
+            folded[i] = Some((pins, table));
+        }
+    }
+
+    // Pass 2: DCE from outputs.
+    let mut live = vec![false; n];
+    let mut stack: Vec<u32> = Vec::new();
+    let mark = |j: u32, live: &mut Vec<bool>, stack: &mut Vec<u32>| {
+        if const_val[j as usize].is_none() && !live[j as usize] {
+            live[j as usize] = true;
+            stack.push(j);
+        }
+    };
+    for out in &nl.outputs {
+        if let Src::Lut(j) = out {
+            mark(*j, &mut live, &mut stack);
+        }
+    }
+    while let Some(j) = stack.pop() {
+        let (pins, _) = folded[j as usize].as_ref().expect("live implies folded");
+        for p in pins {
+            if let Pin::Op(q) = p {
+                mark(*q, &mut live, &mut stack);
+            }
+        }
+    }
+    stats.dead_eliminated =
+        (0..n).filter(|&i| const_val[i].is_none() && !live[i]).count();
+
+    // Pass 3: levelize surviving LUTs and fix the execution order.
+    let mut level = vec![0u32; n];
+    for i in 0..n {
+        if !live[i] {
+            continue;
+        }
+        let (pins, _) = folded[i].as_ref().unwrap();
+        let mut m = 0u32;
+        for p in pins {
+            if let Pin::Op(q) = p {
+                m = m.max(level[*q as usize]);
+            }
+        }
+        level[i] = m + 1;
+    }
+    let stage_rank = |i: usize| -> u8 {
+        match tags.map(|t| t[i]) {
+            Some(Component::Encoder) => 0,
+            Some(Component::LutLayer) => 1,
+            Some(Component::Popcount) => 2,
+            Some(Component::Argmax) => 3,
+            None => 0,
+        }
+    };
+    let mut order: Vec<usize> = (0..n).filter(|&i| live[i]).collect();
+    order.sort_by_key(|&i| (level[i], stage_rank(i), i));
+
+    // Pass 4: assign slots and resolve pins.
+    let num_inputs = nl.num_inputs;
+    let mut slot_of = vec![u32::MAX; n];
+    for (pos, &i) in order.iter().enumerate() {
+        slot_of[i] = (num_inputs + pos) as u32;
+    }
+    let mut ops = Vec::with_capacity(order.len());
+    let mut segments: Vec<Segment> = Vec::new();
+    for (pos, &i) in order.iter().enumerate() {
+        let (pins, table) = folded[i].as_ref().unwrap();
+        let mut flat = [0u32; 6];
+        for (j, p) in pins.iter().enumerate() {
+            flat[j] = match p {
+                Pin::In(x) => *x,
+                Pin::Op(q) => slot_of[*q as usize],
+            };
+        }
+        ops.push(PlanOp {
+            table: *table,
+            k: pins.len() as u8,
+            dst: (num_inputs + pos) as u32,
+            pins: flat,
+        });
+        let stage = tags.map(|t| t[i]);
+        match segments.last_mut() {
+            Some(seg) if seg.level == level[i] && seg.stage == stage => {
+                seg.ops.end = pos + 1;
+            }
+            _ => segments.push(Segment { level: level[i], stage, ops: pos..pos + 1 }),
+        }
+    }
+
+    let outputs = nl
+        .outputs
+        .iter()
+        .map(|s| match s {
+            Src::Input(j) => OutSrc::Slot(*j),
+            Src::Const(b) => OutSrc::Const(*b),
+            Src::Lut(j) => match const_val[*j as usize] {
+                Some(b) => OutSrc::Const(b),
+                None => OutSrc::Slot(slot_of[*j as usize]),
+            },
+        })
+        .collect();
+
+    ExecPlan { num_inputs, ops, segments, outputs, stats }
+}
+
+/// Remove pin `j2` from a table over `k` pins given pins `j1` and `j2` carry
+/// the same signal: keep only addresses where both bits agree.
+fn merge_dup_pins(table: u64, k: usize, j1: usize, j2: usize) -> u64 {
+    debug_assert!(j1 < j2 && j2 < k);
+    let mut out = 0u64;
+    for a_new in 0..(1usize << (k - 1)) {
+        let b = (a_new >> j1) & 1;
+        let low = a_new & ((1 << j2) - 1);
+        let high = a_new >> j2;
+        let a = low | (b << j2) | (high << (j2 + 1));
+        out |= ((table >> a) & 1) << a_new;
+    }
+    out
+}

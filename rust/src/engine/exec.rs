@@ -1,0 +1,208 @@
+//! Wide execution of an [`ExecPlan`]: W×64 lanes per pass over a reusable
+//! SoA value buffer, plus scoped-thread sharding of batches across cores.
+
+use super::plan::{ExecPlan, OutSrc};
+use crate::logic::sim::eval_table_lanes;
+use std::time::{Duration, Instant};
+
+/// Reusable evaluator over one plan. The value buffer holds `words` lane
+/// words per slot (`lanes = words * 64` vectors per pass) and persists
+/// across calls, so steady-state serving does no allocation.
+pub struct Executor<'p> {
+    plan: &'p ExecPlan,
+    words: usize,
+    buf: Vec<u64>,
+}
+
+impl<'p> Executor<'p> {
+    /// `lanes` is rounded up to a multiple of 64 (one u64 lane word).
+    pub fn new(plan: &'p ExecPlan, lanes: usize) -> Self {
+        let words = crate::util::ceil_div(lanes.max(1), 64);
+        Self { plan, words, buf: vec![0u64; plan.num_slots() * words] }
+    }
+
+    /// Vectors evaluated per pass.
+    pub fn lanes(&self) -> usize {
+        self.words * 64
+    }
+
+    /// Lane words per slot.
+    pub fn words(&self) -> usize {
+        self.words
+    }
+
+    /// Zero the primary-input region (call before packing a fresh block —
+    /// packing only ORs bits in).
+    pub fn clear_inputs(&mut self) {
+        for w in &mut self.buf[..self.plan.num_inputs * self.words] {
+            *w = 0;
+        }
+    }
+
+    /// Set one input bit for one lane.
+    #[inline]
+    pub fn set_input_bit(&mut self, input: usize, lane: usize) {
+        debug_assert!(input < self.plan.num_inputs && lane < self.lanes());
+        self.buf[input * self.words + lane / 64] |= 1 << (lane % 64);
+    }
+
+    /// Lane-word view of one primary input (for callers that pack whole
+    /// words at a time).
+    #[inline]
+    pub fn input_words_mut(&mut self, input: usize) -> &mut [u64] {
+        let base = input * self.words;
+        &mut self.buf[base..base + self.words]
+    }
+
+    /// Evaluate every op for the current inputs.
+    pub fn run(&mut self) {
+        self.run_ops(0..self.plan.ops.len());
+    }
+
+    /// Evaluate with per-segment wall-clock attribution: returns one
+    /// elapsed time per segment, aligned with `plan.segments`. Slower
+    /// than [`run`](Self::run) (two `Instant` reads per segment) — meant for
+    /// `dwn breakdown`, not the serving hot path.
+    pub fn run_attributed(&mut self) -> Vec<Duration> {
+        let plan = self.plan;
+        let mut out = Vec::with_capacity(plan.segments.len());
+        for seg in &plan.segments {
+            let t0 = Instant::now();
+            self.run_ops(seg.ops.clone());
+            out.push(t0.elapsed());
+        }
+        out
+    }
+
+    #[inline]
+    fn run_ops(&mut self, range: std::ops::Range<usize>) {
+        let plan = self.plan;
+        let w = self.words;
+        for op in &plan.ops[range] {
+            let k = op.k as usize;
+            let dst = op.dst as usize * w;
+            for i in 0..w {
+                let mut ins = [0u64; 6];
+                for (j, slot) in op.pins[..k].iter().enumerate() {
+                    ins[j] = self.buf[*slot as usize * w + i];
+                }
+                self.buf[dst + i] = eval_table_lanes(op.table, &ins[..k]);
+            }
+        }
+    }
+
+    /// Output bit of one lane.
+    #[inline]
+    pub fn output_bit(&self, out_idx: usize, lane: usize) -> bool {
+        match self.plan.outputs[out_idx] {
+            OutSrc::Const(b) => b,
+            OutSrc::Slot(s) => {
+                (self.buf[s as usize * self.words + lane / 64] >> (lane % 64)) & 1 == 1
+            }
+        }
+    }
+
+    /// Lane-packed word `word_idx` of output `out_idx`.
+    #[inline]
+    pub fn output_word(&self, out_idx: usize, word_idx: usize) -> u64 {
+        match self.plan.outputs[out_idx] {
+            OutSrc::Const(true) => u64::MAX,
+            OutSrc::Const(false) => 0,
+            OutSrc::Slot(s) => self.buf[s as usize * self.words + word_idx],
+        }
+    }
+}
+
+/// Shard a batch of `n` rows across up to `threads` scoped threads, each
+/// owning its own [`Executor`] (scratch never shared). `block_fn` handles
+/// one lane-block: it receives the executor, the first row index of the
+/// block, and the output sub-slice to fill (`<= lanes` rows; the executor
+/// arrives with inputs cleared).
+pub fn par_eval<T, F>(
+    plan: &ExecPlan,
+    n: usize,
+    lanes: usize,
+    threads: usize,
+    out: &mut [T],
+    block_fn: F,
+) where
+    T: Send,
+    F: Fn(&mut Executor, usize, &mut [T]) + Sync,
+{
+    assert_eq!(out.len(), n);
+    let lanes = crate::util::ceil_div(lanes.max(1), 64) * 64;
+    let threads = threads.max(1);
+    let blocks = crate::util::ceil_div(n, lanes);
+    if threads == 1 || blocks <= 1 {
+        let mut ex = Executor::new(plan, lanes);
+        let mut start = 0usize;
+        for chunk in out.chunks_mut(lanes) {
+            ex.clear_inputs();
+            block_fn(&mut ex, start, chunk);
+            start += chunk.len();
+        }
+        return;
+    }
+    // Contiguous block ranges per thread, remainder spread over the first
+    // threads. Each thread walks its own slice of `out`.
+    let threads = threads.min(blocks);
+    let per = blocks / threads;
+    let extra = blocks % threads;
+    std::thread::scope(|scope| {
+        let mut rest = &mut out[..];
+        let mut row0 = 0usize;
+        for t in 0..threads {
+            let my_blocks = per + usize::from(t < extra);
+            let my_rows = (my_blocks * lanes).min(rest.len());
+            let (mine, tail) = rest.split_at_mut(my_rows);
+            rest = tail;
+            let my_row0 = row0;
+            row0 += my_rows;
+            let block_fn = &block_fn;
+            scope.spawn(move || {
+                let mut ex = Executor::new(plan, lanes);
+                let mut start = my_row0;
+                for chunk in mine.chunks_mut(lanes) {
+                    ex.clear_inputs();
+                    block_fn(&mut ex, start, chunk);
+                    start += chunk.len();
+                }
+            });
+        }
+    });
+}
+
+/// Serve-path helper: evaluate fixed-point feature rows and decode the
+/// class-index output word per row. This is the compiled counterpart of the
+/// interpreter path in [`crate::coordinator`] — rows are packed straight
+/// into lane words (no per-row bit-vector allocation).
+pub fn infer_fixed_batch(
+    plan: &ExecPlan,
+    rows: &[Vec<f32>],
+    frac_bits: u32,
+    index_width: usize,
+    lanes: usize,
+    threads: usize,
+) -> Vec<i32> {
+    use crate::util::fixed;
+    let width = (frac_bits + 1) as usize;
+    let mut preds = vec![0i32; rows.len()];
+    par_eval(plan, rows.len(), lanes, threads, &mut preds, |ex, start, out| {
+        for (lane, row) in rows[start..start + out.len()].iter().enumerate() {
+            // Hard check (release too): a frac_bits/num_features mismatch
+            // with the compiled accelerator would otherwise OR bits into
+            // other slots of the value buffer and silently corrupt results.
+            assert_eq!(
+                row.len() * width,
+                plan.num_inputs,
+                "row does not match the plan's input interface"
+            );
+            fixed::pack_row_bits(row, frac_bits, |bit| ex.set_input_bit(bit, lane));
+        }
+        ex.run();
+        for (lane, slot) in out.iter_mut().enumerate() {
+            *slot = crate::util::decode_index_bits(index_width, |i| ex.output_bit(i, lane));
+        }
+    });
+    preds
+}

@@ -1,0 +1,135 @@
+//! Compiled netlist execution engine — the high-throughput serving path.
+//!
+//! The generic simulator ([`crate::techmap::LutNetlist::eval_lanes`])
+//! re-dispatches on the [`crate::techmap::Src`] enum for every pin of every
+//! LUT of every 64-lane word. This module instead **compiles** a mapped
+//! netlist once into a flat [`ExecPlan`] — constants folded into truth
+//! tables, dead LUTs dropped, every pin a plain index into one SoA value
+//! buffer, ops grouped by topological level and pipeline stage — and then
+//! executes it W×64 vectors at a time with reusable scratch and scoped
+//! `std::thread` sharding of batch chunks across cores (DESIGN.md §engine).
+//!
+//! Stage grouping carries the accelerator's component boundaries
+//! ([`crate::hwgen::Component`]) into the runtime, so `dwn breakdown` can
+//! print per-stage *runtime* attribution next to the paper's per-stage LUT
+//! area — the paper's encoding-cost analysis extended from area to
+//! throughput.
+
+mod compile;
+mod exec;
+mod plan;
+mod stages;
+
+pub use compile::{compile, compile_with_stages};
+pub use exec::{infer_fixed_batch, par_eval, Executor};
+pub use plan::{CompileStats, ExecPlan, OutSrc, PlanOp, Segment};
+pub use stages::{measure_stages, StageRuntime};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::techmap::{LutNetlist, MappedLut, Src};
+
+    fn xor_chain() -> LutNetlist {
+        // in0 ^ in1 ^ const(true) with a dead LUT and a duplicate-pin LUT.
+        LutNetlist {
+            num_inputs: 2,
+            luts: vec![
+                // lut0 = in0 ^ in1
+                MappedLut { inputs: vec![Src::Input(0), Src::Input(1)], table: 0b0110 },
+                // lut1 = lut0 ^ true = !lut0 (const pin folds away)
+                MappedLut { inputs: vec![Src::Lut(0), Src::Const(true)], table: 0b0110 },
+                // lut2: dead (never reaches an output)
+                MappedLut { inputs: vec![Src::Input(0)], table: 0b10 },
+                // lut3 = AND(lut1, lut1) — duplicate pin, collapses to lut1
+                MappedLut { inputs: vec![Src::Lut(1), Src::Lut(1)], table: 0b1000 },
+            ],
+            outputs: vec![Src::Lut(3), Src::Const(false), Src::Input(0)],
+        }
+    }
+
+    #[test]
+    fn folds_consts_dups_and_dead() {
+        let nl = xor_chain();
+        let plan = compile(&nl);
+        assert_eq!(plan.stats.source_luts, 4);
+        assert_eq!(plan.stats.dead_eliminated, 1);
+        assert!(plan.stats.pins_folded >= 2, "const + duplicate pin fold");
+        // No pin references a constant and no op has k == 0.
+        for op in &plan.ops {
+            assert!(op.k >= 1);
+            for &p in &op.pins[..op.k as usize] {
+                assert!((p as usize) < plan.num_slots());
+            }
+        }
+        assert_eq!(plan.outputs[1], OutSrc::Const(false));
+        assert_eq!(plan.outputs[2], OutSrc::Slot(0));
+    }
+
+    #[test]
+    fn executes_bit_exact_vs_interpreter() {
+        let nl = xor_chain();
+        let plan = compile(&nl);
+        let mut ex = Executor::new(&plan, 64);
+        let inputs = [0x0123_4567_89AB_CDEFu64, 0xFEDC_BA98_7654_3210u64];
+        for (i, &w) in inputs.iter().enumerate() {
+            ex.input_words_mut(i)[0] = w;
+        }
+        ex.run();
+        let want = nl.eval_lanes(&inputs);
+        for (o, &w) in want.iter().enumerate() {
+            assert_eq!(ex.output_word(o, 0), w, "output {o}");
+        }
+    }
+
+    #[test]
+    fn wide_lanes_match_repeated_words() {
+        let nl = xor_chain();
+        let plan = compile(&nl);
+        let mut ex = Executor::new(&plan, 250); // rounds up to 256 = 4 words
+        assert_eq!(ex.lanes(), 256);
+        let mut rng = crate::util::SplitMix64::new(7);
+        let blocks: Vec<[u64; 2]> =
+            (0..4).map(|_| [rng.next_u64(), rng.next_u64()]).collect();
+        for (w, b) in blocks.iter().enumerate() {
+            for i in 0..2 {
+                ex.input_words_mut(i)[w] = b[i];
+            }
+        }
+        ex.run();
+        for (w, b) in blocks.iter().enumerate() {
+            let want = nl.eval_lanes(b);
+            for (o, &x) in want.iter().enumerate() {
+                assert_eq!(ex.output_word(o, w), x, "word {w} output {o}");
+            }
+        }
+    }
+
+    #[test]
+    fn par_eval_covers_every_row() {
+        let nl = xor_chain();
+        let plan = compile(&nl);
+        let n = 1000usize;
+        let mut got = vec![false; n];
+        par_eval(&plan, n, 128, 4, &mut got, |ex, start, out| {
+            for lane in 0..out.len() {
+                let row = start + lane;
+                // row encodes in0 = row&1, in1 = (row>>1)&1
+                if row & 1 == 1 {
+                    ex.set_input_bit(0, lane);
+                }
+                if (row >> 1) & 1 == 1 {
+                    ex.set_input_bit(1, lane);
+                }
+            }
+            ex.run();
+            for (lane, slot) in out.iter_mut().enumerate() {
+                *slot = ex.output_bit(0, lane);
+            }
+        });
+        for (row, &g) in got.iter().enumerate() {
+            let want = !(((row & 1) ^ ((row >> 1) & 1)) == 1);
+            assert_eq!(g, want, "row {row}");
+        }
+    }
+}

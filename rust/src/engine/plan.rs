@@ -1,0 +1,104 @@
+//! The compiled execution plan: a [`crate::techmap::LutNetlist`] lowered to a
+//! flat, cache-friendly form the executor can run without any per-pin enum
+//! dispatch.
+//!
+//! Layout invariants (established by [`super::compile`]):
+//! * The value buffer is a single SoA array of **slots**. Slots
+//!   `[0, num_inputs)` are the primary inputs; slot `num_inputs + i` is the
+//!   output of op `i`. Each slot holds `words` consecutive `u64` lane words
+//!   at execution time, so `pins` resolve with one multiply — no `Src`
+//!   matching on the hot path.
+//! * Ops are sorted by (level, stage, source index). All fanins of an op
+//!   live at strictly lower levels, so any in-order sweep is correct and
+//!   level boundaries are natural barriers for attribution.
+//! * Constants never appear as pins: compile folds them into the truth
+//!   tables (and whole-const ops into downstream tables), so `k == 0` never
+//!   survives and every surviving table is non-trivial.
+
+use crate::hwgen::Component;
+use std::ops::Range;
+
+/// One compiled LUT operation. Pins are flat slot indices.
+#[derive(Debug, Clone, Copy)]
+pub struct PlanOp {
+    /// Truth table over the first `k` pins, LSB-first.
+    pub table: u64,
+    /// Live pin count after constant/duplicate folding (1..=6).
+    pub k: u8,
+    /// Destination slot (always `num_inputs + own op index`; stored to keep
+    /// the executor loop free of bookkeeping).
+    pub dst: u32,
+    /// Source slots, first `k` valid.
+    pub pins: [u32; 6],
+}
+
+/// Where an output bit comes from after folding.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OutSrc {
+    /// Value buffer slot (input or op destination).
+    Slot(u32),
+    /// Output proved constant during folding.
+    Const(bool),
+}
+
+/// A contiguous run of ops belonging to one level and one stage.
+#[derive(Debug, Clone)]
+pub struct Segment {
+    /// Logic level (1 = fed only by primary inputs).
+    pub level: u32,
+    /// Stage tag for runtime attribution (None when the plan was compiled
+    /// without stage metadata).
+    pub stage: Option<Component>,
+    /// Op index range within [`ExecPlan::ops`].
+    pub ops: Range<usize>,
+}
+
+/// What compile eliminated — reported by `dwn breakdown` and the benches.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CompileStats {
+    /// LUTs in the source netlist.
+    pub source_luts: usize,
+    /// LUTs proved constant (all-0/all-1 tables after pin folding).
+    pub const_folded: usize,
+    /// Non-constant LUTs unreachable from any output.
+    pub dead_eliminated: usize,
+    /// Constant or duplicate pins folded out of surviving tables.
+    pub pins_folded: usize,
+}
+
+/// A levelized, constant-folded, dead-code-eliminated execution plan.
+#[derive(Debug, Clone)]
+pub struct ExecPlan {
+    pub num_inputs: usize,
+    /// Ops sorted by (level, stage, source index).
+    pub ops: Vec<PlanOp>,
+    /// Execution-order partition of `ops` (level- and stage-contiguous).
+    pub segments: Vec<Segment>,
+    pub outputs: Vec<OutSrc>,
+    pub stats: CompileStats,
+}
+
+impl ExecPlan {
+    /// Total value-buffer slots (inputs + op destinations).
+    pub fn num_slots(&self) -> usize {
+        self.num_inputs + self.ops.len()
+    }
+
+    /// Logic depth in levels (0 for a pass-through plan).
+    pub fn depth(&self) -> usize {
+        self.segments.last().map(|s| s.level as usize).unwrap_or(0)
+    }
+
+    /// Distinct stages present, in execution order of first appearance.
+    pub fn stages(&self) -> Vec<Component> {
+        let mut out = Vec::new();
+        for seg in &self.segments {
+            if let Some(c) = seg.stage {
+                if !out.contains(&c) {
+                    out.push(c);
+                }
+            }
+        }
+        out
+    }
+}

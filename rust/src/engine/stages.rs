@@ -1,0 +1,79 @@
+//! Per-stage runtime attribution: aggregate segment timings into the
+//! accelerator's pipeline stages (encoder / LUT layer / popcount / argmax),
+//! extending the paper's per-component *area* breakdown to *throughput*.
+//!
+//! Caveats (documented in DESIGN.md §engine): attribution is wall-clock over
+//! level×stage segments of the compiled plan, so (a) it reflects the
+//! software emulation cost of each stage, not FPGA cycles; (b) mapper cones
+//! that straddle a stage boundary are attributed to their root's stage,
+//! exactly like the area breakdown; (c) per-segment `Instant` reads add a
+//! small fixed overhead, so use enough repetitions for stable shares.
+
+use super::exec::Executor;
+use super::plan::ExecPlan;
+use crate::hwgen::Component;
+use std::time::Duration;
+
+/// Aggregated runtime attribution for one plan.
+#[derive(Debug, Clone)]
+pub struct StageRuntime {
+    /// (stage, total busy time, op count) per stage present in the plan, in
+    /// execution order. `None` stage (untagged plans) aggregates under
+    /// `Component::LutLayer`.
+    pub per_stage: Vec<(Component, Duration, usize)>,
+    /// Passes accumulated (each pass evaluates `lanes` vectors).
+    pub passes: usize,
+    /// Lanes per pass.
+    pub lanes: usize,
+}
+
+impl StageRuntime {
+    pub fn total(&self) -> Duration {
+        self.per_stage.iter().map(|(_, d, _)| *d).sum()
+    }
+
+    /// Nanoseconds per evaluated row for one stage.
+    pub fn ns_per_row(&self, stage: Component) -> f64 {
+        let rows = (self.passes * self.lanes).max(1) as f64;
+        self.per_stage
+            .iter()
+            .find(|(c, _, _)| *c == stage)
+            .map(|(_, d, _)| d.as_nanos() as f64 / rows)
+            .unwrap_or(0.0)
+    }
+}
+
+/// Run `passes` attributed evaluations over random-ish inputs already packed
+/// by `fill` and accumulate per-stage busy time. The caller packs inputs
+/// once per pass (input values don't change LUT evaluation cost, so any
+/// pattern measures the same thing).
+pub fn measure_stages<F>(
+    plan: &ExecPlan,
+    lanes: usize,
+    passes: usize,
+    mut fill: F,
+) -> StageRuntime
+where
+    F: FnMut(&mut Executor, usize),
+{
+    let mut ex = Executor::new(plan, lanes);
+    let mut acc: Vec<(Component, Duration, usize)> = Vec::new();
+    for pass in 0..passes.max(1) {
+        ex.clear_inputs();
+        fill(&mut ex, pass);
+        let times = ex.run_attributed();
+        for (seg, dt) in plan.segments.iter().zip(times) {
+            let stage = seg.stage.unwrap_or(Component::LutLayer);
+            match acc.iter_mut().find(|(c, _, _)| *c == stage) {
+                Some(slot) => {
+                    slot.1 += dt;
+                    if pass == 0 {
+                        slot.2 += seg.ops.len();
+                    }
+                }
+                None => acc.push((stage, dt, seg.ops.len())),
+            }
+        }
+    }
+    StageRuntime { per_stage: acc, passes: passes.max(1), lanes: ex.lanes() }
+}

@@ -40,6 +40,18 @@ impl Component {
             Component::Argmax => "argmax",
         }
     }
+
+    /// Aggregate per-LUT stage tags into per-component counts (every
+    /// component listed, zeros included) — shared by the breakdown report
+    /// paths so area attribution can't drift between them.
+    pub fn count_tags(tags: &[Component]) -> Vec<(Component, usize)> {
+        let mut counts: Vec<(Component, usize)> =
+            Component::ALL.iter().map(|&c| (c, 0)).collect();
+        for tag in tags {
+            counts.iter_mut().find(|(c, _)| c == tag).unwrap().1 += 1;
+        }
+        counts
+    }
 }
 
 /// Generation options.
@@ -192,25 +204,35 @@ impl Accelerator {
         techmap::map(&self.net, cfg)
     }
 
+    /// Component owning builder node `id` (by gate-range attribution). The
+    /// ranges partition the whole builder sequence, so every node resolves;
+    /// the argmax fallback is unreachable in practice.
+    pub fn component_of(&self, id: NodeId) -> Component {
+        for (comp, range) in &self.ranges {
+            if range.contains(&(id as usize)) {
+                return *comp;
+            }
+        }
+        Component::Argmax
+    }
+
+    /// Map and tag each physical LUT with its owning component — the stage
+    /// boundary metadata the compiled engine
+    /// ([`crate::engine::compile_with_stages`]) turns into per-stage runtime
+    /// attribution. Tag i describes `netlist.luts[i]` (its cover root's
+    /// component, exactly like the area breakdown).
+    pub fn map_with_stages(&self, cfg: &MapConfig) -> (LutNetlist, Vec<Component>) {
+        let tracked = techmap::map_tracked(&self.net, cfg);
+        let tags = tracked.root_tags(|r| self.component_of(r));
+        (tracked.netlist, tags)
+    }
+
     /// Map and attribute each physical LUT to the component whose gate range
     /// contains its root node. Returns (netlist, per-component LUT counts).
     pub fn map_with_breakdown(&self, cfg: &MapConfig) -> (LutNetlist, Vec<(Component, usize)>) {
-        // Re-run the cover extraction while tracking roots: we re-map and
-        // attribute by walking the mapped netlist in step with a fresh map
-        // of node -> component.
-        let nl = techmap::map_tracked(&self.net, cfg);
-        let mut counts: Vec<(Component, usize)> =
-            Component::ALL.iter().map(|&c| (c, 0)).collect();
-        for &root in &nl.roots {
-            for (comp, range) in &self.ranges {
-                if range.contains(&(root as usize)) {
-                    let slot = counts.iter_mut().find(|(c, _)| c == comp).unwrap();
-                    slot.1 += 1;
-                    break;
-                }
-            }
-        }
-        (nl.netlist, counts)
+        let (nl, tags) = self.map_with_stages(cfg);
+        let counts = Component::count_tags(&tags);
+        (nl, counts)
     }
 
     /// Number of primary input bits of the generated design.

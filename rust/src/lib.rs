@@ -14,7 +14,11 @@
 //!   per-feature auto-selector (DESIGN.md §encoding)
 //! * [`hwgen`] — the paper's contribution: the DWN hardware generator
 //!   including the thermometer-encoding stage
-//! * [`coordinator`] — batching inference server on top of [`runtime`]
+//! * [`engine`] — compiled netlist execution: a mapped netlist lowered to a
+//!   flat levelized plan and evaluated W×64 lanes wide across threads, with
+//!   per-stage runtime attribution (DESIGN.md §engine)
+//! * [`coordinator`] — batching inference server over [`runtime`], the
+//!   netlist interpreter, or the compiled [`engine`]
 //! * [`baselines`] — TreeLUT + LogicNets-lite comparison points (Table II)
 
 pub mod baselines;
@@ -22,6 +26,7 @@ pub mod coordinator;
 pub mod config;
 pub mod data;
 pub mod encoding;
+pub mod engine;
 pub mod hwgen;
 pub mod json;
 pub mod logic;

@@ -5,7 +5,7 @@
 //!   breakdown --model sm-10 --variant penft [--encoder S]               Fig.5-style component LUT breakdown
 //!   encoders  --model sm-10 --variant penft [--encoder auto]            per-feature encoder architecture/cost table
 //!   verify    --model sm-10 --variant penft [--n 512]                   netlist sim vs golden vectors
-//!   serve     --model sm-10 [--backend pjrt|netlist] [--requests N]
+//!   serve     --model sm-10 [--backend pjrt|netlist|compiled] [--requests N] [--lanes W] [--threads T]
 //!   accuracy  --model sm-10 --variant penft                             netlist accuracy on the test set
 //!   info                                                                artifact/manifest summary
 //!
@@ -62,9 +62,18 @@ const HELP: &str = "dwn — DWN FPGA accelerator generator (thermometer-encoding
 commands: generate | breakdown | encoders | verify | serve | accuracy | emit-rtl | mixed | info | help
 common options: --artifacts PATH --model NAME --variant ten|pen|penft
 generate/breakdown: --encoder auto|bank|chain|mux|lut (default bank = reference comparator bank)
+breakdown: per-component LUT area + per-stage runtime attribution from the
+           compiled engine; --lanes N (default 256) --passes N (default 64)
 encoders: per-feature encoder architecture selection + modeled vs mapped LUT cost
           --encoder auto|bank|chain|mux|lut (default auto) --depth-budget N (auto only)
+serve: --backend pjrt|netlist|compiled [--requests N]
+       compiled: --lanes N (vectors/pass, default 256) --threads N (default = cores)
 emit-rtl: --out design.v [--tb design_tb.v]    mixed: --start 8 --min 3 --tol 0.01";
+
+/// Default worker-thread count for the compiled engine.
+fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
 
 fn load_model(artifacts: &Artifacts, args: &Args) -> Result<DwnModel> {
     let name = args.get("model").ok_or_else(|| anyhow!("--model required"))?;
@@ -114,7 +123,26 @@ fn cmd_breakdown(artifacts: &Artifacts, args: &Args) -> Result<()> {
     let mut opts = AccelOptions::new(variant).with_encoder(encoder);
     opts.encoder_depth_budget = args.get_parse_opt("depth-budget")?;
     let accel = build_accelerator(&model, &opts)?;
-    let (nl, counts) = accel.map_with_breakdown(&MapConfig::default());
+    let (nl, tags) = accel.map_with_stages(&MapConfig::default());
+    let counts = Component::count_tags(&tags);
+
+    // Runtime attribution: compile the same netlist with the same stage
+    // tags and measure per-stage emulation time over random input lanes
+    // (LUT evaluation cost is data-independent).
+    let lanes = args.get_usize("lanes", 256)?;
+    let passes = args.get_usize("passes", 64)?;
+    let plan = dwn::engine::compile_with_stages(&nl, Some(&tags));
+    let mut rng = dwn::util::SplitMix64::new(0xB0A7);
+    let runtime = dwn::engine::measure_stages(&plan, lanes, passes, |ex, _| {
+        for i in 0..nl.num_inputs {
+            for w in ex.input_words_mut(i) {
+                *w = rng.next_u64();
+            }
+        }
+    });
+    let total_ns: f64 =
+        Component::ALL.iter().map(|&c| runtime.ns_per_row(c)).sum::<f64>().max(1e-9);
+
     let mut t = Table::new(
         &format!(
             "Component breakdown {} ({}, encoder {})",
@@ -122,18 +150,39 @@ fn cmd_breakdown(artifacts: &Artifacts, args: &Args) -> Result<()> {
             variant.label(),
             encoder.label()
         ),
-        &["component", "LUTs", "share"],
+        &["component", "LUTs", "share", "ns/row", "runtime share"],
     );
     let total = nl.lut_count().max(1);
     for (comp, n) in &counts {
+        let ns = runtime.ns_per_row(*comp);
         t.row(&[
             comp.label().into(),
             int(*n),
             format!("{:.1}%", 100.0 * *n as f64 / total as f64),
+            format!("{ns:.2}"),
+            format!("{:.1}%", 100.0 * ns / total_ns),
         ]);
     }
-    t.row(&["total".into(), int(nl.lut_count()), "100%".into()]);
+    t.row(&[
+        "total".into(),
+        int(nl.lut_count()),
+        "100%".into(),
+        format!("{total_ns:.2}"),
+        "100%".into(),
+    ]);
     print!("{}", t.render());
+    let s = plan.stats;
+    println!(
+        "compiled plan: {} ops over {} levels ({} lanes/pass, {} passes; \
+         {} const-folded, {} dead, {} pins folded)",
+        plan.ops.len(),
+        plan.depth(),
+        runtime.lanes,
+        runtime.passes,
+        s.const_folded,
+        s.dead_eliminated,
+        s.pins_folded
+    );
     Ok(())
 }
 
@@ -358,7 +407,33 @@ fn cmd_serve(artifacts: &Artifacts, args: &Args) -> Result<()> {
                 ServerConfig::default(),
             )
         }
-        other => bail!("unknown backend '{other}' (pjrt|netlist)"),
+        "compiled" => {
+            let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt))?;
+            let (nl, tags) = accel.map_with_stages(&MapConfig::default());
+            let plan = dwn::engine::compile_with_stages(&nl, Some(&tags));
+            let lanes = args.get_usize("lanes", 256)?;
+            let threads = args.get_usize("threads", default_threads())?;
+            println!(
+                "compiled engine: {} ops / {} levels from {} LUTs ({lanes} lanes x {threads} threads)",
+                plan.ops.len(),
+                plan.depth(),
+                nl.lut_count()
+            );
+            // Let the batcher fill whole engine passes.
+            let cfg =
+                ServerConfig { max_batch: lanes * threads.max(1), ..ServerConfig::default() };
+            Server::start_compiled(
+                plan,
+                model.penft.frac_bits.context("penft bits")?,
+                model.num_features,
+                model.num_classes,
+                accel.index_width(),
+                lanes,
+                threads,
+                cfg,
+            )
+        }
+        other => bail!("unknown backend '{other}' (pjrt|netlist|compiled)"),
     };
     let t0 = Instant::now();
     let mut pending = Vec::new();

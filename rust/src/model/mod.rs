@@ -191,6 +191,96 @@ impl DwnModel {
     }
 }
 
+/// Shape of a [`DwnModel::synthetic`] model.
+#[derive(Debug, Clone)]
+pub struct SynthSpec {
+    pub name: String,
+    pub num_luts: usize,
+    pub thermo_bits: usize,
+    pub num_features: usize,
+    pub num_classes: usize,
+    pub lut_k: usize,
+    pub frac_bits: u32,
+    pub seed: u64,
+}
+
+impl SynthSpec {
+    /// A JSC-sized classifier (16 features, 5 classes, 360 LUTs) — the
+    /// md-360 shape from the paper's benchmark set.
+    pub fn jsc_sized() -> Self {
+        Self {
+            name: "synth-jsc".into(),
+            num_luts: 360,
+            thermo_bits: 8,
+            num_features: 16,
+            num_classes: 5,
+            lut_k: 6,
+            frac_bits: 7,
+            seed: 0x75EED,
+        }
+    }
+}
+
+impl DwnModel {
+    /// Deterministic synthetic model: random (but valid) thresholds, LUT
+    /// mapping, and truth tables. Benches and tests use this to exercise
+    /// full-size accelerators without trained artifacts; the numbers it
+    /// produces are structural (area, depth, throughput), not accuracy.
+    pub fn synthetic(spec: &SynthSpec) -> DwnModel {
+        use crate::util::{fixed, SplitMix64};
+        assert!(spec.num_luts % spec.num_classes == 0, "luts must split evenly per class");
+        assert!((1..=6).contains(&spec.lut_k));
+        let mut rng = SplitMix64::new(spec.seed);
+        let bit_space = (spec.num_features * spec.thermo_bits) as u64;
+
+        let mut thresholds = Vec::with_capacity(spec.num_features);
+        for _ in 0..spec.num_features {
+            let mut row: Vec<f64> =
+                (0..spec.thermo_bits).map(|_| 2.0 * rng.next_f64() - 1.0).collect();
+            row.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            thresholds.push(row);
+        }
+        // The uniform grid is feature-independent; one row, cloned per feature.
+        let uni: Vec<f64> = (0..spec.thermo_bits)
+            .map(|t| -1.0 + 2.0 * (t as f64 + 1.0) / (spec.thermo_bits as f64 + 1.0))
+            .collect();
+        let uniform_thresholds = vec![uni; spec.num_features];
+        let quantize = |rows: &[Vec<f64>]| -> Vec<Vec<i32>> {
+            rows.iter()
+                .map(|r| r.iter().map(|&t| fixed::threshold_to_int(t, spec.frac_bits)).collect())
+                .collect()
+        };
+        let threshold_ints = quantize(&thresholds);
+
+        let table_mask = crate::logic::net::table_mask(spec.lut_k);
+        let sel: Vec<Vec<u32>> = (0..spec.num_luts)
+            .map(|_| (0..spec.lut_k).map(|_| rng.below(bit_space) as u32).collect())
+            .collect();
+        let tables: Vec<u64> = (0..spec.num_luts).map(|_| rng.next_u64() & table_mask).collect();
+
+        DwnModel {
+            name: spec.name.clone(),
+            num_luts: spec.num_luts,
+            thermo_bits: spec.thermo_bits,
+            num_features: spec.num_features,
+            num_classes: spec.num_classes,
+            lut_k: spec.lut_k,
+            sel: sel.clone(),
+            tables: tables.clone(),
+            thresholds,
+            uniform_thresholds,
+            ten: VariantInfo { acc: 0.0, frac_bits: None },
+            pen: VariantInfo { acc: 0.0, frac_bits: Some(spec.frac_bits) },
+            penft: VariantInfo { acc: 0.0, frac_bits: Some(spec.frac_bits) },
+            pen_threshold_ints: threshold_ints.clone(),
+            penft_threshold_ints: threshold_ints,
+            penft_sel: sel,
+            penft_tables: tables,
+            bw_sweep: Vec::new(),
+        }
+    }
+}
+
 fn parse_sel(v: &Value, lut_k: usize) -> Result<Vec<Vec<u32>>> {
     let mut out = Vec::new();
     for row in v.as_arr()? {

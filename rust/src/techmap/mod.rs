@@ -53,6 +53,15 @@ pub struct TrackedNetlist {
     pub roots: Vec<NodeId>,
 }
 
+impl TrackedNetlist {
+    /// Tag each physical LUT by mapping its cover root through `f` — the
+    /// export hook [`crate::hwgen`] uses to attach stage metadata to mapped
+    /// LUTs for the compiled engine's runtime attribution.
+    pub fn root_tags<T>(&self, f: impl Fn(NodeId) -> T) -> Vec<T> {
+        self.roots.iter().map(|&r| f(r)).collect()
+    }
+}
+
 /// Map while tracking cover roots.
 pub fn map_tracked(net: &Network, cfg: &MapConfig) -> TrackedNetlist {
     Mapper::new(net, cfg).run()

@@ -57,20 +57,34 @@ impl LutNetlist {
 
     /// Evaluate 64 vectors at once; `inputs[i]` lane-packs primary input i.
     pub fn eval_lanes(&self, inputs: &[u64]) -> Vec<u64> {
+        let mut scratch = Vec::new();
+        let mut outs = Vec::new();
+        self.eval_lanes_with(inputs, &mut scratch, &mut outs);
+        outs
+    }
+
+    /// Allocation-free [`Self::eval_lanes`]: `scratch` and `outs` are
+    /// resized on first use and reused across calls (the hook the serving
+    /// interpreter path and throughput benches use for steady-state eval).
+    pub fn eval_lanes_with(
+        &self,
+        inputs: &[u64],
+        scratch: &mut Vec<u64>,
+        outs: &mut Vec<u64>,
+    ) {
         assert_eq!(inputs.len(), self.num_inputs);
-        let mut v = vec![0u64; self.luts.len()];
-        for (i, lut) in self.luts.iter().enumerate() {
-            v[i] = eval_lut(lut, inputs, &v);
+        scratch.clear();
+        scratch.resize(self.luts.len(), 0);
+        for i in 0..self.luts.len() {
+            scratch[i] = eval_lut(&self.luts[i], inputs, scratch);
         }
-        self.outputs
-            .iter()
-            .map(|s| match s {
-                Src::Input(j) => inputs[*j as usize],
-                Src::Lut(j) => v[*j as usize],
-                Src::Const(true) => u64::MAX,
-                Src::Const(false) => 0,
-            })
-            .collect()
+        outs.clear();
+        outs.extend(self.outputs.iter().map(|s| match s {
+            Src::Input(j) => inputs[*j as usize],
+            Src::Lut(j) => scratch[*j as usize],
+            Src::Const(true) => u64::MAX,
+            Src::Const(false) => 0,
+        }));
     }
 
     /// Scalar convenience wrapper over [`Self::eval_lanes`].

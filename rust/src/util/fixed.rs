@@ -26,6 +26,22 @@ pub fn int_to_bits(k: i32, frac_bits: u32) -> u32 {
     (k as u32) & ((1u32 << width) - 1)
 }
 
+/// Quantize one feature row onto the PEN hardware input layout
+/// (feature-major, LSB-first `frac_bits + 1`-bit words) and call
+/// `set(input_bit)` for every 1 bit. Shared by the interpreter and compiled
+/// serving backends so their input packing cannot drift apart.
+pub fn pack_row_bits(row: &[f32], frac_bits: u32, mut set: impl FnMut(usize)) {
+    let width = (frac_bits + 1) as usize;
+    for (f, &x) in row.iter().enumerate() {
+        let pat = int_to_bits(input_to_int(x as f64, frac_bits), frac_bits);
+        for b in 0..width {
+            if (pat >> b) & 1 == 1 {
+                set(f * width + b);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

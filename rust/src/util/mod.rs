@@ -14,6 +14,19 @@ pub fn ceil_div(a: usize, b: usize) -> usize {
     (a + b - 1) / b
 }
 
+/// Assemble a little-endian index word from `width` output bits read via
+/// `get(i)` — the class-index decode both serving backends share.
+#[inline]
+pub fn decode_index_bits(width: usize, get: impl Fn(usize) -> bool) -> i32 {
+    let mut p = 0i32;
+    for i in 0..width {
+        if get(i) {
+            p |= 1 << i;
+        }
+    }
+    p
+}
+
 /// Number of bits needed to represent `n` distinct values (>= 1).
 #[inline]
 pub fn bits_for(n: usize) -> usize {

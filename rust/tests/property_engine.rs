@@ -1,0 +1,195 @@
+//! Property tests for the compiled execution engine: bit-exactness against
+//! the netlist interpreter on adversarial random netlists (consts, duplicate
+//! pins, dead LUTs), and end-to-end against the gate-level simulator on a
+//! generated accelerator.
+
+use dwn::engine::{self, Executor};
+use dwn::hwgen::{build_accelerator, AccelOptions, Component};
+use dwn::logic::Simulator;
+use dwn::model::{DwnModel, SynthSpec, Variant};
+use dwn::techmap::{LutNetlist, MapConfig, MappedLut, Src};
+use dwn::util::SplitMix64;
+
+/// Random topologically-ordered netlist exercising every `Src` variant,
+/// duplicate pins, and unreferenced (dead) LUTs.
+fn random_netlist(rng: &mut SplitMix64) -> LutNetlist {
+    let num_inputs = 2 + rng.below(8) as usize;
+    let num_luts = 5 + rng.below(60) as usize;
+    let mut luts = Vec::with_capacity(num_luts);
+    for i in 0..num_luts {
+        let k = 1 + rng.below(6) as usize;
+        let mut inputs = Vec::with_capacity(k);
+        for _ in 0..k {
+            let src = match rng.below(10) {
+                0..=4 if i > 0 => Src::Lut(rng.below(i as u64) as u32),
+                5 => Src::Const(rng.below(2) == 1),
+                _ => Src::Input(rng.below(num_inputs as u64) as u32),
+            };
+            inputs.push(src);
+        }
+        // Force occasional duplicate pins.
+        if k >= 2 && rng.below(3) == 0 {
+            inputs[k - 1] = inputs[0];
+        }
+        let table = rng.next_u64();
+        luts.push(MappedLut { inputs, table });
+    }
+    // Outputs reference a random subset — many LUTs stay dead.
+    let num_outputs = 1 + rng.below(6) as usize;
+    let outputs = (0..num_outputs)
+        .map(|_| match rng.below(8) {
+            0 => Src::Input(rng.below(num_inputs as u64) as u32),
+            1 => Src::Const(rng.below(2) == 1),
+            _ => Src::Lut(rng.below(num_luts as u64) as u32),
+        })
+        .collect();
+    LutNetlist { num_inputs, luts, outputs }
+}
+
+#[test]
+fn compiled_bit_exact_vs_interpreter_on_random_netlists() {
+    let mut rng = SplitMix64::new(0xE9617E);
+    for trial in 0..60 {
+        let nl = random_netlist(&mut rng);
+        let plan = engine::compile(&nl);
+        // Folding invariants: no k == 0 ops, pins in range, depth sane.
+        for op in &plan.ops {
+            assert!((1..=6).contains(&op.k), "trial {trial}");
+            for &p in &op.pins[..op.k as usize] {
+                assert!((p as usize) < (op.dst as usize), "pins precede dst (trial {trial})");
+            }
+        }
+        assert!(plan.ops.len() <= nl.lut_count());
+        let mut ex = Executor::new(&plan, 64);
+        for _ in 0..4 {
+            let inputs: Vec<u64> = (0..nl.num_inputs).map(|_| rng.next_u64()).collect();
+            ex.clear_inputs();
+            for (i, &w) in inputs.iter().enumerate() {
+                ex.input_words_mut(i)[0] = w;
+            }
+            ex.run();
+            let want = nl.eval_lanes(&inputs);
+            for (o, &w) in want.iter().enumerate() {
+                assert_eq!(ex.output_word(o, 0), w, "trial {trial} output {o}");
+            }
+        }
+    }
+}
+
+#[test]
+fn wide_executor_matches_per_word_interpreter() {
+    let mut rng = SplitMix64::new(0x51DE);
+    for _ in 0..10 {
+        let nl = random_netlist(&mut rng);
+        let plan = engine::compile(&nl);
+        let mut ex = Executor::new(&plan, 256);
+        assert_eq!(ex.words(), 4);
+        let word_inputs: Vec<Vec<u64>> = (0..4)
+            .map(|_| (0..nl.num_inputs).map(|_| rng.next_u64()).collect())
+            .collect();
+        ex.clear_inputs();
+        for (w, ins) in word_inputs.iter().enumerate() {
+            for (i, &v) in ins.iter().enumerate() {
+                ex.input_words_mut(i)[w] = v;
+            }
+        }
+        ex.run();
+        for (w, ins) in word_inputs.iter().enumerate() {
+            let want = nl.eval_lanes(ins);
+            for (o, &v) in want.iter().enumerate() {
+                assert_eq!(ex.output_word(o, w), v, "word {w} output {o}");
+            }
+        }
+    }
+}
+
+fn small_spec() -> SynthSpec {
+    SynthSpec {
+        name: "synth-test".into(),
+        num_luts: 60,
+        thermo_bits: 6,
+        num_features: 8,
+        num_classes: 3,
+        lut_k: 6,
+        frac_bits: 5,
+        seed: 0xACCE1,
+    }
+}
+
+#[test]
+fn compiled_engine_end_to_end_vs_gate_simulator() {
+    let model = DwnModel::synthetic(&small_spec());
+    let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt)).unwrap();
+    let (nl, tags) = accel.map_with_stages(&MapConfig::default());
+    assert_eq!(tags.len(), nl.lut_count());
+    let plan = engine::compile_with_stages(&nl, Some(&tags));
+
+    // Stage segments are level-ordered and partition the ops.
+    let mut covered = 0usize;
+    let mut last_level = 0u32;
+    for seg in &plan.segments {
+        assert!(seg.level >= last_level);
+        last_level = seg.level;
+        assert_eq!(seg.ops.start, covered);
+        covered = seg.ops.end;
+        assert!(seg.stage.is_some());
+    }
+    assert_eq!(covered, plan.ops.len());
+    // A PEN accelerator exercises encoder + LUT layer + popcount + argmax.
+    for c in [Component::Encoder, Component::LutLayer, Component::Popcount] {
+        assert!(plan.stages().contains(&c), "missing stage {}", c.label());
+    }
+
+    // Bit-exact against the gate-level simulator across random lanes.
+    let mut rng = SplitMix64::new(0x90_1DE2);
+    let mut sim = Simulator::new(&accel.net);
+    let mut ex = Executor::new(&plan, 64);
+    for _ in 0..8 {
+        let inputs: Vec<u64> = (0..nl.num_inputs).map(|_| rng.next_u64()).collect();
+        let want = sim.eval_lanes(&inputs);
+        ex.clear_inputs();
+        for (i, &w) in inputs.iter().enumerate() {
+            ex.input_words_mut(i)[0] = w;
+        }
+        ex.run();
+        for (o, &w) in want.iter().enumerate() {
+            assert_eq!(ex.output_word(o, 0), w, "output {o}");
+        }
+    }
+}
+
+#[test]
+fn compiled_serving_path_matches_interpreter_on_accelerator() {
+    use dwn::coordinator::Backend;
+    let model = DwnModel::synthetic(&small_spec());
+    let frac_bits = model.penft.frac_bits.unwrap();
+    let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt)).unwrap();
+    let (nl, tags) = accel.map_with_stages(&MapConfig::default());
+    let plan = engine::compile_with_stages(&nl, Some(&tags));
+    let interp = Backend::Netlist {
+        netlist: nl,
+        frac_bits,
+        num_features: model.num_features,
+        num_classes: model.num_classes,
+        index_width: accel.index_width(),
+    };
+    let compiled = Backend::Compiled {
+        plan,
+        frac_bits,
+        num_features: model.num_features,
+        num_classes: model.num_classes,
+        index_width: accel.index_width(),
+        lanes: 128,
+        threads: 2,
+    };
+    let mut rng = SplitMix64::new(0xF00D);
+    // 300 rows: spans multiple lane words per shard plus a ragged tail.
+    let rows: Vec<Vec<f32>> = (0..300)
+        .map(|_| {
+            (0..model.num_features).map(|_| (2.0 * rng.next_f64() - 1.0) as f32).collect()
+        })
+        .collect();
+    let a = interp.infer(&rows).unwrap();
+    let b = compiled.infer(&rows).unwrap();
+    assert_eq!(a, b);
+}
