@@ -5,29 +5,60 @@
 //!
 //! Backends: `pjrt` (AOT-compiled golden model), `netlist` (bit-accurate
 //! interpreter of the generated hardware), `compiled` (the netlist compiled
-//! into the wide/parallel execution engine — see DESIGN.md §engine).
+//! into the wide/parallel execution engine — see DESIGN.md §engine). The
+//! compiled backend takes `--tail native|lut` (default native): native
+//! evaluates the popcount/argmax tail arithmetically behind the persistent
+//! worker pool, lut emulates the full mapped netlist.
+//!
+//! Runs without trained artifacts too (netlist/compiled backends only): a
+//! synthetic JSC-sized model stands in, which is what the CI smoke step
+//! exercises under both tail modes.
 //!
 //!     cargo run --release --example serve_jsc -- \
-//!         [--model sm-50] [--backend pjrt|netlist|compiled] [--lanes 256] [--threads N]
+//!         [--model sm-50] [--backend pjrt|netlist|compiled] [--lanes 256] \
+//!         [--threads N] [--tail native|lut] [--smoke]
 
 use dwn::config::{Args, Artifacts};
 use dwn::coordinator::{Backend, Server, ServerConfig};
 use dwn::data::Dataset;
+use dwn::engine::TailMode;
 use dwn::hwgen::{build_accelerator, AccelOptions};
-use dwn::model::{DwnModel, Variant};
+use dwn::model::{DwnModel, SynthSpec, Variant};
 use dwn::runtime::Engine;
 use dwn::techmap::MapConfig;
 use dwn::util::SplitMix64;
 use std::time::{Duration, Instant};
 
 fn main() -> anyhow::Result<()> {
-    let args = Args::parse(std::env::args().skip(1), &[])?;
+    let args = Args::parse(std::env::args().skip(1), &["smoke"])?;
     let artifacts = Artifacts::discover();
-    anyhow::ensure!(artifacts.exists(), "run `make artifacts` first");
     let name = args.get_or("model", "sm-50");
     let backend = args.get_or("backend", "pjrt");
-    let model = DwnModel::load(&artifacts.model_path(&name))?;
-    let test = Dataset::load_csv(&artifacts.dataset_path("test"))?;
+    let smoke = args.has_flag("smoke");
+
+    // Trained model + real test rows when artifacts exist; synthetic
+    // stand-ins otherwise (same shapes, structural throughput only).
+    let (model, rows) = if artifacts.exists() {
+        let model = DwnModel::load(&artifacts.model_path(&name))?;
+        let test = Dataset::load_csv(&artifacts.dataset_path("test"))?;
+        let rows: Vec<Vec<f32>> = (0..test.len()).map(|i| test.row(i).to_vec()).collect();
+        (model, rows)
+    } else {
+        anyhow::ensure!(
+            backend != "pjrt",
+            "pjrt backend needs trained artifacts; run `make artifacts` first"
+        );
+        let spec = SynthSpec::jsc_sized();
+        println!("no artifacts; serving synthetic model {}", spec.name);
+        let model = DwnModel::synthetic(&spec);
+        let mut rng = SplitMix64::new(0x5EED);
+        let rows: Vec<Vec<f32>> = (0..2048)
+            .map(|_| {
+                (0..model.num_features).map(|_| (2.0 * rng.next_f64() - 1.0) as f32).collect()
+            })
+            .collect();
+        (model, rows)
+    };
 
     let cfg = |max_batch: usize| ServerConfig {
         max_batch,
@@ -49,7 +80,7 @@ fn main() -> anyhow::Result<()> {
         "netlist" => {
             let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt))?;
             let nl = accel.map(&MapConfig::default());
-            println!("serving {name} via netlist interpreter ({} LUTs)", nl.lut_count());
+            println!("serving {} via netlist interpreter ({} LUTs)", model.name, nl.lut_count());
             Server::start_netlist(
                 nl,
                 model.penft.frac_bits.expect("penft bits"),
@@ -65,13 +96,19 @@ fn main() -> anyhow::Result<()> {
                 "threads",
                 std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
             )?;
+            let tail_mode: TailMode = args.get_parse("tail", TailMode::Native)?;
             let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt))?;
-            let (nl, tags) = accel.map_with_stages(&MapConfig::default());
-            let plan = dwn::engine::compile_with_stages(&nl, Some(&tags));
+            let (nl, tags, tail) = accel.map_with_tail(&MapConfig::default());
+            let plan = dwn::engine::compile_for_mode(&nl, Some(&tags), tail.as_ref(), tail_mode);
+            if tail_mode == TailMode::Native && plan.tail.is_none() {
+                println!("note: tail metadata unavailable; fell back to LUT emulation");
+            }
             println!(
-                "serving {name} via compiled engine ({} ops / {} levels, {lanes} lanes x {threads} threads)",
+                "serving {} via compiled engine ({} ops / {} levels, {lanes} lanes x {threads} threads, {} tail)",
+                model.name,
                 plan.ops.len(),
-                plan.depth()
+                plan.depth(),
+                if plan.tail.is_some() { "native" } else { "lut" }
             );
             let max_batch = lanes * threads.max(1);
             Server::start_compiled(
@@ -89,9 +126,11 @@ fn main() -> anyhow::Result<()> {
     };
     println!("{:>12} {:>12} {:>10} {:>10} {:>10} {:>11}", "target req/s", "achieved", "p50 us", "p99 us", "max us", "mean batch");
 
+    let rates: &[u64] =
+        if smoke { &[10_000, 100_000] } else { &[2_000, 10_000, 50_000, 200_000] };
+    let duration = Duration::from_millis(if smoke { 200 } else { 800 });
     let mut rng = SplitMix64::new(42);
-    for target_rps in [2_000u64, 10_000, 50_000, 200_000] {
-        let duration = Duration::from_millis(800);
+    for &target_rps in rates {
         let t0 = Instant::now();
         let mut sent = 0u64;
         let mut pending = Vec::new();
@@ -100,8 +139,8 @@ fn main() -> anyhow::Result<()> {
         while t0.elapsed() < duration {
             let now = t0.elapsed().as_secs_f64();
             if now >= next_t {
-                let i = (sent as usize) % test.len();
-                if let Ok(rx) = server.submit(test.row(i)) {
+                let i = (sent as usize) % rows.len();
+                if let Ok(rx) = server.submit(&rows[i]) {
                     pending.push(rx);
                 }
                 sent += 1;

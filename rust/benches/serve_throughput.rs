@@ -3,6 +3,13 @@
 //! on a JSC-sized PEN+FT accelerator. Falls back to a synthetic model of the
 //! same shape when trained artifacts are absent, so it runs anywhere.
 //!
+//! Engine configurations, against the interpreter baseline:
+//! * `spawn-lut`  — PR 2 engine: full LUT emulation, scoped threads spawned
+//!   per batch (`engine::infer_fixed_batch`).
+//! * `pool-lut`   — same plan behind the persistent worker pool.
+//! * `pool-native`— plan truncated at the LUT→arithmetic boundary with the
+//!   native popcount/argmax tail, behind the pool — the serving default.
+//!
 //!     cargo bench --bench serve_throughput
 //!     (or: target/release/serve_throughput after `cargo build --benches`)
 
@@ -30,17 +37,25 @@ fn main() {
 
     let frac_bits = model.penft.frac_bits.expect("penft bits");
     let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt)).unwrap();
-    let (nl, tags) = accel.map_with_stages(&MapConfig::default());
-    let plan = dwn::engine::compile_with_stages(&nl, Some(&tags));
+    let (nl, tags, tail) = accel.map_with_tail(&MapConfig::default());
+    let lut_plan = dwn::engine::compile_with_stages(&nl, Some(&tags));
+    let native_plan = dwn::engine::compile_with_tail(&nl, Some(&tags), tail.as_ref());
     let index_width = accel.index_width();
     println!(
         "accelerator: {} LUTs -> {} compiled ops / {} levels ({} const-folded, {} dead, {} pins folded)",
         nl.lut_count(),
-        plan.ops.len(),
-        plan.depth(),
-        plan.stats.const_folded,
-        plan.stats.dead_eliminated,
-        plan.stats.pins_folded
+        lut_plan.ops.len(),
+        lut_plan.depth(),
+        lut_plan.stats.const_folded,
+        lut_plan.stats.dead_eliminated,
+        lut_plan.stats.pins_folded
+    );
+    println!(
+        "native tail: {} ops / {} levels ({} popcount/argmax LUTs evaluated arithmetically{})",
+        native_plan.ops.len(),
+        native_plan.depth(),
+        native_plan.stats.tail_skipped,
+        if native_plan.tail.is_some() { "" } else { "; UNAVAILABLE — fell back to lut" }
     );
 
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
@@ -51,17 +66,25 @@ fn main() {
         num_classes: model.num_classes,
         index_width,
     };
-    let mk_compiled = |lanes: usize, threads: usize| Backend::Compiled {
-        plan: plan.clone(),
+    // Persistent pools, held across all batches like a real server.
+    let pool_lut = Backend::compiled(
+        lut_plan.clone(),
         frac_bits,
-        num_features: model.num_features,
-        num_classes: model.num_classes,
+        model.num_features,
+        model.num_classes,
         index_width,
-        lanes,
-        threads,
-    };
-    let compiled_1t = mk_compiled(256, 1);
-    let compiled_nt = mk_compiled(256, cores);
+        256,
+        cores,
+    );
+    let pool_native = Backend::compiled(
+        native_plan.clone(),
+        frac_bits,
+        model.num_features,
+        model.num_classes,
+        index_width,
+        256,
+        cores,
+    );
 
     // Random feature rows (eval cost is data-independent).
     let mut rng = SplitMix64::new(0xBEEF);
@@ -72,40 +95,65 @@ fn main() {
         .collect();
 
     println!(
-        "\n{:>7} {:>18} {:>18} {:>18} {:>9}",
-        "batch", "interp rows/s", "compiled-1t rows/s", &format!("compiled-{cores}t rows/s"), "speedup"
+        "\n{:>7} {:>16} {:>16} {:>16} {:>16} {:>9}",
+        "batch", "interp rows/s", "spawn-lut rows/s", "pool-lut rows/s", "pool-native r/s", "gain"
     );
     for batch in [64usize, 256, 1024, 4096] {
         let slice = &rows[..batch];
-        let interp_rps = rows_per_sec(&interp, slice);
-        let c1_rps = rows_per_sec(&compiled_1t, slice);
-        let cn_rps = rows_per_sec(&compiled_nt, slice);
+        let interp_rps = rows_per_sec(slice, |r| interp.infer(r).unwrap());
+        // PR 2 baseline: scoped-thread spawn per batch, LUT-emulated tail.
+        let spawn_rps = rows_per_sec(slice, |r| {
+            dwn::engine::infer_fixed_batch(&lut_plan, r, frac_bits, index_width, 256, cores)
+        });
+        let pool_lut_rps = rows_per_sec(slice, |r| pool_lut.infer(r).unwrap());
+        let pool_native_rps = rows_per_sec(slice, |r| pool_native.infer(r).unwrap());
         println!(
-            "{:>7} {:>18.0} {:>18.0} {:>18.0} {:>8.2}x",
+            "{:>7} {:>16.0} {:>16.0} {:>16.0} {:>16.0} {:>8.2}x",
             batch,
             interp_rps,
-            c1_rps,
-            cn_rps,
-            cn_rps.max(c1_rps) / interp_rps
+            spawn_rps,
+            pool_lut_rps,
+            pool_native_rps,
+            // the tentpole gain: native tail + persistent pool vs PR 2
+            pool_native_rps / spawn_rps
         );
     }
 
     // Per-stage runtime attribution (the paper's area breakdown, extended to
-    // emulation throughput).
-    let mut fill_rng = SplitMix64::new(0xA77);
-    let runtime =
-        dwn::engine::measure_stages(&plan, 256, 64, |ex, _| {
+    // emulation throughput), for both tail modes.
+    for (label, plan) in [("lut tail", &lut_plan), ("native tail", &native_plan)] {
+        let mut fill_rng = SplitMix64::new(0xA77);
+        let runtime = dwn::engine::measure_stages(plan, 256, 64, |ex, _| {
             for i in 0..plan.num_inputs {
                 for w in ex.input_words_mut(i) {
                     *w = fill_rng.next_u64();
                 }
             }
         });
-    println!("\nper-stage runtime attribution (ns/row over {} lanes):", runtime.lanes);
-    let total: f64 = Component::ALL.iter().map(|&c| runtime.ns_per_row(c)).sum();
-    for c in Component::ALL {
-        let ns = runtime.ns_per_row(c);
-        println!("  {:9} {:>8.2} ns/row  ({:>5.1}%)", c.label(), ns, 100.0 * ns / total.max(1e-9));
+        println!(
+            "\nper-stage runtime attribution, {label} (ns/row over {} lanes):",
+            runtime.lanes
+        );
+        let total: f64 = Component::ALL.iter().map(|&c| runtime.ns_per_row(c)).sum::<f64>()
+            + runtime.tail_ns_per_row();
+        for c in Component::ALL {
+            let ns = runtime.ns_per_row(c);
+            println!(
+                "  {:11} {:>8.2} ns/row  ({:>5.1}%)",
+                c.label(),
+                ns,
+                100.0 * ns / total.max(1e-9)
+            );
+        }
+        if runtime.tail.is_some() {
+            let ns = runtime.tail_ns_per_row();
+            println!(
+                "  {:11} {:>8.2} ns/row  ({:>5.1}%)",
+                "tail-native",
+                ns,
+                100.0 * ns / total.max(1e-9)
+            );
+        }
     }
 }
 
@@ -116,14 +164,14 @@ fn synth() -> DwnModel {
 }
 
 /// Median-of-3 timed repetitions, enough iterations to amortize noise.
-fn rows_per_sec(backend: &Backend, rows: &[Vec<f32>]) -> f64 {
+fn rows_per_sec(rows: &[Vec<f32>], infer: impl Fn(&[Vec<f32>]) -> Vec<i32>) -> f64 {
     let iters = (65_536 / rows.len()).max(1);
-    let _ = backend.infer(rows).unwrap(); // warmup
+    let _ = infer(rows); // warmup
     let mut samples: Vec<f64> = (0..3)
         .map(|_| {
             let t0 = Instant::now();
             for _ in 0..iters {
-                let preds = backend.infer(rows).unwrap();
+                let preds = infer(rows);
                 assert_eq!(preds.len(), rows.len());
             }
             (iters * rows.len()) as f64 / t0.elapsed().as_secs_f64()

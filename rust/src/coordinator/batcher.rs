@@ -1,7 +1,7 @@
 //! Dynamic batcher + inference loop.
 
 use super::metrics::Metrics;
-use crate::engine::{self, ExecPlan};
+use crate::engine::{EnginePool, ExecPlan};
 use crate::runtime::Engine;
 use crate::techmap::LutNetlist;
 use crate::util::fixed;
@@ -24,22 +24,35 @@ pub enum Backend {
         /// Width of the class-index output word.
         index_width: usize,
     },
-    /// The netlist compiled into a flat execution plan
-    /// ([`crate::engine`]) — wide lanes + thread-sharded batches.
+    /// The netlist compiled into a flat execution plan ([`crate::engine`]),
+    /// evaluated by a persistent worker pool the backend holds for the life
+    /// of the server — no per-batch thread spawn. The plan may carry a
+    /// native arithmetic tail (`--tail native`) or emulate the full netlist.
     Compiled {
+        pool: EnginePool,
+        num_features: usize,
+        num_classes: usize,
+    },
+}
+
+impl Backend {
+    /// Build the compiled backend: wraps `plan` in a persistent
+    /// [`EnginePool`] with `threads.max(1)` parked workers, each evaluating
+    /// `lanes` vectors per pass.
+    #[allow(clippy::too_many_arguments)]
+    pub fn compiled(
         plan: ExecPlan,
         frac_bits: u32,
         num_features: usize,
         num_classes: usize,
         index_width: usize,
-        /// Vectors per evaluation pass (rounded up to a multiple of 64).
         lanes: usize,
-        /// Worker threads for batch sharding (1 = inline).
         threads: usize,
-    },
-}
+    ) -> Backend {
+        let pool = EnginePool::new(Arc::new(plan), lanes, threads, frac_bits, index_width);
+        Backend::Compiled { pool, num_features, num_classes }
+    }
 
-impl Backend {
     pub fn max_batch_hint(&self) -> usize {
         match self {
             Backend::Pjrt(e) => e.batch,
@@ -47,8 +60,8 @@ impl Backend {
             // words per batch amortize the batcher loop without hurting
             // latency at these eval costs.
             Backend::Netlist { .. } => 8 * 64,
-            // One full pass per shard of every thread.
-            Backend::Compiled { lanes, threads, .. } => *lanes * (*threads).max(1),
+            // One full pass per worker of the pool.
+            Backend::Compiled { pool, .. } => pool.lanes() * pool.threads(),
         }
     }
 
@@ -74,23 +87,16 @@ impl Backend {
             }
             Backend::Netlist { netlist, frac_bits, index_width, .. } => {
                 // Pack fixed-point inputs straight into lane words, one
-                // 64-row chunk per eval pass — no per-row bit vectors.
-                let width = (*frac_bits + 1) as usize;
-                let mut lanes = vec![0u64; netlist.num_inputs];
+                // 64-row chunk per eval pass — no per-row bit vectors. The
+                // shared packer rewrites the whole buffer per chunk, so a
+                // chunk smaller than one lane word can never see stale
+                // lanes from an earlier, larger chunk.
+                let mut lanes = Vec::new();
                 let mut scratch = Vec::new();
                 let mut outs = Vec::new();
                 let mut preds = Vec::with_capacity(rows.len());
                 for chunk in rows.chunks(64) {
-                    lanes.iter_mut().for_each(|w| *w = 0);
-                    for (lane, r) in chunk.iter().enumerate() {
-                        // Same dimension check the old eval_batch path made.
-                        assert_eq!(
-                            r.len() * width,
-                            netlist.num_inputs,
-                            "row does not match the netlist input interface"
-                        );
-                        fixed::pack_row_bits(r, *frac_bits, |bit| lanes[bit] |= 1u64 << lane);
-                    }
+                    fixed::pack_chunk_words(chunk, *frac_bits, netlist.num_inputs, &mut lanes);
                     netlist.eval_lanes_with(&lanes, &mut scratch, &mut outs);
                     for lane in 0..chunk.len() {
                         preds.push(crate::util::decode_index_bits(*index_width, |i| {
@@ -100,9 +106,7 @@ impl Backend {
                 }
                 Ok(preds)
             }
-            Backend::Compiled { plan, frac_bits, index_width, lanes, threads, .. } => Ok(
-                engine::infer_fixed_batch(plan, rows, *frac_bits, *index_width, *lanes, *threads),
-            ),
+            Backend::Compiled { pool, .. } => Ok(pool.infer(rows)),
         }
     }
 }
@@ -192,8 +196,9 @@ impl Server {
     }
 
     /// Start over a compiled execution plan ([`crate::engine`]). `lanes`
-    /// and `threads` size the engine's evaluation passes; the batcher's
-    /// effective max batch derives from them via `max_batch_hint`.
+    /// and `threads` size the persistent worker pool the backend keeps for
+    /// the server's life; the batcher's effective max batch derives from
+    /// them via `max_batch_hint`.
     #[allow(clippy::too_many_arguments)]
     pub fn start_compiled(
         plan: ExecPlan,
@@ -207,7 +212,7 @@ impl Server {
     ) -> Server {
         Self::start_with(
             move || {
-                Ok(Backend::Compiled {
+                Ok(Backend::compiled(
                     plan,
                     frac_bits,
                     num_features,
@@ -215,7 +220,7 @@ impl Server {
                     index_width,
                     lanes,
                     threads,
-                })
+                ))
             },
             cfg,
         )
@@ -403,17 +408,43 @@ mod tests {
             num_classes: 2,
             index_width: 1,
         };
-        let compiled = Backend::Compiled {
-            plan,
+        let compiled = Backend::compiled(plan, 1, 1, 2, 1, 64, 2);
+        let rows: Vec<Vec<f32>> =
+            (0..333).map(|i| vec![if i % 3 == 0 { -0.5 } else { 0.5 }]).collect();
+        assert_eq!(netlist.infer(&rows).unwrap(), compiled.infer(&rows).unwrap());
+    }
+
+    /// Regression: a batch smaller than one lane word, issued right after a
+    /// full multi-word batch on the same backend instances, must decode
+    /// exactly like fresh per-row inference — reused pack/decode scratch
+    /// must never leak stale tail lanes (see `fixed::pack_chunk_words`).
+    #[test]
+    fn sub_lane_word_batch_after_full_batch() {
+        let nl = LutNetlist {
+            num_inputs: 2,
+            luts: vec![MappedLut { inputs: vec![Src::Input(1)], table: 0b10 }],
+            outputs: vec![Src::Lut(0)],
+        };
+        let plan = crate::engine::compile(&nl);
+        let netlist = Backend::Netlist {
+            netlist: nl,
             frac_bits: 1,
             num_features: 1,
             num_classes: 2,
             index_width: 1,
-            lanes: 64,
-            threads: 2,
         };
-        let rows: Vec<Vec<f32>> =
-            (0..333).map(|i| vec![if i % 3 == 0 { -0.5 } else { 0.5 }]).collect();
-        assert_eq!(netlist.infer(&rows).unwrap(), compiled.infer(&rows).unwrap());
+        let compiled = Backend::compiled(plan, 1, 1, 2, 1, 128, 2);
+        let big: Vec<Vec<f32>> =
+            (0..160).map(|i| vec![if i % 2 == 0 { 0.9 } else { -0.9 }]).collect();
+        let small: Vec<Vec<f32>> = vec![vec![-0.9], vec![0.9], vec![-0.9]];
+        let want: Vec<i32> = vec![1, 0, 1];
+        for backend in [&netlist, &compiled] {
+            let _ = backend.infer(&big).unwrap(); // fill scratch with a full batch
+            assert_eq!(backend.infer(&small).unwrap(), want);
+            // Per-row singles agree too (batch of one row).
+            for (row, &w) in small.iter().zip(&want) {
+                assert_eq!(backend.infer(std::slice::from_ref(row)).unwrap(), vec![w]);
+            }
+        }
     }
 }

@@ -14,8 +14,9 @@
 //! 4. **resolve** — assign each surviving LUT a slot and rewrite every pin
 //!    to a flat slot index.
 
-use super::plan::{CompileStats, ExecPlan, OutSrc, PlanOp, Segment};
-use crate::hwgen::Component;
+use super::plan::{CompileStats, ExecPlan, OutSrc, PlanOp, Segment, TailPlan};
+use super::tail::TailMode;
+use crate::hwgen::{Component, TailInfo};
 use crate::logic::net::{cofactor_tables, table_mask};
 use crate::techmap::{LutNetlist, Src};
 
@@ -28,6 +29,46 @@ pub fn compile(nl: &LutNetlist) -> ExecPlan {
 /// [`crate::hwgen::Accelerator::map_with_stages`]). Tag order must match
 /// `nl.luts`.
 pub fn compile_with_stages(nl: &LutNetlist, tags: Option<&[Component]>) -> ExecPlan {
+    compile_impl(nl, tags, None)
+}
+
+/// Compile with a native arithmetic tail: ops whose stage tag is popcount or
+/// argmax are not compiled; instead the plan records where each LUT-layer
+/// class-group bit lives ([`TailPlan`]) so the executor can popcount and
+/// argmax natively. Falls back to full LUT emulation (identical to
+/// [`compile_with_stages`]) when `tags`/`tail` are absent or the mapped
+/// structure is not the expected clean LUT→arithmetic boundary:
+/// * a class-group bit resolves to a popcount/argmax-tagged LUT (the mapper
+///   absorbed a LUT-layer output into a downstream cone),
+/// * a netlist output is fed by anything other than a tail-stage LUT or a
+///   constant,
+/// * a kept (pre-boundary) op turns out to depend on a tail op.
+pub fn compile_with_tail(
+    nl: &LutNetlist,
+    tags: Option<&[Component]>,
+    tail: Option<&TailInfo>,
+) -> ExecPlan {
+    compile_impl(nl, tags, tail)
+}
+
+/// Compile for a requested [`TailMode`]: `Native` engages the arithmetic
+/// tail via [`compile_with_tail`] (with its documented fallback), `Lut`
+/// emulates the full netlist. The shared dispatch for `dwn serve`,
+/// `dwn breakdown`, and the serving example — callers can tell which path
+/// was actually taken from `plan.tail.is_some()`.
+pub fn compile_for_mode(
+    nl: &LutNetlist,
+    tags: Option<&[Component]>,
+    tail: Option<&TailInfo>,
+    mode: TailMode,
+) -> ExecPlan {
+    match mode {
+        TailMode::Native => compile_with_tail(nl, tags, tail),
+        TailMode::Lut => compile_with_stages(nl, tags),
+    }
+}
+
+fn compile_impl(nl: &LutNetlist, tags: Option<&[Component]>, tail: Option<&TailInfo>) -> ExecPlan {
     if let Some(t) = tags {
         assert_eq!(t.len(), nl.luts.len(), "one stage tag per source LUT");
     }
@@ -91,7 +132,22 @@ pub fn compile_with_stages(nl: &LutNetlist, tags: Option<&[Component]>) -> ExecP
         }
     }
 
-    // Pass 2: DCE from outputs.
+    // Tail boundary: keep the tail only when the mapped structure is the
+    // clean LUT→arithmetic split `compile_with_tail` documents.
+    let use_tail: Option<&TailInfo> = tail.and_then(|t| {
+        let tg = tags?;
+        tail_boundary_ok(nl, tg, t).then_some(t)
+    });
+    let tail_tagged = |i: usize| {
+        use_tail.is_some()
+            && matches!(
+                tags.map(|t| t[i]),
+                Some(Component::Popcount) | Some(Component::Argmax)
+            )
+    };
+
+    // Pass 2: DCE — roots are the netlist outputs, or the LUT-layer class
+    // bits when the plan stops at the arithmetic boundary.
     let mut live = vec![false; n];
     let mut stack: Vec<u32> = Vec::new();
     let mark = |j: u32, live: &mut Vec<bool>, stack: &mut Vec<u32>| {
@@ -100,9 +156,20 @@ pub fn compile_with_stages(nl: &LutNetlist, tags: Option<&[Component]>) -> ExecP
             stack.push(j);
         }
     };
-    for out in &nl.outputs {
-        if let Src::Lut(j) = out {
-            mark(*j, &mut live, &mut stack);
+    match use_tail {
+        Some(t) => {
+            for src in t.class_bits.iter().flatten() {
+                if let Src::Lut(j) = src {
+                    mark(*j, &mut live, &mut stack);
+                }
+            }
+        }
+        None => {
+            for out in &nl.outputs {
+                if let Src::Lut(j) = out {
+                    mark(*j, &mut live, &mut stack);
+                }
+            }
         }
     }
     while let Some(j) = stack.pop() {
@@ -113,8 +180,17 @@ pub fn compile_with_stages(nl: &LutNetlist, tags: Option<&[Component]>) -> ExecP
             }
         }
     }
+    // Defensive boundary check: a kept op depending on a tail op means the
+    // split is not clean after all — recompile with full LUT emulation.
+    // (Unreachable for range-tagged accelerators, where every fanin of a
+    // pre-boundary cone roots below the popcount node range.)
+    if use_tail.is_some() && (0..n).any(|i| live[i] && tail_tagged(i)) {
+        return compile_impl(nl, tags, None);
+    }
     stats.dead_eliminated =
-        (0..n).filter(|&i| const_val[i].is_none() && !live[i]).count();
+        (0..n).filter(|&i| const_val[i].is_none() && !live[i] && !tail_tagged(i)).count();
+    stats.tail_skipped =
+        (0..n).filter(|&i| const_val[i].is_none() && tail_tagged(i)).count();
 
     // Pass 3: levelize surviving LUTs and fix the execution order.
     let mut level = vec![0u32; n];
@@ -175,20 +251,88 @@ pub fn compile_with_stages(nl: &LutNetlist, tags: Option<&[Component]>) -> ExecP
         }
     }
 
-    let outputs = nl
-        .outputs
-        .iter()
-        .map(|s| match s {
-            Src::Input(j) => OutSrc::Slot(*j),
-            Src::Const(b) => OutSrc::Const(*b),
-            Src::Lut(j) => match const_val[*j as usize] {
-                Some(b) => OutSrc::Const(b),
-                None => OutSrc::Slot(slot_of[*j as usize]),
-            },
-        })
-        .collect();
+    // With a native tail the netlist outputs are produced by ops we did not
+    // compile; the plan carries no emulated outputs and predictions come
+    // from the TailPlan instead.
+    let outputs = if use_tail.is_some() {
+        Vec::new()
+    } else {
+        nl.outputs
+            .iter()
+            .map(|s| match s {
+                Src::Input(j) => OutSrc::Slot(*j),
+                Src::Const(b) => OutSrc::Const(*b),
+                Src::Lut(j) => match const_val[*j as usize] {
+                    Some(b) => OutSrc::Const(b),
+                    None => OutSrc::Slot(slot_of[*j as usize]),
+                },
+            })
+            .collect()
+    };
 
-    ExecPlan { num_inputs, ops, segments, outputs, stats }
+    let tail_plan = use_tail.map(|t| {
+        let mut class_slots = Vec::with_capacity(t.class_bits.len());
+        let mut class_base = Vec::with_capacity(t.class_bits.len());
+        for group in &t.class_bits {
+            let mut slots = Vec::with_capacity(group.len());
+            let mut base = 0u32;
+            for src in group {
+                match src {
+                    Src::Const(b) => base += *b as u32,
+                    Src::Input(i) => slots.push(*i),
+                    Src::Lut(j) => match const_val[*j as usize] {
+                        // A group bit folded constant still scores its class.
+                        Some(b) => base += b as u32,
+                        None => slots.push(slot_of[*j as usize]),
+                    },
+                }
+            }
+            class_slots.push(slots);
+            class_base.push(base);
+        }
+        TailPlan {
+            class_slots,
+            class_base,
+            index_width: t.index_width,
+            score_width: t.score_width,
+        }
+    });
+
+    ExecPlan { num_inputs, ops, segments, outputs, stats, tail: tail_plan }
+}
+
+/// The structural expectations behind a native tail: every class-group bit
+/// must resolve to a pre-boundary signal, and every netlist output must be
+/// produced by the arithmetic tail being replaced (or a constant).
+fn tail_boundary_ok(nl: &LutNetlist, tags: &[Component], tail: &TailInfo) -> bool {
+    let is_tail_tag =
+        |j: u32| matches!(tags[j as usize], Component::Popcount | Component::Argmax);
+    if tail.class_bits.is_empty() || tail.index_width == 0 {
+        return false;
+    }
+    for src in tail.class_bits.iter().flatten() {
+        match src {
+            Src::Const(_) => {}
+            Src::Input(i) => {
+                if *i as usize >= nl.num_inputs {
+                    return false;
+                }
+            }
+            Src::Lut(j) => {
+                if *j as usize >= nl.luts.len() || is_tail_tag(*j) {
+                    return false;
+                }
+            }
+        }
+    }
+    if nl.outputs.len() < tail.index_width {
+        return false;
+    }
+    nl.outputs.iter().all(|s| match s {
+        Src::Const(_) => true,
+        Src::Input(_) => false,
+        Src::Lut(j) => is_tail_tag(*j),
+    })
 }
 
 /// Remove pin `j2` from a table over `k` pins given pins `j1` and `j2` carry

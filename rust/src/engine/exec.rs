@@ -54,6 +54,29 @@ impl<'p> Executor<'p> {
         &mut self.buf[base..base + self.words]
     }
 
+    /// The plan this executor runs.
+    #[inline]
+    pub fn plan(&self) -> &'p ExecPlan {
+        self.plan
+    }
+
+    /// Lane word `word_idx` of any value-buffer slot — the read the native
+    /// arithmetic tail uses to pull LUT-layer outputs without going through
+    /// the netlist outputs (which a tail plan does not emulate).
+    #[inline]
+    pub fn slot_word(&self, slot: usize, word_idx: usize) -> u64 {
+        debug_assert!(slot < self.plan.num_slots() && word_idx < self.words);
+        self.buf[slot * self.words + word_idx]
+    }
+
+    /// Native-tail predictions for the first `out.len()` lanes of the
+    /// current values (call after [`run`](Self::run)). Panics when the plan
+    /// was compiled without a tail.
+    pub fn tail_preds(&self, out: &mut [i32]) {
+        let tail = self.plan.tail.as_ref().expect("plan compiled without a native tail");
+        super::tail::eval_preds(self, tail, out);
+    }
+
     /// Evaluate every op for the current inputs.
     pub fn run(&mut self) {
         self.run_ops(0..self.plan.ops.len());
@@ -113,6 +136,26 @@ impl<'p> Executor<'p> {
     }
 }
 
+/// Contiguous, block-aligned shard sizes: split `n` rows into up to
+/// `shards` runs of whole `lanes`-blocks, remainder blocks spread over the
+/// first shards. Both [`par_eval`] and [`super::EnginePool`] shard with
+/// this, so their row→evaluation-pass assignment — and therefore their
+/// results — are identical by construction.
+pub(crate) fn shard_row_counts(n: usize, lanes: usize, shards: usize) -> Vec<usize> {
+    let blocks = crate::util::ceil_div(n, lanes);
+    let shards = shards.min(blocks).max(1);
+    let per = blocks / shards;
+    let extra = blocks % shards;
+    let mut rest = n;
+    (0..shards)
+        .map(|s| {
+            let take = ((per + usize::from(s < extra)) * lanes).min(rest);
+            rest -= take;
+            take
+        })
+        .collect()
+}
+
 /// Shard a batch of `n` rows across up to `threads` scoped threads, each
 /// owning its own [`Executor`] (scratch never shared). `block_fn` handles
 /// one lane-block: it receives the executor, the first row index of the
@@ -131,9 +174,8 @@ pub fn par_eval<T, F>(
 {
     assert_eq!(out.len(), n);
     let lanes = crate::util::ceil_div(lanes.max(1), 64) * 64;
-    let threads = threads.max(1);
-    let blocks = crate::util::ceil_div(n, lanes);
-    if threads == 1 || blocks <= 1 {
+    let shards = shard_row_counts(n, lanes, threads.max(1));
+    if threads <= 1 || shards.len() <= 1 {
         let mut ex = Executor::new(plan, lanes);
         let mut start = 0usize;
         for chunk in out.chunks_mut(lanes) {
@@ -143,17 +185,11 @@ pub fn par_eval<T, F>(
         }
         return;
     }
-    // Contiguous block ranges per thread, remainder spread over the first
-    // threads. Each thread walks its own slice of `out`.
-    let threads = threads.min(blocks);
-    let per = blocks / threads;
-    let extra = blocks % threads;
+    // Each thread walks its own contiguous slice of `out`.
     std::thread::scope(|scope| {
         let mut rest = &mut out[..];
         let mut row0 = 0usize;
-        for t in 0..threads {
-            let my_blocks = per + usize::from(t < extra);
-            let my_rows = (my_blocks * lanes).min(rest.len());
+        for my_rows in shards {
             let (mine, tail) = rest.split_at_mut(my_rows);
             rest = tail;
             let my_row0 = row0;
@@ -172,10 +208,48 @@ pub fn par_eval<T, F>(
     });
 }
 
+/// One lane-block of the serving path: pack `rows` into the (pre-cleared)
+/// executor, run the plan, and decode one prediction per row — via the
+/// native arithmetic tail when the plan carries one, else by reading the
+/// emulated class-index output bits. Shared by `par_eval`-based inference
+/// and the persistent worker pool so the two cannot drift apart.
+pub(crate) fn eval_rows_block(
+    ex: &mut Executor,
+    rows: &[Vec<f32>],
+    frac_bits: u32,
+    index_width: usize,
+    out: &mut [i32],
+) {
+    use crate::util::fixed;
+    assert_eq!(rows.len(), out.len());
+    let width = (frac_bits + 1) as usize;
+    for (lane, row) in rows.iter().enumerate() {
+        // Hard check (release too): a frac_bits/num_features mismatch
+        // with the compiled accelerator would otherwise OR bits into
+        // other slots of the value buffer and silently corrupt results.
+        assert_eq!(
+            row.len() * width,
+            ex.plan().num_inputs,
+            "row does not match the plan's input interface"
+        );
+        fixed::pack_row_bits(row, frac_bits, |bit| ex.set_input_bit(bit, lane));
+    }
+    ex.run();
+    if ex.plan().tail.is_some() {
+        ex.tail_preds(out);
+    } else {
+        for (lane, slot) in out.iter_mut().enumerate() {
+            *slot = crate::util::decode_index_bits(index_width, |i| ex.output_bit(i, lane));
+        }
+    }
+}
+
 /// Serve-path helper: evaluate fixed-point feature rows and decode the
 /// class-index output word per row. This is the compiled counterpart of the
 /// interpreter path in [`crate::coordinator`] — rows are packed straight
-/// into lane words (no per-row bit-vector allocation).
+/// into lane words (no per-row bit-vector allocation). Spawns scoped
+/// threads per call; steady-state serving uses the persistent
+/// [`super::EnginePool`] instead.
 pub fn infer_fixed_batch(
     plan: &ExecPlan,
     rows: &[Vec<f32>],
@@ -184,25 +258,9 @@ pub fn infer_fixed_batch(
     lanes: usize,
     threads: usize,
 ) -> Vec<i32> {
-    use crate::util::fixed;
-    let width = (frac_bits + 1) as usize;
     let mut preds = vec![0i32; rows.len()];
     par_eval(plan, rows.len(), lanes, threads, &mut preds, |ex, start, out| {
-        for (lane, row) in rows[start..start + out.len()].iter().enumerate() {
-            // Hard check (release too): a frac_bits/num_features mismatch
-            // with the compiled accelerator would otherwise OR bits into
-            // other slots of the value buffer and silently corrupt results.
-            assert_eq!(
-                row.len() * width,
-                plan.num_inputs,
-                "row does not match the plan's input interface"
-            );
-            fixed::pack_row_bits(row, frac_bits, |bit| ex.set_input_bit(bit, lane));
-        }
-        ex.run();
-        for (lane, slot) in out.iter_mut().enumerate() {
-            *slot = crate::util::decode_index_bits(index_width, |i| ex.output_bit(i, lane));
-        }
+        eval_rows_block(ex, &rows[start..start + out.len()], frac_bits, index_width, out);
     });
     preds
 }

@@ -14,16 +14,30 @@
 //! print per-stage *runtime* attribution next to the paper's per-stage LUT
 //! area — the paper's encoding-cost analysis extended from area to
 //! throughput.
+//!
+//! Two serving-path refinements on top of the compiled plan:
+//! * [`compile_with_tail`] truncates the plan at the LUT→arithmetic
+//!   boundary and evaluates the popcount/argmax tail natively
+//!   ([`tail`]; falls back to full emulation on unexpected structure) —
+//!   the mapped netlist stays untouched, so area accounting is unaffected.
+//! * [`EnginePool`] replaces per-batch scoped-thread spawning with
+//!   persistent parked workers owning their scratch, which
+//!   [`crate::coordinator::Backend::Compiled`] holds for the life of the
+//!   server.
 
 mod compile;
 mod exec;
 mod plan;
+mod pool;
 mod stages;
+pub mod tail;
 
-pub use compile::{compile, compile_with_stages};
+pub use compile::{compile, compile_for_mode, compile_with_stages, compile_with_tail};
 pub use exec::{infer_fixed_batch, par_eval, Executor};
-pub use plan::{CompileStats, ExecPlan, OutSrc, PlanOp, Segment};
+pub use plan::{CompileStats, ExecPlan, OutSrc, PlanOp, Segment, TailPlan};
+pub use pool::EnginePool;
 pub use stages::{measure_stages, StageRuntime};
+pub use tail::TailMode;
 
 #[cfg(test)]
 mod tests {

@@ -64,6 +64,42 @@ pub struct CompileStats {
     pub dead_eliminated: usize,
     /// Constant or duplicate pins folded out of surviving tables.
     pub pins_folded: usize,
+    /// Popcount/argmax LUTs replaced by the native arithmetic tail
+    /// (0 for plans compiled without one).
+    pub tail_skipped: usize,
+}
+
+/// The arithmetic tail of a plan compiled with
+/// [`super::compile_with_tail`]: instead of emulating the popcount and
+/// argmax stages LUT by LUT, the executor reads the LUT-layer outputs
+/// straight out of the value buffer, popcounts them natively per lane, and
+/// runs a scalar argmax with the netlist's tie-breaking order (lowest class
+/// index wins — [`crate::hwgen::argmax`]).
+#[derive(Debug, Clone)]
+pub struct TailPlan {
+    /// Per class, the value-buffer slots of its non-constant group bits.
+    /// A slot may appear twice when training selected identical LUTs — it
+    /// then counts twice, exactly like the emulated compressor tree.
+    pub class_slots: Vec<Vec<u32>>,
+    /// Per class, the number of group bits proved constant-true during
+    /// folding (the class's score floor).
+    pub class_base: Vec<u32>,
+    /// Width of the class-index word the replaced argmax stage produced.
+    pub index_width: usize,
+    /// Width of the class score words the replaced popcount stage produced.
+    pub score_width: usize,
+}
+
+impl TailPlan {
+    pub fn num_classes(&self) -> usize {
+        self.class_slots.len()
+    }
+
+    /// Total score bits the tail folds per evaluation (reported by
+    /// `dwn breakdown` next to per-stage op counts).
+    pub fn score_bits(&self) -> usize {
+        self.class_slots.iter().map(|s| s.len()).sum()
+    }
 }
 
 /// A levelized, constant-folded, dead-code-eliminated execution plan.
@@ -74,8 +110,14 @@ pub struct ExecPlan {
     pub ops: Vec<PlanOp>,
     /// Execution-order partition of `ops` (level- and stage-contiguous).
     pub segments: Vec<Segment>,
+    /// Netlist outputs after folding. Empty when `tail` is present: the
+    /// popcount/argmax LUTs that produced them are not compiled in, and
+    /// predictions come from the tail instead.
     pub outputs: Vec<OutSrc>,
     pub stats: CompileStats,
+    /// Native arithmetic tail, when compiled with one (see
+    /// [`super::compile_with_tail`]).
+    pub tail: Option<TailPlan>,
 }
 
 impl ExecPlan {

@@ -1,0 +1,214 @@
+//! Persistent worker pool for the compiled engine.
+//!
+//! `par_eval` spawns scoped threads per batch — fine for benches, but a
+//! serving backend pays that spawn/join cost on every batch. `EnginePool`
+//! spawns its workers once; each owns its [`Executor`] scratch for the
+//! pool's whole life, parks in a blocking channel `recv` while idle, and is
+//! fed contiguous batch shards through the channel.
+//! [`crate::coordinator::Backend::Compiled`] holds one pool for the life of
+//! the server (DESIGN.md §engine).
+//!
+//! Determinism: shards are contiguous row ranges and every reply carries its
+//! start offset, so results land in input order no matter which worker
+//! finishes first — `infer` is bit-identical to a single-threaded sweep for
+//! any batch size, shard count, or scheduling.
+
+use super::exec::{eval_rows_block, Executor};
+use super::plan::ExecPlan;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// One shard of a batch: worker evaluates rows `[start, start + len)` of the
+/// shared batch and replies with `(start, preds)`.
+struct Job {
+    rows: Arc<Vec<Vec<f32>>>,
+    start: usize,
+    len: usize,
+    reply: Sender<(usize, Vec<i32>)>,
+}
+
+/// A fixed set of parked worker threads over one compiled plan.
+pub struct EnginePool {
+    plan: Arc<ExecPlan>,
+    /// Lanes per evaluation pass (rounded up to a multiple of 64).
+    lanes: usize,
+    frac_bits: u32,
+    index_width: usize,
+    /// `Option` so `Drop` can close the channel before joining.
+    job_tx: Option<Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl EnginePool {
+    /// Spawn `threads.max(1)` workers, each with its own executor sized for
+    /// `lanes` vectors per pass.
+    pub fn new(
+        plan: Arc<ExecPlan>,
+        lanes: usize,
+        threads: usize,
+        frac_bits: u32,
+        index_width: usize,
+    ) -> Self {
+        let lanes = crate::util::ceil_div(lanes.max(1), 64) * 64;
+        let (job_tx, job_rx) = channel::<Job>();
+        let job_rx = Arc::new(Mutex::new(job_rx));
+        let workers = (0..threads.max(1))
+            .map(|i| {
+                let plan = plan.clone();
+                let job_rx = job_rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("dwn-engine-{i}"))
+                    .spawn(move || worker_loop(&plan, lanes, frac_bits, index_width, &job_rx))
+                    .expect("spawn engine worker")
+            })
+            .collect();
+        Self { plan, lanes, frac_bits, index_width, job_tx: Some(job_tx), workers }
+    }
+
+    pub fn plan(&self) -> &ExecPlan {
+        &self.plan
+    }
+
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn frac_bits(&self) -> u32 {
+        self.frac_bits
+    }
+
+    pub fn index_width(&self) -> usize {
+        self.index_width
+    }
+
+    /// Evaluate a batch: shard whole lane-blocks across the workers, gather
+    /// replies by offset. Row order of the result always matches the input.
+    ///
+    /// Trade-off: `rows` is deep-copied into an `Arc` once per batch so the
+    /// 'static workers can share it — O(rows × features) memcpy, small next
+    /// to LUT evaluation but not free. Going zero-copy would mean threading
+    /// `Arc<Vec<Vec<f32>>>` through `Backend::infer` (and every bench/test
+    /// caller); revisit if profiles ever show the copy on top.
+    pub fn infer(&self, rows: &[Vec<f32>]) -> Vec<i32> {
+        let n = rows.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        // Arity check on the caller thread, so a malformed request panics
+        // the submitter (as the scoped-thread path did), not a pool worker.
+        let width = (self.frac_bits + 1) as usize;
+        for row in rows {
+            assert_eq!(
+                row.len() * width,
+                self.plan.num_inputs,
+                "row does not match the plan's input interface"
+            );
+        }
+        let rows = Arc::new(rows.to_vec());
+        let (reply_tx, reply_rx) = channel();
+        let tx = self.job_tx.as_ref().expect("pool not shut down");
+        let mut start = 0usize;
+        let mut sent = 0usize;
+        for len in super::exec::shard_row_counts(n, self.lanes, self.threads()) {
+            if len == 0 {
+                continue;
+            }
+            tx.send(Job { rows: rows.clone(), start, len, reply: reply_tx.clone() })
+                .expect("engine pool workers gone");
+            start += len;
+            sent += 1;
+        }
+        drop(reply_tx);
+        let mut out = vec![0i32; n];
+        for _ in 0..sent {
+            let (at, preds) = reply_rx.recv().expect("engine pool worker died");
+            out[at..at + preds.len()].copy_from_slice(&preds);
+        }
+        out
+    }
+}
+
+impl Drop for EnginePool {
+    fn drop(&mut self) {
+        // Closing the job channel wakes every parked worker with a recv
+        // error; join so scratch teardown finishes before the plan drops.
+        drop(self.job_tx.take());
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(
+    plan: &ExecPlan,
+    lanes: usize,
+    frac_bits: u32,
+    index_width: usize,
+    job_rx: &Mutex<Receiver<Job>>,
+) {
+    let mut ex = Executor::new(plan, lanes);
+    loop {
+        // Hold the lock only for the blocking recv (idle park), never while
+        // evaluating — job pickup serializes, processing stays parallel.
+        let job = match job_rx.lock() {
+            Ok(rx) => rx.recv(),
+            Err(_) => break, // a sibling panicked holding the lock
+        };
+        let Ok(job) = job else { break };
+        let rows = &job.rows[job.start..job.start + job.len];
+        let mut preds = vec![0i32; job.len];
+        for (chunk, outs) in rows.chunks(ex.lanes()).zip(preds.chunks_mut(ex.lanes())) {
+            ex.clear_inputs();
+            eval_rows_block(&mut ex, chunk, frac_bits, index_width, outs);
+        }
+        // A dropped reply receiver just means the submitter gave up.
+        let _ = job.reply.send((job.start, preds));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::compile;
+    use crate::techmap::{LutNetlist, MappedLut, Src};
+
+    /// 1 feature, 2-bit word, prediction = sign bit.
+    fn sign_plan() -> ExecPlan {
+        let nl = LutNetlist {
+            num_inputs: 2,
+            luts: vec![MappedLut { inputs: vec![Src::Input(1)], table: 0b10 }],
+            outputs: vec![Src::Lut(0)],
+        };
+        compile(&nl)
+    }
+
+    #[test]
+    fn pool_matches_inline_for_odd_batches() {
+        let plan = Arc::new(sign_plan());
+        let pool = EnginePool::new(plan.clone(), 64, 3, 1, 1);
+        for n in [1usize, 3, 63, 64, 65, 200] {
+            let rows: Vec<Vec<f32>> =
+                (0..n).map(|i| vec![if i % 3 == 0 { -0.9 } else { 0.9 }]).collect();
+            let want = crate::engine::infer_fixed_batch(&plan, &rows, 1, 1, 64, 1);
+            assert_eq!(pool.infer(&rows), want, "batch {n}");
+        }
+    }
+
+    #[test]
+    fn pool_survives_reuse_and_empty_batches() {
+        let plan = Arc::new(sign_plan());
+        let pool = EnginePool::new(plan, 64, 2, 1, 1);
+        assert!(pool.infer(&[]).is_empty());
+        let big: Vec<Vec<f32>> =
+            (0..300).map(|i| vec![if i & 1 == 0 { 0.5 } else { -0.5 }]).collect();
+        let first = pool.infer(&big);
+        // A tiny batch right after a large one must not see stale state.
+        assert_eq!(pool.infer(&big[..2]), first[..2].to_vec());
+        assert_eq!(pool.infer(&big), first);
+    }
+}

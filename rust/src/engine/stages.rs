@@ -12,7 +12,7 @@
 use super::exec::Executor;
 use super::plan::ExecPlan;
 use crate::hwgen::Component;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Aggregated runtime attribution for one plan.
 #[derive(Debug, Clone)]
@@ -21,6 +21,11 @@ pub struct StageRuntime {
     /// execution order. `None` stage (untagged plans) aggregates under
     /// `Component::LutLayer`.
     pub per_stage: Vec<(Component, Duration, usize)>,
+    /// Native-tail busy time and folded score-bit count, when the measured
+    /// plan replaces the popcount/argmax stages with arithmetic. The stages
+    /// it replaced then have no `per_stage` entry — `dwn breakdown` reports
+    /// this as its own row instead of silently dropping them.
+    pub tail: Option<(Duration, usize)>,
     /// Passes accumulated (each pass evaluates `lanes` vectors).
     pub passes: usize,
     /// Lanes per pass.
@@ -29,17 +34,27 @@ pub struct StageRuntime {
 
 impl StageRuntime {
     pub fn total(&self) -> Duration {
-        self.per_stage.iter().map(|(_, d, _)| *d).sum()
+        let stages: Duration = self.per_stage.iter().map(|(_, d, _)| *d).sum();
+        stages + self.tail.map(|(d, _)| d).unwrap_or(Duration::ZERO)
+    }
+
+    fn rows(&self) -> f64 {
+        (self.passes * self.lanes).max(1) as f64
     }
 
     /// Nanoseconds per evaluated row for one stage.
     pub fn ns_per_row(&self, stage: Component) -> f64 {
-        let rows = (self.passes * self.lanes).max(1) as f64;
         self.per_stage
             .iter()
             .find(|(c, _, _)| *c == stage)
-            .map(|(_, d, _)| d.as_nanos() as f64 / rows)
+            .map(|(_, d, _)| d.as_nanos() as f64 / self.rows())
             .unwrap_or(0.0)
+    }
+
+    /// Nanoseconds per evaluated row spent in the native arithmetic tail
+    /// (0.0 when the plan has none).
+    pub fn tail_ns_per_row(&self) -> f64 {
+        self.tail.map(|(d, _)| d.as_nanos() as f64 / self.rows()).unwrap_or(0.0)
     }
 }
 
@@ -58,6 +73,8 @@ where
 {
     let mut ex = Executor::new(plan, lanes);
     let mut acc: Vec<(Component, Duration, usize)> = Vec::new();
+    let mut tail_busy = Duration::ZERO;
+    let mut tail_preds = plan.tail.as_ref().map(|_| vec![0i32; ex.lanes()]);
     for pass in 0..passes.max(1) {
         ex.clear_inputs();
         fill(&mut ex, pass);
@@ -74,6 +91,16 @@ where
                 None => acc.push((stage, dt, seg.ops.len())),
             }
         }
+        if let Some(preds) = tail_preds.as_mut() {
+            let t0 = Instant::now();
+            ex.tail_preds(preds);
+            tail_busy += t0.elapsed();
+        }
     }
-    StageRuntime { per_stage: acc, passes: passes.max(1), lanes: ex.lanes() }
+    StageRuntime {
+        per_stage: acc,
+        tail: plan.tail.as_ref().map(|t| (tail_busy, t.score_bits())),
+        passes: passes.max(1),
+        lanes: ex.lanes(),
+    }
 }

@@ -1,0 +1,209 @@
+//! Native evaluation of the arithmetic tail: per-lane class scores by
+//! 64×64 bit-transpose + `u64::count_ones`, then a scalar argmax with the
+//! netlist's tie-breaking order.
+//!
+//! The popcount and argmax stages of a DWN accelerator are pure arithmetic —
+//! the DWN paper evaluates them natively, and emulating their mapped
+//! compressor/compare-select LUTs word by word is wasted work on every
+//! inference. A plan compiled with [`super::compile_with_tail`] stops at the
+//! LUT→arithmetic boundary; this module turns the LUT-layer lane words
+//! sitting in the executor's value buffer into class decisions directly.
+//!
+//! Orientation note: [`transpose64`] uses the Hacker's Delight in-place
+//! network, whose result obeys `out[k] bit b == in[63-b] bit (63-k)` under
+//! LSB-first indexing — so the per-lane popcount of column `lane` is
+//! `out[63 - lane].count_ones()`. [`add_lane_popcounts`] hides this; the
+//! property suite pins it against a naive bit-gather.
+
+use super::exec::Executor;
+use super::plan::TailPlan;
+use crate::util::fixed::live_lane_mask;
+
+/// How the compiled engine should treat the arithmetic tail.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TailMode {
+    /// Truncate the plan at the LUT→arithmetic boundary and evaluate
+    /// popcount+argmax natively (falls back to `Lut` when tail metadata is
+    /// absent or the mapped structure is unexpected).
+    Native,
+    /// Emulate the full mapped netlist, popcount/argmax LUTs included
+    /// (the PR 2 behavior; also the area-faithful reference).
+    Lut,
+}
+
+impl TailMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            TailMode::Native => "native",
+            TailMode::Lut => "lut",
+        }
+    }
+}
+
+impl std::str::FromStr for TailMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "native" => TailMode::Native,
+            "lut" => TailMode::Lut,
+            _ => anyhow::bail!("unknown tail mode '{s}' (native|lut)"),
+        })
+    }
+}
+
+/// In-place 64×64 bit-matrix transpose (Hacker's Delight fig. 7-3,
+/// generalized to 64 bits). See the module docs for the orientation the
+/// recursive swap network produces.
+pub fn transpose64(a: &mut [u64; 64]) {
+    let mut j = 32usize;
+    let mut m = 0x0000_0000_FFFF_FFFFu64;
+    while j != 0 {
+        let mut k = 0usize;
+        while k < 64 {
+            let t = (a[k] ^ (a[k + j] >> j)) & m;
+            a[k] ^= t;
+            a[k + j] ^= t << j;
+            k = (k + j + 1) & !j;
+        }
+        j >>= 1;
+        m ^= m << j;
+    }
+}
+
+/// Accumulate per-lane popcounts of up to 64 lane words:
+/// `counts[lane] += |{ w : words[w] has bit lane set }|`.
+pub fn add_lane_popcounts(words: &[u64], counts: &mut [u32; 64]) {
+    assert!(words.len() <= 64, "transpose block holds 64 words");
+    let mut block = [0u64; 64];
+    block[..words.len()].copy_from_slice(words);
+    transpose64(&mut block);
+    for (lane, c) in counts.iter_mut().enumerate() {
+        *c += block[63 - lane].count_ones();
+    }
+}
+
+/// Scalar argmax with the netlist's tie order: the lowest class index wins
+/// ([`crate::hwgen::argmax`]'s left-biased compare-select reduction).
+pub fn argmax_tie_low(scores: &[u32]) -> usize {
+    assert!(!scores.is_empty());
+    let mut best = 0usize;
+    for (c, &s) in scores.iter().enumerate().skip(1) {
+        if s > scores[best] {
+            best = c;
+        }
+    }
+    best
+}
+
+/// Evaluate per-lane predictions for the first `out.len()` lanes of the
+/// executor's current values. Requires `Executor::run` to have completed
+/// (the LUT-layer slots must hold this pass's values).
+pub fn eval_preds(ex: &Executor, tail: &TailPlan, out: &mut [i32]) {
+    let n = out.len();
+    assert!(n <= ex.lanes(), "more rows than lanes in one pass");
+    let classes = tail.class_slots.len();
+    assert!(classes >= 1, "tail needs at least one class");
+    let words = crate::util::ceil_div(n.max(1), 64);
+    let mut gather = [0u64; 64];
+    for w in 0..words {
+        let live = (n - w * 64).min(64);
+        // Masking keeps dead/tail lanes at score zero so nothing computed
+        // from lanes beyond the batch can ever reach a decision (the same
+        // hygiene rule as `fixed::pack_chunk_words`).
+        let mask = live_lane_mask(live);
+        let mut best = [0u32; 64];
+        let mut best_idx = [0i32; 64];
+        for (cls, slots) in tail.class_slots.iter().enumerate() {
+            let mut counts = [tail.class_base[cls]; 64];
+            for chunk in slots.chunks(64) {
+                for (g, &slot) in chunk.iter().enumerate() {
+                    gather[g] = ex.slot_word(slot as usize, w) & mask;
+                }
+                add_lane_popcounts(&gather[..chunk.len()], &mut counts);
+            }
+            if cls == 0 {
+                best = counts;
+            } else {
+                // Strict `>` keeps the lowest class index on ties — the
+                // streaming form of [`argmax_tie_low`].
+                for lane in 0..live {
+                    if counts[lane] > best[lane] {
+                        best[lane] = counts[lane];
+                        best_idx[lane] = cls as i32;
+                    }
+                }
+            }
+        }
+        for (lane, &idx) in best_idx[..live].iter().enumerate() {
+            out[w * 64 + lane] = idx;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::SplitMix64;
+
+    /// Reference per-lane popcount by naive bit gathering.
+    fn naive_lane_popcounts(words: &[u64]) -> [u32; 64] {
+        let mut counts = [0u32; 64];
+        for &w in words {
+            for (lane, c) in counts.iter_mut().enumerate() {
+                *c += ((w >> lane) & 1) as u32;
+            }
+        }
+        counts
+    }
+
+    #[test]
+    fn transpose_popcount_matches_naive() {
+        let mut rng = SplitMix64::new(0x7A11);
+        for len in [0usize, 1, 3, 17, 63, 64] {
+            let words: Vec<u64> = (0..len).map(|_| rng.next_u64()).collect();
+            let mut got = [0u32; 64];
+            add_lane_popcounts(&words, &mut got);
+            assert_eq!(got, naive_lane_popcounts(&words), "len {len}");
+        }
+    }
+
+    #[test]
+    fn popcounts_accumulate_across_calls() {
+        // Accumulation composes: two calls add.
+        let words = [u64::MAX; 10];
+        let mut counts = [0u32; 64];
+        add_lane_popcounts(&words, &mut counts);
+        add_lane_popcounts(&words[..5], &mut counts);
+        assert!(counts.iter().all(|&c| c == 15));
+    }
+
+    #[test]
+    fn argmax_tie_low_semantics() {
+        assert_eq!(argmax_tie_low(&[3, 3, 3]), 0);
+        assert_eq!(argmax_tie_low(&[1, 5, 5]), 1);
+        assert_eq!(argmax_tie_low(&[0, 2, 7, 7, 1]), 2);
+        assert_eq!(argmax_tie_low(&[9]), 0);
+        assert_eq!(argmax_tie_low(&[0, 0, 1]), 2);
+    }
+
+    #[test]
+    fn streaming_argmax_matches_argmax_tie_low() {
+        // The per-lane streaming update inside `eval_preds` must agree with
+        // the exported scalar on random score matrices.
+        let mut rng = SplitMix64::new(0xA26);
+        for _ in 0..50 {
+            let classes = 1 + rng.below(9) as usize;
+            let scores: Vec<u32> = (0..classes).map(|_| rng.below(8) as u32).collect();
+            let mut best = scores[0];
+            let mut best_idx = 0usize;
+            for (c, &s) in scores.iter().enumerate().skip(1) {
+                if s > best {
+                    best = s;
+                    best_idx = c;
+                }
+            }
+            assert_eq!(best_idx, argmax_tie_low(&scores), "{scores:?}");
+        }
+    }
+}

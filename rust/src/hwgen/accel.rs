@@ -3,10 +3,10 @@
 
 use super::{argmax, lutlayer, popcount};
 use crate::encoding::{self, EncoderIr, EncoderPlan, EncoderStrategy};
-use crate::logic::net::NodeId;
+use crate::logic::net::{Gate, NodeId};
 use crate::logic::{Builder, Network};
 use crate::model::{DwnModel, Variant};
-use crate::techmap::{self, LutNetlist, MapConfig};
+use crate::techmap::{self, LutNetlist, MapConfig, Src, TrackedNetlist};
 use anyhow::Result;
 
 /// Hardware interface of a generated accelerator.
@@ -95,12 +95,33 @@ impl AccelOptions {
     }
 }
 
+/// Arithmetic-tail metadata exported alongside a stage-tagged mapping:
+/// where each LUT-layer class-group output lands in the mapped netlist,
+/// plus the score/index interface the popcount+argmax stages realize. The
+/// compiled engine ([`crate::engine::compile_with_tail`]) uses this to stop
+/// emulation at the LUT→arithmetic boundary and evaluate the tail natively.
+#[derive(Debug, Clone)]
+pub struct TailInfo {
+    /// Per class (in class order), the mapped source of each of that
+    /// class's group outputs. Entries may repeat when structural hashing
+    /// merged identical trained LUTs — each occurrence still scores.
+    pub class_bits: Vec<Vec<Src>>,
+    pub num_classes: usize,
+    /// Width of each emulated class score word.
+    pub score_width: usize,
+    /// Width of the class-index output word.
+    pub index_width: usize,
+}
+
 /// A generated accelerator: gate network + interface + attribution ranges.
 pub struct Accelerator {
     pub net: Network,
     pub input_kind: InputKind,
     /// Gate-index ranges per component (for attributing mapped LUTs).
     pub ranges: Vec<(Component, std::ops::Range<usize>)>,
+    /// LUT-layer output nodes in class-major group order (the popcount
+    /// stage's inputs) — the gate-level anchor for [`TailInfo`].
+    pub lut_out_nodes: Vec<NodeId>,
     /// Distinct threshold comparisons the encoder stage must realize (0 for
     /// TEN). Architecture-independent: the bank instantiates exactly this
     /// many comparators, while chain/mux/lut realize the same comparisons
@@ -191,6 +212,7 @@ pub fn build_accelerator(model: &DwnModel, opts: &AccelOptions) -> Result<Accele
         net: bld.finish(),
         input_kind,
         ranges,
+        lut_out_nodes: lut_outs,
         distinct_comparators: distinct,
         encoder_plan,
         num_classes: model.num_classes,
@@ -233,6 +255,56 @@ impl Accelerator {
         let (nl, tags) = self.map_with_stages(cfg);
         let counts = Component::count_tags(&tags);
         (nl, counts)
+    }
+
+    /// [`Self::map_with_stages`] plus arithmetic-tail metadata. Tail is
+    /// `None` when any LUT-layer output has no mapped signal of its own
+    /// (the mapper absorbed it into a downstream popcount cone, which can
+    /// happen when trained LUTs share enough pins) — callers then emulate
+    /// the tail LUT by LUT like before, so this is always safe to prefer.
+    pub fn map_with_tail(
+        &self,
+        cfg: &MapConfig,
+    ) -> (LutNetlist, Vec<Component>, Option<TailInfo>) {
+        let tracked = techmap::map_tracked(&self.net, cfg);
+        let tags = tracked.root_tags(|r| self.component_of(r));
+        let tail = self.tail_info(&tracked);
+        (tracked.netlist, tags, tail)
+    }
+
+    /// Resolve every LUT-layer output node to its mapped-netlist source.
+    fn tail_info(&self, tracked: &TrackedNetlist) -> Option<TailInfo> {
+        if self.lut_out_nodes.is_empty()
+            || self.lut_out_nodes.len() % self.num_classes != 0
+        {
+            return None;
+        }
+        let lut_of: std::collections::HashMap<NodeId, u32> = tracked
+            .roots
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| (r, i as u32))
+            .collect();
+        let group = self.lut_out_nodes.len() / self.num_classes;
+        let mut class_bits = Vec::with_capacity(self.num_classes);
+        for chunk in self.lut_out_nodes.chunks(group) {
+            let mut bits = Vec::with_capacity(group);
+            for &node in chunk {
+                let src = match self.net.gates[node as usize] {
+                    Gate::Input(i) => Src::Input(i),
+                    Gate::Const(b) => Src::Const(b),
+                    _ => Src::Lut(*lut_of.get(&node)?),
+                };
+                bits.push(src);
+            }
+            class_bits.push(bits);
+        }
+        Some(TailInfo {
+            class_bits,
+            num_classes: self.num_classes,
+            score_width: self.score_width,
+            index_width: self.index_width(),
+        })
     }
 
     /// Number of primary input bits of the generated design.

@@ -21,4 +21,4 @@ pub mod mixed;
 pub mod popcount;
 pub mod rtl;
 
-pub use accel::{build_accelerator, AccelOptions, Accelerator, Component, InputKind};
+pub use accel::{build_accelerator, AccelOptions, Accelerator, Component, InputKind, TailInfo};

@@ -5,7 +5,7 @@
 //!   breakdown --model sm-10 --variant penft [--encoder S]               Fig.5-style component LUT breakdown
 //!   encoders  --model sm-10 --variant penft [--encoder auto]            per-feature encoder architecture/cost table
 //!   verify    --model sm-10 --variant penft [--n 512]                   netlist sim vs golden vectors
-//!   serve     --model sm-10 [--backend pjrt|netlist|compiled] [--requests N] [--lanes W] [--threads T]
+//!   serve     --model sm-10 [--backend pjrt|netlist|compiled] [--requests N] [--lanes W] [--threads T] [--tail native|lut]
 //!   accuracy  --model sm-10 --variant penft                             netlist accuracy on the test set
 //!   info                                                                artifact/manifest summary
 //!
@@ -16,6 +16,7 @@ use dwn::config::{Args, Artifacts};
 use dwn::coordinator::{Backend, Server, ServerConfig};
 use dwn::data::Dataset;
 use dwn::encoding::{self, ArchKind, EncoderIr, EncoderStrategy};
+use dwn::engine::TailMode;
 use dwn::hwgen::{build_accelerator, AccelOptions, Component};
 use dwn::model::{DwnModel, Variant};
 use dwn::report::{f1, int, Table};
@@ -64,10 +65,14 @@ common options: --artifacts PATH --model NAME --variant ten|pen|penft
 generate/breakdown: --encoder auto|bank|chain|mux|lut (default bank = reference comparator bank)
 breakdown: per-component LUT area + per-stage runtime attribution from the
            compiled engine; --lanes N (default 256) --passes N (default 64)
+           --tail native|lut (default lut; native reports the arithmetic
+           tail as its own runtime row — LUT-area columns are unaffected)
 encoders: per-feature encoder architecture selection + modeled vs mapped LUT cost
           --encoder auto|bank|chain|mux|lut (default auto) --depth-budget N (auto only)
 serve: --backend pjrt|netlist|compiled [--requests N]
        compiled: --lanes N (vectors/pass, default 256) --threads N (default = cores)
+                 --tail native|lut (default native; native evaluates the
+                 popcount/argmax tail arithmetically, lut emulates it)
 emit-rtl: --out design.v [--tb design_tb.v]    mixed: --start 8 --min 3 --tol 0.01";
 
 /// Default worker-thread count for the compiled engine.
@@ -120,10 +125,14 @@ fn cmd_breakdown(artifacts: &Artifacts, args: &Args) -> Result<()> {
     let model = load_model(artifacts, args)?;
     let variant: Variant = args.get_parse("variant", Variant::PenFt)?;
     let encoder: EncoderStrategy = args.get_parse("encoder", EncoderStrategy::default())?;
+    let tail_mode: TailMode = args.get_parse("tail", TailMode::Lut)?;
     let mut opts = AccelOptions::new(variant).with_encoder(encoder);
     opts.encoder_depth_budget = args.get_parse_opt("depth-budget")?;
     let accel = build_accelerator(&model, &opts)?;
-    let (nl, tags) = accel.map_with_stages(&MapConfig::default());
+    // Area columns come from the mapped netlist's stage tags alone — the
+    // tail mode only changes how the *runtime* gets attributed, so the
+    // paper-faithful encoding-cost numbers are identical either way.
+    let (nl, tags, tail) = accel.map_with_tail(&MapConfig::default());
     let counts = Component::count_tags(&tags);
 
     // Runtime attribution: compile the same netlist with the same stage
@@ -131,7 +140,8 @@ fn cmd_breakdown(artifacts: &Artifacts, args: &Args) -> Result<()> {
     // (LUT evaluation cost is data-independent).
     let lanes = args.get_usize("lanes", 256)?;
     let passes = args.get_usize("passes", 64)?;
-    let plan = dwn::engine::compile_with_stages(&nl, Some(&tags));
+    let plan = dwn::engine::compile_for_mode(&nl, Some(&tags), tail.as_ref(), tail_mode);
+    let native = plan.tail.is_some();
     let mut rng = dwn::util::SplitMix64::new(0xB0A7);
     let runtime = dwn::engine::measure_stages(&plan, lanes, passes, |ex, _| {
         for i in 0..nl.num_inputs {
@@ -140,25 +150,41 @@ fn cmd_breakdown(artifacts: &Artifacts, args: &Args) -> Result<()> {
             }
         }
     });
-    let total_ns: f64 =
-        Component::ALL.iter().map(|&c| runtime.ns_per_row(c)).sum::<f64>().max(1e-9);
+    let total_ns: f64 = (Component::ALL.iter().map(|&c| runtime.ns_per_row(c)).sum::<f64>()
+        + runtime.tail_ns_per_row())
+    .max(1e-9);
 
     let mut t = Table::new(
         &format!(
-            "Component breakdown {} ({}, encoder {})",
+            "Component breakdown {} ({}, encoder {}, tail {})",
             model.name,
             variant.label(),
-            encoder.label()
+            encoder.label(),
+            if native { "native" } else { "lut" }
         ),
         &["component", "LUTs", "share", "ns/row", "runtime share"],
     );
     let total = nl.lut_count().max(1);
     for (comp, n) in &counts {
+        let replaced =
+            native && matches!(*comp, Component::Popcount | Component::Argmax);
         let ns = runtime.ns_per_row(*comp);
         t.row(&[
             comp.label().into(),
             int(*n),
             format!("{:.1}%", 100.0 * *n as f64 / total as f64),
+            if replaced { "-".into() } else { format!("{ns:.2}") },
+            if replaced { "-".into() } else { format!("{:.1}%", 100.0 * ns / total_ns) },
+        ]);
+    }
+    if native {
+        // The stages the tail replaced keep their LUT-area rows above; the
+        // arithmetic that now runs instead gets its own runtime row.
+        let ns = runtime.tail_ns_per_row();
+        t.row(&[
+            "tail (native)".into(),
+            "-".into(),
+            "-".into(),
             format!("{ns:.2}"),
             format!("{:.1}%", 100.0 * ns / total_ns),
         ]);
@@ -174,15 +200,23 @@ fn cmd_breakdown(artifacts: &Artifacts, args: &Args) -> Result<()> {
     let s = plan.stats;
     println!(
         "compiled plan: {} ops over {} levels ({} lanes/pass, {} passes; \
-         {} const-folded, {} dead, {} pins folded)",
+         {} const-folded, {} dead, {} pins folded{})",
         plan.ops.len(),
         plan.depth(),
         runtime.lanes,
         runtime.passes,
         s.const_folded,
         s.dead_eliminated,
-        s.pins_folded
+        s.pins_folded,
+        if native {
+            format!(", {} tail LUTs evaluated natively", s.tail_skipped)
+        } else {
+            String::new()
+        }
     );
+    if tail_mode == TailMode::Native && !native {
+        println!("note: tail metadata unavailable for this mapping; fell back to LUT emulation");
+    }
     Ok(())
 }
 
@@ -409,16 +443,21 @@ fn cmd_serve(artifacts: &Artifacts, args: &Args) -> Result<()> {
         }
         "compiled" => {
             let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt))?;
-            let (nl, tags) = accel.map_with_stages(&MapConfig::default());
-            let plan = dwn::engine::compile_with_stages(&nl, Some(&tags));
+            let (nl, tags, tail) = accel.map_with_tail(&MapConfig::default());
+            let tail_mode: TailMode = args.get_parse("tail", TailMode::Native)?;
+            let plan = dwn::engine::compile_for_mode(&nl, Some(&tags), tail.as_ref(), tail_mode);
             let lanes = args.get_usize("lanes", 256)?;
             let threads = args.get_usize("threads", default_threads())?;
             println!(
-                "compiled engine: {} ops / {} levels from {} LUTs ({lanes} lanes x {threads} threads)",
+                "compiled engine: {} ops / {} levels from {} LUTs ({lanes} lanes x {threads} threads, {} tail)",
                 plan.ops.len(),
                 plan.depth(),
-                nl.lut_count()
+                nl.lut_count(),
+                if plan.tail.is_some() { "native" } else { "lut" }
             );
+            if tail_mode == TailMode::Native && plan.tail.is_none() {
+                println!("note: tail metadata unavailable; fell back to LUT emulation");
+            }
             // Let the batcher fill whole engine passes.
             let cfg =
                 ServerConfig { max_batch: lanes * threads.max(1), ..ServerConfig::default() };

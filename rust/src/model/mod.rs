@@ -253,8 +253,25 @@ impl DwnModel {
         let threshold_ints = quantize(&thresholds);
 
         let table_mask = crate::logic::net::table_mask(spec.lut_k);
+        // Distinct pins per LUT, like trained models: DWN training wires
+        // each LUT input to a different encoder bit. (This also keeps the
+        // mapper from collapsing lut_k=6 layer outputs into downstream
+        // cones, so the engine's LUT→arithmetic tail boundary stays clean.)
+        assert!(
+            bit_space >= spec.lut_k as u64,
+            "thermometer bit space smaller than LUT fan-in"
+        );
         let sel: Vec<Vec<u32>> = (0..spec.num_luts)
-            .map(|_| (0..spec.lut_k).map(|_| rng.below(bit_space) as u32).collect())
+            .map(|_| {
+                let mut pins: Vec<u32> = Vec::with_capacity(spec.lut_k);
+                while pins.len() < spec.lut_k {
+                    let b = rng.below(bit_space) as u32;
+                    if !pins.contains(&b) {
+                        pins.push(b);
+                    }
+                }
+                pins
+            })
             .collect();
         let tables: Vec<u64> = (0..spec.num_luts).map(|_| rng.next_u64() & table_mask).collect();
 

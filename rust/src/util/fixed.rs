@@ -23,7 +23,23 @@ pub fn int_to_real(k: i32, frac_bits: u32) -> f64 {
 /// Two's-complement bit pattern of a grid integer in `frac_bits + 1` bits.
 pub fn int_to_bits(k: i32, frac_bits: u32) -> u32 {
     let width = frac_bits + 1;
-    (k as u32) & ((1u32 << width) - 1)
+    // `u32::MAX >> (32 - width)` instead of `(1 << width) - 1`: the latter
+    // overflows the shift at the full 32-bit width.
+    assert!((1..=32).contains(&width), "fixed-point width must fit u32");
+    (k as u32) & (u32::MAX >> (32 - width))
+}
+
+/// Mask of the first `n` lanes of a 64-lane word (`n <= 64`). Decode and
+/// native-tail paths AND gathered lane words with this so lanes beyond the
+/// live batch rows can never influence a result.
+#[inline]
+pub fn live_lane_mask(n: usize) -> u64 {
+    assert!(n <= 64, "a lane word holds 64 lanes");
+    if n == 64 {
+        u64::MAX
+    } else {
+        (1u64 << n) - 1
+    }
 }
 
 /// Quantize one feature row onto the PEN hardware input layout
@@ -39,6 +55,33 @@ pub fn pack_row_bits(row: &[f32], frac_bits: u32, mut set: impl FnMut(usize)) {
                 set(f * width + b);
             }
         }
+    }
+}
+
+/// Lane-pack a chunk of up to 64 feature rows into per-input lane words:
+/// `words[input_bit]` holds lane = row-index-within-chunk. The buffer is
+/// fully rewritten each call — tail lanes beyond `chunk.len()` are
+/// explicitly zero — so reusing one buffer across chunks of *different*
+/// sizes (a batch smaller than one lane word after a full one) can never
+/// leak stale lanes into pack or decode. Both serving backends and the
+/// conformance harness pack through here.
+pub fn pack_chunk_words(
+    chunk: &[Vec<f32>],
+    frac_bits: u32,
+    num_inputs: usize,
+    words: &mut Vec<u64>,
+) {
+    assert!(chunk.len() <= 64, "one chunk per lane word");
+    words.clear();
+    words.resize(num_inputs, 0);
+    let width = (frac_bits + 1) as usize;
+    for (lane, row) in chunk.iter().enumerate() {
+        assert_eq!(
+            row.len() * width,
+            num_inputs,
+            "row does not match the input interface"
+        );
+        pack_row_bits(row, frac_bits, |bit| words[bit] |= 1u64 << lane);
     }
 }
 
@@ -68,5 +111,43 @@ mod tests {
         assert_eq!(int_to_bits(-1, 3), 0b1111);
         assert_eq!(int_to_bits(-8, 3), 0b1000);
         assert_eq!(int_to_bits(7, 3), 0b0111);
+        // Full-width pattern must not overflow the mask shift.
+        assert_eq!(int_to_bits(-1, 31), u32::MAX);
+    }
+
+    #[test]
+    fn live_lane_mask_bounds() {
+        assert_eq!(live_lane_mask(0), 0);
+        assert_eq!(live_lane_mask(1), 1);
+        assert_eq!(live_lane_mask(3), 0b111);
+        assert_eq!(live_lane_mask(64), u64::MAX);
+    }
+
+    /// Regression (sub-lane-word batches): packing a 3-row chunk into a
+    /// buffer poisoned by a previous full 64-row chunk must leave every tail
+    /// lane zero — stale lanes must not survive into pack or decode.
+    #[test]
+    fn pack_chunk_words_zeroes_tail_lanes() {
+        let frac_bits = 3u32;
+        let num_inputs = 2 * 4; // 2 features, 4-bit words
+        let mut words = vec![u64::MAX; num_inputs]; // poisoned reuse buffer
+        let chunk: Vec<Vec<f32>> = vec![
+            vec![0.5, -0.5],
+            vec![-1.0, 0.875],
+            vec![0.0, -0.125],
+        ];
+        pack_chunk_words(&chunk, frac_bits, num_inputs, &mut words);
+        let live = live_lane_mask(chunk.len());
+        for (bit, &w) in words.iter().enumerate() {
+            assert_eq!(w & !live, 0, "stale tail lanes in input bit {bit}");
+        }
+        // Live lanes carry exactly the per-row patterns.
+        for (lane, row) in chunk.iter().enumerate() {
+            let mut want = vec![false; num_inputs];
+            pack_row_bits(row, frac_bits, |bit| want[bit] = true);
+            for (bit, &w) in words.iter().enumerate() {
+                assert_eq!((w >> lane) & 1 == 1, want[bit], "lane {lane} bit {bit}");
+            }
+        }
     }
 }

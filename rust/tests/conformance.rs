@@ -1,0 +1,268 @@
+//! Cross-backend conformance suite — the tier-1 correctness gate for the
+//! serving stack (ROADMAP): one parameterized differential harness drives
+//! identical fixed-point input batches through
+//!   1. the gate-level `Simulator` (ground truth for the generated design),
+//!   2. the `LutNetlist` interpreter (`eval_lanes_with`),
+//!   3. the compiled engine with the LUT-emulated tail, and
+//!   4. the compiled engine with the native arithmetic tail,
+//! and asserts bit-identical class decisions, across synthetic models
+//! spanning every encoder architecture × several width/layer shapes (in the
+//! spirit of LogicNets-style bit-exact verification flows).
+//!
+//! Seeding: `DWN_CONFORMANCE_SEED` (decimal u64) perturbs the base seed so
+//! CI can pin a fixed seed while allowing local fuzzing; the default is
+//! fixed. Each shape then seed-searches for a model whose quantized
+//! thresholds are distinct per feature and whose LUT pin sets are pairwise
+//! distinct — the conditions under which the mapper provably cannot absorb
+//! a lut_k=6 layer output into a downstream cone, so the native tail is
+//! guaranteed available (asserted). A deliberately small-fan-in shape
+//! exercises the fallback path where it is not.
+
+use dwn::coordinator::Backend;
+use dwn::encoding::EncoderStrategy;
+use dwn::engine;
+use dwn::hwgen::{build_accelerator, AccelOptions, Component};
+use dwn::logic::Simulator;
+use dwn::model::{DwnModel, SynthSpec, Variant};
+use dwn::techmap::MapConfig;
+use dwn::util::{fixed, SplitMix64};
+
+fn base_seed() -> u64 {
+    std::env::var("DWN_CONFORMANCE_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0F0_2026)
+}
+
+/// Seed-search for a model with a provably clean LUT→arithmetic boundary:
+/// distinct quantized thresholds within every feature (distinct encoder bit
+/// nodes) and pairwise-distinct LUT pin sets (no structural merging of
+/// layer outputs). See module docs; the search is deterministic.
+fn clean_model(mut spec: SynthSpec) -> DwnModel {
+    for attempt in 0..500u64 {
+        spec.seed = spec.seed.wrapping_add(attempt);
+        let m = DwnModel::synthetic(&spec);
+        let thresholds_distinct = m.penft_threshold_ints.iter().all(|row| {
+            row.windows(2).all(|w| w[0] < w[1]) // sorted ascending + distinct
+        });
+        let mut pin_sets: Vec<Vec<u32>> = m
+            .penft_sel
+            .iter()
+            .map(|p| {
+                let mut s = p.clone();
+                s.sort_unstable();
+                s
+            })
+            .collect();
+        pin_sets.sort();
+        let sets_distinct = pin_sets.windows(2).all(|w| w[0] != w[1]);
+        if thresholds_distinct && sets_distinct {
+            return m;
+        }
+    }
+    panic!("no clean synthetic model found near seed {}", spec.seed);
+}
+
+/// Deterministic batch with extremes first, then uniform rows. 96 rows:
+/// one full lane word plus a ragged half word.
+fn input_rows(model: &DwnModel, seed: u64) -> Vec<Vec<f32>> {
+    let f = model.num_features;
+    let mut rows = vec![
+        vec![0.0f32; f],
+        vec![1.0f32; f],
+        vec![-1.0f32; f],
+        (0..f).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect(),
+    ];
+    let mut rng = SplitMix64::new(seed);
+    while rows.len() < 96 {
+        rows.push((0..f).map(|_| (2.0 * rng.next_f64() - 1.0) as f32).collect());
+    }
+    rows
+}
+
+/// Ground truth: pack the fixed-point rows into lane words and evaluate the
+/// gate network itself, decoding the class-index output bits.
+fn gate_sim_preds(
+    accel: &dwn::hwgen::Accelerator,
+    rows: &[Vec<f32>],
+    frac_bits: u32,
+) -> Vec<i32> {
+    let mut sim = Simulator::new(&accel.net);
+    let iw = accel.index_width();
+    let num_inputs = accel.input_bits();
+    let mut words = Vec::new();
+    let mut preds = Vec::with_capacity(rows.len());
+    for chunk in rows.chunks(64) {
+        fixed::pack_chunk_words(chunk, frac_bits, num_inputs, &mut words);
+        let outs = sim.eval_lanes(&words);
+        for lane in 0..chunk.len() {
+            preds.push(dwn::util::decode_index_bits(iw, |i| (outs[i] >> lane) & 1 == 1));
+        }
+    }
+    preds
+}
+
+/// Run one (model shape × encoder architecture) case through all four
+/// backends. `expect_native` asserts the native tail actually engaged
+/// (clean-boundary shapes) rather than silently falling back.
+fn conformance_case(model: &DwnModel, strategy: EncoderStrategy, expect_native: bool) {
+    let frac_bits = model.penft.frac_bits.unwrap();
+    let opts = AccelOptions::new(Variant::PenFt).with_encoder(strategy);
+    let accel = build_accelerator(model, &opts).unwrap();
+    let (nl, tags, tail) = accel.map_with_tail(&MapConfig::default());
+    let iw = accel.index_width();
+
+    let lut_plan = engine::compile_with_stages(&nl, Some(&tags));
+    let native_plan = engine::compile_with_tail(&nl, Some(&tags), tail.as_ref());
+    if expect_native {
+        assert!(
+            native_plan.tail.is_some(),
+            "native tail unavailable for {} under {:?} (boundary not clean?)",
+            model.name,
+            strategy
+        );
+        assert!(native_plan.stats.tail_skipped > 0);
+        assert!(native_plan.segments.iter().all(|s| !matches!(
+            s.stage,
+            Some(Component::Popcount) | Some(Component::Argmax)
+        )));
+    }
+
+    let rows = input_rows(model, 0x5EED ^ base_seed());
+    let want = gate_sim_preds(&accel, &rows, frac_bits);
+
+    let interp = Backend::Netlist {
+        netlist: nl,
+        frac_bits,
+        num_features: model.num_features,
+        num_classes: model.num_classes,
+        index_width: iw,
+    };
+    // Odd lanes/threads on purpose: ragged shards must not change results.
+    let compiled_lut =
+        Backend::compiled(lut_plan, frac_bits, model.num_features, model.num_classes, iw, 64, 3);
+    let compiled_native = Backend::compiled(
+        native_plan,
+        frac_bits,
+        model.num_features,
+        model.num_classes,
+        iw,
+        64,
+        2,
+    );
+
+    let label = |k| format!("{} / {:?} / {}", model.name, strategy, k);
+    assert_eq!(interp.infer(&rows).unwrap(), want, "{}", label("interpreter"));
+    assert_eq!(compiled_lut.infer(&rows).unwrap(), want, "{}", label("compiled-lut"));
+    assert_eq!(compiled_native.infer(&rows).unwrap(), want, "{}", label("compiled-native"));
+}
+
+const ALL_ARCHS: [EncoderStrategy; 4] = [
+    EncoderStrategy::Bank,
+    EncoderStrategy::Chain,
+    EncoderStrategy::Mux,
+    EncoderStrategy::Lut,
+];
+
+fn shape(
+    name: &str,
+    luts: usize,
+    classes: usize,
+    features: usize,
+    thermo: usize,
+    frac: u32,
+    k: usize,
+) -> SynthSpec {
+    SynthSpec {
+        name: format!("conf-{name}"),
+        num_luts: luts,
+        thermo_bits: thermo,
+        num_features: features,
+        num_classes: classes,
+        lut_k: k,
+        frac_bits: frac,
+        seed: base_seed() ^ (name.len() as u64) << 7,
+    }
+}
+
+#[test]
+fn conformance_small_three_classes() {
+    let model = clean_model(shape("small", 30, 3, 4, 4, 4, 6));
+    for strategy in ALL_ARCHS {
+        conformance_case(&model, strategy, true);
+    }
+}
+
+#[test]
+fn conformance_medium_five_classes() {
+    let model = clean_model(shape("medium", 60, 5, 6, 6, 5, 6));
+    for strategy in ALL_ARCHS {
+        conformance_case(&model, strategy, true);
+    }
+}
+
+#[test]
+fn conformance_wide_words_two_classes() {
+    // 8-bit words: the `lut` encoder architecture falls back to the bank
+    // internally at this width — conformance must hold regardless.
+    let model = clean_model(shape("wide", 24, 2, 3, 8, 7, 6));
+    for strategy in ALL_ARCHS {
+        conformance_case(&model, strategy, true);
+    }
+}
+
+#[test]
+fn conformance_small_fanin_fallback_shape() {
+    // lut_k=3 layers are absorbable by the mapper, so the native tail may
+    // legitimately fall back to full emulation — predictions must still be
+    // bit-identical across every backend either way.
+    let spec = shape("fallback", 20, 2, 4, 5, 4, 3);
+    let model = DwnModel::synthetic(&spec);
+    for strategy in ALL_ARCHS {
+        conformance_case(&model, strategy, false);
+    }
+}
+
+/// `--tail native` must not perturb the paper's area accounting: the LUT
+/// area columns derive from the mapped netlist's stage tags alone, the
+/// replaced stages keep their (nonzero) LUT counts, and every source LUT is
+/// accounted for by the native plan's stats partition.
+#[test]
+fn native_tail_preserves_area_attribution() {
+    let model = clean_model(shape("area", 30, 3, 4, 4, 4, 6));
+    let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt)).unwrap();
+    let (nl, tags, tail) = accel.map_with_tail(&MapConfig::default());
+    let counts = Component::count_tags(&tags);
+    assert_eq!(counts.iter().map(|(_, n)| n).sum::<usize>(), nl.lut_count());
+
+    let native = engine::compile_with_tail(&nl, Some(&tags), tail.as_ref());
+    let lut = engine::compile_with_stages(&nl, Some(&tags));
+    assert!(native.tail.is_some());
+
+    // Compiling (either mode) must leave the area attribution untouched.
+    assert_eq!(Component::count_tags(&tags), counts);
+    let count_of = |c: Component| {
+        counts.iter().find(|(k, _)| *k == c).map(|(_, n)| *n).unwrap()
+    };
+    assert!(count_of(Component::Popcount) > 0, "popcount area stays reported");
+    assert!(count_of(Component::Argmax) > 0, "argmax area stays reported");
+
+    // The native plan executes strictly fewer ops but accounts for every
+    // source LUT: live ops + const-folded + dead + natively-evaluated tail.
+    assert!(native.ops.len() < lut.ops.len());
+    let s = native.stats;
+    assert_eq!(
+        native.ops.len() + s.const_folded + s.dead_eliminated + s.tail_skipped,
+        s.source_luts
+    );
+    assert_eq!(s.source_luts, nl.lut_count());
+    // The LUT-mode plan keeps popcount/argmax segments; the native one has
+    // none (they are exactly what the tail replaced).
+    let has_tail_stage = |p: &engine::ExecPlan| {
+        p.segments.iter().any(|seg| {
+            matches!(seg.stage, Some(Component::Popcount) | Some(Component::Argmax))
+        })
+    };
+    assert!(has_tail_stage(&lut));
+    assert!(!has_tail_stage(&native));
+}

@@ -173,15 +173,15 @@ fn compiled_serving_path_matches_interpreter_on_accelerator() {
         num_classes: model.num_classes,
         index_width: accel.index_width(),
     };
-    let compiled = Backend::Compiled {
+    let compiled = Backend::compiled(
         plan,
         frac_bits,
-        num_features: model.num_features,
-        num_classes: model.num_classes,
-        index_width: accel.index_width(),
-        lanes: 128,
-        threads: 2,
-    };
+        model.num_features,
+        model.num_classes,
+        accel.index_width(),
+        128,
+        2,
+    );
     let mut rng = SplitMix64::new(0xF00D);
     // 300 rows: spans multiple lane words per shard plus a ragged tail.
     let rows: Vec<Vec<f32>> = (0..300)

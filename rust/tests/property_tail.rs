@@ -1,0 +1,243 @@
+//! Property tests for the native arithmetic tail and the persistent worker
+//! pool: popcount parity on adversarial lane patterns (all-zero, all-one,
+//! single-bit), argmax tie-breaking parity with the gate-level
+//! `hwgen::argmax` circuit on equal-score inputs, and pool determinism
+//! under odd shard sizes.
+
+use dwn::coordinator::Backend;
+use dwn::engine::{self, tail, Executor};
+use dwn::hwgen::{argmax, build_accelerator, popcount, AccelOptions, Component, TailInfo};
+use dwn::logic::{Builder, Simulator};
+use dwn::model::{DwnModel, SynthSpec, Variant};
+use dwn::techmap::{self, MapConfig, Src};
+use dwn::util::SplitMix64;
+
+/// Build a "scores-as-inputs" arithmetic tail netlist: C*G primary inputs
+/// straight into the gate-level popcount + argmax stages, mapped to LUTs
+/// and tagged by stage. Returns (netlist, tags, tail metadata) — the
+/// minimal deterministic fixture where the native tail provably engages.
+fn tail_only_netlist(
+    classes: usize,
+    group: usize,
+) -> (dwn::techmap::LutNetlist, Vec<Component>, TailInfo) {
+    let mut bld = Builder::new();
+    let ins = bld.inputs(classes * group);
+    let pop_start = bld.net.len();
+    let scores = popcount::build_class_popcounts(&mut bld, &ins, classes);
+    let arg_start = bld.net.len();
+    let am = argmax::build_argmax(&mut bld, &scores);
+    for &b in &am.index {
+        bld.output(b);
+    }
+    for &b in &am.value {
+        bld.output(b);
+    }
+    let index_width = am.index.len();
+    let score_width = scores[0].len();
+    let net = bld.finish();
+    let tracked = techmap::map_tracked(&net, &MapConfig::default());
+    let tags = tracked.root_tags(|r| {
+        // Range attribution exactly like hwgen::Accelerator: popcount gates
+        // precede argmax gates in builder order.
+        let r = r as usize;
+        assert!(r >= pop_start, "mapped root in the input range");
+        if r < arg_start {
+            Component::Popcount
+        } else {
+            Component::Argmax
+        }
+    });
+    let class_bits: Vec<Vec<Src>> = (0..classes)
+        .map(|c| (0..group).map(|g| Src::Input((c * group + g) as u32)).collect())
+        .collect();
+    let tail = TailInfo {
+        class_bits,
+        num_classes: classes,
+        score_width,
+        index_width,
+    };
+    (tracked.netlist, tags, tail)
+}
+
+/// Reference prediction: count group bits per class per lane, argmax with
+/// the lowest index winning ties.
+fn reference_preds(words: &[u64], classes: usize, group: usize, lanes: usize) -> Vec<i32> {
+    (0..lanes)
+        .map(|lane| {
+            let scores: Vec<u32> = (0..classes)
+                .map(|c| {
+                    (0..group)
+                        .map(|g| ((words[c * group + g] >> lane) & 1) as u32)
+                        .sum()
+                })
+                .collect();
+            tail::argmax_tie_low(&scores) as i32
+        })
+        .collect()
+}
+
+#[test]
+fn native_tail_matches_gate_argmax_on_adversarial_lanes() {
+    let (classes, group) = (3usize, 5usize);
+    let (nl, tags, info) = tail_only_netlist(classes, group);
+    let plan = engine::compile_with_tail(&nl, Some(&tags), Some(&info));
+    assert!(plan.tail.is_some(), "tail-only netlist must take the native path");
+    assert!(plan.ops.is_empty(), "every LUT belongs to the arithmetic tail");
+
+    // Adversarial lane patterns: ties everywhere, extremes, single bits.
+    let n_in = classes * group;
+    let mut words = vec![0u64; n_in];
+    let set = |words: &mut Vec<u64>, c: usize, g: usize, lane: usize| {
+        words[c * group + g] |= 1u64 << lane;
+    };
+    // lane 0: all zero (full tie -> class 0); lane 1: all one (tie -> 0).
+    for c in 0..classes {
+        for g in 0..group {
+            set(&mut words, c, g, 1);
+        }
+    }
+    // lane 2: only class 1 set; lane 3: only last class set.
+    for g in 0..group {
+        set(&mut words, 1, g, 2);
+        set(&mut words, classes - 1, g, 3);
+    }
+    // lane 4: classes 0 and 2 tie at 2 bits each (different bit positions).
+    set(&mut words, 0, 0, 4);
+    set(&mut words, 0, 4, 4);
+    set(&mut words, 2, 1, 4);
+    set(&mut words, 2, 3, 4);
+    // lane 5: a single bit in class 2.
+    set(&mut words, 2, 2, 5);
+    // lanes 6..64: random.
+    let mut rng = SplitMix64::new(0x7A11 ^ 0x5EED);
+    for w in words.iter_mut() {
+        *w |= rng.next_u64() & !0x3Fu64; // keep crafted lanes 0..5 intact
+    }
+
+    let want = reference_preds(&words, classes, group, 64);
+    // Hand-checked anchors for the crafted lanes.
+    assert_eq!(&want[..4], &[0, 0, 1, (classes - 1) as i32]);
+    assert_eq!(want[4], 0, "equal scores must pick the lowest class");
+    assert_eq!(want[5], 2);
+
+    // Native tail on the executor.
+    let mut ex = Executor::new(&plan, 64);
+    for (i, &w) in words.iter().enumerate() {
+        ex.input_words_mut(i)[0] = w;
+    }
+    ex.run();
+    let mut got = vec![0i32; 64];
+    ex.tail_preds(&mut got);
+    assert_eq!(got, want, "native tail vs scalar reference");
+
+    // The mapped gate circuit (hwgen::argmax semantics) agrees.
+    let outs = nl.eval_lanes(&words);
+    let gate: Vec<i32> = (0..64)
+        .map(|lane| {
+            dwn::util::decode_index_bits(info.index_width, |i| (outs[i] >> lane) & 1 == 1)
+        })
+        .collect();
+    assert_eq!(gate, want, "gate argmax vs scalar reference");
+}
+
+#[test]
+fn argmax_circuit_parity_on_equal_scores() {
+    // Direct gate-vs-scalar parity on crafted score words, including full
+    // plateaus and pairwise ties at every position.
+    let width = 4usize;
+    for scores in [
+        vec![7u64, 7, 7, 7, 7],
+        vec![3, 9, 9, 1],
+        vec![0, 0, 0],
+        vec![5, 2, 5],
+        vec![1, 2, 3, 3],
+        vec![15, 15],
+    ] {
+        let mut bld = Builder::new();
+        let words: Vec<Vec<_>> = scores.iter().map(|_| bld.inputs(width)).collect();
+        let out = argmax::build_argmax(&mut bld, &words);
+        for &b in &out.index {
+            bld.output(b);
+        }
+        let net = bld.finish();
+        let mut inputs = Vec::new();
+        for &v in &scores {
+            for i in 0..width {
+                inputs.push((v >> i) & 1 == 1);
+            }
+        }
+        let res = Simulator::new(&net).eval(&inputs);
+        let got = dwn::util::decode_index_bits(out.index.len(), |i| res[i]);
+        let scores32: Vec<u32> = scores.iter().map(|&v| v as u32).collect();
+        assert_eq!(got as usize, tail::argmax_tie_low(&scores32), "scores {scores:?}");
+    }
+}
+
+#[test]
+fn lane_popcount_edge_patterns() {
+    // all-zero / all-one / single-bit lanes, through the transpose path.
+    let mut counts = [0u32; 64];
+    tail::add_lane_popcounts(&[0u64; 17], &mut counts);
+    assert!(counts.iter().all(|&c| c == 0));
+
+    let mut counts = [0u32; 64];
+    tail::add_lane_popcounts(&[u64::MAX; 17], &mut counts);
+    assert!(counts.iter().all(|&c| c == 17));
+
+    for lane in [0usize, 1, 31, 62, 63] {
+        let mut counts = [0u32; 64];
+        tail::add_lane_popcounts(&[1u64 << lane], &mut counts);
+        for (l, &c) in counts.iter().enumerate() {
+            assert_eq!(c, u32::from(l == lane), "single bit in lane {lane}");
+        }
+    }
+}
+
+fn small_spec() -> SynthSpec {
+    SynthSpec {
+        name: "synth-pool".into(),
+        num_luts: 60,
+        thermo_bits: 6,
+        num_features: 8,
+        num_classes: 3,
+        lut_k: 6,
+        frac_bits: 5,
+        seed: 0xACCE1,
+    }
+}
+
+#[test]
+fn pool_determinism_under_odd_shard_sizes() {
+    let model = DwnModel::synthetic(&small_spec());
+    let frac_bits = model.penft.frac_bits.unwrap();
+    let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt)).unwrap();
+    let (nl, tags, tail_info) = accel.map_with_tail(&MapConfig::default());
+    let plan = engine::compile_with_tail(&nl, Some(&tags), tail_info.as_ref());
+    let iw = accel.index_width();
+
+    // 5 workers, 64-lane passes: batches below the worker count, batches
+    // that don't divide evenly, and single rows must all match the
+    // single-threaded sweep, repeatedly (scheduling-independent).
+    let pooled = Backend::compiled(
+        plan.clone(),
+        frac_bits,
+        model.num_features,
+        model.num_classes,
+        iw,
+        64,
+        5,
+    );
+    let mut rng = SplitMix64::new(0xF00D ^ 0xD00F);
+    let rows: Vec<Vec<f32>> = (0..300)
+        .map(|_| {
+            (0..model.num_features).map(|_| (2.0 * rng.next_f64() - 1.0) as f32).collect()
+        })
+        .collect();
+    for n in [1usize, 2, 4, 63, 64, 65, 127, 130, 300] {
+        let slice = &rows[..n];
+        let want = engine::infer_fixed_batch(&plan, slice, frac_bits, iw, 64, 1);
+        for round in 0..3 {
+            assert_eq!(pooled.infer(slice).unwrap(), want, "batch {n} round {round}");
+        }
+    }
+}
