@@ -6,22 +6,24 @@
 //! Backends: `pjrt` (AOT-compiled golden model), `netlist` (bit-accurate
 //! interpreter of the generated hardware), `compiled` (the netlist compiled
 //! into the wide/parallel execution engine — see DESIGN.md §engine). The
-//! compiled backend takes `--tail native|lut` (default native): native
-//! evaluates the popcount/argmax tail arithmetically behind the persistent
-//! worker pool, lut emulates the full mapped netlist.
+//! compiled backend takes `--head native|lut` and `--tail native|lut`
+//! (both default native): a native head computes the thermometer encoding
+//! arithmetically (no input bit-packing), a native tail evaluates
+//! popcount/argmax arithmetically — both behind the persistent worker pool;
+//! lut emulates the corresponding stages of the mapped netlist.
 //!
 //! Runs without trained artifacts too (netlist/compiled backends only): a
 //! synthetic JSC-sized model stands in, which is what the CI smoke step
-//! exercises under both tail modes.
+//! exercises across the head×tail matrix.
 //!
 //!     cargo run --release --example serve_jsc -- \
 //!         [--model sm-50] [--backend pjrt|netlist|compiled] [--lanes 256] \
-//!         [--threads N] [--tail native|lut] [--smoke]
+//!         [--threads N] [--head native|lut] [--tail native|lut] [--smoke]
 
 use dwn::config::{Args, Artifacts};
 use dwn::coordinator::{Backend, Server, ServerConfig};
 use dwn::data::Dataset;
-use dwn::engine::TailMode;
+use dwn::engine::{HeadMode, TailMode};
 use dwn::hwgen::{build_accelerator, AccelOptions};
 use dwn::model::{DwnModel, SynthSpec, Variant};
 use dwn::runtime::Engine;
@@ -96,18 +98,30 @@ fn main() -> anyhow::Result<()> {
                 "threads",
                 std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
             )?;
+            let head_mode: HeadMode = args.get_parse("head", HeadMode::Native)?;
             let tail_mode: TailMode = args.get_parse("tail", TailMode::Native)?;
             let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt))?;
-            let (nl, tags, tail) = accel.map_with_tail(&MapConfig::default());
-            let plan = dwn::engine::compile_for_mode(&nl, Some(&tags), tail.as_ref(), tail_mode);
+            let (nl, tags, head, tail) = accel.map_with_head(&MapConfig::default());
+            let plan = dwn::engine::compile_for_modes(
+                &nl,
+                Some(&tags),
+                head.as_ref(),
+                tail.as_ref(),
+                head_mode,
+                tail_mode,
+            );
+            if head_mode == HeadMode::Native && plan.head.is_none() {
+                println!("note: head metadata unavailable; fell back to LUT emulation");
+            }
             if tail_mode == TailMode::Native && plan.tail.is_none() {
                 println!("note: tail metadata unavailable; fell back to LUT emulation");
             }
             println!(
-                "serving {} via compiled engine ({} ops / {} levels, {lanes} lanes x {threads} threads, {} tail)",
+                "serving {} via compiled engine ({} ops / {} levels, {lanes} lanes x {threads} threads, {} head, {} tail)",
                 model.name,
                 plan.ops.len(),
                 plan.depth(),
+                if plan.head.is_some() { "native" } else { "lut" },
                 if plan.tail.is_some() { "native" } else { "lut" }
             );
             let max_batch = lanes * threads.max(1);

@@ -1,25 +1,37 @@
 //! Serving-throughput bench: interpreter (`LutNetlist::eval_lanes`) vs the
-//! compiled execution engine (`dwn::engine`) across batch sizes, in rows/sec,
-//! on a JSC-sized PEN+FT accelerator. Falls back to a synthetic model of the
-//! same shape when trained artifacts are absent, so it runs anywhere.
+//! compiled execution engine (`dwn::engine`) across the head×tail mode
+//! matrix and batch sizes, in rows/sec, on a JSC-sized PEN+FT accelerator.
+//! Falls back to a synthetic model of the same shape when trained artifacts
+//! are absent, so it runs anywhere.
 //!
-//! Engine configurations, against the interpreter baseline:
-//! * `spawn-lut`  — PR 2 engine: full LUT emulation, scoped threads spawned
-//!   per batch (`engine::infer_fixed_batch`).
-//! * `pool-lut`   — same plan behind the persistent worker pool.
-//! * `pool-native`— plan truncated at the LUT→arithmetic boundary with the
-//!   native popcount/argmax tail, behind the pool — the serving default.
+//! Engine arms (head/tail), all behind the persistent worker pool:
+//! * `lut/lut`       — full LUT emulation (the PR 2 plan behind the pool).
+//! * `native/lut`    — native thermometer head, emulated tail.
+//! * `lut/native`    — emulated encoder, native popcount/argmax tail.
+//! * `native/native` — the serving default: only the LUT layers are
+//!   emulated.
+//!
+//! Besides the table, the run writes `BENCH_serve.json` (rows/sec per arm
+//! per batch) so the perf trajectory is machine-readable across PRs.
 //!
 //!     cargo bench --bench serve_throughput
 //!     (or: target/release/serve_throughput after `cargo build --benches`)
 
 use dwn::config::Artifacts;
 use dwn::coordinator::Backend;
+use dwn::engine::{HeadMode, TailMode};
 use dwn::hwgen::{build_accelerator, AccelOptions, Component};
 use dwn::model::{DwnModel, SynthSpec, Variant};
 use dwn::techmap::MapConfig;
 use dwn::util::SplitMix64;
 use std::time::Instant;
+
+const MODES: [(HeadMode, TailMode); 4] = [
+    (HeadMode::Lut, TailMode::Lut),
+    (HeadMode::Native, TailMode::Lut),
+    (HeadMode::Lut, TailMode::Native),
+    (HeadMode::Native, TailMode::Native),
+];
 
 fn main() {
     let artifacts = Artifacts::discover();
@@ -37,25 +49,33 @@ fn main() {
 
     let frac_bits = model.penft.frac_bits.expect("penft bits");
     let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt)).unwrap();
-    let (nl, tags, tail) = accel.map_with_tail(&MapConfig::default());
-    let lut_plan = dwn::engine::compile_with_stages(&nl, Some(&tags));
-    let native_plan = dwn::engine::compile_with_tail(&nl, Some(&tags), tail.as_ref());
+    let (nl, tags, head, tail) = accel.map_with_head(&MapConfig::default());
     let index_width = accel.index_width();
+    let plans: Vec<dwn::engine::ExecPlan> = MODES
+        .iter()
+        .map(|&(hm, tm)| {
+            dwn::engine::compile_for_modes(&nl, Some(&tags), head.as_ref(), tail.as_ref(), hm, tm)
+        })
+        .collect();
+    let base = &plans[0];
     println!(
         "accelerator: {} LUTs -> {} compiled ops / {} levels ({} const-folded, {} dead, {} pins folded)",
         nl.lut_count(),
-        lut_plan.ops.len(),
-        lut_plan.depth(),
-        lut_plan.stats.const_folded,
-        lut_plan.stats.dead_eliminated,
-        lut_plan.stats.pins_folded
+        base.ops.len(),
+        base.depth(),
+        base.stats.const_folded,
+        base.stats.dead_eliminated,
+        base.stats.pins_folded
     );
+    let full = &plans[3];
     println!(
-        "native tail: {} ops / {} levels ({} popcount/argmax LUTs evaluated arithmetically{})",
-        native_plan.ops.len(),
-        native_plan.depth(),
-        native_plan.stats.tail_skipped,
-        if native_plan.tail.is_some() { "" } else { "; UNAVAILABLE — fell back to lut" }
+        "native head+tail: {} ops / {} levels ({} encoder LUTs{} and {} popcount/argmax LUTs{} evaluated natively)",
+        full.ops.len(),
+        full.depth(),
+        full.stats.head_skipped,
+        if full.head.is_some() { "" } else { "; head UNAVAILABLE — fell back to lut" },
+        full.stats.tail_skipped,
+        if full.tail.is_some() { "" } else { "; tail UNAVAILABLE — fell back to lut" }
     );
 
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
@@ -67,24 +87,20 @@ fn main() {
         index_width,
     };
     // Persistent pools, held across all batches like a real server.
-    let pool_lut = Backend::compiled(
-        lut_plan.clone(),
-        frac_bits,
-        model.num_features,
-        model.num_classes,
-        index_width,
-        256,
-        cores,
-    );
-    let pool_native = Backend::compiled(
-        native_plan.clone(),
-        frac_bits,
-        model.num_features,
-        model.num_classes,
-        index_width,
-        256,
-        cores,
-    );
+    let pools: Vec<Backend> = plans
+        .iter()
+        .map(|p| {
+            Backend::compiled(
+                p.clone(),
+                frac_bits,
+                model.num_features,
+                model.num_classes,
+                index_width,
+                256,
+                cores,
+            )
+        })
+        .collect();
 
     // Random feature rows (eval cost is data-independent).
     let mut rng = SplitMix64::new(0xBEEF);
@@ -95,38 +111,68 @@ fn main() {
         .collect();
 
     println!(
-        "\n{:>7} {:>16} {:>16} {:>16} {:>16} {:>9}",
-        "batch", "interp rows/s", "spawn-lut rows/s", "pool-lut rows/s", "pool-native r/s", "gain"
+        "\n{:>7} {:>14} {:>13} {:>13} {:>13} {:>13} {:>8}",
+        "batch", "interp r/s", "lut/lut", "native/lut", "lut/native", "native/native", "gain"
     );
+    let mut records: Vec<String> = Vec::new();
     for batch in [64usize, 256, 1024, 4096] {
         let slice = &rows[..batch];
         let interp_rps = rows_per_sec(slice, |r| interp.infer(r).unwrap());
-        // PR 2 baseline: scoped-thread spawn per batch, LUT-emulated tail.
-        let spawn_rps = rows_per_sec(slice, |r| {
-            dwn::engine::infer_fixed_batch(&lut_plan, r, frac_bits, index_width, 256, cores)
-        });
-        let pool_lut_rps = rows_per_sec(slice, |r| pool_lut.infer(r).unwrap());
-        let pool_native_rps = rows_per_sec(slice, |r| pool_native.infer(r).unwrap());
+        records.push(arm_record("interp", "-", "-", batch, interp_rps));
+        let mut rps = [0f64; 4];
+        for (i, pool) in pools.iter().enumerate() {
+            rps[i] = rows_per_sec(slice, |r| pool.infer(r).unwrap());
+            let (hm, tm) = MODES[i];
+            records.push(arm_record("pool", hm.label(), tm.label(), batch, rps[i]));
+        }
         println!(
-            "{:>7} {:>16.0} {:>16.0} {:>16.0} {:>16.0} {:>8.2}x",
+            "{:>7} {:>14.0} {:>13.0} {:>13.0} {:>13.0} {:>13.0} {:>7.2}x",
             batch,
             interp_rps,
-            spawn_rps,
-            pool_lut_rps,
-            pool_native_rps,
-            // the tentpole gain: native tail + persistent pool vs PR 2
-            pool_native_rps / spawn_rps
+            rps[0],
+            rps[1],
+            rps[2],
+            rps[3],
+            // the tentpole gain: both boundaries native vs full emulation
+            rps[3] / rps[0]
         );
+    }
+    let json = format!(
+        "{{\"model\":\"{}\",\"luts\":{},\"arms\":[\n{}\n]}}\n",
+        model.name,
+        nl_luts(&plans[0]),
+        records.join(",\n")
+    );
+    match std::fs::write("BENCH_serve.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_serve.json ({} arm records)", records.len()),
+        Err(e) => println!("\ncould not write BENCH_serve.json: {e}"),
     }
 
     // Per-stage runtime attribution (the paper's area breakdown, extended to
-    // emulation throughput), for both tail modes.
-    for (label, plan) in [("lut tail", &lut_plan), ("native tail", &native_plan)] {
+    // emulation throughput), for full emulation vs both boundaries native.
+    for (label, plan) in [("lut/lut", &plans[0]), ("native/native", &plans[3])] {
         let mut fill_rng = SplitMix64::new(0xA77);
+        let head_rows: Vec<Vec<f32>> = plan
+            .head
+            .as_ref()
+            .map(|h| {
+                (0..256)
+                    .map(|_| {
+                        (0..h.num_features)
+                            .map(|_| (2.0 * fill_rng.next_f64() - 1.0) as f32)
+                            .collect()
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
         let runtime = dwn::engine::measure_stages(plan, 256, 64, |ex, _| {
-            for i in 0..plan.num_inputs {
-                for w in ex.input_words_mut(i) {
-                    *w = fill_rng.next_u64();
+            if ex.plan().head.is_some() {
+                ex.pack_head_rows(&head_rows, frac_bits);
+            } else {
+                for i in 0..plan.num_inputs {
+                    for w in ex.input_words_mut(i) {
+                        *w = fill_rng.next_u64();
+                    }
                 }
             }
         });
@@ -135,12 +181,22 @@ fn main() {
             runtime.lanes
         );
         let total: f64 = Component::ALL.iter().map(|&c| runtime.ns_per_row(c)).sum::<f64>()
-            + runtime.tail_ns_per_row();
+            + runtime.tail_ns_per_row()
+            + runtime.head_ns_per_row();
         for c in Component::ALL {
             let ns = runtime.ns_per_row(c);
             println!(
-                "  {:11} {:>8.2} ns/row  ({:>5.1}%)",
+                "  {:14} {:>8.2} ns/row  ({:>5.1}%)",
                 c.label(),
+                ns,
+                100.0 * ns / total.max(1e-9)
+            );
+        }
+        if runtime.head.is_some() {
+            let ns = runtime.head_ns_per_row();
+            println!(
+                "  {:14} {:>8.2} ns/row  ({:>5.1}%)",
+                "head-native",
                 ns,
                 100.0 * ns / total.max(1e-9)
             );
@@ -148,7 +204,7 @@ fn main() {
         if runtime.tail.is_some() {
             let ns = runtime.tail_ns_per_row();
             println!(
-                "  {:11} {:>8.2} ns/row  ({:>5.1}%)",
+                "  {:14} {:>8.2} ns/row  ({:>5.1}%)",
                 "tail-native",
                 ns,
                 100.0 * ns / total.max(1e-9)
@@ -161,6 +217,17 @@ fn synth() -> DwnModel {
     let spec = SynthSpec::jsc_sized();
     println!("model: {} (synthetic, no artifacts)", spec.name);
     DwnModel::synthetic(&spec)
+}
+
+fn nl_luts(plan: &dwn::engine::ExecPlan) -> usize {
+    plan.stats.source_luts
+}
+
+/// One machine-readable arm record for `BENCH_serve.json`.
+fn arm_record(backend: &str, head: &str, tail: &str, batch: usize, rps: f64) -> String {
+    format!(
+        "  {{\"backend\":\"{backend}\",\"head\":\"{head}\",\"tail\":\"{tail}\",\"batch\":{batch},\"rows_per_sec\":{rps:.0}}}"
+    )
 }
 
 /// Median-of-3 timed repetitions, enough iterations to amortize noise.

@@ -27,7 +27,9 @@ pub enum Backend {
     /// The netlist compiled into a flat execution plan ([`crate::engine`]),
     /// evaluated by a persistent worker pool the backend holds for the life
     /// of the server — no per-batch thread spawn. The plan may carry a
-    /// native arithmetic tail (`--tail native`) or emulate the full netlist.
+    /// native thermometer-encoder head (`--head native`: integer compares
+    /// instead of encoder emulation and input bit-packing) and/or a native
+    /// arithmetic tail (`--tail native`), or emulate the full netlist.
     Compiled {
         pool: EnginePool,
         num_features: usize,

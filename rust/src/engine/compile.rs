@@ -14,9 +14,12 @@
 //! 4. **resolve** — assign each surviving LUT a slot and rewrite every pin
 //!    to a flat slot index.
 
-use super::plan::{CompileStats, ExecPlan, OutSrc, PlanOp, Segment, TailPlan};
+use super::head::HeadMode;
+use super::plan::{
+    CompileStats, ExecPlan, HeadFeaturePlan, HeadPlan, OutSrc, PlanOp, Segment, TailPlan,
+};
 use super::tail::TailMode;
-use crate::hwgen::{Component, TailInfo};
+use crate::hwgen::{Component, HeadInfo, TailInfo};
 use crate::logic::net::{cofactor_tables, table_mask};
 use crate::techmap::{LutNetlist, Src};
 
@@ -29,7 +32,7 @@ pub fn compile(nl: &LutNetlist) -> ExecPlan {
 /// [`crate::hwgen::Accelerator::map_with_stages`]). Tag order must match
 /// `nl.luts`.
 pub fn compile_with_stages(nl: &LutNetlist, tags: Option<&[Component]>) -> ExecPlan {
-    compile_impl(nl, tags, None)
+    compile_impl(nl, tags, None, None)
 }
 
 /// Compile with a native arithmetic tail: ops whose stage tag is popcount or
@@ -48,27 +51,74 @@ pub fn compile_with_tail(
     tags: Option<&[Component]>,
     tail: Option<&TailInfo>,
 ) -> ExecPlan {
-    compile_impl(nl, tags, tail)
+    compile_impl(nl, tags, None, tail)
+}
+
+/// Compile with a native encoder head: ops whose stage tag is encoder are
+/// not compiled; instead the plan records, per feature, the sorted distinct
+/// thresholds and the value-buffer slot of every live thermometer bit
+/// ([`HeadPlan`]) so the executor can compare integer feature values
+/// natively ([`super::head`]) — input bit-packing is skipped entirely.
+/// Falls back to full LUT emulation of the encoder (identical to
+/// [`compile_with_stages`]) when `tags`/`head` are absent or the mapped
+/// structure is not the expected clean encoder→LUT-layer boundary:
+/// * a thermometer bit resolves to a primary input or a non-encoder LUT
+///   (or two bits share one mapped LUT),
+/// * a kept (post-boundary) op is encoder-tagged or reads a primary input
+///   directly (a cone straddling the boundary),
+/// * a netlist output or tail class bit is a primary input (which the
+///   native head would leave unwritten).
+pub fn compile_with_head(
+    nl: &LutNetlist,
+    tags: Option<&[Component]>,
+    head: Option<&HeadInfo>,
+) -> ExecPlan {
+    compile_impl(nl, tags, head, None)
 }
 
 /// Compile for a requested [`TailMode`]: `Native` engages the arithmetic
 /// tail via [`compile_with_tail`] (with its documented fallback), `Lut`
-/// emulates the full netlist. The shared dispatch for `dwn serve`,
-/// `dwn breakdown`, and the serving example — callers can tell which path
-/// was actually taken from `plan.tail.is_some()`.
+/// emulates the full netlist. Kept for tail-only callers;
+/// [`compile_for_modes`] is the head×tail dispatch.
 pub fn compile_for_mode(
     nl: &LutNetlist,
     tags: Option<&[Component]>,
     tail: Option<&TailInfo>,
     mode: TailMode,
 ) -> ExecPlan {
-    match mode {
-        TailMode::Native => compile_with_tail(nl, tags, tail),
-        TailMode::Lut => compile_with_stages(nl, tags),
-    }
+    compile_for_modes(nl, tags, None, tail, HeadMode::Lut, mode)
 }
 
-fn compile_impl(nl: &LutNetlist, tags: Option<&[Component]>, tail: Option<&TailInfo>) -> ExecPlan {
+/// Compile for a requested head×tail mode pair — the shared dispatch for
+/// `dwn serve`, `dwn breakdown`, and the serving example. The two modes
+/// compose freely; each native side falls back to emulation independently
+/// on its documented structural surprises. Callers can tell which paths
+/// were actually taken from `plan.head.is_some()` / `plan.tail.is_some()`.
+pub fn compile_for_modes(
+    nl: &LutNetlist,
+    tags: Option<&[Component]>,
+    head: Option<&HeadInfo>,
+    tail: Option<&TailInfo>,
+    head_mode: HeadMode,
+    tail_mode: TailMode,
+) -> ExecPlan {
+    let head = match head_mode {
+        HeadMode::Native => head,
+        HeadMode::Lut => None,
+    };
+    let tail = match tail_mode {
+        TailMode::Native => tail,
+        TailMode::Lut => None,
+    };
+    compile_impl(nl, tags, head, tail)
+}
+
+fn compile_impl(
+    nl: &LutNetlist,
+    tags: Option<&[Component]>,
+    head: Option<&HeadInfo>,
+    tail: Option<&TailInfo>,
+) -> ExecPlan {
     if let Some(t) = tags {
         assert_eq!(t.len(), nl.luts.len(), "one stage tag per source LUT");
     }
@@ -146,12 +196,62 @@ fn compile_impl(nl: &LutNetlist, tags: Option<&[Component]>, tail: Option<&TailI
             )
     };
 
+    // Head boundary: keep the head only when the mapped structure is the
+    // clean encoder→LUT-layer split `compile_with_head` documents.
+    let use_head: Option<&HeadInfo> = head.and_then(|h| {
+        let tg = tags?;
+        head_boundary_ok(nl, tg, h).then_some(h)
+    });
+    let head_tagged = |i: usize| {
+        use_head.is_some() && matches!(tags.map(|t| t[i]), Some(Component::Encoder))
+    };
+
+    // Head slot assignment: one value-buffer slot per live (non-constant)
+    // thermometer bit, right after the primary inputs. Bits whose mapped
+    // LUT folded constant need no slot — downstream pins fold them like any
+    // other constant.
+    let num_inputs = nl.num_inputs;
+    let mut head_slot_of: Vec<Option<u32>> = vec![None; n];
+    let mut head_feats: Vec<HeadFeaturePlan> = Vec::new();
+    let mut head_slots = 0usize;
+    if let Some(h) = use_head {
+        for f in &h.features {
+            let mut bits: Vec<(u32, u32)> = Vec::new();
+            for (rank, srcs) in f.srcs.iter().enumerate() {
+                for src in srcs {
+                    if let Src::Lut(j) = src {
+                        if const_val[*j as usize].is_none() {
+                            let slot = (num_inputs + head_slots) as u32;
+                            head_slot_of[*j as usize] = Some(slot);
+                            bits.push((rank as u32, slot));
+                            head_slots += 1;
+                        }
+                    }
+                }
+            }
+            if !bits.is_empty() {
+                // Descending rank: the packer's suffix-OR consumption order.
+                bits.sort_by_key(|&(rank, _)| std::cmp::Reverse(rank));
+                head_feats.push(HeadFeaturePlan {
+                    feature: f.feature,
+                    thresholds: f.thresholds.clone(),
+                    bits,
+                });
+            }
+        }
+    }
+
     // Pass 2: DCE — roots are the netlist outputs, or the LUT-layer class
-    // bits when the plan stops at the arithmetic boundary.
+    // bits when the plan stops at the arithmetic boundary. Head-provided
+    // LUTs are terminals (their slots are written natively), so marking
+    // never descends into the encoder cone.
     let mut live = vec![false; n];
     let mut stack: Vec<u32> = Vec::new();
     let mark = |j: u32, live: &mut Vec<bool>, stack: &mut Vec<u32>| {
-        if const_val[j as usize].is_none() && !live[j as usize] {
+        if const_val[j as usize].is_none()
+            && head_slot_of[j as usize].is_none()
+            && !live[j as usize]
+        {
             live[j as usize] = true;
             stack.push(j);
         }
@@ -181,16 +281,51 @@ fn compile_impl(nl: &LutNetlist, tags: Option<&[Component]>, tail: Option<&TailI
         }
     }
     // Defensive boundary check: a kept op depending on a tail op means the
-    // split is not clean after all — recompile with full LUT emulation.
-    // (Unreachable for range-tagged accelerators, where every fanin of a
-    // pre-boundary cone roots below the popcount node range.)
+    // split is not clean after all — recompile with the tail emulated (the
+    // head request, if any, is retried in the recursion). (Unreachable for
+    // range-tagged accelerators, where every fanin of a pre-boundary cone
+    // roots below the popcount node range.)
     if use_tail.is_some() && (0..n).any(|i| live[i] && tail_tagged(i)) {
-        return compile_impl(nl, tags, None);
+        return compile_impl(nl, tags, head, None);
     }
-    stats.dead_eliminated =
-        (0..n).filter(|&i| const_val[i].is_none() && !live[i] && !tail_tagged(i)).count();
+    // Defensive head check: with a native head nothing surviving may reach
+    // the encoder cone or the primary inputs (which the native path never
+    // writes). A kept encoder-tagged op or a kept op with an input pin means
+    // a mapper cone straddled the boundary; an output or tail class bit that
+    // *is* a primary input would read an unwritten slot. Either way,
+    // recompile with the encoder emulated (tail request preserved).
+    if use_head.is_some() {
+        let op_dirty = (0..n).any(|i| {
+            live[i]
+                && (head_tagged(i)
+                    || folded[i]
+                        .as_ref()
+                        .expect("live implies folded")
+                        .0
+                        .iter()
+                        .any(|p| matches!(p, Pin::In(_))))
+        });
+        let root_dirty = match use_tail {
+            Some(t) => t
+                .class_bits
+                .iter()
+                .flatten()
+                .any(|s| matches!(s, Src::Input(_))),
+            None => nl.outputs.iter().any(|s| matches!(s, Src::Input(_))),
+        };
+        if op_dirty || root_dirty {
+            return compile_impl(nl, tags, None, tail);
+        }
+    }
+    stats.dead_eliminated = (0..n)
+        .filter(|&i| {
+            const_val[i].is_none() && !live[i] && !tail_tagged(i) && !head_tagged(i)
+        })
+        .count();
     stats.tail_skipped =
         (0..n).filter(|&i| const_val[i].is_none() && tail_tagged(i)).count();
+    stats.head_skipped =
+        (0..n).filter(|&i| const_val[i].is_none() && head_tagged(i)).count();
 
     // Pass 3: levelize surviving LUTs and fix the execution order.
     let mut level = vec![0u32; n];
@@ -219,11 +354,18 @@ fn compile_impl(nl: &LutNetlist, tags: Option<&[Component]>, tail: Option<&TailI
     let mut order: Vec<usize> = (0..n).filter(|&i| live[i]).collect();
     order.sort_by_key(|&i| (level[i], stage_rank(i), i));
 
-    // Pass 4: assign slots and resolve pins.
-    let num_inputs = nl.num_inputs;
+    // Pass 4: assign slots and resolve pins. Op destinations start after the
+    // primary inputs and the head slots; head-provided LUTs resolve to their
+    // head slot so pins, outputs, and tail class bits all rewrite uniformly.
+    let op_base = num_inputs + head_slots;
     let mut slot_of = vec![u32::MAX; n];
     for (pos, &i) in order.iter().enumerate() {
-        slot_of[i] = (num_inputs + pos) as u32;
+        slot_of[i] = (op_base + pos) as u32;
+    }
+    for (j, s) in head_slot_of.iter().enumerate() {
+        if let Some(slot) = s {
+            slot_of[j] = *slot;
+        }
     }
     let mut ops = Vec::with_capacity(order.len());
     let mut segments: Vec<Segment> = Vec::new();
@@ -239,7 +381,7 @@ fn compile_impl(nl: &LutNetlist, tags: Option<&[Component]>, tail: Option<&TailI
         ops.push(PlanOp {
             table: *table,
             k: pins.len() as u8,
-            dst: (num_inputs + pos) as u32,
+            dst: (op_base + pos) as u32,
             pins: flat,
         });
         let stage = tags.map(|t| t[i]);
@@ -298,7 +440,52 @@ fn compile_impl(nl: &LutNetlist, tags: Option<&[Component]>, tail: Option<&TailI
         }
     });
 
-    ExecPlan { num_inputs, ops, segments, outputs, stats, tail: tail_plan }
+    let head_plan = use_head.map(|h| HeadPlan {
+        features: head_feats,
+        num_features: h.num_features,
+        frac_bits: h.frac_bits,
+    });
+
+    ExecPlan { num_inputs, ops, segments, outputs, stats, tail: tail_plan, head: head_plan }
+}
+
+/// The structural expectations behind a native head: at least one feature
+/// with thresholds, every threshold list sorted strictly ascending, and
+/// every thermometer bit carried by a constant or by its *own*
+/// encoder-tagged mapped LUT (never a primary input, never a LUT shared
+/// with another bit — distinct bits carry distinct comparison values).
+fn head_boundary_ok(nl: &LutNetlist, tags: &[Component], head: &HeadInfo) -> bool {
+    if !head.features.iter().any(|f| !f.thresholds.is_empty()) {
+        return false;
+    }
+    let mut seen = std::collections::HashSet::new();
+    for f in &head.features {
+        if f.srcs.len() != f.thresholds.len()
+            || !f.thresholds.windows(2).all(|w| w[0] < w[1])
+        {
+            return false;
+        }
+        for srcs in &f.srcs {
+            if srcs.is_empty() {
+                return false;
+            }
+            for src in srcs {
+                match src {
+                    Src::Const(_) => {}
+                    Src::Input(_) => return false,
+                    Src::Lut(j) => {
+                        if *j as usize >= nl.luts.len()
+                            || tags[*j as usize] != Component::Encoder
+                            || !seen.insert(*j)
+                        {
+                            return false;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    true
 }
 
 /// The structural expectations behind a native tail: every class-group bit

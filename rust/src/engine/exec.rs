@@ -12,13 +12,23 @@ pub struct Executor<'p> {
     plan: &'p ExecPlan,
     words: usize,
     buf: Vec<u64>,
+    /// Level-bucket scratch for the native head packer (empty when the plan
+    /// has no head) — kept here so steady-state packing allocates nothing.
+    head_acc: Vec<u64>,
 }
 
 impl<'p> Executor<'p> {
     /// `lanes` is rounded up to a multiple of 64 (one u64 lane word).
     pub fn new(plan: &'p ExecPlan, lanes: usize) -> Self {
         let words = crate::util::ceil_div(lanes.max(1), 64);
-        Self { plan, words, buf: vec![0u64; plan.num_slots() * words] }
+        let head_acc = vec![
+            0u64;
+            plan.head
+                .as_ref()
+                .and_then(|h| h.features.iter().map(|f| f.thresholds.len() + 1).max())
+                .unwrap_or(0)
+        ];
+        Self { plan, words, buf: vec![0u64; plan.num_slots() * words], head_acc }
     }
 
     /// Vectors evaluated per pass.
@@ -32,8 +42,14 @@ impl<'p> Executor<'p> {
     }
 
     /// Zero the primary-input region (call before packing a fresh block —
-    /// packing only ORs bits in).
+    /// packing only ORs bits in). No-op for native-head plans: compile
+    /// guarantees nothing surviving reads the input slots there, and the
+    /// head packer fully rewrites its own slots, so the memset would be
+    /// pure recurring overhead on the fast path.
     pub fn clear_inputs(&mut self) {
+        if self.plan.head.is_some() {
+            return;
+        }
         for w in &mut self.buf[..self.plan.num_inputs * self.words] {
             *w = 0;
         }
@@ -75,6 +91,25 @@ impl<'p> Executor<'p> {
     pub fn tail_preds(&self, out: &mut [i32]) {
         let tail = self.plan.tail.as_ref().expect("plan compiled without a native tail");
         super::tail::eval_preds(self, tail, out);
+    }
+
+    /// Native-head packing of real-valued feature rows (call before
+    /// [`run`](Self::run); replaces input bit-packing entirely). Panics when
+    /// the plan was compiled without a head.
+    pub fn pack_head_rows(&mut self, rows: &[Vec<f32>], frac_bits: u32) {
+        super::head::pack_rows(self, rows, frac_bits);
+    }
+
+    /// Native-head packing of integer feature rows (grid integers on the
+    /// head's fixed-point grid) — the zero-conversion fast path.
+    pub fn pack_head_ints(&mut self, rows: &[Vec<i32>]) {
+        super::head::pack_int_rows(self, rows);
+    }
+
+    /// Split borrow for the head packer: (plan, words, value buffer,
+    /// level-bucket scratch).
+    pub(crate) fn head_parts(&mut self) -> (&'p ExecPlan, usize, &mut [u64], &mut [u64]) {
+        (self.plan, self.words, &mut self.buf, &mut self.head_acc)
     }
 
     /// Evaluate every op for the current inputs.
@@ -209,8 +244,10 @@ pub fn par_eval<T, F>(
 }
 
 /// One lane-block of the serving path: pack `rows` into the (pre-cleared)
-/// executor, run the plan, and decode one prediction per row — via the
-/// native arithmetic tail when the plan carries one, else by reading the
+/// executor, run the plan, and decode one prediction per row. Packing goes
+/// through the native head when the plan carries one (integer comparisons,
+/// no input bit-packing), else through `int_to_bits` lane packing; decoding
+/// goes through the native arithmetic tail when present, else reads the
 /// emulated class-index output bits. Shared by `par_eval`-based inference
 /// and the persistent worker pool so the two cannot drift apart.
 pub(crate) fn eval_rows_block(
@@ -222,19 +259,65 @@ pub(crate) fn eval_rows_block(
 ) {
     use crate::util::fixed;
     assert_eq!(rows.len(), out.len());
-    let width = (frac_bits + 1) as usize;
-    for (lane, row) in rows.iter().enumerate() {
-        // Hard check (release too): a frac_bits/num_features mismatch
-        // with the compiled accelerator would otherwise OR bits into
-        // other slots of the value buffer and silently corrupt results.
-        assert_eq!(
-            row.len() * width,
-            ex.plan().num_inputs,
-            "row does not match the plan's input interface"
-        );
-        fixed::pack_row_bits(row, frac_bits, |bit| ex.set_input_bit(bit, lane));
+    if ex.plan().head.is_some() {
+        ex.pack_head_rows(rows, frac_bits);
+    } else {
+        let width = (frac_bits + 1) as usize;
+        for (lane, row) in rows.iter().enumerate() {
+            // Hard check (release too): a frac_bits/num_features mismatch
+            // with the compiled accelerator would otherwise OR bits into
+            // other slots of the value buffer and silently corrupt results.
+            assert_eq!(
+                row.len() * width,
+                ex.plan().num_inputs,
+                "row does not match the plan's input interface"
+            );
+            fixed::pack_row_bits(row, frac_bits, |bit| ex.set_input_bit(bit, lane));
+        }
     }
     ex.run();
+    decode_block_preds(ex, index_width, out);
+}
+
+/// Integer-row counterpart of [`eval_rows_block`]: rows are grid integers on
+/// the serving fixed-point grid. With a native head the values feed the
+/// comparators directly; without one they pack through
+/// [`fixed::pack_row_bits_int`] — so both modes accept integer rows and stay
+/// bit-identical.
+pub(crate) fn eval_int_rows_block(
+    ex: &mut Executor,
+    rows: &[Vec<i32>],
+    frac_bits: u32,
+    index_width: usize,
+    out: &mut [i32],
+) {
+    use crate::util::fixed;
+    assert_eq!(rows.len(), out.len());
+    if let Some(head) = ex.plan().head.as_ref() {
+        // Same wiring guard the f32 path enforces inside pack_rows.
+        assert_eq!(
+            head.frac_bits, frac_bits,
+            "serving frac_bits disagrees with the compiled head's threshold grid"
+        );
+        ex.pack_head_ints(rows);
+    } else {
+        let width = (frac_bits + 1) as usize;
+        for (lane, row) in rows.iter().enumerate() {
+            assert_eq!(
+                row.len() * width,
+                ex.plan().num_inputs,
+                "row does not match the plan's input interface"
+            );
+            fixed::pack_row_bits_int(row, frac_bits, |bit| ex.set_input_bit(bit, lane));
+        }
+    }
+    ex.run();
+    decode_block_preds(ex, index_width, out);
+}
+
+/// Shared per-block decode: native tail when present, emulated class-index
+/// output bits otherwise.
+fn decode_block_preds(ex: &Executor, index_width: usize, out: &mut [i32]) {
     if ex.plan().tail.is_some() {
         ex.tail_preds(out);
     } else {

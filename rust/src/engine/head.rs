@@ -1,0 +1,170 @@
+//! Native evaluation of the thermometer-encoder head: per-feature
+//! compare-and-pack of integer feature values against sorted thresholds,
+//! writing 64-lane thermometer-bit words straight into the executor's value
+//! buffer.
+//!
+//! The paper's core finding is that thermometer encoding can dominate a
+//! small DWN's area (up to 3.20× LUT inflation) — and the compiled engine
+//! used to pay that same dominance at runtime by emulating every encoder
+//! LUT per inference. A thermometer encoder is semantically just
+//! `feature >= threshold`; a plan compiled with [`super::compile_with_head`]
+//! drops the encoder cone entirely and this module recreates its outputs
+//! arithmetically: quantize each feature once, find its thermometer *level*
+//! against the feature's sorted distinct thresholds (short branchless scan
+//! for narrow encodings, binary search for wide ones), bucket lanes by
+//! level, and materialize every live bit's lane word with one descending
+//! suffix-OR sweep — O(lanes + thresholds) per feature word instead of
+//! O(encoder LUTs × words) emulation. Input bit-packing (`int_to_bits` +
+//! per-bit ORs) is skipped entirely on this path.
+
+use super::exec::Executor;
+use crate::util::fixed;
+
+/// How the compiled engine should treat the encoder head.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HeadMode {
+    /// Truncate the plan at the encoder→LUT-layer boundary and compute the
+    /// thermometer bits natively (falls back to `Lut` when head metadata is
+    /// absent or the mapped structure is unexpected).
+    Native,
+    /// Emulate the full mapped netlist, encoder LUTs included (the PR 2/3
+    /// behavior; also the area-faithful reference).
+    Lut,
+}
+
+impl HeadMode {
+    pub fn label(&self) -> &'static str {
+        match self {
+            HeadMode::Native => "native",
+            HeadMode::Lut => "lut",
+        }
+    }
+}
+
+impl std::str::FromStr for HeadMode {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "native" => HeadMode::Native,
+            "lut" => HeadMode::Lut,
+            _ => anyhow::bail!("unknown head mode '{s}' (native|lut)"),
+        })
+    }
+}
+
+/// Thermometer level of `x` over sorted ascending distinct `thresholds`:
+/// `|{t : x >= t}|`. Bit `r` of the encoding is set iff `r < level`.
+#[inline]
+pub fn level_of(thresholds: &[i32], x: i32) -> usize {
+    if thresholds.len() <= 8 {
+        // Branchless scan: cheaper than a binary search at these widths.
+        thresholds.iter().map(|&t| (x >= t) as usize).sum()
+    } else {
+        thresholds.partition_point(|&t| t <= x)
+    }
+}
+
+/// Pack real-valued feature rows through the native head: quantize with the
+/// serving grid ([`fixed::input_to_int`], the same quantizer the emulated
+/// input packing uses) and write every live thermometer bit's lane words.
+/// Rows beyond `rows.len()` (up to the executor's lane count) are zeroed —
+/// the same tail-lane hygiene as [`fixed::pack_chunk_words`]. Panics when
+/// the plan has no head or `frac_bits` disagrees with the head's grid.
+pub fn pack_rows(ex: &mut Executor, rows: &[Vec<f32>], frac_bits: u32) {
+    let head = ex.plan().head.as_ref().expect("plan compiled without a native head");
+    assert_eq!(
+        head.frac_bits, frac_bits,
+        "serving frac_bits disagrees with the compiled head's threshold grid"
+    );
+    for row in rows {
+        assert_eq!(
+            row.len(),
+            head.num_features,
+            "row does not match the plan's feature interface"
+        );
+    }
+    pack_with(ex, rows.len(), |row, feature| {
+        fixed::input_to_int(rows[row][feature] as f64, frac_bits)
+    });
+}
+
+/// Pack integer feature rows (grid integers on the head's fixed-point grid)
+/// through the native head — the zero-conversion fast path. Values are
+/// clamped to the grid range like [`fixed::input_to_int`] clamps reals.
+pub fn pack_int_rows(ex: &mut Executor, rows: &[Vec<i32>]) {
+    let head = ex.plan().head.as_ref().expect("plan compiled without a native head");
+    for row in rows {
+        assert_eq!(
+            row.len(),
+            head.num_features,
+            "row does not match the plan's feature interface"
+        );
+    }
+    let scale = 1i64 << head.frac_bits;
+    pack_with(ex, rows.len(), move |row, feature| {
+        (rows[row][feature] as i64).max(-scale).min(scale - 1) as i32
+    });
+}
+
+/// Shared packer: bucket the first `n` lanes by thermometer level per
+/// feature word, then materialize each live bit's lane word with one
+/// descending suffix-OR sweep over the level buckets.
+fn pack_with(ex: &mut Executor, n: usize, get: impl Fn(usize, usize) -> i32) {
+    let (plan, words, buf, acc) = ex.head_parts();
+    let head = plan.head.as_ref().expect("plan compiled without a native head");
+    assert!(n <= words * 64, "more rows than lanes in one pass");
+    for f in &head.features {
+        let tlen = f.thresholds.len();
+        let acc = &mut acc[..tlen + 1];
+        for w in 0..words {
+            let lo = w * 64;
+            let live = n.saturating_sub(lo).min(64);
+            // acc[l] = lanes whose thermometer level is exactly l. Dead
+            // lanes land in no bucket, so every written word is zero there.
+            acc.fill(0);
+            for lane in 0..live {
+                acc[level_of(&f.thresholds, get(lo + lane, f.feature))] |= 1u64 << lane;
+            }
+            // bits are rank-descending; `run` accumulates acc[rank+1..=T],
+            // i.e. the lanes with level > rank — exactly bit `rank`'s word.
+            let mut run = 0u64;
+            let mut next = tlen;
+            for &(rank, slot) in &f.bits {
+                while next > rank as usize {
+                    run |= acc[next];
+                    next -= 1;
+                }
+                buf[slot as usize * words + w] = run;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_of_matches_definition_narrow_and_wide() {
+        // Narrow (scan) and wide (binary search) must agree with the
+        // counting definition, including exact-threshold hits.
+        let narrow = [-4i32, -1, 0, 3];
+        let wide: Vec<i32> = (-8..8).map(|i| i * 2).collect(); // 16 entries
+        for x in -20..20 {
+            let want_n = narrow.iter().filter(|&&t| x >= t).count();
+            assert_eq!(level_of(&narrow, x), want_n, "narrow x={x}");
+            let want_w = wide.iter().filter(|&&t| x >= t).count();
+            assert_eq!(level_of(&wide, x), want_w, "wide x={x}");
+        }
+        assert_eq!(level_of(&[], 5), 0);
+    }
+
+    #[test]
+    fn head_mode_parses() {
+        assert_eq!("native".parse::<HeadMode>().unwrap(), HeadMode::Native);
+        assert_eq!("LUT".parse::<HeadMode>().unwrap(), HeadMode::Lut);
+        assert!("emulate".parse::<HeadMode>().is_err());
+        assert_eq!(HeadMode::Native.label(), "native");
+    }
+}

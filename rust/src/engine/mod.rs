@@ -15,26 +15,43 @@
 //! area — the paper's encoding-cost analysis extended from area to
 //! throughput.
 //!
-//! Two serving-path refinements on top of the compiled plan:
+//! Three serving-path refinements on top of the compiled plan:
+//! * [`compile_with_head`] truncates the plan at the encoder→LUT-layer
+//!   boundary and computes the thermometer bits natively ([`head`]): integer
+//!   feature values compared against sorted thresholds, lane words written
+//!   straight into the value buffer, input bit-packing skipped entirely.
+//!   The paper's dominant component (up to 3.20× LUT inflation) stops being
+//!   emulated per inference.
 //! * [`compile_with_tail`] truncates the plan at the LUT→arithmetic
 //!   boundary and evaluates the popcount/argmax tail natively
-//!   ([`tail`]; falls back to full emulation on unexpected structure) —
-//!   the mapped netlist stays untouched, so area accounting is unaffected.
+//!   ([`tail`]).
 //! * [`EnginePool`] replaces per-batch scoped-thread spawning with
 //!   persistent parked workers owning their scratch, which
 //!   [`crate::coordinator::Backend::Compiled`] holds for the life of the
 //!   server.
+//!
+//! Head and tail compose freely ([`compile_for_modes`]); with both native,
+//! the engine emulates *only* the LUT layers. Each side falls back to full
+//! LUT emulation independently on any structural surprise, with the mapped
+//! netlist untouched — LUT-area accounting is identical in every mode.
 
 mod compile;
 mod exec;
+pub mod head;
 mod plan;
 mod pool;
 mod stages;
 pub mod tail;
 
-pub use compile::{compile, compile_for_mode, compile_with_stages, compile_with_tail};
+pub use compile::{
+    compile, compile_for_mode, compile_for_modes, compile_with_head, compile_with_stages,
+    compile_with_tail,
+};
 pub use exec::{infer_fixed_batch, par_eval, Executor};
-pub use plan::{CompileStats, ExecPlan, OutSrc, PlanOp, Segment, TailPlan};
+pub use head::HeadMode;
+pub use plan::{
+    CompileStats, ExecPlan, HeadFeaturePlan, HeadPlan, OutSrc, PlanOp, Segment, TailPlan,
+};
 pub use pool::EnginePool;
 pub use stages::{measure_stages, StageRuntime};
 pub use tail::TailMode;

@@ -4,8 +4,10 @@
 //!
 //! Layout invariants (established by [`super::compile`]):
 //! * The value buffer is a single SoA array of **slots**. Slots
-//!   `[0, num_inputs)` are the primary inputs; slot `num_inputs + i` is the
-//!   output of op `i`. Each slot holds `words` consecutive `u64` lane words
+//!   `[0, num_inputs)` are the primary inputs; the next `head.num_slots()`
+//!   slots (if a native head is present) hold natively computed thermometer
+//!   bits; the remaining slots are op outputs in op order. Each slot holds
+//!   `words` consecutive `u64` lane words
 //!   at execution time, so `pins` resolve with one multiply — no `Src`
 //!   matching on the hot path.
 //! * Ops are sorted by (level, stage, source index). All fanins of an op
@@ -67,6 +69,49 @@ pub struct CompileStats {
     /// Popcount/argmax LUTs replaced by the native arithmetic tail
     /// (0 for plans compiled without one).
     pub tail_skipped: usize,
+    /// Encoder LUTs replaced by the native thermometer head
+    /// (0 for plans compiled without one).
+    pub head_skipped: usize,
+}
+
+/// The encoder head of a plan compiled with [`super::compile_with_head`]:
+/// instead of emulating the thermometer encoders LUT by LUT, the executor
+/// compares integer feature values against each feature's sorted thresholds
+/// and writes the resulting 64-lane thermometer-bit words straight into the
+/// value buffer — input bit-packing and the whole encoder cone are skipped.
+#[derive(Debug, Clone)]
+pub struct HeadPlan {
+    /// Features with at least one live (non-constant-folded) thermometer
+    /// bit, in model feature order.
+    pub features: Vec<HeadFeaturePlan>,
+    /// Feature count of the input interface (row arity check).
+    pub num_features: usize,
+    /// Fractional bits of the fixed-point grid the thresholds live on.
+    pub frac_bits: u32,
+}
+
+/// One feature's slice of [`HeadPlan`].
+#[derive(Debug, Clone)]
+pub struct HeadFeaturePlan {
+    pub feature: usize,
+    /// Sorted ascending distinct thresholds (grid integers). The thermometer
+    /// level of a value `x` is `|{t : x >= t}|` over this list.
+    pub thresholds: Vec<i32>,
+    /// (threshold rank, value-buffer slot) per live thermometer bit, sorted
+    /// by **descending** rank — the order the packer's suffix-OR sweep
+    /// consumes ([`super::head::pack_rows`]). Bit `rank` is 1 iff
+    /// `level > rank`.
+    pub bits: Vec<(u32, u32)>,
+}
+
+impl HeadPlan {
+    /// Value-buffer slots the head writes (they sit between the primary
+    /// inputs and the op destinations) — one per natively computed
+    /// thermometer bit, which is also what `dwn breakdown` reports next to
+    /// per-stage op counts.
+    pub fn num_slots(&self) -> usize {
+        self.features.iter().map(|f| f.bits.len()).sum()
+    }
 }
 
 /// The arithmetic tail of a plan compiled with
@@ -118,12 +163,19 @@ pub struct ExecPlan {
     /// Native arithmetic tail, when compiled with one (see
     /// [`super::compile_with_tail`]).
     pub tail: Option<TailPlan>,
+    /// Native encoder head, when compiled with one (see
+    /// [`super::compile_with_head`]). Head slots sit between the primary
+    /// inputs and the op destinations; with a head, the primary-input slots
+    /// are never written (nothing surviving depends on them).
+    pub head: Option<HeadPlan>,
 }
 
 impl ExecPlan {
-    /// Total value-buffer slots (inputs + op destinations).
+    /// Total value-buffer slots (inputs + head bits + op destinations).
     pub fn num_slots(&self) -> usize {
-        self.num_inputs + self.ops.len()
+        self.num_inputs
+            + self.head.as_ref().map_or(0, |h| h.num_slots())
+            + self.ops.len()
     }
 
     /// Logic depth in levels (0 for a pass-through plan).

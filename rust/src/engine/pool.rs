@@ -13,16 +13,42 @@
 //! finishes first — `infer` is bit-identical to a single-threaded sweep for
 //! any batch size, shard count, or scheduling.
 
-use super::exec::{eval_rows_block, Executor};
+use super::exec::{eval_int_rows_block, eval_rows_block, Executor};
 use super::plan::ExecPlan;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
+/// A batch's rows: real-valued features (quantized at pack time) or grid
+/// integers on the serving fixed-point grid (the native head's
+/// zero-conversion fast path; emulated plans pack them through
+/// [`crate::util::fixed::pack_row_bits_int`], so both plan modes accept
+/// both row kinds with bit-identical results).
+enum RowData {
+    Real(Vec<Vec<f32>>),
+    Fixed(Vec<Vec<i32>>),
+}
+
+impl RowData {
+    fn len(&self) -> usize {
+        match self {
+            RowData::Real(r) => r.len(),
+            RowData::Fixed(r) => r.len(),
+        }
+    }
+
+    fn row_arity(&self, i: usize) -> usize {
+        match self {
+            RowData::Real(r) => r[i].len(),
+            RowData::Fixed(r) => r[i].len(),
+        }
+    }
+}
+
 /// One shard of a batch: worker evaluates rows `[start, start + len)` of the
 /// shared batch and replies with `(start, preds)`.
 struct Job {
-    rows: Arc<Vec<Vec<f32>>>,
+    rows: Arc<RowData>,
     start: usize,
     len: usize,
     reply: Sender<(usize, Vec<i32>)>,
@@ -95,6 +121,17 @@ impl EnginePool {
     /// `Arc<Vec<Vec<f32>>>` through `Backend::infer` (and every bench/test
     /// caller); revisit if profiles ever show the copy on top.
     pub fn infer(&self, rows: &[Vec<f32>]) -> Vec<i32> {
+        self.run_batch(RowData::Real(rows.to_vec()))
+    }
+
+    /// [`Self::infer`] over integer feature rows (grid integers on the
+    /// serving fixed-point grid) — skips `input_to_int` quantization; with a
+    /// native head plan, no bit expansion happens anywhere on the path.
+    pub fn infer_ints(&self, rows: &[Vec<i32>]) -> Vec<i32> {
+        self.run_batch(RowData::Fixed(rows.to_vec()))
+    }
+
+    fn run_batch(&self, rows: RowData) -> Vec<i32> {
         let n = rows.len();
         if n == 0 {
             return Vec::new();
@@ -102,14 +139,14 @@ impl EnginePool {
         // Arity check on the caller thread, so a malformed request panics
         // the submitter (as the scoped-thread path did), not a pool worker.
         let width = (self.frac_bits + 1) as usize;
-        for row in rows {
+        for i in 0..n {
             assert_eq!(
-                row.len() * width,
+                rows.row_arity(i) * width,
                 self.plan.num_inputs,
                 "row does not match the plan's input interface"
             );
         }
-        let rows = Arc::new(rows.to_vec());
+        let rows = Arc::new(rows);
         let (reply_tx, reply_rx) = channel();
         let tx = self.job_tx.as_ref().expect("pool not shut down");
         let mut start = 0usize;
@@ -160,11 +197,29 @@ fn worker_loop(
             Err(_) => break, // a sibling panicked holding the lock
         };
         let Ok(job) = job else { break };
-        let rows = &job.rows[job.start..job.start + job.len];
         let mut preds = vec![0i32; job.len];
-        for (chunk, outs) in rows.chunks(ex.lanes()).zip(preds.chunks_mut(ex.lanes())) {
+        let lanes = ex.lanes();
+        // One shared chunk loop; the row kind only picks the eval entry, so
+        // f32 and integer batches can never drift apart here.
+        for (ci, outs) in preds.chunks_mut(lanes).enumerate() {
+            let lo = job.start + ci * lanes;
             ex.clear_inputs();
-            eval_rows_block(&mut ex, chunk, frac_bits, index_width, outs);
+            match &*job.rows {
+                RowData::Real(all) => eval_rows_block(
+                    &mut ex,
+                    &all[lo..lo + outs.len()],
+                    frac_bits,
+                    index_width,
+                    outs,
+                ),
+                RowData::Fixed(all) => eval_int_rows_block(
+                    &mut ex,
+                    &all[lo..lo + outs.len()],
+                    frac_bits,
+                    index_width,
+                    outs,
+                ),
+            }
         }
         // A dropped reply receiver just means the submitter gave up.
         let _ = job.reply.send((job.start, preds));
@@ -197,6 +252,22 @@ mod tests {
             let want = crate::engine::infer_fixed_batch(&plan, &rows, 1, 1, 64, 1);
             assert_eq!(pool.infer(&rows), want, "batch {n}");
         }
+    }
+
+    #[test]
+    fn int_rows_match_real_rows() {
+        let plan = Arc::new(sign_plan());
+        let pool = EnginePool::new(plan, 64, 2, 1, 1);
+        let rows: Vec<Vec<f32>> =
+            (0..100).map(|i| vec![if i % 3 == 0 { -0.9 } else { 0.9 }]).collect();
+        let ints: Vec<Vec<i32>> = rows
+            .iter()
+            .map(|r| {
+                r.iter().map(|&x| crate::util::fixed::input_to_int(x as f64, 1)).collect()
+            })
+            .collect();
+        assert_eq!(pool.infer_ints(&ints), pool.infer(&rows));
+        assert!(pool.infer_ints(&[]).is_empty());
     }
 
     #[test]

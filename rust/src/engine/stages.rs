@@ -26,6 +26,11 @@ pub struct StageRuntime {
     /// it replaced then have no `per_stage` entry — `dwn breakdown` reports
     /// this as its own row instead of silently dropping them.
     pub tail: Option<(Duration, usize)>,
+    /// Native-head busy time and natively computed thermometer-bit count,
+    /// when the measured plan replaces the encoder stage with comparisons
+    /// (the encoder then has no `per_stage` entry; `dwn breakdown` reports
+    /// an `encoder (native)` row instead).
+    pub head: Option<(Duration, usize)>,
     /// Passes accumulated (each pass evaluates `lanes` vectors).
     pub passes: usize,
     /// Lanes per pass.
@@ -35,7 +40,9 @@ pub struct StageRuntime {
 impl StageRuntime {
     pub fn total(&self) -> Duration {
         let stages: Duration = self.per_stage.iter().map(|(_, d, _)| *d).sum();
-        stages + self.tail.map(|(d, _)| d).unwrap_or(Duration::ZERO)
+        stages
+            + self.tail.map(|(d, _)| d).unwrap_or(Duration::ZERO)
+            + self.head.map(|(d, _)| d).unwrap_or(Duration::ZERO)
     }
 
     fn rows(&self) -> f64 {
@@ -56,12 +63,22 @@ impl StageRuntime {
     pub fn tail_ns_per_row(&self) -> f64 {
         self.tail.map(|(d, _)| d.as_nanos() as f64 / self.rows()).unwrap_or(0.0)
     }
+
+    /// Nanoseconds per evaluated row spent in the native encoder head
+    /// (0.0 when the plan has none).
+    pub fn head_ns_per_row(&self) -> f64 {
+        self.head.map(|(d, _)| d.as_nanos() as f64 / self.rows()).unwrap_or(0.0)
+    }
 }
 
 /// Run `passes` attributed evaluations over random-ish inputs already packed
 /// by `fill` and accumulate per-stage busy time. The caller packs inputs
 /// once per pass (input values don't change LUT evaluation cost, so any
-/// pattern measures the same thing).
+/// pattern measures the same thing). For a plan with a native head, `fill`
+/// must pack through [`Executor::pack_head_rows`] (or the int variant) —
+/// that call *is* the stage's work, so the fill is wall-clocked into the
+/// head row; for emulated plans the fill is synthetic word-filling and goes
+/// unattributed, exactly like input packing always has.
 pub fn measure_stages<F>(
     plan: &ExecPlan,
     lanes: usize,
@@ -74,10 +91,15 @@ where
     let mut ex = Executor::new(plan, lanes);
     let mut acc: Vec<(Component, Duration, usize)> = Vec::new();
     let mut tail_busy = Duration::ZERO;
+    let mut head_busy = Duration::ZERO;
     let mut tail_preds = plan.tail.as_ref().map(|_| vec![0i32; ex.lanes()]);
     for pass in 0..passes.max(1) {
         ex.clear_inputs();
+        let t0 = Instant::now();
         fill(&mut ex, pass);
+        if plan.head.is_some() {
+            head_busy += t0.elapsed();
+        }
         let times = ex.run_attributed();
         for (seg, dt) in plan.segments.iter().zip(times) {
             let stage = seg.stage.unwrap_or(Component::LutLayer);
@@ -100,6 +122,7 @@ where
     StageRuntime {
         per_stage: acc,
         tail: plan.tail.as_ref().map(|t| (tail_busy, t.score_bits())),
+        head: plan.head.as_ref().map(|h| (head_busy, h.num_slots())),
         passes: passes.max(1),
         lanes: ex.lanes(),
     }

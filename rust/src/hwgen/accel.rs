@@ -95,6 +95,46 @@ impl AccelOptions {
     }
 }
 
+/// Encoder-head metadata exported alongside a stage-tagged mapping: for each
+/// feature, the sorted distinct used thresholds and the mapped-netlist source
+/// of every thermometer comparison bit. The compiled engine
+/// ([`crate::engine::compile_with_head`]) uses this to stop emulating the
+/// encoder stage and compute `feature >= threshold` natively per batch — the
+/// head-side mirror of [`TailInfo`].
+#[derive(Debug, Clone)]
+pub struct HeadInfo {
+    /// Per feature (features with no used encoder bits have an empty
+    /// threshold list).
+    pub features: Vec<HeadFeatureInfo>,
+    /// Feature count of the accelerator's input interface (row arity).
+    pub num_features: usize,
+    /// Fractional bits of the (1, n) fixed-point grid the thresholds live
+    /// on — the grid integer feature values must be quantized to.
+    pub frac_bits: u32,
+}
+
+/// One feature's slice of [`HeadInfo`].
+#[derive(Debug, Clone)]
+pub struct HeadFeatureInfo {
+    pub feature: usize,
+    /// Sorted ascending distinct used thresholds (grid integers).
+    pub thresholds: Vec<i32>,
+    /// Per threshold (same order), the mapped source(s) carrying its
+    /// comparison bit. Usually one source; more when an architecture did not
+    /// structurally merge equal-threshold levels.
+    pub srcs: Vec<Vec<Src>>,
+}
+
+/// Gate-level anchor for [`HeadInfo`], recorded at build time: per feature,
+/// the sorted distinct used thresholds and the encoder output node(s)
+/// realizing each comparison (None for TEN, which has no encoder stage).
+#[derive(Debug, Clone)]
+pub struct EncoderHeadNodes {
+    pub feature: usize,
+    pub thresholds: Vec<i32>,
+    pub nodes: Vec<Vec<NodeId>>,
+}
+
 /// Arithmetic-tail metadata exported alongside a stage-tagged mapping:
 /// where each LUT-layer class-group output lands in the mapped netlist,
 /// plus the score/index interface the popcount+argmax stages realize. The
@@ -129,6 +169,9 @@ pub struct Accelerator {
     pub distinct_comparators: usize,
     /// Encoder plan used for the PEN-family encoder stage (None for TEN).
     pub encoder_plan: Option<EncoderPlan>,
+    /// Per-feature encoder output nodes per distinct threshold — the
+    /// gate-level anchor for [`HeadInfo`] (None for TEN).
+    pub encoder_head_nodes: Option<Vec<EncoderHeadNodes>>,
     pub num_classes: usize,
     /// Width of each class score word.
     pub score_width: usize,
@@ -143,6 +186,7 @@ pub fn build_accelerator(model: &DwnModel, opts: &AccelOptions) -> Result<Accele
     // ---- Stage 1: thermometer encoding (PEN family) or direct bits (TEN).
     let mark0 = bld.net.len();
     let mut encoder_plan = None;
+    let mut encoder_head_nodes = None;
     let (bit_of, input_kind, distinct): (Box<dyn Fn(u32) -> NodeId>, InputKind, usize) =
         match opts.variant {
             Variant::Ten => {
@@ -167,6 +211,29 @@ pub fn build_accelerator(model: &DwnModel, opts: &AccelOptions) -> Result<Accele
                 let enc = encoding::synthesize(&mut bld, &ir, &plan);
                 let width = ir.width();
                 let map = enc.bit_nodes;
+                // Record, per feature, which node realizes each distinct
+                // threshold comparison — the anchor map_with_head resolves
+                // against the mapped netlist.
+                let head: Vec<EncoderHeadNodes> = ir
+                    .features
+                    .iter()
+                    .map(|feat| {
+                        let thresholds = feat.distinct_used();
+                        let mut nodes: Vec<Vec<NodeId>> =
+                            vec![Vec::new(); thresholds.len()];
+                        for &l in &feat.used_levels {
+                            let r = thresholds
+                                .binary_search(&feat.thresholds[l])
+                                .expect("used threshold is in the distinct set");
+                            let node = map[&ir.bit_index(feat.index, l)];
+                            if !nodes[r].contains(&node) {
+                                nodes[r].push(node);
+                            }
+                        }
+                        EncoderHeadNodes { feature: feat.index, thresholds, nodes }
+                    })
+                    .collect();
+                encoder_head_nodes = Some(head);
                 encoder_plan = Some(plan);
                 (
                     Box::new(move |b| map[&b]),
@@ -215,6 +282,7 @@ pub fn build_accelerator(model: &DwnModel, opts: &AccelOptions) -> Result<Accele
         lut_out_nodes: lut_outs,
         distinct_comparators: distinct,
         encoder_plan,
+        encoder_head_nodes,
         num_classes: model.num_classes,
         score_width,
     })
@@ -270,6 +338,62 @@ impl Accelerator {
         let tags = tracked.root_tags(|r| self.component_of(r));
         let tail = self.tail_info(&tracked);
         (tracked.netlist, tags, tail)
+    }
+
+    /// [`Self::map_with_tail`] plus encoder-head metadata: one mapping pass
+    /// that exports everything the compiled engine needs to truncate the
+    /// plan at *both* component boundaries. Head is `None` for TEN (no
+    /// encoder stage) or when any encoder comparison bit has no mapped
+    /// signal of its own (the mapper absorbed it into a LUT-layer cone,
+    /// possible when a comparator cone degenerates to a single gate) —
+    /// callers then emulate the encoder LUT by LUT like before, so
+    /// requesting the head is always safe.
+    pub fn map_with_head(
+        &self,
+        cfg: &MapConfig,
+    ) -> (LutNetlist, Vec<Component>, Option<HeadInfo>, Option<TailInfo>) {
+        let tracked = techmap::map_tracked(&self.net, cfg);
+        let tags = tracked.root_tags(|r| self.component_of(r));
+        let head = self.head_info(&tracked);
+        let tail = self.tail_info(&tracked);
+        (tracked.netlist, tags, head, tail)
+    }
+
+    /// Resolve every encoder comparison node to its mapped-netlist source.
+    fn head_info(&self, tracked: &TrackedNetlist) -> Option<HeadInfo> {
+        let nodes = self.encoder_head_nodes.as_ref()?;
+        let (num_features, width) = match &self.input_kind {
+            InputKind::FixedPoint { features, width } => (*features, *width),
+            InputKind::ThermometerBits { .. } => return None,
+        };
+        let lut_of: std::collections::HashMap<NodeId, u32> = tracked
+            .roots
+            .iter()
+            .enumerate()
+            .map(|(i, &r)| (r, i as u32))
+            .collect();
+        let mut features = Vec::with_capacity(nodes.len());
+        for f in nodes {
+            let mut srcs = Vec::with_capacity(f.thresholds.len());
+            for ns in &f.nodes {
+                let mut s = Vec::with_capacity(ns.len());
+                for &node in ns {
+                    let src = match self.net.gates[node as usize] {
+                        Gate::Input(i) => Src::Input(i),
+                        Gate::Const(b) => Src::Const(b),
+                        _ => Src::Lut(*lut_of.get(&node)?),
+                    };
+                    s.push(src);
+                }
+                srcs.push(s);
+            }
+            features.push(HeadFeatureInfo {
+                feature: f.feature,
+                thresholds: f.thresholds.clone(),
+                srcs,
+            });
+        }
+        Some(HeadInfo { features, num_features, frac_bits: (width - 1) as u32 })
     }
 
     /// Resolve every LUT-layer output node to its mapped-netlist source.

@@ -21,4 +21,7 @@ pub mod mixed;
 pub mod popcount;
 pub mod rtl;
 
-pub use accel::{build_accelerator, AccelOptions, Accelerator, Component, InputKind, TailInfo};
+pub use accel::{
+    build_accelerator, AccelOptions, Accelerator, Component, EncoderHeadNodes, HeadFeatureInfo,
+    HeadInfo, InputKind, TailInfo,
+};

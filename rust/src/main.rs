@@ -5,7 +5,7 @@
 //!   breakdown --model sm-10 --variant penft [--encoder S]               Fig.5-style component LUT breakdown
 //!   encoders  --model sm-10 --variant penft [--encoder auto]            per-feature encoder architecture/cost table
 //!   verify    --model sm-10 --variant penft [--n 512]                   netlist sim vs golden vectors
-//!   serve     --model sm-10 [--backend pjrt|netlist|compiled] [--requests N] [--lanes W] [--threads T] [--tail native|lut]
+//!   serve     --model sm-10 [--backend pjrt|netlist|compiled] [--requests N] [--lanes W] [--threads T] [--head native|lut] [--tail native|lut]
 //!   accuracy  --model sm-10 --variant penft                             netlist accuracy on the test set
 //!   info                                                                artifact/manifest summary
 //!
@@ -16,7 +16,7 @@ use dwn::config::{Args, Artifacts};
 use dwn::coordinator::{Backend, Server, ServerConfig};
 use dwn::data::Dataset;
 use dwn::encoding::{self, ArchKind, EncoderIr, EncoderStrategy};
-use dwn::engine::TailMode;
+use dwn::engine::{HeadMode, TailMode};
 use dwn::hwgen::{build_accelerator, AccelOptions, Component};
 use dwn::model::{DwnModel, Variant};
 use dwn::report::{f1, int, Table};
@@ -65,12 +65,15 @@ common options: --artifacts PATH --model NAME --variant ten|pen|penft
 generate/breakdown: --encoder auto|bank|chain|mux|lut (default bank = reference comparator bank)
 breakdown: per-component LUT area + per-stage runtime attribution from the
            compiled engine; --lanes N (default 256) --passes N (default 64)
-           --tail native|lut (default lut; native reports the arithmetic
-           tail as its own runtime row — LUT-area columns are unaffected)
+           --head native|lut --tail native|lut (default lut; native reports
+           the encoder comparisons / arithmetic tail as their own runtime
+           rows — LUT-area columns are unaffected in every mode)
 encoders: per-feature encoder architecture selection + modeled vs mapped LUT cost
           --encoder auto|bank|chain|mux|lut (default auto) --depth-budget N (auto only)
 serve: --backend pjrt|netlist|compiled [--requests N]
        compiled: --lanes N (vectors/pass, default 256) --threads N (default = cores)
+                 --head native|lut (default native; native computes the
+                 thermometer encoding arithmetically, skipping input packing)
                  --tail native|lut (default native; native evaluates the
                  popcount/argmax tail arithmetically, lut emulates it)
 emit-rtl: --out design.v [--tb design_tb.v]    mixed: --start 8 --min 3 --tol 0.01";
@@ -125,49 +128,80 @@ fn cmd_breakdown(artifacts: &Artifacts, args: &Args) -> Result<()> {
     let model = load_model(artifacts, args)?;
     let variant: Variant = args.get_parse("variant", Variant::PenFt)?;
     let encoder: EncoderStrategy = args.get_parse("encoder", EncoderStrategy::default())?;
+    let head_mode: HeadMode = args.get_parse("head", HeadMode::Lut)?;
     let tail_mode: TailMode = args.get_parse("tail", TailMode::Lut)?;
     let mut opts = AccelOptions::new(variant).with_encoder(encoder);
     opts.encoder_depth_budget = args.get_parse_opt("depth-budget")?;
     let accel = build_accelerator(&model, &opts)?;
     // Area columns come from the mapped netlist's stage tags alone — the
-    // tail mode only changes how the *runtime* gets attributed, so the
-    // paper-faithful encoding-cost numbers are identical either way.
-    let (nl, tags, tail) = accel.map_with_tail(&MapConfig::default());
+    // head/tail modes only change how the *runtime* gets attributed, so the
+    // paper-faithful encoding-cost numbers are identical in every mode.
+    let (nl, tags, head, tail) = accel.map_with_head(&MapConfig::default());
     let counts = Component::count_tags(&tags);
 
     // Runtime attribution: compile the same netlist with the same stage
     // tags and measure per-stage emulation time over random input lanes
-    // (LUT evaluation cost is data-independent).
+    // (LUT evaluation cost is data-independent). A native head replaces the
+    // fill with its actual comparator work, which measure_stages attributes
+    // to the `encoder (native)` row.
     let lanes = args.get_usize("lanes", 256)?;
     let passes = args.get_usize("passes", 64)?;
-    let plan = dwn::engine::compile_for_mode(&nl, Some(&tags), tail.as_ref(), tail_mode);
-    let native = plan.tail.is_some();
+    let plan = dwn::engine::compile_for_modes(
+        &nl,
+        Some(&tags),
+        head.as_ref(),
+        tail.as_ref(),
+        head_mode,
+        tail_mode,
+    );
+    let native_tail = plan.tail.is_some();
+    let native_head = plan.head.is_some();
     let mut rng = dwn::util::SplitMix64::new(0xB0A7);
+    let head_rows: Vec<Vec<f32>> = plan
+        .head
+        .as_ref()
+        .map(|h| {
+            let rounded = dwn::util::ceil_div(lanes.max(1), 64) * 64;
+            (0..rounded)
+                .map(|_| {
+                    (0..h.num_features).map(|_| (2.0 * rng.next_f64() - 1.0) as f32).collect()
+                })
+                .collect()
+        })
+        .unwrap_or_default();
+    let head_fb = plan.head.as_ref().map(|h| h.frac_bits).unwrap_or(0);
     let runtime = dwn::engine::measure_stages(&plan, lanes, passes, |ex, _| {
-        for i in 0..nl.num_inputs {
-            for w in ex.input_words_mut(i) {
-                *w = rng.next_u64();
+        if ex.plan().head.is_some() {
+            ex.pack_head_rows(&head_rows, head_fb);
+        } else {
+            for i in 0..nl.num_inputs {
+                for w in ex.input_words_mut(i) {
+                    *w = rng.next_u64();
+                }
             }
         }
     });
     let total_ns: f64 = (Component::ALL.iter().map(|&c| runtime.ns_per_row(c)).sum::<f64>()
-        + runtime.tail_ns_per_row())
+        + runtime.tail_ns_per_row()
+        + runtime.head_ns_per_row())
     .max(1e-9);
 
     let mut t = Table::new(
         &format!(
-            "Component breakdown {} ({}, encoder {}, tail {})",
+            "Component breakdown {} ({}, encoder {}, head {}, tail {})",
             model.name,
             variant.label(),
             encoder.label(),
-            if native { "native" } else { "lut" }
+            if native_head { "native" } else { "lut" },
+            if native_tail { "native" } else { "lut" }
         ),
         &["component", "LUTs", "share", "ns/row", "runtime share"],
     );
     let total = nl.lut_count().max(1);
     for (comp, n) in &counts {
-        let replaced =
-            native && matches!(*comp, Component::Popcount | Component::Argmax);
+        let replaced = (native_tail
+            && matches!(*comp, Component::Popcount | Component::Argmax))
+            || (native_head && matches!(*comp, Component::Encoder));
         let ns = runtime.ns_per_row(*comp);
         t.row(&[
             comp.label().into(),
@@ -177,7 +211,19 @@ fn cmd_breakdown(artifacts: &Artifacts, args: &Args) -> Result<()> {
             if replaced { "-".into() } else { format!("{:.1}%", 100.0 * ns / total_ns) },
         ]);
     }
-    if native {
+    if native_head {
+        // The encoder keeps its LUT-area row above; the comparisons that
+        // now run instead get their own runtime row.
+        let ns = runtime.head_ns_per_row();
+        t.row(&[
+            "encoder (native)".into(),
+            "-".into(),
+            "-".into(),
+            format!("{ns:.2}"),
+            format!("{:.1}%", 100.0 * ns / total_ns),
+        ]);
+    }
+    if native_tail {
         // The stages the tail replaced keep their LUT-area rows above; the
         // arithmetic that now runs instead gets its own runtime row.
         let ns = runtime.tail_ns_per_row();
@@ -200,7 +246,7 @@ fn cmd_breakdown(artifacts: &Artifacts, args: &Args) -> Result<()> {
     let s = plan.stats;
     println!(
         "compiled plan: {} ops over {} levels ({} lanes/pass, {} passes; \
-         {} const-folded, {} dead, {} pins folded{})",
+         {} const-folded, {} dead, {} pins folded{}{})",
         plan.ops.len(),
         plan.depth(),
         runtime.lanes,
@@ -208,13 +254,21 @@ fn cmd_breakdown(artifacts: &Artifacts, args: &Args) -> Result<()> {
         s.const_folded,
         s.dead_eliminated,
         s.pins_folded,
-        if native {
+        if native_head {
+            format!(", {} encoder LUTs evaluated natively", s.head_skipped)
+        } else {
+            String::new()
+        },
+        if native_tail {
             format!(", {} tail LUTs evaluated natively", s.tail_skipped)
         } else {
             String::new()
         }
     );
-    if tail_mode == TailMode::Native && !native {
+    if head_mode == HeadMode::Native && !native_head {
+        println!("note: head metadata unavailable for this mapping; fell back to LUT emulation");
+    }
+    if tail_mode == TailMode::Native && !native_tail {
         println!("note: tail metadata unavailable for this mapping; fell back to LUT emulation");
     }
     Ok(())
@@ -443,18 +497,30 @@ fn cmd_serve(artifacts: &Artifacts, args: &Args) -> Result<()> {
         }
         "compiled" => {
             let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt))?;
-            let (nl, tags, tail) = accel.map_with_tail(&MapConfig::default());
+            let (nl, tags, head, tail) = accel.map_with_head(&MapConfig::default());
+            let head_mode: HeadMode = args.get_parse("head", HeadMode::Native)?;
             let tail_mode: TailMode = args.get_parse("tail", TailMode::Native)?;
-            let plan = dwn::engine::compile_for_mode(&nl, Some(&tags), tail.as_ref(), tail_mode);
+            let plan = dwn::engine::compile_for_modes(
+                &nl,
+                Some(&tags),
+                head.as_ref(),
+                tail.as_ref(),
+                head_mode,
+                tail_mode,
+            );
             let lanes = args.get_usize("lanes", 256)?;
             let threads = args.get_usize("threads", default_threads())?;
             println!(
-                "compiled engine: {} ops / {} levels from {} LUTs ({lanes} lanes x {threads} threads, {} tail)",
+                "compiled engine: {} ops / {} levels from {} LUTs ({lanes} lanes x {threads} threads, {} head, {} tail)",
                 plan.ops.len(),
                 plan.depth(),
                 nl.lut_count(),
+                if plan.head.is_some() { "native" } else { "lut" },
                 if plan.tail.is_some() { "native" } else { "lut" }
             );
+            if head_mode == HeadMode::Native && plan.head.is_none() {
+                println!("note: head metadata unavailable; fell back to LUT emulation");
+            }
             if tail_mode == TailMode::Native && plan.tail.is_none() {
                 println!("note: tail metadata unavailable; fell back to LUT emulation");
             }

@@ -58,6 +58,24 @@ pub fn pack_row_bits(row: &[f32], frac_bits: u32, mut set: impl FnMut(usize)) {
     }
 }
 
+/// [`pack_row_bits`] for rows already quantized to grid integers: clamp to
+/// the grid range (like [`input_to_int`] clamps reals) and emit the
+/// two's-complement bit pattern per feature. The emulated counterpart of the
+/// native head's integer fast path, so both accept integer rows.
+pub fn pack_row_bits_int(row: &[i32], frac_bits: u32, mut set: impl FnMut(usize)) {
+    let width = (frac_bits + 1) as usize;
+    let scale = 1i64 << frac_bits;
+    for (f, &k) in row.iter().enumerate() {
+        let k = (k as i64).max(-scale).min(scale - 1) as i32;
+        let pat = int_to_bits(k, frac_bits);
+        for b in 0..width {
+            if (pat >> b) & 1 == 1 {
+                set(f * width + b);
+            }
+        }
+    }
+}
+
 /// Lane-pack a chunk of up to 64 feature rows into per-input lane words:
 /// `words[input_bit]` holds lane = row-index-within-chunk. The buffer is
 /// fully rewritten each call — tail lanes beyond `chunk.len()` are
@@ -121,6 +139,25 @@ mod tests {
         assert_eq!(live_lane_mask(1), 1);
         assert_eq!(live_lane_mask(3), 0b111);
         assert_eq!(live_lane_mask(64), u64::MAX);
+    }
+
+    #[test]
+    fn int_row_packing_matches_real_row_packing() {
+        let frac_bits = 3u32;
+        let row = vec![0.5f32, -0.37, 1.5, -2.0];
+        let ints: Vec<i32> =
+            row.iter().map(|&x| input_to_int(x as f64, frac_bits)).collect();
+        let mut a = vec![false; row.len() * 4];
+        let mut b = vec![false; row.len() * 4];
+        pack_row_bits(&row, frac_bits, |bit| a[bit] = true);
+        pack_row_bits_int(&ints, frac_bits, |bit| b[bit] = true);
+        assert_eq!(a, b);
+        // Out-of-range ints clamp like out-of-range reals.
+        let mut c = vec![false; 4];
+        pack_row_bits_int(&[99], frac_bits, |bit| c[bit] = true);
+        let mut d = vec![false; 4];
+        pack_row_bits(&[99.0], frac_bits, |bit| d[bit] = true);
+        assert_eq!(c, d);
     }
 
     /// Regression (sub-lane-word batches): packing a 3-row chunk into a

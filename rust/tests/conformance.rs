@@ -2,9 +2,9 @@
 //! serving stack (ROADMAP): one parameterized differential harness drives
 //! identical fixed-point input batches through
 //!   1. the gate-level `Simulator` (ground truth for the generated design),
-//!   2. the `LutNetlist` interpreter (`eval_lanes_with`),
-//!   3. the compiled engine with the LUT-emulated tail, and
-//!   4. the compiled engine with the native arithmetic tail,
+//!   2. the `LutNetlist` interpreter (`eval_lanes_with`), and
+//!   3. the compiled engine across the full head×tail mode matrix
+//!      (lut/lut, native/lut, lut/native, native/native),
 //! and asserts bit-identical class decisions, across synthetic models
 //! spanning every encoder architecture × several width/layer shapes (in the
 //! spirit of LogicNets-style bit-exact verification flows).
@@ -12,20 +12,29 @@
 //! Seeding: `DWN_CONFORMANCE_SEED` (decimal u64) perturbs the base seed so
 //! CI can pin a fixed seed while allowing local fuzzing; the default is
 //! fixed. Each shape then seed-searches for a model whose quantized
-//! thresholds are distinct per feature and whose LUT pin sets are pairwise
-//! distinct — the conditions under which the mapper provably cannot absorb
-//! a lut_k=6 layer output into a downstream cone, so the native tail is
-//! guaranteed available (asserted). A deliberately small-fan-in shape
-//! exercises the fallback path where it is not.
+//! thresholds are distinct per feature, whose LUT pin sets are pairwise
+//! distinct (the conditions under which the mapper provably cannot absorb a
+//! lut_k=6 layer output into a downstream cone), and for which a compile
+//! probe confirms both native boundaries engage under every encoder
+//! architecture — so `expect_native` shapes assert the native paths rather
+//! than silently falling back. A deliberately small-fan-in shape exercises
+//! the fallback path, where absorption is legal and parity must hold anyway.
 
 use dwn::coordinator::Backend;
 use dwn::encoding::EncoderStrategy;
-use dwn::engine;
+use dwn::engine::{self, HeadMode, TailMode};
 use dwn::hwgen::{build_accelerator, AccelOptions, Component};
 use dwn::logic::Simulator;
 use dwn::model::{DwnModel, SynthSpec, Variant};
 use dwn::techmap::MapConfig;
 use dwn::util::{fixed, SplitMix64};
+
+const MODES: [(HeadMode, TailMode); 4] = [
+    (HeadMode::Lut, TailMode::Lut),
+    (HeadMode::Native, TailMode::Lut),
+    (HeadMode::Lut, TailMode::Native),
+    (HeadMode::Native, TailMode::Native),
+];
 
 fn base_seed() -> u64 {
     std::env::var("DWN_CONFORMANCE_SEED")
@@ -34,10 +43,39 @@ fn base_seed() -> u64 {
         .unwrap_or(0xC0F0_2026)
 }
 
-/// Seed-search for a model with a provably clean LUT→arithmetic boundary:
-/// distinct quantized thresholds within every feature (distinct encoder bit
-/// nodes) and pairwise-distinct LUT pin sets (no structural merging of
-/// layer outputs). See module docs; the search is deterministic.
+/// Do both native boundaries engage for this model under every encoder
+/// architecture? (The head can legitimately fall back when a comparator
+/// cone degenerates enough for the mapper to absorb its output — e.g. a
+/// threshold of exactly 0 reduces to the inverted sign bit — so the clean
+/// shapes are found by probing the real compile, not by structure alone.)
+fn native_paths_available(m: &DwnModel) -> bool {
+    for strategy in ALL_ARCHS {
+        let opts = AccelOptions::new(Variant::PenFt).with_encoder(strategy);
+        let accel = match build_accelerator(m, &opts) {
+            Ok(a) => a,
+            Err(_) => return false,
+        };
+        let (nl, tags, head, tail) = accel.map_with_head(&MapConfig::default());
+        let plan = engine::compile_for_modes(
+            &nl,
+            Some(&tags),
+            head.as_ref(),
+            tail.as_ref(),
+            HeadMode::Native,
+            TailMode::Native,
+        );
+        if plan.head.is_none() || plan.tail.is_none() {
+            return false;
+        }
+    }
+    true
+}
+
+/// Seed-search for a model with provably clean boundaries: distinct
+/// quantized thresholds within every feature (distinct encoder bit nodes),
+/// pairwise-distinct LUT pin sets (no structural merging of layer outputs),
+/// and a compile probe confirming head+tail engage under all architectures.
+/// See module docs; the search is deterministic.
 fn clean_model(mut spec: SynthSpec) -> DwnModel {
     for attempt in 0..500u64 {
         spec.seed = spec.seed.wrapping_add(attempt);
@@ -45,6 +83,9 @@ fn clean_model(mut spec: SynthSpec) -> DwnModel {
         let thresholds_distinct = m.penft_threshold_ints.iter().all(|row| {
             row.windows(2).all(|w| w[0] < w[1]) // sorted ascending + distinct
         });
+        if !thresholds_distinct {
+            continue;
+        }
         let mut pin_sets: Vec<Vec<u32>> = m
             .penft_sel
             .iter()
@@ -56,7 +97,7 @@ fn clean_model(mut spec: SynthSpec) -> DwnModel {
             .collect();
         pin_sets.sort();
         let sets_distinct = pin_sets.windows(2).all(|w| w[0] != w[1]);
-        if thresholds_distinct && sets_distinct {
+        if sets_distinct && native_paths_available(&m) {
             return m;
         }
     }
@@ -102,30 +143,56 @@ fn gate_sim_preds(
     preds
 }
 
-/// Run one (model shape × encoder architecture) case through all four
-/// backends. `expect_native` asserts the native tail actually engaged
+/// Run one (model shape × encoder architecture) case through the gate
+/// simulator, the interpreter, and all four head×tail compile modes.
+/// `expect_native` asserts each requested native boundary actually engaged
 /// (clean-boundary shapes) rather than silently falling back.
 fn conformance_case(model: &DwnModel, strategy: EncoderStrategy, expect_native: bool) {
     let frac_bits = model.penft.frac_bits.unwrap();
     let opts = AccelOptions::new(Variant::PenFt).with_encoder(strategy);
     let accel = build_accelerator(model, &opts).unwrap();
-    let (nl, tags, tail) = accel.map_with_tail(&MapConfig::default());
+    let (nl, tags, head, tail) = accel.map_with_head(&MapConfig::default());
     let iw = accel.index_width();
 
-    let lut_plan = engine::compile_with_stages(&nl, Some(&tags));
-    let native_plan = engine::compile_with_tail(&nl, Some(&tags), tail.as_ref());
-    if expect_native {
-        assert!(
-            native_plan.tail.is_some(),
-            "native tail unavailable for {} under {:?} (boundary not clean?)",
-            model.name,
-            strategy
+    let mut plans = Vec::new();
+    for (hm, tm) in MODES {
+        let plan = engine::compile_for_modes(
+            &nl,
+            Some(&tags),
+            head.as_ref(),
+            tail.as_ref(),
+            hm,
+            tm,
         );
-        assert!(native_plan.stats.tail_skipped > 0);
-        assert!(native_plan.segments.iter().all(|s| !matches!(
-            s.stage,
-            Some(Component::Popcount) | Some(Component::Argmax)
-        )));
+        if expect_native {
+            if hm == HeadMode::Native {
+                assert!(
+                    plan.head.is_some(),
+                    "native head unavailable for {} under {:?} (boundary not clean?)",
+                    model.name,
+                    strategy
+                );
+                assert!(plan.stats.head_skipped > 0);
+                assert!(plan
+                    .segments
+                    .iter()
+                    .all(|s| !matches!(s.stage, Some(Component::Encoder))));
+            }
+            if tm == TailMode::Native {
+                assert!(
+                    plan.tail.is_some(),
+                    "native tail unavailable for {} under {:?} (boundary not clean?)",
+                    model.name,
+                    strategy
+                );
+                assert!(plan.stats.tail_skipped > 0);
+                assert!(plan.segments.iter().all(|s| !matches!(
+                    s.stage,
+                    Some(Component::Popcount) | Some(Component::Argmax)
+                )));
+            }
+        }
+        plans.push((hm, tm, plan));
     }
 
     let rows = input_rows(model, 0x5EED ^ base_seed());
@@ -138,23 +205,27 @@ fn conformance_case(model: &DwnModel, strategy: EncoderStrategy, expect_native: 
         num_classes: model.num_classes,
         index_width: iw,
     };
-    // Odd lanes/threads on purpose: ragged shards must not change results.
-    let compiled_lut =
-        Backend::compiled(lut_plan, frac_bits, model.num_features, model.num_classes, iw, 64, 3);
-    let compiled_native = Backend::compiled(
-        native_plan,
-        frac_bits,
-        model.num_features,
-        model.num_classes,
-        iw,
-        64,
-        2,
-    );
+    let label = |k: String| format!("{} / {:?} / {}", model.name, strategy, k);
+    assert_eq!(interp.infer(&rows).unwrap(), want, "{}", label("interpreter".into()));
 
-    let label = |k| format!("{} / {:?} / {}", model.name, strategy, k);
-    assert_eq!(interp.infer(&rows).unwrap(), want, "{}", label("interpreter"));
-    assert_eq!(compiled_lut.infer(&rows).unwrap(), want, "{}", label("compiled-lut"));
-    assert_eq!(compiled_native.infer(&rows).unwrap(), want, "{}", label("compiled-native"));
+    for (hm, tm, plan) in plans {
+        // Odd lanes/threads on purpose: ragged shards must not change results.
+        let backend = Backend::compiled(
+            plan,
+            frac_bits,
+            model.num_features,
+            model.num_classes,
+            iw,
+            64,
+            3,
+        );
+        assert_eq!(
+            backend.infer(&rows).unwrap(),
+            want,
+            "{}",
+            label(format!("compiled head={} tail={}", hm.label(), tm.label()))
+        );
+    }
 }
 
 const ALL_ARCHS: [EncoderStrategy; 4] = [
@@ -213,9 +284,9 @@ fn conformance_wide_words_two_classes() {
 
 #[test]
 fn conformance_small_fanin_fallback_shape() {
-    // lut_k=3 layers are absorbable by the mapper, so the native tail may
-    // legitimately fall back to full emulation — predictions must still be
-    // bit-identical across every backend either way.
+    // lut_k=3 layers are absorbable by the mapper, so the native head and
+    // tail may legitimately fall back to full emulation — predictions must
+    // still be bit-identical across every backend and mode either way.
     let spec = shape("fallback", 20, 2, 4, 5, 4, 3);
     let model = DwnModel::synthetic(&spec);
     for strategy in ALL_ARCHS {
@@ -223,46 +294,74 @@ fn conformance_small_fanin_fallback_shape() {
     }
 }
 
-/// `--tail native` must not perturb the paper's area accounting: the LUT
-/// area columns derive from the mapped netlist's stage tags alone, the
-/// replaced stages keep their (nonzero) LUT counts, and every source LUT is
-/// accounted for by the native plan's stats partition.
+/// Native modes must not perturb the paper's area accounting: the LUT area
+/// columns derive from the mapped netlist's stage tags alone, the replaced
+/// stages keep their (nonzero) LUT counts, and every source LUT is
+/// accounted for by each plan's stats partition.
 #[test]
-fn native_tail_preserves_area_attribution() {
+fn native_modes_preserve_area_attribution() {
     let model = clean_model(shape("area", 30, 3, 4, 4, 4, 6));
     let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt)).unwrap();
-    let (nl, tags, tail) = accel.map_with_tail(&MapConfig::default());
+    let (nl, tags, head, tail) = accel.map_with_head(&MapConfig::default());
     let counts = Component::count_tags(&tags);
     assert_eq!(counts.iter().map(|(_, n)| n).sum::<usize>(), nl.lut_count());
 
-    let native = engine::compile_with_tail(&nl, Some(&tags), tail.as_ref());
     let lut = engine::compile_with_stages(&nl, Some(&tags));
-    assert!(native.tail.is_some());
+    let native_tail = engine::compile_with_tail(&nl, Some(&tags), tail.as_ref());
+    let native_head = engine::compile_with_head(&nl, Some(&tags), head.as_ref());
+    let native_both = engine::compile_for_modes(
+        &nl,
+        Some(&tags),
+        head.as_ref(),
+        tail.as_ref(),
+        HeadMode::Native,
+        TailMode::Native,
+    );
+    assert!(native_tail.tail.is_some());
+    assert!(native_head.head.is_some());
+    assert!(native_both.head.is_some() && native_both.tail.is_some());
 
-    // Compiling (either mode) must leave the area attribution untouched.
+    // Compiling (any mode) must leave the area attribution untouched.
     assert_eq!(Component::count_tags(&tags), counts);
     let count_of = |c: Component| {
         counts.iter().find(|(k, _)| *k == c).map(|(_, n)| *n).unwrap()
     };
+    assert!(count_of(Component::Encoder) > 0, "encoder area stays reported");
     assert!(count_of(Component::Popcount) > 0, "popcount area stays reported");
     assert!(count_of(Component::Argmax) > 0, "argmax area stays reported");
 
-    // The native plan executes strictly fewer ops but accounts for every
-    // source LUT: live ops + const-folded + dead + natively-evaluated tail.
-    assert!(native.ops.len() < lut.ops.len());
-    let s = native.stats;
-    assert_eq!(
-        native.ops.len() + s.const_folded + s.dead_eliminated + s.tail_skipped,
-        s.source_luts
-    );
-    assert_eq!(s.source_luts, nl.lut_count());
-    // The LUT-mode plan keeps popcount/argmax segments; the native one has
-    // none (they are exactly what the tail replaced).
-    let has_tail_stage = |p: &engine::ExecPlan| {
-        p.segments.iter().any(|seg| {
-            matches!(seg.stage, Some(Component::Popcount) | Some(Component::Argmax))
-        })
+    // Each plan executes strictly fewer ops than full emulation but accounts
+    // for every source LUT: live ops + const-folded + dead + natively
+    // evaluated head/tail.
+    for plan in [&native_tail, &native_head, &native_both] {
+        assert!(plan.ops.len() < lut.ops.len());
+        let s = plan.stats;
+        assert_eq!(
+            plan.ops.len() + s.const_folded + s.dead_eliminated + s.tail_skipped
+                + s.head_skipped,
+            s.source_luts
+        );
+        assert_eq!(s.source_luts, nl.lut_count());
+    }
+    assert!(native_head.stats.head_skipped > 0);
+    assert!(native_tail.stats.tail_skipped > 0);
+    assert_eq!(native_tail.stats.head_skipped, 0);
+    assert_eq!(native_head.stats.tail_skipped, 0);
+
+    // The LUT-mode plan keeps all stages; each native side removes exactly
+    // the segments it replaced.
+    let has_stage = |p: &engine::ExecPlan, pred: &dyn Fn(Component) -> bool| {
+        p.segments.iter().any(|seg| seg.stage.map(pred).unwrap_or(false))
     };
-    assert!(has_tail_stage(&lut));
-    assert!(!has_tail_stage(&native));
+    let is_tail = |c: Component| matches!(c, Component::Popcount | Component::Argmax);
+    let is_head = |c: Component| matches!(c, Component::Encoder);
+    assert!(has_stage(&lut, &is_tail) && has_stage(&lut, &is_head));
+    assert!(!has_stage(&native_tail, &is_tail) && has_stage(&native_tail, &is_head));
+    assert!(has_stage(&native_head, &is_tail) && !has_stage(&native_head, &is_head));
+    assert!(!has_stage(&native_both, &is_tail) && !has_stage(&native_both, &is_head));
+    // With both boundaries native, only LUT-layer segments remain.
+    assert!(native_both
+        .segments
+        .iter()
+        .all(|seg| seg.stage == Some(Component::LutLayer)));
 }

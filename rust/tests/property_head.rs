@@ -1,0 +1,351 @@
+//! Property tests for the native thermometer-encoder head: comparator
+//! parity against the gate-level encoder circuits of all four
+//! micro-architectures on adversarial values (exact-threshold hits, the
+//! min/max of the fixed-point range, duplicate thresholds), lane-packing
+//! hygiene for sub-64-row batches, the documented fallback on corrupted
+//! head metadata, and end-to-end head×tail parity (including the pool's
+//! integer-row fast path).
+
+use dwn::coordinator::Backend;
+use dwn::encoding::{arch_for, ArchKind, EncoderArch, FeatureIr};
+use dwn::engine::{self, Executor, HeadMode, TailMode};
+use dwn::hwgen::{
+    build_accelerator, AccelOptions, Component, HeadFeatureInfo, HeadInfo,
+};
+use dwn::logic::{Builder, Gate, NodeId};
+use dwn::model::{DwnModel, SynthSpec, Variant};
+use dwn::techmap::{self, LutNetlist, MapConfig, Src};
+use dwn::util::fixed;
+use std::collections::HashMap;
+
+/// Build a single-feature encoder-only netlist for one micro-architecture:
+/// the feature word straight into the encoder, every used level an output.
+/// Returns (netlist, tags, head metadata) — the minimal deterministic
+/// fixture where the native head provably engages (outputs are forced
+/// mapped roots).
+fn encoder_only(
+    kind: ArchKind,
+    thresholds: &[i32],
+    used: &[usize],
+    frac_bits: u32,
+) -> (LutNetlist, Vec<Component>, HeadInfo) {
+    let width = (frac_bits + 1) as usize;
+    let feat = FeatureIr {
+        index: 0,
+        thresholds: thresholds.to_vec(),
+        used_levels: used.to_vec(),
+    };
+    let mut bld = Builder::new();
+    let word = bld.inputs(width);
+    let outs = arch_for(kind).emit(&mut bld, &word, &feat);
+    assert_eq!(outs.len(), used.len());
+    for &o in &outs {
+        bld.output(o);
+    }
+    let net = bld.finish();
+    let tracked = techmap::map_tracked(&net, &MapConfig::default());
+    let tags = tracked.root_tags(|_| Component::Encoder);
+    let lut_of: HashMap<NodeId, u32> = tracked
+        .roots
+        .iter()
+        .enumerate()
+        .map(|(i, &r)| (r, i as u32))
+        .collect();
+    let distinct = feat.distinct_used();
+    let mut srcs: Vec<Vec<Src>> = vec![Vec::new(); distinct.len()];
+    for (j, &l) in used.iter().enumerate() {
+        let r = distinct.binary_search(&thresholds[l]).unwrap();
+        let src = match net.gates[outs[j] as usize] {
+            Gate::Input(i) => Src::Input(i),
+            Gate::Const(b) => Src::Const(b),
+            _ => Src::Lut(lut_of[&outs[j]]),
+        };
+        if !srcs[r].contains(&src) {
+            srcs[r].push(src);
+        }
+    }
+    let info = HeadInfo {
+        features: vec![HeadFeatureInfo { feature: 0, thresholds: distinct, srcs }],
+        num_features: 1,
+        frac_bits,
+    };
+    (tracked.netlist, tags, info)
+}
+
+/// Exhaustive parity over the whole fixed-point grid (one lane per value):
+/// native head bits vs the mapped gate-level encoder vs the `x >= t`
+/// definition, for one architecture and threshold set.
+fn check_head_vs_gate(kind: ArchKind, thresholds: &[i32], used: &[usize], frac_bits: u32) {
+    let (nl, tags, info) = encoder_only(kind, thresholds, used, frac_bits);
+    let plan = engine::compile_with_head(&nl, Some(&tags), Some(&info));
+    assert!(
+        plan.head.is_some(),
+        "{}: encoder-only fixture must take the native head",
+        kind.label()
+    );
+    assert!(plan.ops.is_empty(), "{}: every LUT belongs to the encoder head", kind.label());
+
+    let lo = -(1i32 << frac_bits);
+    let hi = 1i32 << frac_bits;
+    let xs: Vec<i32> = (lo..hi).collect();
+    assert!(xs.len() <= 64, "exhaustive fixture fits one lane word");
+    let rows: Vec<Vec<i32>> = xs.iter().map(|&x| vec![x]).collect();
+
+    let mut ex = Executor::new(&plan, xs.len());
+    ex.pack_head_ints(&rows);
+    ex.run();
+
+    // Gate-level reference: the mapped netlist over lane-packed bit patterns.
+    let mut words = vec![0u64; nl.num_inputs];
+    for (lane, &x) in xs.iter().enumerate() {
+        let pat = fixed::int_to_bits(x, frac_bits);
+        for (b, w) in words.iter_mut().enumerate() {
+            if (pat >> b) & 1 == 1 {
+                *w |= 1u64 << lane;
+            }
+        }
+    }
+    let outs = nl.eval_lanes(&words);
+    for (j, &l) in used.iter().enumerate() {
+        for (lane, &x) in xs.iter().enumerate() {
+            let want = x >= thresholds[l];
+            assert_eq!(
+                (outs[j] >> lane) & 1 == 1,
+                want,
+                "{} gate x={x} level={l}",
+                kind.label()
+            );
+            assert_eq!(
+                ex.output_bit(j, lane),
+                want,
+                "{} native x={x} level={l}",
+                kind.label()
+            );
+        }
+    }
+
+    // f32 packing agrees with the integer fast path (same quantizer).
+    let rows_f: Vec<Vec<f32>> = xs
+        .iter()
+        .map(|&x| vec![fixed::int_to_real(x, frac_bits) as f32])
+        .collect();
+    let mut ex_f = Executor::new(&plan, xs.len());
+    ex_f.pack_head_rows(&rows_f, frac_bits);
+    ex_f.run();
+    for j in 0..used.len() {
+        assert_eq!(ex_f.output_word(j, 0), ex.output_word(j, 0), "f32 vs int packing");
+    }
+}
+
+#[test]
+fn native_head_matches_gate_encoders_on_adversarial_values() {
+    // Exact-threshold hits, the extremes of the grid (a min-grid threshold
+    // folds constant-true), duplicate thresholds, pruned level sets — across
+    // every architecture that supports the width.
+    let cases: Vec<(Vec<i32>, Vec<usize>, u32)> = vec![
+        (vec![-4, -1, 0, 3], vec![0, 1, 2, 3], 3),
+        (vec![-4, -1, 0, 3], vec![1, 3], 3),
+        (vec![2, 2, 2, 2], vec![0, 1, 2, 3], 3),
+        (vec![-8, -8, 0, 7, 7], vec![0, 2, 3, 4], 3),
+        (vec![0], vec![0], 2),
+        (vec![-16, -9, -2, 0, 1, 5, 11, 15], vec![0, 1, 2, 3, 4, 5, 6, 7], 4),
+        // 12 distinct thresholds: exercises the binary-search level path.
+        (
+            vec![-32, -27, -19, -11, -6, -1, 0, 4, 9, 17, 25, 31],
+            (0..12).collect(),
+            5,
+        ),
+    ];
+    for (th, used, fb) in cases {
+        for kind in ArchKind::ALL {
+            if !kind.supports((fb + 1) as usize) {
+                continue;
+            }
+            check_head_vs_gate(kind, &th, &used, fb);
+        }
+    }
+}
+
+#[test]
+fn sub_lane_word_batches_zero_tail_lanes() {
+    // A short batch packed right after a full one must leave every lane
+    // beyond the live rows zero in the head-written slots — the same
+    // hygiene rule as `fixed::pack_chunk_words`.
+    let (nl, tags, info) = encoder_only(ArchKind::Bank, &[-4, -1, 0, 3], &[0, 1, 2, 3], 3);
+    let plan = engine::compile_with_head(&nl, Some(&tags), Some(&info));
+    assert!(plan.head.is_some());
+    let mut ex = Executor::new(&plan, 64);
+    // Poison: a full batch of max-value rows sets every thermometer bit.
+    let full: Vec<Vec<i32>> = (0..64).map(|_| vec![7]).collect();
+    ex.pack_head_ints(&full);
+    for j in 0..4 {
+        assert_eq!(ex.output_word(j, 0), u64::MAX, "poison pass sets all lanes");
+    }
+    let short: Vec<Vec<i32>> = vec![vec![7], vec![-8], vec![7]];
+    ex.pack_head_ints(&short);
+    let live = fixed::live_lane_mask(short.len());
+    for j in 0..4 {
+        let w = ex.output_word(j, 0);
+        assert_eq!(w & !live, 0, "stale tail lanes in output {j}");
+    }
+    // And the live lanes carry the right values (row 1 is the grid minimum:
+    // level 0 except the always-true... -8 >= -4 is false, all bits 0).
+    assert_eq!(ex.output_word(0, 0) & live, 0b101);
+}
+
+/// Deterministic search for a tiny synthetic model where both native
+/// boundaries engage under the default (bank) encoder.
+fn native_model() -> DwnModel {
+    let mut spec = SynthSpec {
+        name: "prop-head".into(),
+        num_luts: 30,
+        thermo_bits: 4,
+        num_features: 4,
+        num_classes: 3,
+        lut_k: 6,
+        frac_bits: 4,
+        seed: 0xAD0E,
+    };
+    for attempt in 0..500u64 {
+        spec.seed = 0xAD0E ^ attempt.wrapping_mul(0x9E37_79B9);
+        let m = DwnModel::synthetic(&spec);
+        let accel = build_accelerator(&m, &AccelOptions::new(Variant::PenFt)).unwrap();
+        let (nl, tags, head, tail) = accel.map_with_head(&MapConfig::default());
+        let plan = engine::compile_for_modes(
+            &nl,
+            Some(&tags),
+            head.as_ref(),
+            tail.as_ref(),
+            HeadMode::Native,
+            TailMode::Native,
+        );
+        if plan.head.is_some() && plan.tail.is_some() {
+            return m;
+        }
+    }
+    panic!("no native-capable synthetic model found");
+}
+
+#[test]
+fn head_tail_matrix_parity_and_int_rows_on_full_accelerator() {
+    let model = native_model();
+    let frac_bits = model.penft.frac_bits.unwrap();
+    let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt)).unwrap();
+    let (nl, tags, head, tail) = accel.map_with_head(&MapConfig::default());
+    let iw = accel.index_width();
+
+    let mut rng = dwn::util::SplitMix64::new(0x4EAD);
+    let rows: Vec<Vec<f32>> = (0..150)
+        .map(|_| {
+            (0..model.num_features).map(|_| (2.0 * rng.next_f64() - 1.0) as f32).collect()
+        })
+        .collect();
+    let ints: Vec<Vec<i32>> = rows
+        .iter()
+        .map(|r| r.iter().map(|&x| fixed::input_to_int(x as f64, frac_bits)).collect())
+        .collect();
+
+    let lut_plan = engine::compile_with_stages(&nl, Some(&tags));
+    let want = engine::infer_fixed_batch(&lut_plan, &rows, frac_bits, iw, 64, 1);
+
+    for (hm, tm) in [
+        (HeadMode::Native, TailMode::Lut),
+        (HeadMode::Lut, TailMode::Native),
+        (HeadMode::Native, TailMode::Native),
+    ] {
+        let plan = engine::compile_for_modes(
+            &nl,
+            Some(&tags),
+            head.as_ref(),
+            tail.as_ref(),
+            hm,
+            tm,
+        );
+        let backend = Backend::compiled(
+            plan,
+            frac_bits,
+            model.num_features,
+            model.num_classes,
+            iw,
+            64,
+            3,
+        );
+        assert_eq!(
+            backend.infer(&rows).unwrap(),
+            want,
+            "head={} tail={}",
+            hm.label(),
+            tm.label()
+        );
+        // The pool's integer-row fast path is bit-identical in every mode.
+        let Backend::Compiled { pool, .. } = &backend else { unreachable!() };
+        assert_eq!(
+            pool.infer_ints(&ints),
+            want,
+            "int rows, head={} tail={}",
+            hm.label(),
+            tm.label()
+        );
+    }
+}
+
+#[test]
+fn corrupted_head_metadata_falls_back_bit_identically() {
+    let model = native_model();
+    let frac_bits = model.penft.frac_bits.unwrap();
+    let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt)).unwrap();
+    let (nl, tags, head, _tail) = accel.map_with_head(&MapConfig::default());
+    let iw = accel.index_width();
+    let head = head.unwrap();
+
+    // Sanity: the clean metadata engages.
+    assert!(engine::compile_with_head(&nl, Some(&tags), Some(&head)).head.is_some());
+
+    // (a) A thermometer bit claiming to live on a primary input. (Some
+    // features may have no used bits; corrupt the first that does.)
+    let fi = head.features.iter().position(|f| !f.srcs.is_empty()).unwrap();
+    let mut bad_input = head.clone();
+    bad_input.features[fi].srcs[0] = vec![Src::Input(0)];
+    // (b) Two bits sharing one mapped LUT (distinct comparisons must have
+    //     distinct carriers).
+    let mut bad_dup = head.clone();
+    let positions: Vec<(usize, usize)> = bad_dup
+        .features
+        .iter()
+        .enumerate()
+        .flat_map(|(fi, f)| {
+            f.srcs
+                .iter()
+                .enumerate()
+                .filter(|(_, srcs)| srcs.iter().any(|s| matches!(s, Src::Lut(_))))
+                .map(move |(ri, _)| (fi, ri))
+        })
+        .collect();
+    assert!(positions.len() >= 2, "fixture has at least two comparator bits");
+    let stolen = bad_dup.features[positions[0].0].srcs[positions[0].1].clone();
+    bad_dup.features[positions[1].0].srcs[positions[1].1] = stolen;
+    // (c) A bit claiming a non-encoder LUT as its carrier.
+    let mut bad_tag = head.clone();
+    let lut_layer = tags
+        .iter()
+        .position(|&t| t == Component::LutLayer)
+        .expect("accelerator has LUT-layer LUTs") as u32;
+    bad_tag.features[fi].srcs[0] = vec![Src::Lut(lut_layer)];
+
+    let mut rng = dwn::util::SplitMix64::new(0xFA11);
+    let rows: Vec<Vec<f32>> = (0..80)
+        .map(|_| {
+            (0..model.num_features).map(|_| (2.0 * rng.next_f64() - 1.0) as f32).collect()
+        })
+        .collect();
+    let lut_plan = engine::compile_with_stages(&nl, Some(&tags));
+    let want = engine::infer_fixed_batch(&lut_plan, &rows, frac_bits, iw, 64, 1);
+
+    for (label, bad) in [("input", bad_input), ("dup", bad_dup), ("tag", bad_tag)] {
+        let plan = engine::compile_with_head(&nl, Some(&tags), Some(&bad));
+        assert!(plan.head.is_none(), "{label}: corrupted metadata must fall back");
+        assert_eq!(plan.stats.head_skipped, 0, "{label}");
+        let got = engine::infer_fixed_batch(&plan, &rows, frac_bits, iw, 64, 2);
+        assert_eq!(got, want, "{label}: fallback stays bit-identical");
+    }
+}
