@@ -11,20 +11,41 @@
 //! * `native/native` — the serving default: only the LUT layers are
 //!   emulated.
 //!
+//! A final `server` arm drives the native/native plan through a full
+//! [`Server`] — admission, bounded queue, double-buffered batch loop — in a
+//! closed loop at small windows (batch ≤ 64), where per-row compute is
+//! cheapest relative to coordination: rows/sec there isolates coordinator
+//! overhead, the convoy/copy cost this PR removes.
+//!
 //! Besides the table, the run writes `BENCH_serve.json` (rows/sec per arm
 //! per batch) so the perf trajectory is machine-readable across PRs.
+//! `DWN_BENCH_QUICK=1` shrinks iteration counts for CI smoke runs.
 //!
 //!     cargo bench --bench serve_throughput
 //!     (or: target/release/serve_throughput after `cargo build --benches`)
 
 use dwn::config::Artifacts;
-use dwn::coordinator::Backend;
+use dwn::coordinator::{AdmissionPolicy, Backend, Row, Server, ServerConfig};
 use dwn::engine::{HeadMode, TailMode};
 use dwn::hwgen::{build_accelerator, AccelOptions, Component};
 use dwn::model::{DwnModel, SynthSpec, Variant};
 use dwn::techmap::MapConfig;
 use dwn::util::SplitMix64;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// Rows per timing rep; quick mode (`DWN_BENCH_QUICK=1`) keeps CI smoke
+/// runs in seconds. `0`/`false`/empty explicitly select the full run.
+fn target_rows() -> usize {
+    let quick = !matches!(
+        std::env::var("DWN_BENCH_QUICK").as_deref(),
+        Err(_) | Ok("") | Ok("0") | Ok("false")
+    );
+    if quick {
+        4_096
+    } else {
+        65_536
+    }
+}
 
 const MODES: [(HeadMode, TailMode); 4] = [
     (HeadMode::Lut, TailMode::Lut),
@@ -102,11 +123,16 @@ fn main() {
         })
         .collect();
 
-    // Random feature rows (eval cost is data-independent).
+    // Random feature rows (eval cost is data-independent), admitted once
+    // into shared `Row`s — every arm reuses the same allocations.
     let mut rng = SplitMix64::new(0xBEEF);
-    let rows: Vec<Vec<f32>> = (0..4096)
+    let rows: Vec<Row> = (0..4096)
         .map(|_| {
-            (0..model.num_features).map(|_| (2.0 * rng.next_f64() - 1.0) as f32).collect()
+            Row::from(
+                (0..model.num_features)
+                    .map(|_| (2.0 * rng.next_f64() - 1.0) as f32)
+                    .collect::<Vec<f32>>(),
+            )
         })
         .collect();
 
@@ -137,6 +163,33 @@ fn main() {
             rps[3] / rps[0]
         );
     }
+    // Coordinator-overhead arm: the native/native plan behind a full
+    // Server, driven closed-loop at small windows. At batch <= 64 the
+    // engine work per pass is tiny, so rows/sec here is dominated by
+    // admission + queue + batch assembly + reply splicing — exactly the
+    // hot path the zero-copy/double-buffer rework targets.
+    let server = Server::start_compiled(
+        plans[3].clone(),
+        frac_bits,
+        model.num_features,
+        model.num_classes,
+        index_width,
+        256,
+        cores,
+        ServerConfig {
+            max_batch: 256,
+            max_wait: Duration::from_micros(100),
+            queue_depth: 8192,
+            admission: AdmissionPolicy::Shed,
+        },
+    );
+    println!("\n{:>7} {:>14}   (closed-loop server, native/native)", "window", "server r/s");
+    for window in [16usize, 64] {
+        let rps = server_rows_per_sec(&server, &rows, window);
+        records.push(arm_record("server", "native", "native", window, rps));
+        println!("{:>7} {:>14.0}", window, rps);
+    }
+
     let json = format!(
         "{{\"model\":\"{}\",\"luts\":{},\"arms\":[\n{}\n]}}\n",
         model.name,
@@ -231,8 +284,8 @@ fn arm_record(backend: &str, head: &str, tail: &str, batch: usize, rps: f64) -> 
 }
 
 /// Median-of-3 timed repetitions, enough iterations to amortize noise.
-fn rows_per_sec(rows: &[Vec<f32>], infer: impl Fn(&[Vec<f32>]) -> Vec<i32>) -> f64 {
-    let iters = (65_536 / rows.len()).max(1);
+fn rows_per_sec(rows: &[Row], infer: impl Fn(&[Row]) -> Vec<i32>) -> f64 {
+    let iters = (target_rows() / rows.len()).max(1);
     let _ = infer(rows); // warmup
     let mut samples: Vec<f64> = (0..3)
         .map(|_| {
@@ -244,6 +297,31 @@ fn rows_per_sec(rows: &[Vec<f32>], infer: impl Fn(&[Vec<f32>]) -> Vec<i32>) -> f
             (iters * rows.len()) as f64 / t0.elapsed().as_secs_f64()
         })
         .collect();
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[1]
+}
+
+/// Closed-loop serving throughput: keep `window` requests in flight through
+/// the full coordinator (zero-copy resubmission of cached rows), drain, and
+/// repeat. Median of 3 reps, like [`rows_per_sec`].
+fn server_rows_per_sec(server: &Server, rows: &[Row], window: usize) -> f64 {
+    let iters = (target_rows() / window).max(1);
+    let run = || {
+        let t0 = Instant::now();
+        let mut pending = Vec::with_capacity(window);
+        for it in 0..iters {
+            for k in 0..window {
+                let row = rows[(it * window + k) % rows.len()].clone();
+                pending.push(server.submit_row(row).expect("bench queue sized for window"));
+            }
+            for rx in pending.drain(..) {
+                let _ = rx.recv().expect("server reply");
+            }
+        }
+        (iters * window) as f64 / t0.elapsed().as_secs_f64()
+    };
+    let _ = run(); // warmup
+    let mut samples: Vec<f64> = (0..3).map(|_| run()).collect();
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
     samples[1]
 }

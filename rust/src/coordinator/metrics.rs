@@ -19,6 +19,8 @@ struct Inner {
     requests: u64,
     batches: u64,
     busy_us: u64,
+    /// Submissions shed at admission (queue full under `AdmissionPolicy::Shed`).
+    rejected: u64,
 }
 
 /// Point-in-time metrics view.
@@ -31,6 +33,9 @@ pub struct Snapshot {
     pub p99_us: u64,
     pub max_us: u64,
     pub busy_us: u64,
+    /// Requests shed at admission; disjoint from `requests` (a shed request
+    /// was never queued, so it is never double-counted on retry success).
+    pub rejected: u64,
 }
 
 impl Metrics {
@@ -43,6 +48,24 @@ impl Metrics {
         for l in latencies {
             m.latencies_us.push(l.as_micros() as u64);
         }
+    }
+
+    /// Count one submission shed at admission (queue full).
+    pub fn record_rejected(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    /// Requests served so far — a plain counter read, unlike
+    /// [`Self::snapshot`], which clones and sorts the whole latency history
+    /// under the lock. Pollers wanting only totals must use these.
+    pub fn requests(&self) -> u64 {
+        self.inner.lock().unwrap().requests
+    }
+
+    /// Requests shed at admission so far (counter read; see
+    /// [`Self::requests`]).
+    pub fn rejected(&self) -> u64 {
+        self.inner.lock().unwrap().rejected
     }
 
     pub fn snapshot(&self) -> Snapshot {
@@ -68,6 +91,7 @@ impl Metrics {
             p99_us: pick(0.99),
             max_us: lat.last().copied().unwrap_or(0),
             busy_us: m.busy_us,
+            rejected: m.rejected,
         }
     }
 }
@@ -95,5 +119,17 @@ mod tests {
         let s = Metrics::default().snapshot();
         assert_eq!(s.requests, 0);
         assert_eq!(s.p99_us, 0);
+        assert_eq!(s.rejected, 0);
+    }
+
+    #[test]
+    fn rejected_counts_apart_from_requests() {
+        let m = Metrics::default();
+        m.record_rejected();
+        m.record_rejected();
+        m.record_batch(3, Duration::from_micros(10), &[Duration::from_micros(5); 3]);
+        let s = m.snapshot();
+        assert_eq!(s.rejected, 2);
+        assert_eq!(s.requests, 3);
     }
 }

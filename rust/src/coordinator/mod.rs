@@ -1,17 +1,22 @@
-//! Serving coordinator: a batching inference server over either the PJRT
-//! runtime (golden model) or the bit-accurate netlist simulator (hardware
-//! emulation). Python never runs here — the engine executes the AOT HLO.
+//! Serving coordinator: a batching inference server over the PJRT runtime
+//! (golden model), the bit-accurate netlist simulator, or the compiled
+//! execution engine. Python never runs here — the engine executes the AOT
+//! HLO.
 //!
-//! The paper's contribution is the hardware generator, so this layer is a
-//! deliberately thin driver (system-prompt L3 note): request queue, dynamic
-//! batcher with a deadline, metrics. Everything is plain std threads —
-//! tokio is not available offline, and one inference thread matches both
-//! the single PJRT CPU device and the paper's single-accelerator setting.
+//! The paper's contribution is the hardware generator, so this layer stays a
+//! thin driver — but a *pipelined* one (DESIGN.md §coordinator): admission
+//! wraps features in a shared [`Row`] once, batches are drained concurrently
+//! with execution (double buffering, no convoy stalls), and backpressure is
+//! typed ([`SubmitError::Backpressure`] vs fatal shutdown) and counted.
+//! Everything is plain std threads — tokio is not available offline, and
+//! the drain/execute pair matches both the single PJRT CPU device and the
+//! paper's single-accelerator setting.
 
 pub mod batcher;
 pub mod metrics;
 pub mod router;
 
-pub use batcher::{Backend, Server, ServerConfig};
+pub use crate::util::fixed::Row;
+pub use batcher::{AdmissionPolicy, Backend, Server, ServerConfig, SubmitError};
 pub use metrics::{Metrics, Snapshot};
 pub use router::Router;

@@ -5,6 +5,7 @@
 
 use super::batcher::{Server, ServerConfig};
 use super::metrics::Snapshot;
+use crate::util::fixed::Row;
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 use std::sync::mpsc::Receiver;
@@ -39,13 +40,20 @@ impl Router {
         self.servers.keys().map(|s| s.as_str()).collect()
     }
 
-    /// Route a request to `model`; returns the reply channel.
+    /// Route a request to `model`; returns the reply channel. One `Arc`
+    /// allocation at admission; see [`Self::submit_row`] for zero-copy.
     pub fn submit(&self, model: &str, features: &[f32]) -> Result<Receiver<Result<i32>>> {
+        self.submit_row(model, Row::real(features))
+    }
+
+    /// Route an admitted [`Row`] to `model` — fully zero-copy: callers with
+    /// a row cache resubmit the same allocation any number of times.
+    pub fn submit_row(&self, model: &str, row: Row) -> Result<Receiver<Result<i32>>> {
         let server = self
             .servers
             .get(model)
             .ok_or_else(|| anyhow!("unknown model '{model}' (deployed: {:?})", self.models()))?;
-        server.submit(features)
+        Ok(server.submit_row(row)?)
     }
 
     /// Blocking inference convenience.
@@ -59,9 +67,15 @@ impl Router {
         self.servers.iter().map(|(k, s)| (k.clone(), s.metrics.snapshot())).collect()
     }
 
-    /// Aggregate requests served across models.
+    /// Aggregate requests served across models (counter reads — no
+    /// latency-history snapshot per poll).
     pub fn total_requests(&self) -> u64 {
-        self.servers.values().map(|s| s.metrics.snapshot().requests).sum()
+        self.servers.values().map(|s| s.metrics.requests()).sum()
+    }
+
+    /// Aggregate requests shed at admission across models.
+    pub fn total_rejected(&self) -> u64 {
+        self.servers.values().map(|s| s.metrics.rejected()).sum()
     }
 }
 

@@ -248,8 +248,10 @@ pub fn par_eval<T, F>(
 /// through the native head when the plan carries one (integer comparisons,
 /// no input bit-packing), else through `int_to_bits` lane packing; decoding
 /// goes through the native arithmetic tail when present, else reads the
-/// emulated class-index output bits. Shared by `par_eval`-based inference
-/// and the persistent worker pool so the two cannot drift apart.
+/// emulated class-index output bits. `par_eval`-based inference runs this;
+/// the persistent worker pool runs [`eval_shared_rows_block`], which shares
+/// the same packers and decode — pool-vs-inline parity tests pin the two
+/// together.
 pub(crate) fn eval_rows_block(
     ex: &mut Executor,
     rows: &[Vec<f32>],
@@ -279,27 +281,23 @@ pub(crate) fn eval_rows_block(
     decode_block_preds(ex, index_width, out);
 }
 
-/// Integer-row counterpart of [`eval_rows_block`]: rows are grid integers on
-/// the serving fixed-point grid. With a native head the values feed the
-/// comparators directly; without one they pack through
-/// [`fixed::pack_row_bits_int`] — so both modes accept integer rows and stay
-/// bit-identical.
-pub(crate) fn eval_int_rows_block(
+/// [`eval_rows_block`] over admitted [`crate::util::fixed::Row`]s — the
+/// zero-copy serving path: rows are borrowed shard slices of the batch's
+/// `Arc<[Row]>`, never copied. A block may mix real and integer-grid rows;
+/// packing dispatches per row (native head: one `Row::grid_value` read per
+/// feature; emulated: the matching bit packer), so mixed batches stay
+/// bit-identical to per-kind runs.
+pub(crate) fn eval_shared_rows_block(
     ex: &mut Executor,
-    rows: &[Vec<i32>],
+    rows: &[crate::util::fixed::Row],
     frac_bits: u32,
     index_width: usize,
     out: &mut [i32],
 ) {
     use crate::util::fixed;
     assert_eq!(rows.len(), out.len());
-    if let Some(head) = ex.plan().head.as_ref() {
-        // Same wiring guard the f32 path enforces inside pack_rows.
-        assert_eq!(
-            head.frac_bits, frac_bits,
-            "serving frac_bits disagrees with the compiled head's threshold grid"
-        );
-        ex.pack_head_ints(rows);
+    if ex.plan().head.is_some() {
+        super::head::pack_shared_rows(ex, rows, frac_bits);
     } else {
         let width = (frac_bits + 1) as usize;
         for (lane, row) in rows.iter().enumerate() {
@@ -308,7 +306,7 @@ pub(crate) fn eval_int_rows_block(
                 ex.plan().num_inputs,
                 "row does not match the plan's input interface"
             );
-            fixed::pack_row_bits_int(row, frac_bits, |bit| ex.set_input_bit(bit, lane));
+            fixed::pack_row_bits_of(row, frac_bits, |bit| ex.set_input_bit(bit, lane));
         }
     }
     ex.run();

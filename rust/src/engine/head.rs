@@ -18,7 +18,7 @@
 //! per-bit ORs) is skipped entirely on this path.
 
 use super::exec::Executor;
-use crate::util::fixed;
+use crate::util::fixed::{self, Row};
 
 /// How the compiled engine should treat the encoder head.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -101,10 +101,30 @@ pub fn pack_int_rows(ex: &mut Executor, rows: &[Vec<i32>]) {
             "row does not match the plan's feature interface"
         );
     }
-    let scale = 1i64 << head.frac_bits;
+    let frac_bits = head.frac_bits;
     pack_with(ex, rows.len(), move |row, feature| {
-        (rows[row][feature] as i64).max(-scale).min(scale - 1) as i32
+        fixed::clamp_to_grid(rows[row][feature], frac_bits)
     });
+}
+
+/// [`pack_rows`] over admitted [`Row`]s — the zero-copy serving path. Real
+/// rows quantize through the serving grid, integer rows clamp onto it
+/// ([`Row::grid_value`]); one batch may mix both kinds, and each lane packs
+/// exactly as it would in a per-kind batch.
+pub(crate) fn pack_shared_rows(ex: &mut Executor, rows: &[Row], frac_bits: u32) {
+    let head = ex.plan().head.as_ref().expect("plan compiled without a native head");
+    assert_eq!(
+        head.frac_bits, frac_bits,
+        "serving frac_bits disagrees with the compiled head's threshold grid"
+    );
+    for row in rows {
+        assert_eq!(
+            row.len(),
+            head.num_features,
+            "row does not match the plan's feature interface"
+        );
+    }
+    pack_with(ex, rows.len(), |lane, feature| rows[lane].grid_value(feature, frac_bits));
 }
 
 /// Shared packer: bucket the first `n` lanes by thermometer level per

@@ -6,49 +6,30 @@
 //! pool's whole life, parks in a blocking channel `recv` while idle, and is
 //! fed contiguous batch shards through the channel.
 //! [`crate::coordinator::Backend::Compiled`] holds one pool for the life of
-//! the server (DESIGN.md §engine).
+//! the server (DESIGN.md §engine, §coordinator).
+//!
+//! Zero-copy: a batch arrives as one `Arc<[Row]>` ([`EnginePool::infer_shared`])
+//! and every shard job clones only that batch handle — workers pack lanes
+//! straight from borrowed `&[Row]` slices, and each `Row`'s feature buffer is
+//! the very allocation admitted at `Server::submit`. No feature bytes are
+//! copied anywhere in the pool.
 //!
 //! Determinism: shards are contiguous row ranges and every reply carries its
 //! start offset, so results land in input order no matter which worker
-//! finishes first — `infer` is bit-identical to a single-threaded sweep for
-//! any batch size, shard count, or scheduling.
+//! finishes first — `infer_shared` is bit-identical to a single-threaded
+//! sweep for any batch size, shard count, or scheduling.
 
-use super::exec::{eval_int_rows_block, eval_rows_block, Executor};
+use super::exec::{eval_shared_rows_block, Executor};
 use super::plan::ExecPlan;
+use crate::util::fixed::Row;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-/// A batch's rows: real-valued features (quantized at pack time) or grid
-/// integers on the serving fixed-point grid (the native head's
-/// zero-conversion fast path; emulated plans pack them through
-/// [`crate::util::fixed::pack_row_bits_int`], so both plan modes accept
-/// both row kinds with bit-identical results).
-enum RowData {
-    Real(Vec<Vec<f32>>),
-    Fixed(Vec<Vec<i32>>),
-}
-
-impl RowData {
-    fn len(&self) -> usize {
-        match self {
-            RowData::Real(r) => r.len(),
-            RowData::Fixed(r) => r.len(),
-        }
-    }
-
-    fn row_arity(&self, i: usize) -> usize {
-        match self {
-            RowData::Real(r) => r[i].len(),
-            RowData::Fixed(r) => r[i].len(),
-        }
-    }
-}
-
 /// One shard of a batch: worker evaluates rows `[start, start + len)` of the
 /// shared batch and replies with `(start, preds)`.
 struct Job {
-    rows: Arc<RowData>,
+    rows: Arc<[Row]>,
     start: usize,
     len: usize,
     reply: Sender<(usize, Vec<i32>)>,
@@ -112,26 +93,11 @@ impl EnginePool {
         self.index_width
     }
 
-    /// Evaluate a batch: shard whole lane-blocks across the workers, gather
-    /// replies by offset. Row order of the result always matches the input.
-    ///
-    /// Trade-off: `rows` is deep-copied into an `Arc` once per batch so the
-    /// 'static workers can share it — O(rows × features) memcpy, small next
-    /// to LUT evaluation but not free. Going zero-copy would mean threading
-    /// `Arc<Vec<Vec<f32>>>` through `Backend::infer` (and every bench/test
-    /// caller); revisit if profiles ever show the copy on top.
-    pub fn infer(&self, rows: &[Vec<f32>]) -> Vec<i32> {
-        self.run_batch(RowData::Real(rows.to_vec()))
-    }
-
-    /// [`Self::infer`] over integer feature rows (grid integers on the
-    /// serving fixed-point grid) — skips `input_to_int` quantization; with a
-    /// native head plan, no bit expansion happens anywhere on the path.
-    pub fn infer_ints(&self, rows: &[Vec<i32>]) -> Vec<i32> {
-        self.run_batch(RowData::Fixed(rows.to_vec()))
-    }
-
-    fn run_batch(&self, rows: RowData) -> Vec<i32> {
+    /// Evaluate a shared batch: shard whole lane-blocks across the workers,
+    /// gather replies by offset. Row order of the result always matches the
+    /// input. The only thing cloned per shard is the batch `Arc` — feature
+    /// buffers are read in place.
+    pub fn infer_shared(&self, rows: Arc<[Row]>) -> Vec<i32> {
         let n = rows.len();
         if n == 0 {
             return Vec::new();
@@ -139,14 +105,13 @@ impl EnginePool {
         // Arity check on the caller thread, so a malformed request panics
         // the submitter (as the scoped-thread path did), not a pool worker.
         let width = (self.frac_bits + 1) as usize;
-        for i in 0..n {
+        for row in rows.iter() {
             assert_eq!(
-                rows.row_arity(i) * width,
+                row.len() * width,
                 self.plan.num_inputs,
                 "row does not match the plan's input interface"
             );
         }
-        let rows = Arc::new(rows);
         let (reply_tx, reply_rx) = channel();
         let tx = self.job_tx.as_ref().expect("pool not shut down");
         let mut start = 0usize;
@@ -167,6 +132,26 @@ impl EnginePool {
             out[at..at + preds.len()].copy_from_slice(&preds);
         }
         out
+    }
+
+    /// [`Self::infer_shared`] over borrowed rows: clones each `Row` handle
+    /// (refcount bumps, no feature copies) into the shared batch.
+    pub fn infer_rows(&self, rows: &[Row]) -> Vec<i32> {
+        self.infer_shared(rows.iter().cloned().collect())
+    }
+
+    /// Admission-boundary convenience for benches and tests: wraps each
+    /// real-valued row in a [`Row`] (the one copy) and runs
+    /// [`Self::infer_shared`].
+    pub fn infer(&self, rows: &[Vec<f32>]) -> Vec<i32> {
+        self.infer_shared(rows.iter().map(|r| Row::real(r)).collect())
+    }
+
+    /// [`Self::infer`] over integer feature rows (grid integers on the
+    /// serving fixed-point grid) — with a native head plan, no bit expansion
+    /// happens anywhere past this admission wrap.
+    pub fn infer_ints(&self, rows: &[Vec<i32>]) -> Vec<i32> {
+        self.infer_shared(rows.iter().map(|r| Row::fixed(r)).collect())
     }
 }
 
@@ -199,27 +184,18 @@ fn worker_loop(
         let Ok(job) = job else { break };
         let mut preds = vec![0i32; job.len];
         let lanes = ex.lanes();
-        // One shared chunk loop; the row kind only picks the eval entry, so
-        // f32 and integer batches can never drift apart here.
         for (ci, outs) in preds.chunks_mut(lanes).enumerate() {
             let lo = job.start + ci * lanes;
             ex.clear_inputs();
-            match &*job.rows {
-                RowData::Real(all) => eval_rows_block(
-                    &mut ex,
-                    &all[lo..lo + outs.len()],
-                    frac_bits,
-                    index_width,
-                    outs,
-                ),
-                RowData::Fixed(all) => eval_int_rows_block(
-                    &mut ex,
-                    &all[lo..lo + outs.len()],
-                    frac_bits,
-                    index_width,
-                    outs,
-                ),
-            }
+            // Borrowed shard slice of the shared batch — rows mix kinds
+            // freely and are never copied here.
+            eval_shared_rows_block(
+                &mut ex,
+                &job.rows[lo..lo + outs.len()],
+                frac_bits,
+                index_width,
+                outs,
+            );
         }
         // A dropped reply receiver just means the submitter gave up.
         let _ = job.reply.send((job.start, preds));
@@ -268,6 +244,56 @@ mod tests {
             .collect();
         assert_eq!(pool.infer_ints(&ints), pool.infer(&rows));
         assert!(pool.infer_ints(&[]).is_empty());
+    }
+
+    #[test]
+    fn mixed_row_kinds_match_per_kind_batches() {
+        let plan = Arc::new(sign_plan());
+        let pool = EnginePool::new(plan, 64, 2, 1, 1);
+        let rows: Vec<Vec<f32>> =
+            (0..150).map(|i| vec![if i % 3 == 0 { -0.9 } else { 0.9 }]).collect();
+        let want = pool.infer(&rows);
+        // Alternate real and integer-grid variants of the same rows within
+        // one shared batch.
+        let mixed: Vec<Row> = rows
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                if i % 2 == 0 {
+                    Row::real(r)
+                } else {
+                    Row::fixed(&[crate::util::fixed::input_to_int(r[0] as f64, 1)])
+                }
+            })
+            .collect();
+        assert_eq!(pool.infer_rows(&mixed), want);
+    }
+
+    #[test]
+    fn shared_batch_is_not_copied_or_retained() {
+        let plan = Arc::new(sign_plan());
+        let pool = EnginePool::new(plan, 64, 3, 1, 1);
+        let data: Arc<[f32]> = vec![-0.9f32].into();
+        let rows: Arc<[Row]> =
+            (0..130).map(|_| Row::Real(data.clone())).collect::<Vec<_>>().into();
+        assert_eq!(Arc::strong_count(&data), 131);
+        let preds = pool.infer_shared(rows.clone());
+        assert_eq!(preds, vec![1i32; 130]);
+        // Workers dropped their shard handles; no Row (hence no feature
+        // buffer) was cloned or retained anywhere in the pool.
+        assert_eq!(Arc::strong_count(&data), 131);
+        drop(rows);
+        // Workers drop their batch handles just after replying; give the
+        // scheduler a moment before requiring the last reference gone.
+        let t0 = std::time::Instant::now();
+        while Arc::strong_count(&data) != 1 {
+            assert!(
+                t0.elapsed() < std::time::Duration::from_secs(5),
+                "batch handles leaked: {} refs",
+                Arc::strong_count(&data)
+            );
+            std::thread::yield_now();
+        }
     }
 
     #[test]

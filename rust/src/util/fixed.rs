@@ -1,5 +1,99 @@
 //! Signed fixed-point (1, n) conversions matching `python/compile/encoding.py`:
 //! one sign bit, `n` fractional bits, values k / 2^n with k in [-2^n, 2^n - 1].
+//! Also home of [`Row`], the shared feature-row handle the serving stack
+//! threads from admission to lane packing without copying.
+
+use std::sync::Arc;
+
+/// One admitted feature row, shared zero-copy across the serving stack.
+///
+/// The payload lives behind an `Arc`, so a `Row` clone is a refcount bump,
+/// never a feature copy: `Server::submit` builds the row once (the single
+/// admission copy, from the caller's slice), and the same allocation then
+/// flows through the queue, the drained batch, `Backend::infer`, and the
+/// engine pool's shard slices. Callers that already hold an `Arc` (row
+/// caches, replayed workloads) submit with zero copies end to end.
+///
+/// The two variants mirror the two serving input interfaces: real-valued
+/// features quantized at pack time, and grid integers already on the
+/// fixed-point serving grid (the native head's zero-conversion fast path).
+/// One batch may mix both; every packer dispatches per row.
+#[derive(Debug, Clone)]
+pub enum Row {
+    /// Real-valued features; quantized via [`input_to_int`] when packed.
+    Real(Arc<[f32]>),
+    /// Grid integers on the serving fixed-point grid; clamped when packed.
+    Fixed(Arc<[i32]>),
+}
+
+impl Row {
+    /// Admit a real-valued row (the one copy the serving path ever makes).
+    pub fn real(xs: &[f32]) -> Row {
+        Row::Real(Arc::from(xs))
+    }
+
+    /// Admit an integer-grid row.
+    pub fn fixed(ks: &[i32]) -> Row {
+        Row::Fixed(Arc::from(ks))
+    }
+
+    /// Number of features in the row.
+    pub fn len(&self) -> usize {
+        match self {
+            Row::Real(v) => v.len(),
+            Row::Fixed(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Grid integer of one feature on the `frac_bits` serving grid: reals
+    /// quantize through [`input_to_int`], integers clamp to the grid range —
+    /// the single scalar read the native thermometer head performs.
+    #[inline]
+    pub fn grid_value(&self, feature: usize, frac_bits: u32) -> i32 {
+        match self {
+            Row::Real(v) => input_to_int(v[feature] as f64, frac_bits),
+            Row::Fixed(v) => clamp_to_grid(v[feature], frac_bits),
+        }
+    }
+
+    /// Admit a whole batch of real-valued rows (bench/test convenience).
+    pub fn from_reals(rows: &[Vec<f32>]) -> Vec<Row> {
+        rows.iter().map(|r| Row::real(r)).collect()
+    }
+
+    /// Admit a whole batch of integer-grid rows.
+    pub fn from_ints(rows: &[Vec<i32>]) -> Vec<Row> {
+        rows.iter().map(|r| Row::fixed(r)).collect()
+    }
+}
+
+impl From<Vec<f32>> for Row {
+    fn from(v: Vec<f32>) -> Row {
+        Row::Real(v.into())
+    }
+}
+
+impl From<Vec<i32>> for Row {
+    fn from(v: Vec<i32>) -> Row {
+        Row::Fixed(v.into())
+    }
+}
+
+impl From<Arc<[f32]>> for Row {
+    fn from(v: Arc<[f32]>) -> Row {
+        Row::Real(v)
+    }
+}
+
+impl From<Arc<[i32]>> for Row {
+    fn from(v: Arc<[i32]>) -> Row {
+        Row::Fixed(v)
+    }
+}
 
 /// Quantize a real input to the PEN integer grid (floor), clamped.
 pub fn input_to_int(x: f64, frac_bits: u32) -> i32 {
@@ -18,6 +112,15 @@ pub fn threshold_to_int(t: f64, frac_bits: u32) -> i32 {
 /// Integer grid value back to a real number.
 pub fn int_to_real(k: i32, frac_bits: u32) -> f64 {
     k as f64 / (1i64 << frac_bits) as f64
+}
+
+/// Clamp an already-integer value to the grid range [-2^n, 2^n - 1] — the
+/// integer-row counterpart of [`input_to_int`]'s clamp. Every consumer of
+/// `Row::Fixed` values goes through here so the grid rule cannot drift.
+#[inline]
+pub fn clamp_to_grid(k: i32, frac_bits: u32) -> i32 {
+    let scale = 1i64 << frac_bits;
+    (k as i64).max(-scale).min(scale - 1) as i32
 }
 
 /// Two's-complement bit pattern of a grid integer in `frac_bits + 1` bits.
@@ -64,10 +167,8 @@ pub fn pack_row_bits(row: &[f32], frac_bits: u32, mut set: impl FnMut(usize)) {
 /// native head's integer fast path, so both accept integer rows.
 pub fn pack_row_bits_int(row: &[i32], frac_bits: u32, mut set: impl FnMut(usize)) {
     let width = (frac_bits + 1) as usize;
-    let scale = 1i64 << frac_bits;
     for (f, &k) in row.iter().enumerate() {
-        let k = (k as i64).max(-scale).min(scale - 1) as i32;
-        let pat = int_to_bits(k, frac_bits);
+        let pat = int_to_bits(clamp_to_grid(k, frac_bits), frac_bits);
         for b in 0..width {
             if (pat >> b) & 1 == 1 {
                 set(f * width + b);
@@ -76,18 +177,54 @@ pub fn pack_row_bits_int(row: &[i32], frac_bits: u32, mut set: impl FnMut(usize)
     }
 }
 
+/// Per-row packing dispatch for admitted [`Row`]s: real rows go through
+/// [`pack_row_bits`], integer rows through [`pack_row_bits_int`]. Every
+/// serving packer funnels through here so mixed-kind batches cannot drift
+/// from per-kind ones.
+pub fn pack_row_bits_of(row: &Row, frac_bits: u32, set: impl FnMut(usize)) {
+    match row {
+        Row::Real(v) => pack_row_bits(v, frac_bits, set),
+        Row::Fixed(v) => pack_row_bits_int(v, frac_bits, set),
+    }
+}
+
+/// [`pack_chunk_words`] over admitted [`Row`]s — the interpreter backend's
+/// zero-copy path (rows are borrowed, only lane words are written). Same
+/// full-rewrite tail-lane hygiene ([`pack_chunk_with`]).
+pub fn pack_chunk_rows(chunk: &[Row], frac_bits: u32, num_inputs: usize, words: &mut Vec<u64>) {
+    pack_chunk_with(chunk, frac_bits, num_inputs, words, Row::len, |r, fb, set| {
+        pack_row_bits_of(r, fb, set)
+    });
+}
+
 /// Lane-pack a chunk of up to 64 feature rows into per-input lane words:
-/// `words[input_bit]` holds lane = row-index-within-chunk. The buffer is
-/// fully rewritten each call — tail lanes beyond `chunk.len()` are
-/// explicitly zero — so reusing one buffer across chunks of *different*
-/// sizes (a batch smaller than one lane word after a full one) can never
-/// leak stale lanes into pack or decode. Both serving backends and the
-/// conformance harness pack through here.
+/// `words[input_bit]` holds lane = row-index-within-chunk
+/// ([`pack_chunk_with`] for the hygiene rule). Both serving backends and
+/// the conformance harness pack through here.
 pub fn pack_chunk_words(
     chunk: &[Vec<f32>],
     frac_bits: u32,
     num_inputs: usize,
     words: &mut Vec<u64>,
+) {
+    pack_chunk_with(chunk, frac_bits, num_inputs, words, |r| r.len(), |r, fb, set| {
+        pack_row_bits(r, fb, set)
+    });
+}
+
+/// Shared chunk-packing core: the buffer is fully rewritten each call —
+/// tail lanes beyond `chunk.len()` are explicitly zero — so reusing one
+/// buffer across chunks of *different* sizes (a batch smaller than one lane
+/// word after a full one) can never leak stale lanes into pack or decode.
+/// Every chunk packer delegates here so the hygiene rule lives in exactly
+/// one place.
+fn pack_chunk_with<T>(
+    chunk: &[T],
+    frac_bits: u32,
+    num_inputs: usize,
+    words: &mut Vec<u64>,
+    len_of: impl Fn(&T) -> usize,
+    pack_one: impl Fn(&T, u32, &mut dyn FnMut(usize)),
 ) {
     assert!(chunk.len() <= 64, "one chunk per lane word");
     words.clear();
@@ -95,11 +232,11 @@ pub fn pack_chunk_words(
     let width = (frac_bits + 1) as usize;
     for (lane, row) in chunk.iter().enumerate() {
         assert_eq!(
-            row.len() * width,
+            len_of(row) * width,
             num_inputs,
             "row does not match the input interface"
         );
-        pack_row_bits(row, frac_bits, |bit| words[bit] |= 1u64 << lane);
+        pack_one(row, frac_bits, &mut |bit| words[bit] |= 1u64 << lane);
     }
 }
 
@@ -158,6 +295,64 @@ mod tests {
         let mut d = vec![false; 4];
         pack_row_bits(&[99.0], frac_bits, |bit| d[bit] = true);
         assert_eq!(c, d);
+    }
+
+    #[test]
+    fn row_clone_shares_the_allocation() {
+        let data: Arc<[f32]> = vec![0.5f32, -0.25].into();
+        let row = Row::Real(data.clone());
+        let copy = row.clone();
+        // A Row clone is a refcount bump on the same feature buffer — the
+        // property the whole zero-copy serving path rests on.
+        assert_eq!(Arc::strong_count(&data), 3);
+        let (Row::Real(a), Row::Real(b)) = (&row, &copy) else { unreachable!() };
+        assert!(Arc::ptr_eq(a, b));
+        assert_eq!(row.len(), 2);
+        assert!(!row.is_empty());
+    }
+
+    #[test]
+    fn row_grid_value_matches_scalar_paths() {
+        let frac_bits = 3u32;
+        let real = Row::real(&[0.5, -0.37, 1.5, -2.0]);
+        let fixed = Row::fixed(&[4, -3, 99, -99]);
+        for f in 0..4 {
+            assert_eq!(
+                real.grid_value(f, frac_bits),
+                input_to_int([0.5, -0.37, 1.5, -2.0][f] as f64, frac_bits),
+                "feature {f}"
+            );
+        }
+        // Integer rows clamp exactly like input_to_int clamps reals.
+        assert_eq!(fixed.grid_value(2, frac_bits), 7);
+        assert_eq!(fixed.grid_value(3, frac_bits), -8);
+        assert_eq!(fixed.grid_value(0, frac_bits), 4);
+    }
+
+    #[test]
+    fn pack_chunk_rows_matches_pack_chunk_words() {
+        let frac_bits = 3u32;
+        let num_inputs = 2 * 4;
+        let chunk: Vec<Vec<f32>> =
+            vec![vec![0.5, -0.5], vec![-1.0, 0.875], vec![0.0, -0.125]];
+        let mut want = Vec::new();
+        pack_chunk_words(&chunk, frac_bits, num_inputs, &mut want);
+        // Real rows agree bit-for-bit; integer rows of the same grid values
+        // agree too, even mixed into the same chunk.
+        let ints: Vec<Vec<i32>> = chunk
+            .iter()
+            .map(|r| r.iter().map(|&x| input_to_int(x as f64, frac_bits)).collect())
+            .collect();
+        let mixed = vec![
+            Row::real(&chunk[0]),
+            Row::fixed(&ints[1]),
+            Row::real(&chunk[2]),
+        ];
+        for rows in [Row::from_reals(&chunk), Row::from_ints(&ints), mixed] {
+            let mut got = vec![u64::MAX; num_inputs]; // poisoned reuse buffer
+            pack_chunk_rows(&rows, frac_bits, num_inputs, &mut got);
+            assert_eq!(got, want);
+        }
     }
 
     /// Regression (sub-lane-word batches): packing a 3-row chunk into a

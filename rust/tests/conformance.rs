@@ -197,6 +197,9 @@ fn conformance_case(model: &DwnModel, strategy: EncoderStrategy, expect_native: 
 
     let rows = input_rows(model, 0x5EED ^ base_seed());
     let want = gate_sim_preds(&accel, &rows, frac_bits);
+    // Serving backends consume admitted rows; the same feature values flow
+    // through the gate simulator above and every backend below.
+    let shared = dwn::util::fixed::Row::from_reals(&rows);
 
     let interp = Backend::Netlist {
         netlist: nl,
@@ -206,7 +209,7 @@ fn conformance_case(model: &DwnModel, strategy: EncoderStrategy, expect_native: 
         index_width: iw,
     };
     let label = |k: String| format!("{} / {:?} / {}", model.name, strategy, k);
-    assert_eq!(interp.infer(&rows).unwrap(), want, "{}", label("interpreter".into()));
+    assert_eq!(interp.infer(&shared).unwrap(), want, "{}", label("interpreter".into()));
 
     for (hm, tm, plan) in plans {
         // Odd lanes/threads on purpose: ragged shards must not change results.
@@ -220,7 +223,7 @@ fn conformance_case(model: &DwnModel, strategy: EncoderStrategy, expect_native: 
             3,
         );
         assert_eq!(
-            backend.infer(&rows).unwrap(),
+            backend.infer(&shared).unwrap(),
             want,
             "{}",
             label(format!("compiled head={} tail={}", hm.label(), tm.label()))

@@ -1,13 +1,21 @@
 //! Coordinator integration: PJRT-backed serving end-to-end (artifacts
-//! required) + netlist-backed serving consistency between the two backends.
+//! required), netlist-backed serving consistency, and — artifact-free —
+//! sustained concurrent load over the double-buffered pipeline: per-request
+//! reply correctness, admission-order execution, counted queue-full
+//! rejections, and disjoint per-model router stats.
 
 use dwn::config::Artifacts;
-use dwn::coordinator::{Backend, Server, ServerConfig};
+use dwn::coordinator::{
+    AdmissionPolicy, Backend, Router, Row, Server, ServerConfig, SubmitError,
+};
 use dwn::data::Dataset;
+use dwn::engine::{HeadMode, TailMode};
 use dwn::hwgen::{build_accelerator, AccelOptions};
-use dwn::model::{DwnModel, Variant};
+use dwn::model::{DwnModel, SynthSpec, Variant};
 use dwn::runtime::Engine;
-use dwn::techmap::MapConfig;
+use dwn::techmap::{LutNetlist, MapConfig, MappedLut, Src};
+use dwn::util::SplitMix64;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 fn artifacts() -> Option<Artifacts> {
@@ -72,6 +80,232 @@ fn pjrt_and_netlist_backends_agree() {
     assert_eq!(agree, n, "backends disagree on {} of {} samples", n - agree, n);
 }
 
+/// Sustained concurrent load over a real compiled accelerator (synthetic
+/// model, no artifacts): several submitter threads resubmit cached rows for
+/// multiple rounds while batches overlap, and every reply must match the
+/// direct-backend ground truth for its exact request. Runs with small
+/// bounds by default (CI); scale with DWN_SUSTAINED_ROUNDS.
+#[test]
+fn sustained_load_preserves_per_request_correctness() {
+    let rounds: usize = std::env::var("DWN_SUSTAINED_ROUNDS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4);
+    let model = DwnModel::synthetic(&SynthSpec {
+        name: "synth-coord".into(),
+        num_luts: 60,
+        thermo_bits: 6,
+        num_features: 8,
+        num_classes: 3,
+        lut_k: 6,
+        frac_bits: 5,
+        seed: 0xC0D1,
+    });
+    let frac_bits = model.penft.frac_bits.unwrap();
+    let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt)).unwrap();
+    let (nl, tags, head, tail) = accel.map_with_head(&MapConfig::default());
+    let plan = dwn::engine::compile_for_modes(
+        &nl,
+        Some(&tags),
+        head.as_ref(),
+        tail.as_ref(),
+        HeadMode::Native,
+        TailMode::Native,
+    );
+    let iw = accel.index_width();
+
+    // Ground truth from a direct backend over the same plan.
+    let reference = Backend::compiled(
+        plan.clone(),
+        frac_bits,
+        model.num_features,
+        model.num_classes,
+        iw,
+        64,
+        1,
+    );
+    let mut rng = SplitMix64::new(0x10AD);
+    let cache: Vec<Row> = (0..96)
+        .map(|_| {
+            Row::from(
+                (0..model.num_features)
+                    .map(|_| (2.0 * rng.next_f64() - 1.0) as f32)
+                    .collect::<Vec<f32>>(),
+            )
+        })
+        .collect();
+    let want = reference.infer(&cache).unwrap();
+
+    let server = Server::start_compiled(
+        plan,
+        frac_bits,
+        model.num_features,
+        model.num_classes,
+        iw,
+        64,
+        2,
+        ServerConfig {
+            max_batch: 64,
+            max_wait: Duration::from_micros(200),
+            queue_depth: 256,
+            admission: AdmissionPolicy::Shed,
+        },
+    );
+
+    let shed = AtomicU64::new(0);
+    let threads = 3usize;
+    let per_round = 200usize;
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let server = &server;
+            let cache = &cache;
+            let want = &want;
+            let shed = &shed;
+            scope.spawn(move || {
+                for k in 0..rounds * per_round {
+                    let idx = (t * 7919 + k * 31) % cache.len();
+                    // Retry shed submissions: backpressure is typed and
+                    // retryable, everything else is a test failure.
+                    let rx = loop {
+                        match server.submit_row(cache[idx].clone()) {
+                            Ok(rx) => break rx,
+                            Err(SubmitError::Backpressure) => {
+                                shed.fetch_add(1, Ordering::Relaxed);
+                                std::thread::yield_now();
+                            }
+                            Err(e) => panic!("unexpected submit error: {e}"),
+                        }
+                    };
+                    let got = rx
+                        .recv_timeout(Duration::from_secs(30))
+                        .expect("no reply")
+                        .expect("infer err");
+                    assert_eq!(got, want[idx], "thread {t} request {k} (row {idx})");
+                }
+            });
+        }
+    });
+
+    let snap = server.metrics.snapshot();
+    let accepted = (threads * rounds * per_round) as u64;
+    assert_eq!(snap.requests, accepted, "every accepted request must be served");
+    assert_eq!(snap.rejected, shed.load(Ordering::Relaxed), "sheds counted exactly");
+    assert!(snap.batches >= 1);
+    // Zero-copy resubmission: once server and reference (and their joined
+    // worker pools) are gone, each cached row is held only by the cache —
+    // thousands of servings added no retained handles.
+    drop(server);
+    drop(reference);
+    for (i, row) in cache.iter().enumerate() {
+        let Row::Real(arc) = row else { unreachable!() };
+        assert_eq!(std::sync::Arc::strong_count(arc), 1, "row {i} handle leaked");
+    }
+}
+
+/// Overlapped batches must execute in admission order, and queue-full
+/// rejections must be counted exactly — asserted with the fixture backend
+/// (deterministic 15ms batches) under a single-threaded flood.
+#[test]
+fn overlap_keeps_admission_order_and_counts_rejections() {
+    let (backend, seen) = Backend::fixture(1, Duration::from_millis(15));
+    let server = Server::start_with(
+        move || Ok(backend),
+        ServerConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_depth: 4,
+            admission: AdmissionPolicy::Shed,
+        },
+    )
+    .unwrap();
+    let mut accepted = Vec::new();
+    let mut shed = 0u64;
+    for i in 0..120 {
+        // Distinct values encode submission order in the served rows.
+        match server.submit_row(Row::real(&[i as f32])) {
+            Ok(rx) => accepted.push((i, rx)),
+            Err(SubmitError::Backpressure) => shed += 1,
+            Err(e) => panic!("unexpected submit error: {e}"),
+        }
+    }
+    assert!(shed > 0, "flood never filled the bounded queue");
+    for (i, rx) in &accepted {
+        let pred = rx.recv().unwrap().unwrap();
+        assert_eq!(pred, 1, "request {i}");
+    }
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests, accepted.len() as u64);
+    assert_eq!(snap.rejected, shed);
+    // The backend saw exactly the accepted rows, in admission order, even
+    // though they were split across overlapping batches.
+    let served = seen.lock().unwrap();
+    let got: Vec<f32> = served
+        .iter()
+        .map(|r| {
+            let Row::Real(v) = r else { panic!("row kind changed") };
+            v[0]
+        })
+        .collect();
+    let submitted: Vec<f32> = accepted.iter().map(|(i, _)| *i as f32).collect();
+    assert_eq!(got, submitted);
+}
+
+/// Two models behind one router, hammered from concurrent threads: replies
+/// route correctly and per-model stats stay disjoint.
+#[test]
+fn router_keeps_per_model_stats_disjoint_under_concurrent_load() {
+    // Model "a": class = sign bit of the single feature; "b" inverts it.
+    let toy = |invert: bool| {
+        let table = if invert { 0b01 } else { 0b10 };
+        let nl = LutNetlist {
+            num_inputs: 2,
+            luts: vec![MappedLut { inputs: vec![Src::Input(1)], table }],
+            outputs: vec![Src::Lut(0)],
+        };
+        Server::start_netlist(
+            nl,
+            1,
+            1,
+            2,
+            1,
+            ServerConfig {
+                max_batch: 32,
+                max_wait: Duration::from_micros(200),
+                queue_depth: 4096,
+                admission: AdmissionPolicy::Shed,
+            },
+        )
+    };
+    let mut router = Router::new();
+    router.deploy("a", toy(false));
+    router.deploy("b", toy(true));
+
+    let per_thread = 150usize;
+    std::thread::scope(|scope| {
+        for (model, expect_neg) in [("a", 1i32), ("b", 0i32)] {
+            let router = &router;
+            scope.spawn(move || {
+                let mut pending = Vec::with_capacity(per_thread);
+                for k in 0..per_thread {
+                    let x = if k % 2 == 0 { -0.8f32 } else { 0.8 };
+                    pending.push((x, router.submit(model, &[x]).unwrap()));
+                }
+                for (x, rx) in pending {
+                    let pred = rx.recv().unwrap().unwrap();
+                    let want = if x < 0.0 { expect_neg } else { 1 - expect_neg };
+                    assert_eq!(pred, want, "model {model} x={x}");
+                }
+            });
+        }
+    });
+
+    let stats = router.stats();
+    assert_eq!(stats["a"].requests, per_thread as u64);
+    assert_eq!(stats["b"].requests, per_thread as u64);
+    assert_eq!(router.total_requests(), 2 * per_thread as u64);
+    assert_eq!(router.total_rejected(), 0);
+}
+
 #[test]
 fn backpressure_bounded_queue() {
     let Some(a) = artifacts() else { return };
@@ -84,7 +318,12 @@ fn backpressure_bounded_queue() {
         model.num_features,
         model.num_classes,
         accel.index_width(),
-        ServerConfig { max_batch: 16, max_wait: Duration::from_micros(50), queue_depth: 8 },
+        ServerConfig {
+            max_batch: 16,
+            max_wait: Duration::from_micros(50),
+            queue_depth: 8,
+            admission: AdmissionPolicy::Shed,
+        },
     );
     // Flood; some submissions may be rejected (bounded queue) but none may
     // hang or panic, and all accepted ones must complete.

@@ -189,7 +189,8 @@ fn compiled_serving_path_matches_interpreter_on_accelerator() {
             (0..model.num_features).map(|_| (2.0 * rng.next_f64() - 1.0) as f32).collect()
         })
         .collect();
-    let a = interp.infer(&rows).unwrap();
-    let b = compiled.infer(&rows).unwrap();
+    let shared = dwn::util::fixed::Row::from_reals(&rows);
+    let a = interp.infer(&shared).unwrap();
+    let b = compiled.infer(&shared).unwrap();
     assert_eq!(a, b);
 }

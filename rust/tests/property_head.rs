@@ -271,7 +271,7 @@ fn head_tail_matrix_parity_and_int_rows_on_full_accelerator() {
             3,
         );
         assert_eq!(
-            backend.infer(&rows).unwrap(),
+            backend.infer(&dwn::util::fixed::Row::from_reals(&rows)).unwrap(),
             want,
             "head={} tail={}",
             hm.label(),

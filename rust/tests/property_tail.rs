@@ -233,11 +233,15 @@ fn pool_determinism_under_odd_shard_sizes() {
             (0..model.num_features).map(|_| (2.0 * rng.next_f64() - 1.0) as f32).collect()
         })
         .collect();
+    let shared = dwn::util::fixed::Row::from_reals(&rows);
     for n in [1usize, 2, 4, 63, 64, 65, 127, 130, 300] {
-        let slice = &rows[..n];
-        let want = engine::infer_fixed_batch(&plan, slice, frac_bits, iw, 64, 1);
+        let want = engine::infer_fixed_batch(&plan, &rows[..n], frac_bits, iw, 64, 1);
         for round in 0..3 {
-            assert_eq!(pooled.infer(slice).unwrap(), want, "batch {n} round {round}");
+            assert_eq!(
+                pooled.infer(&shared[..n]).unwrap(),
+                want,
+                "batch {n} round {round}"
+            );
         }
     }
 }
