@@ -16,9 +16,15 @@
 //! synthetic JSC-sized model stands in, which is what the CI smoke step
 //! exercises across the head×tail matrix.
 //!
+//! `--metrics-every S` prints a one-line metrics brief every S seconds
+//! while the rate sweep runs; the final report is always the per-stage
+//! latency table (queue-wait → batch-form → head-pack → lut-exec → tail →
+//! reply) plus shed count, mean batch size, and the drainer-overlap ratio.
+//!
 //!     cargo run --release --example serve_jsc -- \
 //!         [--model sm-50] [--backend pjrt|netlist|compiled] [--lanes 256] \
-//!         [--threads N] [--head native|lut] [--tail native|lut] [--smoke]
+//!         [--threads N] [--head native|lut] [--tail native|lut] \
+//!         [--metrics-every S] [--smoke]
 
 use dwn::config::{Args, Artifacts};
 use dwn::coordinator::{AdmissionPolicy, Backend, Row, Server, ServerConfig};
@@ -145,6 +151,16 @@ fn main() -> anyhow::Result<()> {
         }
         other => anyhow::bail!("unknown backend '{other}' (pjrt|netlist|compiled)"),
     };
+    let metrics_every = args.get_usize("metrics-every", 0)?;
+    let _reporter = if metrics_every > 0 {
+        let metrics = server.metrics.clone();
+        Some(dwn::telemetry::Reporter::spawn(
+            Duration::from_secs(metrics_every as u64),
+            move || println!("[metrics] {}", metrics.snapshot().render_brief()),
+        ))
+    } else {
+        None
+    };
     println!("{:>12} {:>12} {:>10} {:>10} {:>10} {:>11} {:>9}", "target req/s", "achieved", "p50 us", "p99 us", "max us", "mean batch", "shed");
 
     let rates: &[u64] =
@@ -198,5 +214,9 @@ fn main() -> anyhow::Result<()> {
             snap.rejected
         );
     }
+    // Final request-path report over the whole sweep: per-stage percentiles
+    // plus the shed / batch-size / drainer-overlap counters.
+    println!("\nfinal request-path report:");
+    println!("{}", server.metrics.snapshot().render_table());
     Ok(())
 }

@@ -17,8 +17,12 @@
 //! cheapest relative to coordination: rows/sec there isolates coordinator
 //! overhead, the convoy/copy cost this PR removes.
 //!
-//! Besides the table, the run writes `BENCH_serve.json` (rows/sec per arm
-//! per batch) so the perf trajectory is machine-readable across PRs.
+//! Besides the table, the run writes `BENCH_serve.json` so the perf
+//! trajectory is machine-readable across PRs: per arm per batch rows/sec
+//! plus batch-call latency percentiles (p50/p99/p999/max, log-bucket
+//! histogram), a `stage_breakdown` per head×tail pool arm (head-pack /
+//! lut-exec / tail percentiles from the pool's telemetry), and the server
+//! arm's full metrics snapshot (per-stage table, shed/overlap counters).
 //! `DWN_BENCH_QUICK=1` shrinks iteration counts for CI smoke runs.
 //!
 //!     cargo bench --bench serve_throughput
@@ -28,9 +32,12 @@ use dwn::config::Artifacts;
 use dwn::coordinator::{AdmissionPolicy, Backend, Row, Server, ServerConfig};
 use dwn::engine::{HeadMode, TailMode};
 use dwn::hwgen::{build_accelerator, AccelOptions, Component};
+use dwn::json::Value;
 use dwn::model::{DwnModel, SynthSpec, Variant};
 use dwn::techmap::MapConfig;
+use dwn::telemetry::{HistSummary, LatencyHistogram, Stage};
 use dwn::util::SplitMix64;
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 /// Rows per timing rep; quick mode (`DWN_BENCH_QUICK=1`) keeps CI smoke
@@ -140,16 +147,17 @@ fn main() {
         "\n{:>7} {:>14} {:>13} {:>13} {:>13} {:>13} {:>8}",
         "batch", "interp r/s", "lut/lut", "native/lut", "lut/native", "native/native", "gain"
     );
-    let mut records: Vec<String> = Vec::new();
+    let mut records: Vec<Value> = Vec::new();
     for batch in [64usize, 256, 1024, 4096] {
         let slice = &rows[..batch];
-        let interp_rps = rows_per_sec(slice, |r| interp.infer(r).unwrap());
-        records.push(arm_record("interp", "-", "-", batch, interp_rps));
+        let (interp_rps, interp_lat) = rows_per_sec(slice, |r| interp.infer(r).unwrap());
+        records.push(arm_record("interp", "-", "-", batch, interp_rps, &interp_lat));
         let mut rps = [0f64; 4];
         for (i, pool) in pools.iter().enumerate() {
-            rps[i] = rows_per_sec(slice, |r| pool.infer(r).unwrap());
+            let (arm_rps, lat) = rows_per_sec(slice, |r| pool.infer(r).unwrap());
+            rps[i] = arm_rps;
             let (hm, tm) = MODES[i];
-            records.push(arm_record("pool", hm.label(), tm.label(), batch, rps[i]));
+            records.push(arm_record("pool", hm.label(), tm.label(), batch, arm_rps, &lat));
         }
         println!(
             "{:>7} {:>14.0} {:>13.0} {:>13.0} {:>13.0} {:>13.0} {:>7.2}x",
@@ -186,18 +194,53 @@ fn main() {
     println!("\n{:>7} {:>14}   (closed-loop server, native/native)", "window", "server r/s");
     for window in [16usize, 64] {
         let rps = server_rows_per_sec(&server, &rows, window);
-        records.push(arm_record("server", "native", "native", window, rps));
+        // Server-arm percentiles are true per-request end-to-end latencies
+        // from the coordinator's own histograms (cumulative over windows).
+        let snap = server.metrics.snapshot();
+        let lat = HistSummary {
+            count: snap.requests,
+            p50_ns: snap.p50_us * 1000,
+            p99_ns: snap.p99_us * 1000,
+            p999_ns: snap.p999_us * 1000,
+            max_ns: snap.max_us * 1000,
+            mean_ns: 0.0,
+        };
+        records.push(arm_record("server", "native", "native", window, rps, &lat));
         println!("{:>7} {:>14.0}", window, rps);
     }
 
-    let json = format!(
-        "{{\"model\":\"{}\",\"luts\":{},\"arms\":[\n{}\n]}}\n",
-        model.name,
-        nl_luts(&plans[0]),
-        records.join(",\n")
-    );
+    // Per head×tail pool arm: engine-side stage percentiles accumulated over
+    // every batch size the arm served above.
+    let mut breakdown: Vec<Value> = Vec::new();
+    for (i, pool) in pools.iter().enumerate() {
+        let Some(tel) = pool.engine_telemetry() else { continue };
+        let (hm, tm) = MODES[i];
+        let mut m = BTreeMap::new();
+        m.insert("head".to_string(), Value::Str(hm.label().to_string()));
+        m.insert("tail".to_string(), Value::Str(tm.label().to_string()));
+        let mut stages = BTreeMap::new();
+        for stage in [Stage::HeadPack, Stage::LutExec, Stage::Tail] {
+            let s = tel.stages.get(stage).summary();
+            if s.count > 0 {
+                stages.insert(stage.label().to_string(), summary_json(&s));
+            }
+        }
+        m.insert("stages".to_string(), Value::Obj(stages));
+        breakdown.push(Value::Obj(m));
+    }
+
+    let mut top = BTreeMap::new();
+    top.insert("model".to_string(), Value::Str(model.name.clone()));
+    top.insert("luts".to_string(), Value::Num(nl_luts(&plans[0]) as f64));
+    let arm_count = records.len();
+    top.insert("arms".to_string(), Value::Arr(records));
+    top.insert("stage_breakdown".to_string(), Value::Arr(breakdown));
+    // Full coordinator snapshot of the server arm: per-stage rows including
+    // queue-wait/batch-form/reply, shed + overlap counters.
+    top.insert("server".to_string(), server.metrics.snapshot().to_json());
+    let json = dwn::json::write(&Value::Obj(top));
     match std::fs::write("BENCH_serve.json", &json) {
-        Ok(()) => println!("\nwrote BENCH_serve.json ({} arm records)", records.len()),
+        Ok(()) => println!("\nwrote BENCH_serve.json ({arm_count} arm records)"),
         Err(e) => println!("\ncould not write BENCH_serve.json: {e}"),
     }
 
@@ -276,29 +319,61 @@ fn nl_luts(plan: &dwn::engine::ExecPlan) -> usize {
     plan.stats.source_luts
 }
 
-/// One machine-readable arm record for `BENCH_serve.json`.
-fn arm_record(backend: &str, head: &str, tail: &str, batch: usize, rps: f64) -> String {
-    format!(
-        "  {{\"backend\":\"{backend}\",\"head\":\"{head}\",\"tail\":\"{tail}\",\"batch\":{batch},\"rows_per_sec\":{rps:.0}}}"
-    )
+/// Latency percentiles of a [`HistSummary`] as a JSON object (µs).
+fn summary_json(s: &HistSummary) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("count".to_string(), Value::Num(s.count as f64));
+    m.insert("p50_us".to_string(), Value::Num(s.p50_us() as f64));
+    m.insert("p99_us".to_string(), Value::Num(s.p99_us() as f64));
+    m.insert("p999_us".to_string(), Value::Num(s.p999_us() as f64));
+    m.insert("max_us".to_string(), Value::Num(s.max_us() as f64));
+    Value::Obj(m)
+}
+
+/// One machine-readable arm record for `BENCH_serve.json`: throughput plus
+/// the arm's latency percentiles.
+fn arm_record(
+    backend: &str,
+    head: &str,
+    tail: &str,
+    batch: usize,
+    rps: f64,
+    lat: &HistSummary,
+) -> Value {
+    let mut m = BTreeMap::new();
+    m.insert("backend".to_string(), Value::Str(backend.to_string()));
+    m.insert("head".to_string(), Value::Str(head.to_string()));
+    m.insert("tail".to_string(), Value::Str(tail.to_string()));
+    m.insert("batch".to_string(), Value::Num(batch as f64));
+    m.insert("rows_per_sec".to_string(), Value::Num(rps.round()));
+    m.insert("p50_us".to_string(), Value::Num(lat.p50_us() as f64));
+    m.insert("p99_us".to_string(), Value::Num(lat.p99_us() as f64));
+    m.insert("p999_us".to_string(), Value::Num(lat.p999_us() as f64));
+    m.insert("max_us".to_string(), Value::Num(lat.max_us() as f64));
+    Value::Obj(m)
 }
 
 /// Median-of-3 timed repetitions, enough iterations to amortize noise.
-fn rows_per_sec(rows: &[Row], infer: impl Fn(&[Row]) -> Vec<i32>) -> f64 {
+/// Also histograms every timed batch-call latency (log-bucket, O(1) memory)
+/// and returns its percentile summary alongside the median throughput.
+fn rows_per_sec(rows: &[Row], infer: impl Fn(&[Row]) -> Vec<i32>) -> (f64, HistSummary) {
     let iters = (target_rows() / rows.len()).max(1);
     let _ = infer(rows); // warmup
+    let hist = LatencyHistogram::new();
     let mut samples: Vec<f64> = (0..3)
         .map(|_| {
             let t0 = Instant::now();
             for _ in 0..iters {
+                let tc = Instant::now();
                 let preds = infer(rows);
+                hist.record(tc.elapsed());
                 assert_eq!(preds.len(), rows.len());
             }
             (iters * rows.len()) as f64 / t0.elapsed().as_secs_f64()
         })
         .collect();
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    samples[1]
+    (samples[1], hist.summary())
 }
 
 /// Closed-loop serving throughput: keep `window` requests in flight through

@@ -13,8 +13,10 @@ use super::metrics::Metrics;
 use crate::engine::{EnginePool, ExecPlan};
 use crate::runtime::Engine;
 use crate::techmap::LutNetlist;
+use crate::telemetry::{PoolTelemetry, Stage};
 use crate::util::fixed::{self, Row};
 use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{
     sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError,
 };
@@ -104,6 +106,17 @@ impl Backend {
             Backend::Netlist { num_features, .. } => *num_features,
             Backend::Compiled { num_features, .. } => *num_features,
             Backend::Fixture { num_features, .. } => *num_features,
+        }
+    }
+
+    /// The engine pool's telemetry handle (head-pack / lut-exec / tail
+    /// stage histograms + worker busy/idle), for backends that own a pool.
+    /// The serving loop attaches it to [`Metrics`] so serving snapshots
+    /// cover the whole request path; benches read it directly.
+    pub fn engine_telemetry(&self) -> Option<Arc<PoolTelemetry>> {
+        match self {
+            Backend::Compiled { pool, .. } => Some(pool.telemetry()),
+            _ => None,
         }
     }
 
@@ -483,25 +496,48 @@ fn serve_loop(
     max_batch: usize,
     metrics: Arc<Metrics>,
 ) {
+    // Pool-owning backends stamp head/lut/tail spans into their own
+    // telemetry; linking it here makes one snapshot cover the whole path.
+    if let Some(t) = backend.engine_telemetry() {
+        metrics.attach_engine(t);
+    }
+    // Overlap observation: the executor raises this while a batch runs; the
+    // drainer samples it the moment a batch is fully drained. Sampling, not
+    // a fence — the count is a statistic, not a synchronization.
+    let executing = Arc::new(AtomicBool::new(false));
     let (batch_tx, batch_rx) = sync_channel::<Batch>(1);
-    let drainer = std::thread::Builder::new()
-        .name("dwn-batch-drain".into())
-        .spawn(move || drain_loop(&rx, max_batch, cfg.max_wait, &batch_tx))
-        .expect("spawn batch drainer");
+    let drainer = {
+        let m = metrics.clone();
+        let busy = executing.clone();
+        std::thread::Builder::new()
+            .name("dwn-batch-drain".into())
+            .spawn(move || drain_loop(&rx, max_batch, cfg.max_wait, &batch_tx, &m, &busy))
+            .expect("spawn batch drainer")
+    };
     while let Ok(batch) = batch_rx.recv() {
+        executing.store(true, Ordering::Release);
         execute_batch(&backend, batch, &metrics);
+        executing.store(false, Ordering::Release);
     }
     let _ = drainer.join();
 }
 
 /// Pull jobs off the request queue into batches until the queue closes.
+/// Stamps per-request queue-wait and per-batch batch-form spans, and counts
+/// a drainer overlap whenever a batch completes while the executor is busy
+/// — the double-buffering win, finally observable from the outside.
 fn drain_loop(
     rx: &Receiver<Job>,
     max_batch: usize,
     max_wait: Duration,
     batch_tx: &SyncSender<Batch>,
+    metrics: &Metrics,
+    executing: &AtomicBool,
 ) {
-    while let Some(batch) = collect_batch(rx, max_batch, max_wait) {
+    while let Some(batch) = collect_batch(rx, max_batch, max_wait, metrics) {
+        if executing.load(Ordering::Acquire) {
+            metrics.record_overlap();
+        }
         if batch_tx.send(batch).is_err() {
             return; // executor died; jobs it held already got their errors
         }
@@ -511,24 +547,37 @@ fn drain_loop(
 /// Block for the first request, then fill until `max_batch` rows or the
 /// `max_wait` deadline. Returns `None` once the queue is closed and empty.
 /// Each job's feature row is *moved* into the batch — the pre-PR-5 loop
-/// cloned every row here, once per batch, on the hot path.
-fn collect_batch(rx: &Receiver<Job>, max_batch: usize, max_wait: Duration) -> Option<Batch> {
+/// cloned every row here, once per batch, on the hot path. Each pop records
+/// the job's queue-wait (submit → drained); the whole fill records one
+/// batch-form span (first pop → batch complete).
+fn collect_batch(
+    rx: &Receiver<Job>,
+    max_batch: usize,
+    max_wait: Duration,
+    metrics: &Metrics,
+) -> Option<Batch> {
     let first = rx.recv().ok()?;
+    let t_form = Instant::now();
+    metrics.record_stage(Stage::QueueWait, t_form - first.enqueued);
     let mut batch = Batch::with_capacity(max_batch.min(4096));
     batch.push(first);
-    let deadline = Instant::now() + max_wait;
+    let deadline = t_form + max_wait;
     while batch.len() < max_batch {
         let now = Instant::now();
         if now >= deadline {
             break;
         }
         match rx.recv_timeout(deadline - now) {
-            Ok(j) => batch.push(j),
+            Ok(j) => {
+                metrics.record_stage(Stage::QueueWait, j.enqueued.elapsed());
+                batch.push(j);
+            }
             // Timeout: the batch is as full as it gets. Disconnected: flush
             // what we have; the next collect_batch call returns None.
             Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
         }
     }
+    metrics.record_stage(Stage::BatchForm, t_form.elapsed());
     Some(batch)
 }
 
@@ -545,6 +594,7 @@ fn execute_batch(backend: &Backend, batch: Batch, metrics: &Metrics) {
     let done = Instant::now();
     let lats: Vec<Duration> = waiters.iter().map(|(enq, _)| done - *enq).collect();
     metrics.record_batch(n, exec, &lats);
+    let t_reply = Instant::now();
     match result {
         Ok(preds) => {
             for ((_, reply), pred) in waiters.into_iter().zip(preds) {
@@ -557,6 +607,7 @@ fn execute_batch(backend: &Backend, batch: Batch, metrics: &Metrics) {
             }
         }
     }
+    metrics.record_stage(Stage::ReplySplice, t_reply.elapsed());
 }
 
 #[cfg(test)]
@@ -598,6 +649,15 @@ mod tests {
         assert!(snap.requests >= 18);
         assert!(snap.batches >= 2);
         assert_eq!(snap.rejected, 0);
+        // Every served request was drained exactly once into a batch.
+        let qw = snap.stage(Stage::QueueWait).expect("queue-wait stage recorded");
+        assert_eq!(qw.count, snap.requests);
+        let bf = snap.stage(Stage::BatchForm).expect("batch-form stage recorded");
+        assert_eq!(bf.count, snap.batches);
+        assert_eq!(
+            snap.stage(Stage::ReplySplice).expect("reply stage recorded").count,
+            snap.batches
+        );
     }
 
     #[test]
@@ -779,6 +839,14 @@ mod tests {
         for rx in second {
             assert_eq!(rx.recv().unwrap().unwrap(), 0);
         }
+        // The PR 5 double-buffering claim, now observable: the second batch
+        // finished draining while the first still executed.
+        let snap = server.metrics.snapshot();
+        assert!(
+            snap.overlapped > 0,
+            "drainer overlap never observed across {} batches",
+            snap.batches
+        );
     }
 
     #[test]

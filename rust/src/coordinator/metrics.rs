@@ -1,29 +1,50 @@
-//! Serving metrics: latency percentiles + throughput counters.
+//! Serving metrics: atomic counters + fixed-footprint latency histograms.
+//!
+//! Everything here is O(buckets) memory and lock-free on the record path:
+//! the pre-telemetry store kept every latency in an unbounded `Vec<u64>` and
+//! cloned + sorted the whole history under a mutex on every `snapshot()` —
+//! unusable at millions-of-requests scale. Now `record_batch` is a handful
+//! of relaxed atomic adds, `requests()`/`rejected()` are plain counter
+//! loads, and `snapshot()` walks 128-bucket histograms (no sorting, no
+//! cloning, no allocation proportional to history).
+//!
+//! Besides end-to-end latency, `Metrics` owns the coordinator-side stage
+//! histograms (queue-wait / batch-form / reply — stamped by the drainer and
+//! executor threads) and can have one engine-side [`PoolTelemetry`]
+//! attached (head-pack / lut-exec / tail + worker busy/idle, stamped by the
+//! pool workers), so one [`Snapshot`] exposes the whole request path.
 
-use std::sync::Mutex;
+use crate::json::Value;
+use crate::telemetry::{LatencyHistogram, PoolTelemetry, Stage, StageSet};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
 use std::time::Duration;
 
-/// Lock-protected metrics store (single coordinator thread writes, readers
-/// snapshot).
+/// Lock-free metrics store shared between the serving threads (writers) and
+/// snapshot readers.
 #[derive(Debug, Default)]
 pub struct Metrics {
-    inner: Mutex<Inner>,
+    requests: AtomicU64,
+    batches: AtomicU64,
+    rejected: AtomicU64,
+    busy_ns: AtomicU64,
+    /// Batches fully drained while another batch was still executing — the
+    /// double-buffering overlap the drainer observes (approximate: the
+    /// executing flag is sampled, not fenced against batch hand-off).
+    overlapped: AtomicU64,
+    /// End-to-end latency (submit → reply spliced).
+    e2e: LatencyHistogram,
+    /// Coordinator-side stages: queue-wait, batch-form, reply.
+    stages: StageSet,
+    /// Engine-side stages + busy/idle counters, attached once by the
+    /// serving loop when the backend owns an [`crate::engine::EnginePool`].
+    engine: OnceLock<Arc<PoolTelemetry>>,
 }
 
-#[derive(Debug, Default)]
-struct Inner {
-    /// End-to-end request latencies (us).
-    latencies_us: Vec<u64>,
-    /// Batch sizes executed.
-    batch_sizes: Vec<usize>,
-    requests: u64,
-    batches: u64,
-    busy_us: u64,
-    /// Submissions shed at admission (queue full under `AdmissionPolicy::Shed`).
-    rejected: u64,
-}
-
-/// Point-in-time metrics view.
+/// Point-in-time metrics view. Latency fields are µs with the histogram's
+/// ≤25% bucket error (maxima are exact); counters are exact.
 #[derive(Debug, Clone, Default)]
 pub struct Snapshot {
     pub requests: u64,
@@ -31,68 +52,246 @@ pub struct Snapshot {
     pub mean_batch: f64,
     pub p50_us: u64,
     pub p99_us: u64,
+    pub p999_us: u64,
     pub max_us: u64,
     pub busy_us: u64,
     /// Requests shed at admission; disjoint from `requests` (a shed request
     /// was never queued, so it is never double-counted on retry success).
     pub rejected: u64,
+    /// Batches drained before the previous batch finished executing.
+    pub overlapped: u64,
+    /// Total pool-worker busy time (0 when the backend has no pool).
+    pub worker_busy_us: u64,
+    /// Total pool-worker parked-idle time (0 when the backend has no pool).
+    pub worker_idle_us: u64,
+    /// Per-stage percentiles, in [`Stage::ALL`] order, stages with no
+    /// recordings omitted.
+    pub stages: Vec<StageSnapshot>,
+}
+
+/// One stage's latency summary inside a [`Snapshot`].
+#[derive(Debug, Clone)]
+pub struct StageSnapshot {
+    pub stage: Stage,
+    pub count: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub p999_us: u64,
+    pub max_us: u64,
 }
 
 impl Metrics {
+    /// Account one executed batch: size/exec counters plus one end-to-end
+    /// latency record per request. Lock-free; O(size) histogram increments.
     pub fn record_batch(&self, size: usize, exec: Duration, latencies: &[Duration]) {
-        let mut m = self.inner.lock().unwrap();
-        m.batches += 1;
-        m.requests += size as u64;
-        m.batch_sizes.push(size);
-        m.busy_us += exec.as_micros() as u64;
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.requests.fetch_add(size as u64, Ordering::Relaxed);
+        self.busy_ns
+            .fetch_add(exec.as_nanos().min(u64::MAX as u128) as u64, Ordering::Relaxed);
         for l in latencies {
-            m.latencies_us.push(l.as_micros() as u64);
+            self.e2e.record(*l);
         }
     }
 
     /// Count one submission shed at admission (queue full).
     pub fn record_rejected(&self) {
-        self.inner.lock().unwrap().rejected += 1;
+        self.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Requests served so far — a plain counter read, unlike
-    /// [`Self::snapshot`], which clones and sorts the whole latency history
-    /// under the lock. Pollers wanting only totals must use these.
+    /// Record one coordinator-side stage span (queue-wait / batch-form /
+    /// reply; the engine-side stages arrive via [`Self::attach_engine`]).
+    #[inline]
+    pub fn record_stage(&self, stage: Stage, d: Duration) {
+        self.stages.record(stage, d);
+    }
+
+    /// Count one batch drained while another was still executing.
+    pub fn record_overlap(&self) {
+        self.overlapped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Link the engine pool's telemetry into this store's snapshots. Called
+    /// once by the serving loop after backend construction; later calls are
+    /// ignored (the first pool wins — a server never swaps backends).
+    pub fn attach_engine(&self, t: Arc<PoolTelemetry>) {
+        let _ = self.engine.set(t);
+    }
+
+    /// Requests served so far — a plain atomic load; safe to poll at any
+    /// rate.
     pub fn requests(&self) -> u64 {
-        self.inner.lock().unwrap().requests
+        self.requests.load(Ordering::Relaxed)
     }
 
-    /// Requests shed at admission so far (counter read; see
+    /// Requests shed at admission so far (atomic load, like
     /// [`Self::requests`]).
     pub fn rejected(&self) -> u64 {
-        self.inner.lock().unwrap().rejected
+        self.rejected.load(Ordering::Relaxed)
     }
 
+    /// Build a [`Snapshot`]: counter loads plus one 128-bucket walk per
+    /// quantile — no locks, no sorting, no history cloning. Concurrent
+    /// recording keeps going; the snapshot is consistent to within the
+    /// records in flight at the instant of each load.
     pub fn snapshot(&self) -> Snapshot {
-        let m = self.inner.lock().unwrap();
-        let mut lat = m.latencies_us.clone();
-        lat.sort_unstable();
-        let pick = |q: f64| -> u64 {
-            if lat.is_empty() {
-                0
+        let requests = self.requests();
+        let batches = self.batches.load(Ordering::Relaxed);
+        let e2e = self.e2e.summary();
+        let engine = self.engine.get();
+        let mut stages = Vec::with_capacity(Stage::COUNT);
+        for stage in Stage::ALL {
+            // Stage ownership is disjoint: the coordinator set records
+            // queue-wait/batch-form/reply, the engine set head/lut/tail —
+            // whichever holds recordings for this stage supplies them.
+            let own = self.stages.get(stage).summary();
+            let s = if own.count > 0 {
+                own
             } else {
-                lat[((lat.len() - 1) as f64 * q) as usize]
+                match engine {
+                    Some(t) => t.stages.get(stage).summary(),
+                    None => own,
+                }
+            };
+            if s.count > 0 {
+                stages.push(StageSnapshot {
+                    stage,
+                    count: s.count,
+                    p50_us: s.p50_us(),
+                    p99_us: s.p99_us(),
+                    p999_us: s.p999_us(),
+                    max_us: s.max_us(),
+                });
             }
-        };
-        Snapshot {
-            requests: m.requests,
-            batches: m.batches,
-            mean_batch: if m.batches == 0 {
-                0.0
-            } else {
-                m.batch_sizes.iter().sum::<usize>() as f64 / m.batches as f64
-            },
-            p50_us: pick(0.5),
-            p99_us: pick(0.99),
-            max_us: lat.last().copied().unwrap_or(0),
-            busy_us: m.busy_us,
-            rejected: m.rejected,
         }
+        Snapshot {
+            requests,
+            batches,
+            mean_batch: if batches == 0 { 0.0 } else { requests as f64 / batches as f64 },
+            p50_us: e2e.p50_us(),
+            p99_us: e2e.p99_us(),
+            p999_us: e2e.p999_us(),
+            max_us: e2e.max_us(),
+            busy_us: self.busy_ns.load(Ordering::Relaxed) / 1000,
+            rejected: self.rejected(),
+            overlapped: self.overlapped.load(Ordering::Relaxed),
+            worker_busy_us: engine.map(|t| t.busy_ns() / 1000).unwrap_or(0),
+            worker_idle_us: engine.map(|t| t.idle_ns() / 1000).unwrap_or(0),
+            stages,
+        }
+    }
+}
+
+impl Snapshot {
+    /// Fraction of batches drained while another still executed — the
+    /// double-buffering claim, observed (1.0 = every batch overlapped).
+    pub fn overlap_ratio(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.overlapped as f64 / self.batches as f64
+        }
+    }
+
+    /// Stage row lookup by stage.
+    pub fn stage(&self, stage: Stage) -> Option<&StageSnapshot> {
+        self.stages.iter().find(|s| s.stage == stage)
+    }
+
+    /// JSON exposition via the in-repo [`crate::json`] module — the body a
+    /// metrics endpoint (or BENCH_serve.json) serializes.
+    pub fn to_json(&self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("requests".into(), Value::Num(self.requests as f64));
+        m.insert("batches".into(), Value::Num(self.batches as f64));
+        m.insert("mean_batch".into(), Value::Num(self.mean_batch));
+        m.insert("p50_us".into(), Value::Num(self.p50_us as f64));
+        m.insert("p99_us".into(), Value::Num(self.p99_us as f64));
+        m.insert("p999_us".into(), Value::Num(self.p999_us as f64));
+        m.insert("max_us".into(), Value::Num(self.max_us as f64));
+        m.insert("busy_us".into(), Value::Num(self.busy_us as f64));
+        m.insert("rejected".into(), Value::Num(self.rejected as f64));
+        m.insert("overlapped".into(), Value::Num(self.overlapped as f64));
+        m.insert("overlap_ratio".into(), Value::Num(self.overlap_ratio()));
+        m.insert("worker_busy_us".into(), Value::Num(self.worker_busy_us as f64));
+        m.insert("worker_idle_us".into(), Value::Num(self.worker_idle_us as f64));
+        let mut stages = BTreeMap::new();
+        for s in &self.stages {
+            let mut sm = BTreeMap::new();
+            sm.insert("count".into(), Value::Num(s.count as f64));
+            sm.insert("p50_us".into(), Value::Num(s.p50_us as f64));
+            sm.insert("p99_us".into(), Value::Num(s.p99_us as f64));
+            sm.insert("p999_us".into(), Value::Num(s.p999_us as f64));
+            sm.insert("max_us".into(), Value::Num(s.max_us as f64));
+            stages.insert(s.stage.label().to_string(), Value::Obj(sm));
+        }
+        m.insert("stages".into(), Value::Obj(stages));
+        Value::Obj(m)
+    }
+
+    /// One-line summary for periodic reports (`--metrics-every`).
+    pub fn render_brief(&self) -> String {
+        format!(
+            "requests={} shed={} p50={}us p99={}us p999={}us mean_batch={:.1} overlap={:.2}",
+            self.requests,
+            self.rejected,
+            self.p50_us,
+            self.p99_us,
+            self.p999_us,
+            self.mean_batch,
+            self.overlap_ratio()
+        )
+    }
+
+    /// Aligned final-report table: the summary counters followed by one row
+    /// per recorded stage and the end-to-end row.
+    pub fn render_table(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "requests {}   batches {}   mean batch {:.1}   shed {}   overlap {:.2}   busy {:.1} ms",
+            self.requests,
+            self.batches,
+            self.mean_batch,
+            self.rejected,
+            self.overlap_ratio(),
+            self.busy_us as f64 / 1000.0
+        );
+        if self.worker_busy_us + self.worker_idle_us > 0 {
+            let _ = writeln!(
+                out,
+                "pool workers: busy {:.1} ms / idle {:.1} ms",
+                self.worker_busy_us as f64 / 1000.0,
+                self.worker_idle_us as f64 / 1000.0
+            );
+        }
+        let _ = writeln!(
+            out,
+            "{:<12} {:>10} {:>9} {:>9} {:>9} {:>9}",
+            "stage", "count", "p50 us", "p99 us", "p999 us", "max us"
+        );
+        for s in &self.stages {
+            let _ = writeln!(
+                out,
+                "{:<12} {:>10} {:>9} {:>9} {:>9} {:>9}",
+                s.stage.label(),
+                s.count,
+                s.p50_us,
+                s.p99_us,
+                s.p999_us,
+                s.max_us
+            );
+        }
+        let _ = write!(
+            out,
+            "{:<12} {:>10} {:>9} {:>9} {:>9} {:>9}",
+            "e2e",
+            self.requests,
+            self.p50_us,
+            self.p99_us,
+            self.p999_us,
+            self.max_us
+        );
+        out
     }
 }
 
@@ -101,7 +300,7 @@ mod tests {
     use super::*;
 
     #[test]
-    fn snapshot_percentiles() {
+    fn snapshot_percentiles_within_bucket_error() {
         let m = Metrics::default();
         let lats: Vec<Duration> = (1..=100).map(Duration::from_micros).collect();
         m.record_batch(100, Duration::from_micros(500), &lats);
@@ -109,9 +308,25 @@ mod tests {
         assert_eq!(s.requests, 100);
         assert_eq!(s.batches, 1);
         assert_eq!(s.mean_batch, 100.0);
-        assert!(s.p50_us >= 45 && s.p50_us <= 55, "p50={}", s.p50_us);
-        assert!(s.p99_us >= 95, "p99={}", s.p99_us);
+        // Nearest-rank ceil + ≤25% bucket over-report: p50 ∈ [50, 62],
+        // p99 ∈ [99, 123]; the max is exact.
+        assert!(s.p50_us >= 50 && s.p50_us <= 62, "p50={}", s.p50_us);
+        assert!(s.p99_us >= 99 && s.p99_us <= 123, "p99={}", s.p99_us);
+        assert!(s.p999_us >= s.p99_us, "p999={} < p99={}", s.p999_us, s.p99_us);
         assert_eq!(s.max_us, 100);
+        assert_eq!(s.busy_us, 500);
+    }
+
+    #[test]
+    fn small_n_quantiles_do_not_under_report() {
+        // Regression for the floor-index truncation: p99 of 10 samples must
+        // be the max, not the 9th-smallest.
+        let m = Metrics::default();
+        let lats: Vec<Duration> = (1..=10).map(|i| Duration::from_micros(i * 100)).collect();
+        m.record_batch(10, Duration::from_micros(1), &lats);
+        let s = m.snapshot();
+        assert_eq!(s.max_us, 1000);
+        assert!(s.p99_us >= 1000, "p99 under-reports the tail: {}", s.p99_us);
     }
 
     #[test]
@@ -119,7 +334,10 @@ mod tests {
         let s = Metrics::default().snapshot();
         assert_eq!(s.requests, 0);
         assert_eq!(s.p99_us, 0);
+        assert_eq!(s.p999_us, 0);
         assert_eq!(s.rejected, 0);
+        assert_eq!(s.overlap_ratio(), 0.0);
+        assert!(s.stages.is_empty());
     }
 
     #[test]
@@ -131,5 +349,71 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.rejected, 2);
         assert_eq!(s.requests, 3);
+        assert_eq!(m.requests(), 3);
+        assert_eq!(m.rejected(), 2);
+    }
+
+    #[test]
+    fn stage_records_and_overlap_surface_in_snapshot() {
+        let m = Metrics::default();
+        m.record_stage(Stage::QueueWait, Duration::from_micros(30));
+        m.record_stage(Stage::QueueWait, Duration::from_micros(60));
+        m.record_stage(Stage::BatchForm, Duration::from_micros(10));
+        m.record_batch(2, Duration::from_micros(5), &[Duration::from_micros(70); 2]);
+        m.record_overlap();
+        let s = m.snapshot();
+        let qw = s.stage(Stage::QueueWait).expect("queue-wait row");
+        assert_eq!(qw.count, 2);
+        assert!(qw.p99_us >= 60 && qw.p99_us <= 75);
+        assert!(s.stage(Stage::LutExec).is_none(), "no engine attached");
+        assert_eq!(s.overlapped, 1);
+        assert_eq!(s.overlap_ratio(), 1.0);
+    }
+
+    #[test]
+    fn attached_engine_stages_merge_into_snapshot() {
+        let m = Metrics::default();
+        let pool = Arc::new(crate::telemetry::PoolTelemetry::new());
+        pool.stages.record(Stage::LutExec, Duration::from_micros(12));
+        pool.add_busy(Duration::from_micros(20));
+        pool.add_idle(Duration::from_micros(80));
+        m.attach_engine(pool);
+        let s = m.snapshot();
+        let lut = s.stage(Stage::LutExec).expect("lut-exec row from the pool");
+        assert_eq!(lut.count, 1);
+        assert_eq!(s.worker_busy_us, 20);
+        assert_eq!(s.worker_idle_us, 80);
+    }
+
+    #[test]
+    fn json_and_table_exposition() {
+        let m = Metrics::default();
+        m.record_stage(Stage::QueueWait, Duration::from_micros(40));
+        m.record_batch(1, Duration::from_micros(9), &[Duration::from_micros(50)]);
+        let s = m.snapshot();
+        let v = s.to_json();
+        assert_eq!(v.get("requests").unwrap().as_f64().unwrap(), 1.0);
+        assert!(v.get("p999_us").is_ok());
+        assert!(v.get("stages").unwrap().opt("queue-wait").is_some());
+        // Round-trips through the in-repo serializer/parser.
+        let text = crate::json::write(&v);
+        assert_eq!(crate::json::parse(&text).unwrap(), v);
+        let table = s.render_table();
+        assert!(table.contains("queue-wait"));
+        assert!(table.contains("p99 us"));
+        assert!(table.contains("e2e"));
+        assert!(s.render_brief().contains("p999="));
+    }
+
+    /// The O(buckets) guarantee: `Metrics` is a fixed-size block of atomics
+    /// — no per-request growth anywhere (also exercised with ≥1e6 records
+    /// in `tests/telemetry.rs`).
+    #[test]
+    fn metrics_footprint_is_fixed() {
+        assert!(
+            std::mem::size_of::<Metrics>() < 32 * 1024,
+            "Metrics grew past a fixed histogram block: {} bytes",
+            std::mem::size_of::<Metrics>()
+        );
     }
 }

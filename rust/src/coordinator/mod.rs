@@ -18,5 +18,5 @@ pub mod router;
 
 pub use crate::util::fixed::Row;
 pub use batcher::{AdmissionPolicy, Backend, Server, ServerConfig, SubmitError};
-pub use metrics::{Metrics, Snapshot};
+pub use metrics::{Metrics, Snapshot, StageSnapshot};
 pub use router::Router;

@@ -67,6 +67,18 @@ impl Router {
         self.servers.iter().map(|(k, s)| (k.clone(), s.metrics.snapshot())).collect()
     }
 
+    /// Per-model snapshots as one JSON object keyed by model name — the
+    /// exposition payload a network tier would serve from `/stats`
+    /// (ROADMAP: network serving tier).
+    pub fn stats_json(&self) -> crate::json::Value {
+        crate::json::Value::Obj(
+            self.servers
+                .iter()
+                .map(|(k, s)| (k.clone(), s.metrics.snapshot().to_json()))
+                .collect(),
+        )
+    }
+
     /// Aggregate requests served across models (counter reads — no
     /// latency-history snapshot per poll).
     pub fn total_requests(&self) -> u64 {

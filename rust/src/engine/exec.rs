@@ -287,15 +287,25 @@ pub(crate) fn eval_rows_block(
 /// packing dispatches per row (native head: one `Row::grid_value` read per
 /// feature; emulated: the matching bit packer), so mixed batches stay
 /// bit-identical to per-kind runs.
+///
+/// With `spans`, the three engine-side stage boundaries are stamped into the
+/// given histograms per lane block — head-pack (feature packing, native
+/// comparisons or bit expansion), lut-exec ([`Executor::run`]), and tail
+/// (prediction decode). One `Instant` read per boundary, amortized over the
+/// whole block; pass `None` on paths that don't serve (benches' inner loops,
+/// parity tests).
 pub(crate) fn eval_shared_rows_block(
     ex: &mut Executor,
     rows: &[crate::util::fixed::Row],
     frac_bits: u32,
     index_width: usize,
     out: &mut [i32],
+    spans: Option<&crate::telemetry::StageSet>,
 ) {
+    use crate::telemetry::{Stage, StageClock};
     use crate::util::fixed;
     assert_eq!(rows.len(), out.len());
+    let mut clock = spans.map(|_| StageClock::start());
     if ex.plan().head.is_some() {
         super::head::pack_shared_rows(ex, rows, frac_bits);
     } else {
@@ -309,8 +319,17 @@ pub(crate) fn eval_shared_rows_block(
             fixed::pack_row_bits_of(row, frac_bits, |bit| ex.set_input_bit(bit, lane));
         }
     }
+    if let (Some(set), Some(clock)) = (spans, clock.as_mut()) {
+        clock.lap(set, Stage::HeadPack);
+    }
     ex.run();
+    if let (Some(set), Some(clock)) = (spans, clock.as_mut()) {
+        clock.lap(set, Stage::LutExec);
+    }
     decode_block_preds(ex, index_width, out);
+    if let (Some(set), Some(clock)) = (spans, clock.as_mut()) {
+        clock.lap(set, Stage::Tail);
+    }
 }
 
 /// Shared per-block decode: native tail when present, emulated class-index

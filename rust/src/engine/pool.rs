@@ -21,10 +21,12 @@
 
 use super::exec::{eval_shared_rows_block, Executor};
 use super::plan::ExecPlan;
+use crate::telemetry::PoolTelemetry;
 use crate::util::fixed::Row;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 /// One shard of a batch: worker evaluates rows `[start, start + len)` of the
 /// shared batch and replies with `(start, preds)`.
@@ -45,6 +47,10 @@ pub struct EnginePool {
     /// `Option` so `Drop` can close the channel before joining.
     job_tx: Option<Sender<Job>>,
     workers: Vec<JoinHandle<()>>,
+    /// Pool-side stage histograms (head-pack / lut-exec / tail) plus worker
+    /// busy/idle counters; shared with every worker and exposed to the
+    /// serving coordinator via [`Self::telemetry`].
+    telemetry: Arc<PoolTelemetry>,
 }
 
 impl EnginePool {
@@ -58,19 +64,30 @@ impl EnginePool {
         index_width: usize,
     ) -> Self {
         let lanes = crate::util::ceil_div(lanes.max(1), 64) * 64;
+        let telemetry = Arc::new(PoolTelemetry::new());
         let (job_tx, job_rx) = channel::<Job>();
         let job_rx = Arc::new(Mutex::new(job_rx));
         let workers = (0..threads.max(1))
             .map(|i| {
                 let plan = plan.clone();
                 let job_rx = job_rx.clone();
+                let tel = telemetry.clone();
                 std::thread::Builder::new()
                     .name(format!("dwn-engine-{i}"))
-                    .spawn(move || worker_loop(&plan, lanes, frac_bits, index_width, &job_rx))
+                    .spawn(move || {
+                        worker_loop(&plan, lanes, frac_bits, index_width, &job_rx, &tel)
+                    })
                     .expect("spawn engine worker")
             })
             .collect();
-        Self { plan, lanes, frac_bits, index_width, job_tx: Some(job_tx), workers }
+        Self { plan, lanes, frac_bits, index_width, job_tx: Some(job_tx), workers, telemetry }
+    }
+
+    /// The pool's shared stage histograms and busy/idle counters. The serving
+    /// coordinator attaches this handle into its [`crate::coordinator::Metrics`]
+    /// so snapshots carry head-pack / lut-exec / tail percentiles.
+    pub fn telemetry(&self) -> Arc<PoolTelemetry> {
+        self.telemetry.clone()
     }
 
     pub fn plan(&self) -> &ExecPlan {
@@ -172,31 +189,40 @@ fn worker_loop(
     frac_bits: u32,
     index_width: usize,
     job_rx: &Mutex<Receiver<Job>>,
+    tel: &PoolTelemetry,
 ) {
     let mut ex = Executor::new(plan, lanes);
     loop {
         // Hold the lock only for the blocking recv (idle park), never while
         // evaluating — job pickup serializes, processing stays parallel.
+        // Everything from here to job receipt (including waiting on the lock
+        // behind a sibling's pickup) counts as idle time.
+        let t_idle = Instant::now();
         let job = match job_rx.lock() {
             Ok(rx) => rx.recv(),
             Err(_) => break, // a sibling panicked holding the lock
         };
+        tel.add_idle(t_idle.elapsed());
         let Ok(job) = job else { break };
+        let t_busy = Instant::now();
         let mut preds = vec![0i32; job.len];
         let lanes = ex.lanes();
         for (ci, outs) in preds.chunks_mut(lanes).enumerate() {
             let lo = job.start + ci * lanes;
             ex.clear_inputs();
             // Borrowed shard slice of the shared batch — rows mix kinds
-            // freely and are never copied here.
+            // freely and are never copied here. The evaluator stamps
+            // head-pack / lut-exec / tail laps into the pool histograms.
             eval_shared_rows_block(
                 &mut ex,
                 &job.rows[lo..lo + outs.len()],
                 frac_bits,
                 index_width,
                 outs,
+                Some(&tel.stages),
             );
         }
+        tel.add_busy(t_busy.elapsed());
         // A dropped reply receiver just means the submitter gave up.
         let _ = job.reply.send((job.start, preds));
     }
@@ -294,6 +320,36 @@ mod tests {
             );
             std::thread::yield_now();
         }
+    }
+
+    #[test]
+    fn pool_records_stage_spans_and_busy_time() {
+        let plan = Arc::new(sign_plan());
+        let pool = EnginePool::new(plan, 64, 2, 1, 1);
+        let rows: Vec<Vec<f32>> =
+            (0..200).map(|i| vec![if i % 2 == 0 { -0.9 } else { 0.9 }]).collect();
+        pool.infer(&rows);
+        let tel = pool.telemetry();
+        for stage in
+            [crate::telemetry::Stage::HeadPack, crate::telemetry::Stage::LutExec, crate::telemetry::Stage::Tail]
+        {
+            assert!(
+                tel.stages.get(stage).count() > 0,
+                "no {} laps recorded",
+                stage.label()
+            );
+        }
+        assert!(tel.busy_ns() > 0, "worker busy time not accumulated");
+        // Engine-side stage laps are nested inside worker busy intervals.
+        let stage_sum: u64 = [
+            crate::telemetry::Stage::HeadPack,
+            crate::telemetry::Stage::LutExec,
+            crate::telemetry::Stage::Tail,
+        ]
+        .iter()
+        .map(|&s| tel.stages.get(s).sum_ns())
+        .sum();
+        assert!(stage_sum <= tel.busy_ns(), "stage laps exceed busy time");
     }
 
     #[test]

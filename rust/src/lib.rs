@@ -19,6 +19,8 @@
 //!   per-stage runtime attribution (DESIGN.md §engine)
 //! * [`coordinator`] — batching inference server over [`runtime`], the
 //!   netlist interpreter, or the compiled [`engine`]
+//! * [`telemetry`] — lock-free latency histograms, request-path stage
+//!   spans, and metrics exposition (DESIGN.md §telemetry)
 //! * [`baselines`] — TreeLUT + LogicNets-lite comparison points (Table II)
 
 pub mod baselines;
@@ -34,6 +36,7 @@ pub mod model;
 pub mod report;
 pub mod runtime;
 pub mod techmap;
+pub mod telemetry;
 pub mod timing;
 pub mod util;
 pub mod verify;

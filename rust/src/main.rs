@@ -5,7 +5,7 @@
 //!   breakdown --model sm-10 --variant penft [--encoder S]               Fig.5-style component LUT breakdown
 //!   encoders  --model sm-10 --variant penft [--encoder auto]            per-feature encoder architecture/cost table
 //!   verify    --model sm-10 --variant penft [--n 512]                   netlist sim vs golden vectors
-//!   serve     --model sm-10 [--backend pjrt|netlist|compiled] [--requests N] [--lanes W] [--threads T] [--head native|lut] [--tail native|lut]
+//!   serve     --model sm-10 [--backend pjrt|netlist|compiled] [--requests N] [--lanes W] [--threads T] [--head native|lut] [--tail native|lut] [--metrics-every S]
 //!   accuracy  --model sm-10 --variant penft                             netlist accuracy on the test set
 //!   info                                                                artifact/manifest summary
 //!
@@ -71,6 +71,8 @@ breakdown: per-component LUT area + per-stage runtime attribution from the
 encoders: per-feature encoder architecture selection + modeled vs mapped LUT cost
           --encoder auto|bank|chain|mux|lut (default auto) --depth-budget N (auto only)
 serve: --backend pjrt|netlist|compiled [--requests N]
+       --metrics-every S (periodic one-line metrics report every S seconds;
+                 the final report always prints the per-stage latency table)
        compiled: --lanes N (vectors/pass, default 256) --threads N (default = cores)
                  --head native|lut (default native; native computes the
                  thermometer encoding arithmetically, skipping input packing)
@@ -540,6 +542,19 @@ fn cmd_serve(artifacts: &Artifacts, args: &Args) -> Result<()> {
         }
         other => bail!("unknown backend '{other}' (pjrt|netlist|compiled)"),
     };
+    // Periodic per-stage reports while the run is in flight.
+    let metrics_every = args.get_usize("metrics-every", 0)?;
+    let _reporter = if metrics_every > 0 {
+        let metrics = server.metrics.clone();
+        Some(dwn::telemetry::Reporter::spawn(
+            Duration::from_secs(metrics_every as u64),
+            move || {
+                println!("[metrics] {}", metrics.snapshot().render_brief());
+            },
+        ))
+    } else {
+        None
+    };
     // Admit each distinct test row once; resubmissions reuse the same
     // allocation (zero-copy through queue, batch, and backend).
     let row_cache: Vec<Row> = (0..test.len()).map(|i| Row::real(test.row(i))).collect();
@@ -576,16 +591,7 @@ fn cmd_serve(artifacts: &Artifacts, args: &Args) -> Result<()> {
         requests as f64 / dt.as_secs_f64(),
         correct as f64 / requests as f64
     );
-    println!(
-        "batches={} mean_batch={:.1} p50={}us p99={}us max={}us busy={}ms rejected={}",
-        snap.batches,
-        snap.mean_batch,
-        snap.p50_us,
-        snap.p99_us,
-        snap.max_us,
-        snap.busy_us / 1000,
-        snap.rejected
-    );
+    println!("{}", snap.render_table());
     Ok(())
 }
 

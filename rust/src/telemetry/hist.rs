@@ -1,0 +1,361 @@
+//! Fixed-footprint, lock-free latency histogram.
+//!
+//! Log-bucketed `AtomicU64` counters: 32 octaves × 4 sub-buckets = 128
+//! buckets covering 1 ns to ~8.6 s, then one saturation bucket at the top.
+//! Memory is O(buckets) (≈1 KiB) no matter how many values are recorded;
+//! `record` is one relaxed `fetch_add` per counter touched; `quantile` walks
+//! the 128 counters with no locking, sorting, or history cloning.
+//!
+//! ## Bucket layout and error bound (DESIGN.md §telemetry)
+//!
+//! Values below `SUB` (= 4 ns) each get their own bucket (exact). A value
+//! `v ≥ 4` with floor-log2 exponent `e` lands in octave `e - SUB_BITS + 1`,
+//! sub-bucket `(v >> (e - SUB_BITS)) & (SUB - 1)` — bucket width is
+//! `2^(e-2) ≤ v/4`. Quantiles report the *upper* bound of the bucket that
+//! holds the rank (clamped to the exactly-tracked maximum), so a reported
+//! quantile `q̂` satisfies `q ≤ q̂ ≤ q·(1 + 1/4)`: never an under-report,
+//! at most 25% over. Values past the last octave (~8.6 s) saturate into the
+//! top bucket and report as the recorded maximum.
+//!
+//! Quantiles use nearest-rank **ceil** semantics: `rank = ⌈q·n⌉` (clamped to
+//! `[1, n]`), i.e. the smallest recorded value with at least a `q` fraction
+//! of the distribution at or below it. In particular `quantile(0.99)` of 10
+//! samples is the 10th (the max), not the 9th — the floor-index truncation
+//! of the pre-telemetry `Metrics::snapshot` under-reported exactly there.
+//!
+//! Concurrent `record`s are individually atomic but a reader may observe a
+//! count/bucket set mid-update; `quantile` therefore derives its total from
+//! the bucket walk itself, so it is always self-consistent to within the
+//! in-flight records of that instant.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Sub-bucket resolution: 2 bits → 4 sub-buckets per octave → ≤25% relative
+/// bucket width.
+pub const SUB_BITS: u32 = 2;
+/// Sub-buckets per octave.
+pub const SUB: usize = 1 << SUB_BITS;
+/// Total buckets (32 octaves × 4): 1 ns … 2^33-1 ns (~8.6 s), top bucket
+/// saturating.
+pub const BUCKETS: usize = 32 * SUB;
+
+/// Bucket index of a nanosecond value (zero values count as 1 ns).
+#[inline]
+pub(crate) fn bucket_index(v: u64) -> usize {
+    let v = v.max(1);
+    let exp = 63 - v.leading_zeros();
+    if exp < SUB_BITS {
+        v as usize
+    } else {
+        let oct = (exp - SUB_BITS + 1) as usize;
+        let sub = ((v >> (exp - SUB_BITS)) as usize) & (SUB - 1);
+        (oct * SUB + sub).min(BUCKETS - 1)
+    }
+}
+
+/// Largest nanosecond value mapping into bucket `i` (inclusive upper bound).
+#[inline]
+pub(crate) fn bucket_upper(i: usize) -> u64 {
+    if i < SUB {
+        i as u64
+    } else {
+        let oct = i / SUB;
+        let sub = (i % SUB) as u64;
+        let exp = oct as u32 + SUB_BITS - 1;
+        let step = 1u64 << (exp - SUB_BITS);
+        (1u64 << exp) + (sub + 1) * step - 1
+    }
+}
+
+/// Lock-free log-bucketed latency histogram (values in nanoseconds).
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one duration (saturating at u64::MAX ns ≈ 584 years).
+    #[inline]
+    pub fn record(&self, d: Duration) {
+        self.record_ns(d.as_nanos().min(u64::MAX as u128) as u64);
+    }
+
+    /// Record one nanosecond value.
+    #[inline]
+    pub fn record_ns(&self, ns: u64) {
+        self.buckets[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns.max(1), Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_ns(&self) -> u64 {
+        self.sum_ns.load(Ordering::Relaxed)
+    }
+
+    /// Exact maximum recorded value (ns), 0 when empty.
+    pub fn max_ns(&self) -> u64 {
+        if self.count() == 0 {
+            0
+        } else {
+            self.max_ns.load(Ordering::Relaxed)
+        }
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_ns() as f64 / n as f64
+        }
+    }
+
+    /// Nearest-rank-ceil quantile in ns: the smallest recorded bucket bound
+    /// with at least `⌈q·n⌉` values at or below it, clamped to the exact
+    /// max. 0 when empty. See the module docs for the ≤25% error bound.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let counts: [u64; BUCKETS] =
+            std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed));
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_upper(i).min(self.max_ns.load(Ordering::Relaxed));
+            }
+        }
+        self.max_ns.load(Ordering::Relaxed)
+    }
+
+    /// Add every counter of `other` into `self` (both keep recording; the
+    /// merge is per-counter atomic, not a consistent cut).
+    pub fn merge(&self, other: &LatencyHistogram) {
+        for (mine, theirs) in self.buckets.iter().zip(other.buckets.iter()) {
+            let c = theirs.load(Ordering::Relaxed);
+            if c > 0 {
+                mine.fetch_add(c, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum_ns.fetch_add(other.sum_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max_ns.fetch_max(other.max_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Point-in-time plain-data summary (p50/p99/p999/max/mean).
+    pub fn summary(&self) -> HistSummary {
+        HistSummary {
+            count: self.count(),
+            p50_ns: self.quantile(0.50),
+            p99_ns: self.quantile(0.99),
+            p999_ns: self.quantile(0.999),
+            max_ns: self.max_ns(),
+            mean_ns: self.mean_ns(),
+        }
+    }
+}
+
+impl std::fmt::Debug for LatencyHistogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.summary();
+        write!(
+            f,
+            "LatencyHistogram {{ count: {}, p50: {}ns, p99: {}ns, p999: {}ns, max: {}ns }}",
+            s.count, s.p50_ns, s.p99_ns, s.p999_ns, s.max_ns
+        )
+    }
+}
+
+/// Plain-data histogram summary (nanoseconds).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct HistSummary {
+    pub count: u64,
+    pub p50_ns: u64,
+    pub p99_ns: u64,
+    pub p999_ns: u64,
+    pub max_ns: u64,
+    pub mean_ns: f64,
+}
+
+impl HistSummary {
+    pub fn p50_us(&self) -> u64 {
+        self.p50_ns / 1000
+    }
+
+    pub fn p99_us(&self) -> u64 {
+        self.p99_ns / 1000
+    }
+
+    pub fn p999_us(&self) -> u64 {
+        self.p999_ns / 1000
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_ns / 1000
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Nearest-rank-ceil reference over a sorted slice.
+    fn ref_quantile(sorted: &[u64], q: f64) -> u64 {
+        let n = sorted.len() as u64;
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        sorted[(rank - 1) as usize]
+    }
+
+    #[test]
+    fn buckets_are_contiguous_and_monotone() {
+        // Every value belongs to exactly one bucket whose bounds bracket it.
+        let mut prev = 0usize;
+        for v in 1u64..100_000 {
+            let i = bucket_index(v);
+            assert!(i >= prev, "index not monotone at {v}");
+            prev = i;
+            assert!(v <= bucket_upper(i), "v={v} above bucket {i} upper");
+            if i > 1 {
+                assert!(v > bucket_upper(i - 1), "v={v} overlaps bucket {}", i - 1);
+            }
+        }
+        // Bucket width never exceeds 25% of the value (for v >= SUB).
+        for v in [4u64, 100, 1_000, 123_456, 10_000_000, 3_000_000_000] {
+            let i = bucket_index(v);
+            assert!(bucket_upper(i) <= v + v / 4, "error bound broken at {v}");
+        }
+    }
+
+    #[test]
+    fn saturates_without_panicking() {
+        let h = LatencyHistogram::new();
+        h.record_ns(u64::MAX);
+        h.record_ns(1u64 << 60);
+        h.record_ns(0); // counts as 1 ns
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.max_ns(), u64::MAX);
+        // Quantiles in the saturation bucket clamp to the exact max.
+        assert_eq!(h.quantile(1.0), u64::MAX);
+    }
+
+    #[test]
+    fn empty_histogram_reports_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.max_ns(), 0);
+        assert_eq!(h.mean_ns(), 0.0);
+        assert_eq!(h.summary(), HistSummary::default());
+    }
+
+    /// Regression for the pre-telemetry floor-index truncation: with values
+    /// placed exactly on bucket upper bounds the histogram has no bucket
+    /// error, so quantiles must *equal* the sorted nearest-rank-ceil
+    /// reference — on the adversarial sizes from the issue (n = 1, 2, 99,
+    /// 100, 101) and the small-n case (p99 of 10 is the max, not the 9th).
+    #[test]
+    fn nearest_rank_ceil_exact_on_bucket_boundaries() {
+        for n in [1usize, 2, 10, 99, 100, 101] {
+            let vals: Vec<u64> = (0..n).map(|i| bucket_upper(40 + i)).collect();
+            let h = LatencyHistogram::new();
+            // Record in a scrambled order; quantiles are order-free.
+            for k in 0..n {
+                h.record_ns(vals[(k * 7 + 3) % n]);
+            }
+            for q in [0.0, 0.5, 0.9, 0.99, 0.999, 1.0] {
+                assert_eq!(
+                    h.quantile(q),
+                    ref_quantile(&vals, q),
+                    "n={n} q={q} mismatch"
+                );
+            }
+        }
+        // The explicit small-n under-report case: p99 of 10 samples is the
+        // 10th-smallest (the max). Floor semantics read the 9th.
+        let vals: Vec<u64> = (0..10).map(|i| bucket_upper(50 + i)).collect();
+        let h = LatencyHistogram::new();
+        for &v in &vals {
+            h.record_ns(v);
+        }
+        assert_eq!(h.quantile(0.99), *vals.last().unwrap());
+    }
+
+    #[test]
+    fn quantiles_within_bucket_error_of_sorted_reference() {
+        let mut rng = crate::util::SplitMix64::new(0xD15C0);
+        // Log-uniform values spanning ns..s.
+        let mut vals: Vec<u64> =
+            (0..10_000).map(|_| 1u64 << (rng.next_u64() % 30)).map(|b| b + rng.next_u64() % b.max(1)).collect();
+        let h = LatencyHistogram::new();
+        for &v in &vals {
+            h.record_ns(v);
+        }
+        vals.sort_unstable();
+        for q in [0.1, 0.5, 0.9, 0.99, 0.999, 1.0] {
+            let want = ref_quantile(&vals, q);
+            let got = h.quantile(q);
+            assert!(
+                got >= want && got <= want + want / 4 + 1,
+                "q={q}: got {got}, reference {want}"
+            );
+        }
+        assert_eq!(h.count(), 10_000);
+        assert_eq!(h.max_ns(), *vals.last().unwrap());
+    }
+
+    #[test]
+    fn merge_matches_recording_into_one() {
+        let a = LatencyHistogram::new();
+        let b = LatencyHistogram::new();
+        let all = LatencyHistogram::new();
+        let mut rng = crate::util::SplitMix64::new(9);
+        for i in 0..1000u64 {
+            let v = 1 + rng.next_u64() % 1_000_000;
+            if i % 2 == 0 { a.record_ns(v) } else { b.record_ns(v) }
+            all.record_ns(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.sum_ns(), all.sum_ns());
+        assert_eq!(a.max_ns(), all.max_ns());
+        for q in [0.5, 0.99, 0.999] {
+            assert_eq!(a.quantile(q), all.quantile(q));
+        }
+    }
+
+    #[test]
+    fn mean_and_durations() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_micros(10));
+        h.record(Duration::from_micros(30));
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.sum_ns(), 40_000);
+        assert_eq!(h.mean_ns(), 20_000.0);
+        assert_eq!(h.summary().max_us(), 30);
+    }
+}

@@ -1,0 +1,101 @@
+//! Request-path telemetry: fixed-footprint latency histograms, stage spans,
+//! and a periodic reporter (DESIGN.md §telemetry).
+//!
+//! This layer is what the serving stack measures itself with:
+//!
+//! * [`LatencyHistogram`] — lock-free log-bucketed `AtomicU64` counters,
+//!   O(buckets) memory, nearest-rank-ceil `quantile` (p50/p99/p999/max)
+//!   with a documented ≤25% bucket error.
+//! * [`Stage`] / [`StageSet`] / [`StageClock`] — the request-path span
+//!   taxonomy (queue-wait → batch-form → head-pack → lut-exec → tail →
+//!   reply) and the lap timer that stamps it.
+//! * [`PoolTelemetry`] — the engine-pool-side stage histograms plus worker
+//!   busy/idle counters, attached into [`crate::coordinator::Metrics`]
+//!   snapshots by the serving loop.
+//! * [`Reporter`] — a background thread invoking a report closure every N
+//!   seconds (`--metrics-every` on `dwn serve` / `examples/serve_jsc`),
+//!   stopped on drop.
+//!
+//! The module depends only on `std`, so any layer — engine, coordinator,
+//! benches, the future network tier — can record into it without cycles.
+
+pub mod hist;
+pub mod span;
+
+pub use hist::{HistSummary, LatencyHistogram};
+pub use span::{PoolTelemetry, Stage, StageClock, StageSet};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Periodic metrics reporter: runs `report` every `every` on a background
+/// thread until dropped. The sleep is chunked so drop returns promptly
+/// (≤ ~50 ms) even for long periods; the closure is never invoked after
+/// `Drop` begins its join.
+pub struct Reporter {
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Reporter {
+    pub fn spawn<F>(every: Duration, mut report: F) -> Reporter
+    where
+        F: FnMut() + Send + 'static,
+    {
+        let every = every.max(Duration::from_millis(50));
+        let stop = Arc::new(AtomicBool::new(false));
+        let flag = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("dwn-metrics".into())
+            .spawn(move || loop {
+                let t0 = Instant::now();
+                while t0.elapsed() < every {
+                    if flag.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    std::thread::sleep(Duration::from_millis(50).min(every));
+                }
+                if flag.load(Ordering::Relaxed) {
+                    return;
+                }
+                report();
+            })
+            .expect("spawn metrics reporter");
+        Reporter { stop, handle: Some(handle) }
+    }
+}
+
+impl Drop for Reporter {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn reporter_fires_and_stops_on_drop() {
+        let hits = Arc::new(AtomicU64::new(0));
+        let h = hits.clone();
+        let reporter = Reporter::spawn(Duration::from_millis(60), move || {
+            h.fetch_add(1, Ordering::Relaxed);
+        });
+        let t0 = Instant::now();
+        while hits.load(Ordering::Relaxed) == 0 {
+            assert!(t0.elapsed() < Duration::from_secs(5), "reporter never fired");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        drop(reporter); // joins; no further invocations after this
+        let after = hits.load(Ordering::Relaxed);
+        std::thread::sleep(Duration::from_millis(150));
+        assert_eq!(hits.load(Ordering::Relaxed), after, "reporter fired after drop");
+    }
+}

@@ -1,0 +1,197 @@
+//! Stage spans: the request-path taxonomy and the per-stage histogram set.
+//!
+//! A request's life is stamped at fixed stage boundaries (DESIGN.md
+//! §telemetry documents which thread stamps which stage):
+//!
+//! * `QueueWait`  — submit → drained into a batch (drainer thread, per
+//!   request).
+//! * `BatchForm`  — first job drained → batch handed to the executor
+//!   (drainer thread, per batch).
+//! * `HeadPack`   — feature rows packed into the value buffer, native head
+//!   comparisons or input bit-packing (pool worker, per lane block).
+//! * `LutExec`    — the compiled plan's LUT levels evaluated (pool worker,
+//!   per lane block).
+//! * `Tail`       — predictions decoded, native popcount/argmax or
+//!   class-index output bits (pool worker, per lane block).
+//! * `ReplySplice` — per-request replies sent back in admission order
+//!   (executor thread, per batch).
+//!
+//! End-to-end latency (submit → reply spliced) is tracked separately by
+//! [`crate::coordinator::Metrics`]; the stage histograms attribute *where*
+//! inside that span the time went.
+
+use super::hist::LatencyHistogram;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Request-path pipeline stage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    QueueWait,
+    BatchForm,
+    HeadPack,
+    LutExec,
+    Tail,
+    ReplySplice,
+}
+
+impl Stage {
+    pub const COUNT: usize = 6;
+    pub const ALL: [Stage; Stage::COUNT] = [
+        Stage::QueueWait,
+        Stage::BatchForm,
+        Stage::HeadPack,
+        Stage::LutExec,
+        Stage::Tail,
+        Stage::ReplySplice,
+    ];
+
+    /// Stable label used in tables, JSON exposition, and CI greps.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Stage::QueueWait => "queue-wait",
+            Stage::BatchForm => "batch-form",
+            Stage::HeadPack => "head-pack",
+            Stage::LutExec => "lut-exec",
+            Stage::Tail => "tail",
+            Stage::ReplySplice => "reply",
+        }
+    }
+}
+
+/// One histogram per [`Stage`] — a fixed ~6 KiB block of atomics shared by
+/// reference between the recording threads and snapshot readers.
+#[derive(Debug, Default)]
+pub struct StageSet {
+    hists: [LatencyHistogram; Stage::COUNT],
+}
+
+impl StageSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn record(&self, stage: Stage, d: Duration) {
+        self.hists[stage as usize].record(d);
+    }
+
+    #[inline]
+    pub fn get(&self, stage: Stage) -> &LatencyHistogram {
+        &self.hists[stage as usize]
+    }
+}
+
+/// Lap timer for consecutive stage spans: each [`lap`](Self::lap) records
+/// the time since the previous lap (or [`start`](Self::start)) into the
+/// given stage's histogram — one `Instant::now` per boundary, amortized
+/// over a whole lane block on the serving path.
+pub struct StageClock {
+    last: Instant,
+}
+
+impl StageClock {
+    pub fn start() -> Self {
+        Self { last: Instant::now() }
+    }
+
+    #[inline]
+    pub fn lap(&mut self, set: &StageSet, stage: Stage) {
+        let now = Instant::now();
+        set.record(stage, now - self.last);
+        self.last = now;
+    }
+}
+
+/// Telemetry owned by one [`crate::engine::EnginePool`]: the engine-side
+/// stage histograms (head-pack / lut-exec / tail) plus busy/idle worker
+/// counters. The pool records; the coordinator's `Metrics` attaches a
+/// shared handle so serving snapshots include the engine stages.
+#[derive(Debug, Default)]
+pub struct PoolTelemetry {
+    pub stages: StageSet,
+    busy_ns: AtomicU64,
+    idle_ns: AtomicU64,
+}
+
+impl PoolTelemetry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Accumulate one worker's job-processing time.
+    #[inline]
+    pub fn add_busy(&self, d: Duration) {
+        self.busy_ns.fetch_add(d.as_nanos().min(u64::MAX as u128) as u64, Ordering::Relaxed);
+    }
+
+    /// Accumulate one worker's parked-in-recv time between jobs.
+    #[inline]
+    pub fn add_idle(&self, d: Duration) {
+        self.idle_ns.fetch_add(d.as_nanos().min(u64::MAX as u128) as u64, Ordering::Relaxed);
+    }
+
+    /// Total busy nanoseconds across all workers.
+    pub fn busy_ns(&self) -> u64 {
+        self.busy_ns.load(Ordering::Relaxed)
+    }
+
+    /// Total idle (parked) nanoseconds across all workers.
+    pub fn idle_ns(&self) -> u64 {
+        self.idle_ns.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_labels_are_distinct_and_stable() {
+        let labels: Vec<&str> = Stage::ALL.iter().map(|s| s.label()).collect();
+        for (i, a) in labels.iter().enumerate() {
+            for b in &labels[i + 1..] {
+                assert_ne!(a, b);
+            }
+        }
+        assert_eq!(Stage::QueueWait.label(), "queue-wait");
+        assert_eq!(Stage::LutExec.label(), "lut-exec");
+    }
+
+    #[test]
+    fn stage_set_routes_to_the_right_histogram() {
+        let set = StageSet::new();
+        set.record(Stage::LutExec, Duration::from_micros(5));
+        set.record(Stage::LutExec, Duration::from_micros(7));
+        set.record(Stage::Tail, Duration::from_micros(1));
+        assert_eq!(set.get(Stage::LutExec).count(), 2);
+        assert_eq!(set.get(Stage::Tail).count(), 1);
+        assert_eq!(set.get(Stage::QueueWait).count(), 0);
+    }
+
+    #[test]
+    fn stage_clock_laps_cover_the_elapsed_span() {
+        let set = StageSet::new();
+        let t0 = Instant::now();
+        let mut clock = StageClock::start();
+        std::thread::sleep(Duration::from_millis(2));
+        clock.lap(&set, Stage::HeadPack);
+        std::thread::sleep(Duration::from_millis(1));
+        clock.lap(&set, Stage::LutExec);
+        let wall = t0.elapsed();
+        let spans = set.get(Stage::HeadPack).sum_ns() + set.get(Stage::LutExec).sum_ns();
+        // Laps are nested inside the wall interval by construction.
+        assert!(spans as u128 <= wall.as_nanos());
+        assert!(set.get(Stage::HeadPack).sum_ns() >= 1_000_000, "sleep span lost");
+    }
+
+    #[test]
+    fn pool_telemetry_counters_accumulate() {
+        let t = PoolTelemetry::new();
+        t.add_busy(Duration::from_micros(3));
+        t.add_busy(Duration::from_micros(4));
+        t.add_idle(Duration::from_micros(10));
+        assert_eq!(t.busy_ns(), 7_000);
+        assert_eq!(t.idle_ns(), 10_000);
+    }
+}

@@ -1,0 +1,213 @@
+//! Telemetry integration: concurrent histogram hammering against a sorted
+//! ground truth, the O(buckets) guarantee at ≥1e6 recorded latencies, and
+//! request-path stage spans end-to-end through a compiled-engine server
+//! (queue-wait counts match requests, engine stages surface in the
+//! snapshot, per-stage spans nest inside the end-to-end envelope).
+
+use dwn::coordinator::{AdmissionPolicy, Server, ServerConfig};
+use dwn::engine::EnginePool;
+use dwn::techmap::{LutNetlist, MappedLut, Src};
+use dwn::telemetry::{LatencyHistogram, Stage};
+use dwn::util::SplitMix64;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// 1 feature, 2-bit word, prediction = sign bit.
+fn sign_netlist() -> LutNetlist {
+    LutNetlist {
+        num_inputs: 2,
+        luts: vec![MappedLut { inputs: vec![Src::Input(1)], table: 0b10 }],
+        outputs: vec![Src::Lut(0)],
+    }
+}
+
+/// Nearest-rank-ceil reference quantile over a sorted slice.
+fn ref_quantile(sorted: &[u64], q: f64) -> u64 {
+    let n = sorted.len() as u64;
+    let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+    sorted[(rank - 1) as usize]
+}
+
+/// Many threads hammer one shared histogram concurrently; the result must
+/// agree with a sorted single-threaded reference — exact on the count and
+/// max, within the documented ≤25% one-sided bucket error on quantiles.
+#[test]
+fn concurrent_hammer_matches_sorted_reference() {
+    const THREADS: usize = 8;
+    const PER_THREAD: usize = 50_000;
+    let hist = Arc::new(LatencyHistogram::new());
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let hist = hist.clone();
+            std::thread::spawn(move || {
+                let mut rng = SplitMix64::new(0xFEED + t as u64);
+                let mut mine = Vec::with_capacity(PER_THREAD);
+                for _ in 0..PER_THREAD {
+                    // Log-uniform ns values spanning ns..s.
+                    let base = 1u64 << (rng.next_u64() % 30);
+                    let v = base + rng.next_u64() % base;
+                    hist.record_ns(v);
+                    mine.push(v);
+                }
+                mine
+            })
+        })
+        .collect();
+    let mut all: Vec<u64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    all.sort_unstable();
+    assert_eq!(hist.count(), (THREADS * PER_THREAD) as u64, "lost records under contention");
+    assert_eq!(hist.max_ns(), *all.last().unwrap());
+    assert_eq!(hist.sum_ns(), all.iter().sum::<u64>());
+    for q in [0.5, 0.9, 0.99, 0.999, 1.0] {
+        let want = ref_quantile(&all, q);
+        let got = hist.quantile(q);
+        assert!(
+            got >= want && got <= want + want / 4 + 1,
+            "q={q}: got {got}, sorted reference {want}"
+        );
+    }
+}
+
+/// The acceptance bar from the issue: one metrics store absorbs over a
+/// million latencies while staying a fixed-size block — no per-request Vec
+/// growth, no sort or history clone at snapshot time. (The pre-telemetry
+/// store held 8 bytes per request: 1e6 records would have grown it to
+/// ~8 MB; `Metrics` is static at a few KiB of histogram buckets.)
+#[test]
+fn a_million_latencies_stay_o_buckets() {
+    const TOTAL: usize = 1_200_000;
+    const BATCH: usize = 4096;
+    let metrics = dwn::coordinator::Metrics::default();
+    assert!(
+        std::mem::size_of::<dwn::coordinator::Metrics>() < 32 * 1024,
+        "Metrics must be a fixed histogram block"
+    );
+    let mut rng = SplitMix64::new(7);
+    let mut batch = Vec::with_capacity(BATCH);
+    let mut recorded = 0usize;
+    while recorded < TOTAL {
+        batch.clear();
+        let n = BATCH.min(TOTAL - recorded);
+        for _ in 0..n {
+            batch.push(Duration::from_nanos(1 + rng.next_u64() % 10_000_000));
+        }
+        metrics.record_batch(n, Duration::from_micros(10), &batch);
+        recorded += n;
+    }
+    // Snapshot is a 128-bucket walk — it must see every record and stay
+    // self-consistent regardless of history size.
+    let snap = metrics.snapshot();
+    assert_eq!(snap.requests, TOTAL as u64);
+    assert!(snap.p50_us <= snap.p99_us && snap.p99_us <= snap.p999_us);
+    assert!(snap.p999_us <= snap.max_us);
+    assert!(snap.max_us <= 10_000, "values were capped at 10 ms");
+    assert_eq!(metrics.requests(), TOTAL as u64);
+}
+
+/// Engine-side spans from a raw pool: head-pack/lut-exec/tail laps are
+/// recorded per lane block and their total nests inside the workers' busy
+/// time, which itself nests inside wall-clock × workers.
+#[test]
+fn pool_stage_spans_nest_inside_busy_and_wall_time() {
+    let plan = dwn::engine::compile(&sign_netlist());
+    let threads = 3usize;
+    let pool = EnginePool::new(Arc::new(plan), 64, threads, 1, 1);
+    let rows: Vec<Vec<f32>> =
+        (0..2048).map(|i| vec![if i % 3 == 0 { -0.9 } else { 0.9 }]).collect();
+    let t0 = std::time::Instant::now();
+    for _ in 0..20 {
+        pool.infer(&rows);
+    }
+    let wall = t0.elapsed();
+    let tel = pool.telemetry();
+    let stage_sum: u64 = [Stage::HeadPack, Stage::LutExec, Stage::Tail]
+        .iter()
+        .map(|&s| tel.stages.get(s).sum_ns())
+        .sum();
+    assert!(stage_sum > 0, "no engine stage laps recorded");
+    assert!(stage_sum <= tel.busy_ns(), "stage laps exceed worker busy time");
+    // Busy time is bounded by total worker-thread time (generous slack for
+    // scheduler noise on loaded CI machines).
+    let budget = wall.as_nanos() as u64 * threads as u64 * 2;
+    assert!(tel.busy_ns() <= budget, "busy {} ns > budget {} ns", tel.busy_ns(), budget);
+    for s in [Stage::HeadPack, Stage::LutExec, Stage::Tail] {
+        assert_eq!(
+            tel.stages.get(s).count(),
+            tel.stages.get(Stage::HeadPack).count(),
+            "engine stages must lap once each per lane block"
+        );
+    }
+}
+
+/// Full serving path: a compiled-engine server's snapshot carries the whole
+/// stage taxonomy — coordinator stages with queue-wait count equal to
+/// requests served, engine stages from the attached pool telemetry, worker
+/// busy/idle counters, and per-stage spans that sit inside the end-to-end
+/// latency envelope.
+#[test]
+fn server_snapshot_exposes_the_full_request_path() {
+    let plan = dwn::engine::compile(&sign_netlist());
+    let server = Server::start_compiled(
+        plan,
+        1,
+        1,
+        2,
+        1,
+        64,
+        2,
+        ServerConfig {
+            max_batch: 64,
+            max_wait: Duration::from_micros(200),
+            queue_depth: 4096,
+            admission: AdmissionPolicy::Block,
+        },
+    );
+    let total = 600usize;
+    let mut pending = Vec::new();
+    for i in 0..total {
+        let x = if i % 3 == 0 { -0.7 } else { 0.7 };
+        pending.push((i, server.submit(&[x]).unwrap()));
+        if pending.len() >= 128 {
+            for (j, rx) in pending.drain(..) {
+                let want = i32::from(j % 3 == 0);
+                assert_eq!(rx.recv().unwrap().unwrap(), want);
+            }
+        }
+    }
+    for (j, rx) in pending.drain(..) {
+        let want = i32::from(j % 3 == 0);
+        assert_eq!(rx.recv().unwrap().unwrap(), want);
+    }
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests, total as u64);
+    // Coordinator stages: every request waited in the queue exactly once,
+    // every batch was formed and spliced exactly once.
+    let qw = snap.stage(Stage::QueueWait).expect("queue-wait row");
+    assert_eq!(qw.count, total as u64);
+    assert_eq!(snap.stage(Stage::BatchForm).expect("batch-form row").count, snap.batches);
+    assert_eq!(snap.stage(Stage::ReplySplice).expect("reply row").count, snap.batches);
+    // Engine stages arrived via the attached pool telemetry.
+    for s in [Stage::HeadPack, Stage::LutExec, Stage::Tail] {
+        let row = snap.stage(s).unwrap_or_else(|| panic!("missing {} row", s.label()));
+        assert!(row.count > 0, "{} never lapped", s.label());
+        // A single stage's typical span sits inside the slowest request's
+        // end-to-end envelope (stage spans are per lane block, e2e is per
+        // request; the max e2e bounds any block that served a request).
+        assert!(
+            row.p50_us <= snap.max_us.max(1),
+            "{} p50 {}us outside e2e max {}us",
+            s.label(),
+            row.p50_us,
+            snap.max_us
+        );
+    }
+    assert!(snap.worker_busy_us > 0, "pool worker busy counter missing");
+    // Exposition surfaces agree with the snapshot.
+    let json = snap.to_json();
+    assert_eq!(json.get("requests").unwrap().as_f64().unwrap(), total as f64);
+    assert!(json.get("stages").unwrap().opt("lut-exec").is_some());
+    let table = snap.render_table();
+    for label in ["queue-wait", "batch-form", "head-pack", "lut-exec", "tail", "reply", "e2e"] {
+        assert!(table.contains(label), "table missing {label} row:\n{table}");
+    }
+}
