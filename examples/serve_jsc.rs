@@ -16,15 +16,20 @@
 //! synthetic JSC-sized model stands in, which is what the CI smoke step
 //! exercises across the head×tail matrix.
 //!
-//! `--metrics-every S` prints a one-line metrics brief every S seconds
-//! while the rate sweep runs; the final report is always the per-stage
-//! latency table (queue-wait → batch-form → head-pack → lut-exec → tail →
-//! reply) plus shed count, mean batch size, and the drainer-overlap ratio.
+//! `--metrics-every S` prints a one-line *interval* metrics brief every S
+//! seconds (what happened since the previous line — `Snapshot::delta`);
+//! the final report is always the per-stage latency table (queue-wait →
+//! batch-form → head-pack → lut-exec → tail → reply) plus shed count, mean
+//! batch size, and the drainer-overlap ratio.
+//!
+//! `--trace-sample N` traces 1 in N admitted requests through the flight
+//! recorder; `--trace-out FILE` writes it as Chrome trace-event JSON after
+//! the sweep (DESIGN.md §tracing).
 //!
 //!     cargo run --release --example serve_jsc -- \
 //!         [--model sm-50] [--backend pjrt|netlist|compiled] [--lanes 256] \
 //!         [--threads N] [--head native|lut] [--tail native|lut] \
-//!         [--metrics-every S] [--smoke]
+//!         [--metrics-every S] [--trace-sample N] [--trace-out FILE] [--smoke]
 
 use dwn::config::{Args, Artifacts};
 use dwn::coordinator::{AdmissionPolicy, Backend, Row, Server, ServerConfig};
@@ -151,12 +156,31 @@ fn main() -> anyhow::Result<()> {
         }
         other => anyhow::bail!("unknown backend '{other}' (pjrt|netlist|compiled)"),
     };
+    // Sampled request tracing into the always-on flight recorder; the
+    // recorder also auto-dumps on latency anomalies and shed bursts.
+    let trace_sample = args.get_usize("trace-sample", 0)?;
+    let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
+    let tracer = if trace_sample > 0 || trace_out.is_some() {
+        Some(server.enable_tracing(dwn::telemetry::TraceConfig {
+            sample: trace_sample.max(1) as u32,
+            out: trace_out.clone(),
+            ..Default::default()
+        }))
+    } else {
+        None
+    };
     let metrics_every = args.get_usize("metrics-every", 0)?;
     let _reporter = if metrics_every > 0 {
         let metrics = server.metrics.clone();
+        // Interval brief: delta against the previous tick's snapshot.
+        let mut prev = metrics.snapshot();
         Some(dwn::telemetry::Reporter::spawn(
             Duration::from_secs(metrics_every as u64),
-            move || println!("[metrics] {}", metrics.snapshot().render_brief()),
+            move || {
+                let now = metrics.snapshot();
+                println!("[metrics] {}", now.delta(&prev).render_brief());
+                prev = now;
+            },
         ))
     } else {
         None
@@ -218,5 +242,16 @@ fn main() -> anyhow::Result<()> {
     // plus the shed / batch-size / drainer-overlap counters.
     println!("\nfinal request-path report:");
     println!("{}", server.metrics.snapshot().render_table());
+    if let (Some(tracer), Some(path)) = (&tracer, &trace_out) {
+        tracer.dump_to(path)?;
+        let st = tracer.stats();
+        println!(
+            "wrote Chrome trace to {} ({} requests traced, {} ring events, {} anomaly dumps)",
+            path.display(),
+            st.sampled,
+            st.ring_events,
+            st.dumps.saturating_sub(1)
+        );
+    }
     Ok(())
 }

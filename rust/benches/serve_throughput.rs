@@ -21,8 +21,10 @@
 //! trajectory is machine-readable across PRs: per arm per batch rows/sec
 //! plus batch-call latency percentiles (p50/p99/p999/max, log-bucket
 //! histogram), a `stage_breakdown` per head×tail pool arm (head-pack /
-//! lut-exec / tail percentiles from the pool's telemetry), and the server
-//! arm's full metrics snapshot (per-stage table, shed/overlap counters).
+//! lut-exec / tail percentiles from the pool's telemetry, plus the pool's
+//! runtime-activity summary — per-level ns and sampled output density), and
+//! the server arm's full metrics snapshot (per-stage table, shed/overlap
+//! counters, and its own `activity` block).
 //! `DWN_BENCH_QUICK=1` shrinks iteration counts for CI smoke runs.
 //!
 //!     cargo bench --bench serve_throughput
@@ -210,7 +212,8 @@ fn main() {
     }
 
     // Per head×tail pool arm: engine-side stage percentiles accumulated over
-    // every batch size the arm served above.
+    // every batch size the arm served above, plus the pool's runtime-activity
+    // summary (per-level ns, sampled output density at the default 1-in-64).
     let mut breakdown: Vec<Value> = Vec::new();
     for (i, pool) in pools.iter().enumerate() {
         let Some(tel) = pool.engine_telemetry() else { continue };
@@ -226,6 +229,9 @@ fn main() {
             }
         }
         m.insert("stages".to_string(), Value::Obj(stages));
+        if let Some(act) = pool.engine_activity() {
+            m.insert("activity".to_string(), act.report().to_json());
+        }
         breakdown.push(Value::Obj(m));
     }
 

@@ -10,10 +10,10 @@
 //! admission to lane packing without a single copy.
 
 use super::metrics::Metrics;
-use crate::engine::{EnginePool, ExecPlan};
+use crate::engine::{ActivityProfile, EnginePool, ExecPlan, PoolTrace};
 use crate::runtime::Engine;
 use crate::techmap::LutNetlist;
-use crate::telemetry::{PoolTelemetry, Stage};
+use crate::telemetry::{EventKind, PoolTelemetry, Stage, TraceConfig, Tracer};
 use crate::util::fixed::{self, Row};
 use anyhow::{anyhow, Result};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -120,6 +120,17 @@ impl Backend {
         }
     }
 
+    /// The engine pool's runtime-activity profiler (per-level lut-exec time
+    /// plus sampled output density — `dwn profile`), for backends that own
+    /// a pool. Attached to [`Metrics`] by the serving loop like
+    /// [`Self::engine_telemetry`].
+    pub fn engine_activity(&self) -> Option<Arc<ActivityProfile>> {
+        match self {
+            Backend::Compiled { pool, .. } => Some(pool.activity()),
+            _ => None,
+        }
+    }
+
     /// Whether integer-grid rows ([`Row::Fixed`]) can be served. The PJRT
     /// HLO consumes real features and carries no fixed-point grid to convert
     /// on, so it is the one backend that cannot.
@@ -190,8 +201,22 @@ impl Backend {
     /// calls. The compiled backend forwards the `Arc` straight into the
     /// pool's shard jobs; the rest borrow it.
     pub fn infer_shared(&self, rows: Arc<[Row]>) -> Result<Vec<i32>> {
+        self.infer_shared_traced(rows, None)
+    }
+
+    /// [`Self::infer_shared`] with an optional trace handle: the compiled
+    /// backend threads the per-row sampled trace IDs into its shard jobs so
+    /// pool workers emit head-pack / per-level lut-exec / tail spans for
+    /// traced rows. Other backends ignore the handle — their traced
+    /// requests still get the coordinator-side spans (DESIGN.md §tracing
+    /// covers extending a new backend).
+    pub fn infer_shared_traced(
+        &self,
+        rows: Arc<[Row]>,
+        trace: Option<PoolTrace>,
+    ) -> Result<Vec<i32>> {
         match self {
-            Backend::Compiled { pool, .. } => Ok(pool.infer_shared(rows)),
+            Backend::Compiled { pool, .. } => Ok(pool.infer_shared_traced(rows, trace)),
             other => other.infer(&rows),
         }
     }
@@ -276,6 +301,8 @@ impl std::error::Error for SubmitError {}
 struct Job {
     features: Row,
     enqueued: Instant,
+    /// Sampled trace ID (0 = untraced — the overwhelmingly common case).
+    trace_id: u64,
     reply: Sender<Result<i32>>,
 }
 
@@ -284,7 +311,7 @@ struct Job {
 /// replies splice back by position (`rows[i]` ↔ `waiters[i]`).
 struct Batch {
     rows: Vec<Row>,
-    waiters: Vec<(Instant, Sender<Result<i32>>)>,
+    waiters: Vec<(Instant, u64, Sender<Result<i32>>)>,
 }
 
 impl Batch {
@@ -297,7 +324,7 @@ impl Batch {
     /// deep-cloned every row here, once per batch).
     fn push(&mut self, job: Job) {
         self.rows.push(job.features);
-        self.waiters.push((job.enqueued, job.reply));
+        self.waiters.push((job.enqueued, job.trace_id, job.reply));
     }
 
     fn len(&self) -> usize {
@@ -450,19 +477,41 @@ impl Server {
             return Err(SubmitError::FixedRowsUnsupported);
         }
         let tx = self.tx.as_ref().ok_or(SubmitError::Stopped)?;
+        // One `OnceLock` load when no tracer is attached; with one, a 1-in-N
+        // counter decision. A sampled (nonzero) ID rides the job end to end.
+        let trace_id = self.metrics.tracer().map_or(0, |t| t.sample());
         let (reply, rx) = std::sync::mpsc::channel();
-        let job = Job { features: row, enqueued: Instant::now(), reply };
+        let enqueued = Instant::now();
+        let job = Job { features: row, enqueued, trace_id, reply };
         match self.admission {
             AdmissionPolicy::Block => tx.send(job).map_err(|_| SubmitError::Stopped)?,
             AdmissionPolicy::Shed => tx.try_send(job).map_err(|e| match e {
                 TrySendError::Full(_) => {
                     self.metrics.record_rejected();
+                    if let Some(t) = self.metrics.tracer() {
+                        t.note_shed();
+                    }
                     SubmitError::Backpressure
                 }
                 TrySendError::Disconnected(_) => SubmitError::Stopped,
             })?,
         }
+        if let Some(t) = self.metrics.tracer() {
+            t.note_accept();
+            if trace_id != 0 {
+                t.emit_span(trace_id, EventKind::Admit, enqueued, Duration::ZERO);
+            }
+        }
         Ok(rx)
+    }
+
+    /// Attach a request tracer (1-in-N sampling + always-on flight
+    /// recorder) to this server's metrics store and return its handle for
+    /// export/dump. First call wins; later calls get the already-attached
+    /// tracer (its original config), mirroring `Metrics::attach_tracer`.
+    pub fn enable_tracing(&self, cfg: TraceConfig) -> Arc<Tracer> {
+        self.metrics.attach_tracer(Arc::new(Tracer::new(cfg)));
+        self.metrics.tracer().expect("tracer attached above").clone()
     }
 
     pub fn num_features(&self) -> usize {
@@ -500,6 +549,9 @@ fn serve_loop(
     // telemetry; linking it here makes one snapshot cover the whole path.
     if let Some(t) = backend.engine_telemetry() {
         metrics.attach_engine(t);
+    }
+    if let Some(a) = backend.engine_activity() {
+        metrics.attach_activity(a);
     }
     // Overlap observation: the executor raises this while a batch runs; the
     // drainer samples it the moment a batch is fully drained. Sampling, not
@@ -556,9 +608,22 @@ fn collect_batch(
     max_wait: Duration,
     metrics: &Metrics,
 ) -> Option<Batch> {
+    let tracer = metrics.tracer();
+    let queue_wait = |j: &Job, wait: Duration| {
+        metrics.record_stage(Stage::QueueWait, wait);
+        if j.trace_id != 0 {
+            if let Some(t) = tracer {
+                t.emit_span(j.trace_id, EventKind::Stage(Stage::QueueWait), j.enqueued, wait);
+            }
+        }
+    };
     let first = rx.recv().ok()?;
     let t_form = Instant::now();
-    metrics.record_stage(Stage::QueueWait, t_form - first.enqueued);
+    queue_wait(&first, t_form - first.enqueued);
+    // The batch-form span attaches to the first traced job in the batch —
+    // batch formation is a shared cost, one span per batch is the honest
+    // rendering.
+    let mut traced_id = first.trace_id;
     let mut batch = Batch::with_capacity(max_batch.min(4096));
     batch.push(first);
     let deadline = t_form + max_wait;
@@ -569,7 +634,10 @@ fn collect_batch(
         }
         match rx.recv_timeout(deadline - now) {
             Ok(j) => {
-                metrics.record_stage(Stage::QueueWait, j.enqueued.elapsed());
+                queue_wait(&j, j.enqueued.elapsed());
+                if traced_id == 0 {
+                    traced_id = j.trace_id;
+                }
                 batch.push(j);
             }
             // Timeout: the batch is as full as it gets. Disconnected: flush
@@ -578,6 +646,11 @@ fn collect_batch(
         }
     }
     metrics.record_stage(Stage::BatchForm, t_form.elapsed());
+    if traced_id != 0 {
+        if let Some(t) = tracer {
+            t.emit_span(traced_id, EventKind::Stage(Stage::BatchForm), t_form, t_form.elapsed());
+        }
+    }
     Some(batch)
 }
 
@@ -588,26 +661,48 @@ fn execute_batch(backend: &Backend, batch: Batch, metrics: &Metrics) {
     let Batch { rows, waiters } = batch;
     let n = rows.len();
     let rows: Arc<[Row]> = rows.into();
+    let tracer = metrics.tracer();
+    // Build the pool trace handle only when this batch carries a sampled
+    // row — the untraced hot path stays a single `any` scan over the IDs.
+    let trace = tracer
+        .filter(|_| waiters.iter().any(|(_, id, _)| *id != 0))
+        .map(|t| PoolTrace {
+            tracer: t.clone(),
+            ids: waiters.iter().map(|(_, id, _)| *id).collect(),
+        });
     let t0 = Instant::now();
-    let result = backend.infer_shared(rows);
+    let result = backend.infer_shared_traced(rows, trace);
     let exec = t0.elapsed();
     let done = Instant::now();
-    let lats: Vec<Duration> = waiters.iter().map(|(enq, _)| done - *enq).collect();
+    let lats: Vec<Duration> = waiters.iter().map(|(enq, _, _)| done - *enq).collect();
     metrics.record_batch(n, exec, &lats);
+    if let Some(t) = tracer {
+        // Every request feeds the anomaly detector, sampled or not — a tail
+        // outlier must be able to trigger a dump even at 1-in-N sampling.
+        for l in &lats {
+            t.observe_e2e(*l);
+        }
+    }
+    let traced_id = waiters.iter().map(|(_, id, _)| *id).find(|&id| id != 0).unwrap_or(0);
     let t_reply = Instant::now();
     match result {
         Ok(preds) => {
-            for ((_, reply), pred) in waiters.into_iter().zip(preds) {
+            for ((_, _, reply), pred) in waiters.into_iter().zip(preds) {
                 let _ = reply.send(Ok(pred));
             }
         }
         Err(e) => {
-            for (_, reply) in waiters {
+            for (_, _, reply) in waiters {
                 let _ = reply.send(Err(anyhow!("inference failed: {e}")));
             }
         }
     }
     metrics.record_stage(Stage::ReplySplice, t_reply.elapsed());
+    if traced_id != 0 {
+        if let Some(t) = tracer {
+            t.emit_span(traced_id, EventKind::Stage(Stage::ReplySplice), t_reply, t_reply.elapsed());
+        }
+    }
 }
 
 #[cfg(test)]
@@ -902,6 +997,54 @@ mod tests {
         for (i, rx) in rxs.into_iter().enumerate() {
             assert_eq!(rx.recv().unwrap().unwrap(), (i % 2) as i32);
         }
+    }
+
+    /// A sample-everything compiled server must (a) predict exactly like an
+    /// untraced one and (b) leave a complete admit→reply span set in the
+    /// flight recorder, including the engine-side stages and per-level
+    /// lut-exec spans.
+    #[test]
+    fn traced_server_predicts_identically_and_records_full_span_sets() {
+        let nl = LutNetlist {
+            num_inputs: 2,
+            luts: vec![MappedLut { inputs: vec![Src::Input(1)], table: 0b10 }],
+            outputs: vec![Src::Lut(0)],
+        };
+        let plan = crate::engine::compile(&nl);
+        let cfg = ServerConfig {
+            max_batch: 64,
+            max_wait: Duration::from_micros(200),
+            queue_depth: 1024,
+            admission: AdmissionPolicy::Block,
+        };
+        let traced = Server::start_compiled(plan.clone(), 1, 1, 2, 1, 64, 2, cfg.clone());
+        let tracer = traced.enable_tracing(TraceConfig { sample: 1, ..Default::default() });
+        let plain = Server::start_compiled(plan, 1, 1, 2, 1, 64, 2, cfg);
+        for i in 0..20 {
+            let x = if i % 2 == 0 { 0.7 } else { -0.7 };
+            assert_eq!(traced.infer(&[x]).unwrap(), plain.infer(&[x]).unwrap(), "row {i}");
+        }
+        let stats = tracer.stats();
+        assert_eq!(stats.sampled, 20, "sample=1 must trace every request");
+        let labels: Vec<String> =
+            tracer.events().iter().map(|e| e.kind.label()).collect();
+        for want in [
+            "admit",
+            "queue-wait",
+            "batch-form",
+            "head-pack",
+            "lut-exec-l1",
+            "lut-exec",
+            "tail",
+            "reply",
+        ] {
+            assert!(labels.iter().any(|l| l == want), "missing span '{want}' in {labels:?}");
+        }
+        // The attached activity profiler saw the traffic.
+        let snap = traced.metrics.snapshot();
+        let act = snap.activity.expect("compiled backend attaches activity");
+        assert!(act.blocks > 0);
+        assert_eq!(snap.trace.expect("tracer stats in snapshot").sampled, 20);
     }
 
     #[test]

@@ -14,8 +14,11 @@
 //! attached (head-pack / lut-exec / tail + worker busy/idle, stamped by the
 //! pool workers), so one [`Snapshot`] exposes the whole request path.
 
+use crate::engine::{ActivityProfile, ActivityReport};
 use crate::json::Value;
-use crate::telemetry::{LatencyHistogram, PoolTelemetry, Stage, StageSet};
+use crate::telemetry::{
+    HistCounts, LatencyHistogram, PoolTelemetry, Stage, StageSet, TraceStats, Tracer,
+};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -41,6 +44,13 @@ pub struct Metrics {
     /// Engine-side stages + busy/idle counters, attached once by the
     /// serving loop when the backend owns an [`crate::engine::EnginePool`].
     engine: OnceLock<Arc<PoolTelemetry>>,
+    /// Request tracer / flight recorder, attached once by
+    /// `Server::enable_tracing`. `None` keeps every trace branch on the
+    /// submit path to a single `OnceLock` load.
+    tracer: OnceLock<Arc<Tracer>>,
+    /// Engine activity profiler, attached once by the serving loop next to
+    /// the pool telemetry (compiled backends only).
+    activity: OnceLock<Arc<ActivityProfile>>,
 }
 
 /// Point-in-time metrics view. Latency fields are µs with the histogram's
@@ -67,6 +77,13 @@ pub struct Snapshot {
     /// Per-stage percentiles, in [`Stage::ALL`] order, stages with no
     /// recordings omitted.
     pub stages: Vec<StageSnapshot>,
+    /// Raw e2e bucket counts — what [`Self::delta`] subtracts to recompute
+    /// interval percentiles.
+    pub e2e_counts: HistCounts,
+    /// Tracer counters, when a tracer is attached.
+    pub trace: Option<TraceStats>,
+    /// Engine runtime-activity report, when a profiler is attached.
+    pub activity: Option<ActivityReport>,
 }
 
 /// One stage's latency summary inside a [`Snapshot`].
@@ -78,6 +95,8 @@ pub struct StageSnapshot {
     pub p99_us: u64,
     pub p999_us: u64,
     pub max_us: u64,
+    /// Raw bucket counts backing the percentiles (for interval deltas).
+    pub counts: HistCounts,
 }
 
 impl Metrics {
@@ -117,6 +136,29 @@ impl Metrics {
         let _ = self.engine.set(t);
     }
 
+    /// Attach the request tracer (flight recorder + sampling). First call
+    /// wins, like [`Self::attach_engine`].
+    pub fn attach_tracer(&self, t: Arc<Tracer>) {
+        let _ = self.tracer.set(t);
+    }
+
+    /// The attached tracer, if any — the submit/drain/execute paths consult
+    /// this on every traced boundary (a single `OnceLock` load when absent).
+    #[inline]
+    pub fn tracer(&self) -> Option<&Arc<Tracer>> {
+        self.tracer.get()
+    }
+
+    /// Attach the engine activity profiler (first call wins).
+    pub fn attach_activity(&self, a: Arc<ActivityProfile>) {
+        let _ = self.activity.set(a);
+    }
+
+    /// The attached activity profiler, if any.
+    pub fn activity(&self) -> Option<&Arc<ActivityProfile>> {
+        self.activity.get()
+    }
+
     /// Requests served so far — a plain atomic load; safe to poll at any
     /// rate.
     pub fn requests(&self) -> u64 {
@@ -143,15 +185,16 @@ impl Metrics {
             // Stage ownership is disjoint: the coordinator set records
             // queue-wait/batch-form/reply, the engine set head/lut/tail —
             // whichever holds recordings for this stage supplies them.
-            let own = self.stages.get(stage).summary();
-            let s = if own.count > 0 {
+            let own = self.stages.get(stage);
+            let hist = if own.count() > 0 {
                 own
             } else {
                 match engine {
-                    Some(t) => t.stages.get(stage).summary(),
+                    Some(t) => t.stages.get(stage),
                     None => own,
                 }
             };
+            let s = hist.summary();
             if s.count > 0 {
                 stages.push(StageSnapshot {
                     stage,
@@ -160,6 +203,7 @@ impl Metrics {
                     p99_us: s.p99_us(),
                     p999_us: s.p999_us(),
                     max_us: s.max_us(),
+                    counts: hist.counts(),
                 });
             }
         }
@@ -177,6 +221,9 @@ impl Metrics {
             worker_busy_us: engine.map(|t| t.busy_ns() / 1000).unwrap_or(0),
             worker_idle_us: engine.map(|t| t.idle_ns() / 1000).unwrap_or(0),
             stages,
+            e2e_counts: self.e2e.counts(),
+            trace: self.tracer.get().map(|t| t.stats()),
+            activity: self.activity.get().map(|a| a.report()),
         }
     }
 }
@@ -195,6 +242,64 @@ impl Snapshot {
     /// Stage row lookup by stage.
     pub fn stage(&self, stage: Stage) -> Option<&StageSnapshot> {
         self.stages.iter().find(|s| s.stage == stage)
+    }
+
+    /// Interval view: everything that happened since `prev` was taken from
+    /// the **same** `Metrics` store. Counters subtract saturating-at-zero
+    /// (a restarted store never yields wrapped garbage), and the latency
+    /// percentiles are recomputed from the bucket-count differences — so a
+    /// `--metrics-every` report shows the interval's p50/p99/p999, not the
+    /// since-startup aggregate that stops moving once history dominates.
+    /// Stages absent from `prev` pass through whole; the activity report
+    /// (monotone engine counters) carries the latest view unchanged.
+    pub fn delta(&self, prev: &Snapshot) -> Snapshot {
+        let e2e_counts = self.e2e_counts.delta(&prev.e2e_counts);
+        let e2e = e2e_counts.summary();
+        let requests = self.requests.saturating_sub(prev.requests);
+        let batches = self.batches.saturating_sub(prev.batches);
+        let stages = self
+            .stages
+            .iter()
+            .map(|s| {
+                let counts = match prev.stages.iter().find(|p| p.stage == s.stage) {
+                    Some(p) => s.counts.delta(&p.counts),
+                    None => s.counts.clone(),
+                };
+                let sum = counts.summary();
+                StageSnapshot {
+                    stage: s.stage,
+                    count: sum.count,
+                    p50_us: sum.p50_us(),
+                    p99_us: sum.p99_us(),
+                    p999_us: sum.p999_us(),
+                    max_us: sum.max_us(),
+                    counts,
+                }
+            })
+            .filter(|s| s.count > 0)
+            .collect();
+        Snapshot {
+            requests,
+            batches,
+            mean_batch: if batches == 0 { 0.0 } else { requests as f64 / batches as f64 },
+            p50_us: e2e.p50_us(),
+            p99_us: e2e.p99_us(),
+            p999_us: e2e.p999_us(),
+            max_us: e2e.max_us(),
+            busy_us: self.busy_us.saturating_sub(prev.busy_us),
+            rejected: self.rejected.saturating_sub(prev.rejected),
+            overlapped: self.overlapped.saturating_sub(prev.overlapped),
+            worker_busy_us: self.worker_busy_us.saturating_sub(prev.worker_busy_us),
+            worker_idle_us: self.worker_idle_us.saturating_sub(prev.worker_idle_us),
+            stages,
+            e2e_counts,
+            trace: match (&self.trace, &prev.trace) {
+                (Some(now), Some(p)) => Some(now.delta(p)),
+                (Some(now), None) => Some(*now),
+                (None, _) => None,
+            },
+            activity: self.activity.clone(),
+        }
     }
 
     /// JSON exposition via the in-repo [`crate::json`] module — the body a
@@ -225,6 +330,12 @@ impl Snapshot {
             stages.insert(s.stage.label().to_string(), Value::Obj(sm));
         }
         m.insert("stages".into(), Value::Obj(stages));
+        if let Some(t) = &self.trace {
+            m.insert("trace".into(), t.to_json());
+        }
+        if let Some(a) = &self.activity {
+            m.insert("activity".into(), a.to_json());
+        }
         Value::Obj(m)
     }
 
@@ -262,6 +373,18 @@ impl Snapshot {
                 "pool workers: busy {:.1} ms / idle {:.1} ms",
                 self.worker_busy_us as f64 / 1000.0,
                 self.worker_idle_us as f64 / 1000.0
+            );
+        }
+        if let Some(t) = &self.trace {
+            let _ = writeln!(
+                out,
+                "trace: sampled {}   anomalies {} latency / {} shed-burst   dumps {}   ring {} events ({} dropped)",
+                t.sampled,
+                t.latency_anomalies,
+                t.shed_bursts,
+                t.dumps,
+                t.ring_events,
+                t.ring_contended
             );
         }
         let _ = writeln!(
@@ -403,6 +526,55 @@ mod tests {
         assert!(table.contains("p99 us"));
         assert!(table.contains("e2e"));
         assert!(s.render_brief().contains("p999="));
+    }
+
+    #[test]
+    fn snapshot_delta_isolates_the_interval() {
+        let m = Metrics::default();
+        m.record_stage(Stage::QueueWait, Duration::from_micros(10));
+        m.record_batch(100, Duration::from_micros(50), &[Duration::from_micros(10); 100]);
+        let first = m.snapshot();
+        m.record_stage(Stage::QueueWait, Duration::from_micros(5000));
+        m.record_rejected();
+        m.record_batch(50, Duration::from_micros(80), &[Duration::from_micros(5000); 50]);
+        let d = m.snapshot().delta(&first);
+        assert_eq!(d.requests, 50);
+        assert_eq!(d.batches, 1);
+        assert_eq!(d.rejected, 1);
+        // The interval percentiles see only the slow second burst (≤25%
+        // bucket over-report), while the lifetime view still mixes in the
+        // hundred fast requests.
+        assert!(d.p50_us >= 5000 && d.p50_us <= 6250, "interval p50={}", d.p50_us);
+        assert!(m.snapshot().p50_us < 5000, "lifetime p50 stays mixed");
+        let qw = d.stage(Stage::QueueWait).expect("queue-wait interval row");
+        assert_eq!(qw.count, 1);
+        assert!(qw.p50_us >= 5000, "interval stage p50={}", qw.p50_us);
+        // A snapshot delta'd against itself is empty.
+        let s = m.snapshot();
+        let z = s.delta(&s);
+        assert_eq!(z.requests, 0);
+        assert_eq!(z.p99_us, 0);
+        assert!(z.stages.is_empty());
+    }
+
+    #[test]
+    fn attached_tracer_surfaces_in_snapshot_and_json() {
+        let m = Metrics::default();
+        let t = Arc::new(Tracer::new(crate::telemetry::TraceConfig {
+            sample: 1,
+            ..Default::default()
+        }));
+        m.attach_tracer(t.clone());
+        assert_ne!(t.sample(), 0);
+        let s = m.snapshot();
+        let ts = s.trace.expect("trace stats present once attached");
+        assert_eq!(ts.sampled, 1);
+        assert!(s.to_json().get("trace").is_ok());
+        assert!(s.render_table().contains("trace: sampled"));
+        // Interval deltas subtract the trace counters too.
+        assert_eq!(t.sample(), 2);
+        let d = m.snapshot().delta(&s);
+        assert_eq!(d.trace.expect("interval trace stats").sampled, 1);
     }
 
     /// The O(buckets) guarantee: `Metrics` is a fixed-size block of atomics

@@ -89,6 +89,20 @@ impl Router {
     pub fn total_rejected(&self) -> u64 {
         self.servers.values().map(|s| s.metrics.rejected()).sum()
     }
+
+    /// Aggregate anomaly triggers (latency + shed-burst) across traced
+    /// models; models without an attached tracer contribute 0. Counter
+    /// reads only — safe to poll as a health signal.
+    pub fn total_anomalies(&self) -> u64 {
+        self.servers
+            .values()
+            .filter_map(|s| s.metrics.tracer())
+            .map(|t| {
+                let st = t.stats();
+                st.latency_anomalies + st.shed_bursts
+            })
+            .sum()
+    }
 }
 
 /// Convenience: standard router config for netlist-emulation deployments.
@@ -145,6 +159,26 @@ mod tests {
         assert!(router.undeploy("a"));
         assert!(!router.undeploy("a"));
         assert!(router.infer("a", &[0.5]).is_err());
+    }
+
+    #[test]
+    fn traced_model_stats_json_carries_trace_fields() {
+        let mut router = Router::new();
+        let server = toy_server(false);
+        let tracer =
+            server.enable_tracing(crate::telemetry::TraceConfig { sample: 2, ..Default::default() });
+        router.deploy("t", server);
+        router.deploy("plain", toy_server(false));
+        for _ in 0..10 {
+            let _ = router.infer("t", &[0.5]).unwrap();
+        }
+        assert_eq!(tracer.stats().sampled, 5, "1-in-2 of 10");
+        let json = router.stats_json();
+        let traced = json.get("t").unwrap();
+        let trace = traced.get("trace").expect("trace block for traced model");
+        assert_eq!(trace.get("sampled").unwrap().as_usize().unwrap(), 5);
+        assert!(json.get("plain").unwrap().opt("trace").is_none(), "untraced model stays bare");
+        assert_eq!(router.total_anomalies(), 0);
     }
 
     #[test]

@@ -281,6 +281,28 @@ pub(crate) fn eval_rows_block(
     decode_block_preds(ex, index_width, out);
 }
 
+/// Per-block instrumentation handles for [`eval_shared_rows_block`]. All
+/// fields optional and all observers: none of them influences the op
+/// sequence the executor runs, so instrumented execution is bit-identical
+/// to a bare `ex.run()` sweep (the conformance inertness test pins this).
+#[derive(Default, Clone, Copy)]
+pub(crate) struct BlockHooks<'a> {
+    /// Stage histograms to lap (head-pack / lut-exec / tail), per block.
+    pub spans: Option<&'a crate::telemetry::StageSet>,
+    /// Activity counters: per-segment runtime always, per-op output density
+    /// on the profile's sampled blocks.
+    pub profile: Option<&'a super::profile::ActivityProfile>,
+    /// Flight-recorder emission for one sampled request riding this block:
+    /// head-pack / per-level lut-exec / tail span events under its trace ID.
+    pub trace: Option<(&'a crate::telemetry::Tracer, u64)>,
+}
+
+impl BlockHooks<'_> {
+    fn timed(&self) -> bool {
+        self.spans.is_some() || self.trace.is_some()
+    }
+}
+
 /// [`eval_rows_block`] over admitted [`crate::util::fixed::Row`]s — the
 /// zero-copy serving path: rows are borrowed shard slices of the batch's
 /// `Arc<[Row]>`, never copied. A block may mix real and integer-grid rows;
@@ -288,24 +310,28 @@ pub(crate) fn eval_rows_block(
 /// feature; emulated: the matching bit packer), so mixed batches stay
 /// bit-identical to per-kind runs.
 ///
-/// With `spans`, the three engine-side stage boundaries are stamped into the
-/// given histograms per lane block — head-pack (feature packing, native
-/// comparisons or bit expansion), lut-exec ([`Executor::run`]), and tail
-/// (prediction decode). One `Instant` read per boundary, amortized over the
-/// whole block; pass `None` on paths that don't serve (benches' inner loops,
-/// parity tests).
+/// With `hooks.spans`, the three engine-side stage boundaries are stamped
+/// into the given histograms per lane block — head-pack (feature packing,
+/// native comparisons or bit expansion), lut-exec, and tail (prediction
+/// decode) — one `Instant` read per boundary, amortized over the whole
+/// block. With `hooks.profile`, lut-exec runs segment by segment (identical
+/// op order) with per-segment runtime laps plus, on sampled blocks, a
+/// per-op output-density sweep. With `hooks.trace`, the same boundaries
+/// (plus one span per logic level) are emitted into the flight recorder
+/// under the riding request's trace ID. Pass `BlockHooks::default()` on
+/// paths that don't serve (benches' inner loops, parity tests).
 pub(crate) fn eval_shared_rows_block(
     ex: &mut Executor,
     rows: &[crate::util::fixed::Row],
     frac_bits: u32,
     index_width: usize,
     out: &mut [i32],
-    spans: Option<&crate::telemetry::StageSet>,
+    hooks: BlockHooks<'_>,
 ) {
-    use crate::telemetry::{Stage, StageClock};
+    use crate::telemetry::{EventKind, Stage};
     use crate::util::fixed;
     assert_eq!(rows.len(), out.len());
-    let mut clock = spans.map(|_| StageClock::start());
+    let mut mark = hooks.timed().then(Instant::now);
     if ex.plan().head.is_some() {
         super::head::pack_shared_rows(ex, rows, frac_bits);
     } else {
@@ -319,17 +345,86 @@ pub(crate) fn eval_shared_rows_block(
             fixed::pack_row_bits_of(row, frac_bits, |bit| ex.set_input_bit(bit, lane));
         }
     }
-    if let (Some(set), Some(clock)) = (spans, clock.as_mut()) {
-        clock.lap(set, Stage::HeadPack);
+    mark = lap(&hooks, mark, Stage::HeadPack);
+    match hooks.profile {
+        None => ex.run(),
+        Some(profile) => {
+            // Segment-by-segment sweep: same ops, same order as `run()` —
+            // segments partition `plan.ops` in execution order — with one
+            // wall-clock lap per segment and one trace span per level.
+            // `plan()` hands back the executor-independent `&'p` borrow, so
+            // no clone is needed on this hot path.
+            let plan = ex.plan();
+            let mut level_open: Option<(u32, Instant)> = None;
+            for (si, seg) in plan.segments.iter().enumerate() {
+                let now = Instant::now();
+                if let Some((tracer, id)) = hooks.trace {
+                    match level_open {
+                        Some((lvl, t0)) if lvl != seg.level => {
+                            tracer.emit_span(id, EventKind::LutLevel(lvl), t0, now - t0);
+                            level_open = Some((seg.level, now));
+                        }
+                        None => level_open = Some((seg.level, now)),
+                        _ => {}
+                    }
+                }
+                ex.run_ops(seg.ops.clone());
+                profile.add_seg_ns(si, now.elapsed());
+            }
+            if let (Some((tracer, id)), Some((lvl, t0))) = (hooks.trace, level_open) {
+                tracer.emit_span(id, EventKind::LutLevel(lvl), t0, t0.elapsed());
+            }
+            if profile.begin_block() {
+                sample_block_density(ex, rows.len(), profile);
+            }
+        }
     }
-    ex.run();
-    if let (Some(set), Some(clock)) = (spans, clock.as_mut()) {
-        clock.lap(set, Stage::LutExec);
-    }
+    mark = lap(&hooks, mark, Stage::LutExec);
     decode_block_preds(ex, index_width, out);
-    if let (Some(set), Some(clock)) = (spans, clock.as_mut()) {
-        clock.lap(set, Stage::Tail);
+    lap(&hooks, mark, Stage::Tail);
+}
+
+/// Record one stage boundary into the hook targets; returns the new mark.
+#[inline]
+fn lap(
+    hooks: &BlockHooks<'_>,
+    mark: Option<Instant>,
+    stage: crate::telemetry::Stage,
+) -> Option<Instant> {
+    let t0 = mark?;
+    let now = Instant::now();
+    if let Some(set) = hooks.spans {
+        set.record(stage, now - t0);
     }
+    if let Some((tracer, id)) = hooks.trace {
+        tracer.emit_span(id, crate::telemetry::EventKind::Stage(stage), t0, now - t0);
+    }
+    Some(now)
+}
+
+/// Density-sample every op's output over the block's live lanes: popcount
+/// plus an FNV fingerprint per op, accumulated into the profile. Read-only
+/// over the value buffer.
+fn sample_block_density(
+    ex: &Executor,
+    live_rows: usize,
+    profile: &super::profile::ActivityProfile,
+) {
+    let plan = ex.plan();
+    let live_words = crate::util::ceil_div(live_rows, 64);
+    for (op_idx, op) in plan.ops.iter().enumerate() {
+        let mut ones = 0u64;
+        let mut h = super::profile::FNV_OFFSET;
+        for w in 0..live_words {
+            let live = (live_rows - w * 64).min(64);
+            let mask = if live == 64 { u64::MAX } else { (1u64 << live) - 1 };
+            let word = ex.slot_word(op.dst as usize, w) & mask;
+            ones += u64::from(word.count_ones());
+            h = super::profile::fold_word(h, word);
+        }
+        profile.add_op_sample(op_idx, ones, h);
+    }
+    profile.finish_sampled_block(live_rows as u64);
 }
 
 /// Shared per-block decode: native tail when present, emulated class-index

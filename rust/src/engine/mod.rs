@@ -40,6 +40,7 @@ mod exec;
 pub mod head;
 mod plan;
 mod pool;
+pub mod profile;
 mod stages;
 pub mod tail;
 
@@ -52,7 +53,8 @@ pub use head::HeadMode;
 pub use plan::{
     CompileStats, ExecPlan, HeadFeaturePlan, HeadPlan, OutSrc, PlanOp, Segment, TailPlan,
 };
-pub use pool::EnginePool;
+pub use pool::{EnginePool, PoolTrace};
+pub use profile::{ActivityProfile, ActivityReport, LevelActivity, DEFAULT_DENSITY_SAMPLE};
 pub use stages::{measure_stages, StageRuntime};
 pub use tail::TailMode;
 

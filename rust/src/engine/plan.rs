@@ -56,7 +56,7 @@ pub struct Segment {
 }
 
 /// What compile eliminated — reported by `dwn breakdown` and the benches.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CompileStats {
     /// LUTs in the source netlist.
     pub source_luts: usize,

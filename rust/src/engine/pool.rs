@@ -19,14 +19,24 @@
 //! finishes first — `infer_shared` is bit-identical to a single-threaded
 //! sweep for any batch size, shard count, or scheduling.
 
-use super::exec::{eval_shared_rows_block, Executor};
+use super::exec::{eval_shared_rows_block, BlockHooks, Executor};
 use super::plan::ExecPlan;
-use crate::telemetry::PoolTelemetry;
+use super::profile::{ActivityProfile, DEFAULT_DENSITY_SAMPLE};
+use crate::telemetry::{PoolTelemetry, Tracer};
 use crate::util::fixed::Row;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
+
+/// Trace handle riding one shared batch through the pool: the tracer plus
+/// per-row trace IDs aligned with the batch (0 = unsampled row). Shard jobs
+/// clone only the two `Arc`s.
+#[derive(Clone)]
+pub struct PoolTrace {
+    pub tracer: Arc<Tracer>,
+    pub ids: Arc<[u64]>,
+}
 
 /// One shard of a batch: worker evaluates rows `[start, start + len)` of the
 /// shared batch and replies with `(start, preds)`.
@@ -35,6 +45,9 @@ struct Job {
     start: usize,
     len: usize,
     reply: Sender<(usize, Vec<i32>)>,
+    /// Present when the batch carries sampled requests; each worker emits
+    /// engine spans for the first sampled row of each of its lane blocks.
+    trace: Option<PoolTrace>,
 }
 
 /// A fixed set of parked worker threads over one compiled plan.
@@ -51,11 +64,15 @@ pub struct EnginePool {
     /// busy/idle counters; shared with every worker and exposed to the
     /// serving coordinator via [`Self::telemetry`].
     telemetry: Arc<PoolTelemetry>,
+    /// Runtime-activity counters (per-segment/per-level ns, sampled per-op
+    /// output density), shared with every worker.
+    activity: Arc<ActivityProfile>,
 }
 
 impl EnginePool {
     /// Spawn `threads.max(1)` workers, each with its own executor sized for
-    /// `lanes` vectors per pass.
+    /// `lanes` vectors per pass. Density sampling runs at the default
+    /// 1-in-64 rate; use [`Self::with_density`] to change it.
     pub fn new(
         plan: Arc<ExecPlan>,
         lanes: usize,
@@ -63,8 +80,23 @@ impl EnginePool {
         frac_bits: u32,
         index_width: usize,
     ) -> Self {
+        Self::with_density(plan, lanes, threads, frac_bits, index_width, DEFAULT_DENSITY_SAMPLE)
+    }
+
+    /// [`Self::new`] with an explicit density-sampling rate: per-op output
+    /// density is swept on 1 in `density_sample` lane blocks (0 disables
+    /// the sweep; per-segment runtime counters stay on either way).
+    pub fn with_density(
+        plan: Arc<ExecPlan>,
+        lanes: usize,
+        threads: usize,
+        frac_bits: u32,
+        index_width: usize,
+        density_sample: u32,
+    ) -> Self {
         let lanes = crate::util::ceil_div(lanes.max(1), 64) * 64;
         let telemetry = Arc::new(PoolTelemetry::new());
+        let activity = Arc::new(ActivityProfile::for_plan(&plan, density_sample));
         let (job_tx, job_rx) = channel::<Job>();
         let job_rx = Arc::new(Mutex::new(job_rx));
         let workers = (0..threads.max(1))
@@ -72,15 +104,25 @@ impl EnginePool {
                 let plan = plan.clone();
                 let job_rx = job_rx.clone();
                 let tel = telemetry.clone();
+                let act = activity.clone();
                 std::thread::Builder::new()
                     .name(format!("dwn-engine-{i}"))
                     .spawn(move || {
-                        worker_loop(&plan, lanes, frac_bits, index_width, &job_rx, &tel)
+                        worker_loop(&plan, lanes, frac_bits, index_width, &job_rx, &tel, &act)
                     })
                     .expect("spawn engine worker")
             })
             .collect();
-        Self { plan, lanes, frac_bits, index_width, job_tx: Some(job_tx), workers, telemetry }
+        Self {
+            plan,
+            lanes,
+            frac_bits,
+            index_width,
+            job_tx: Some(job_tx),
+            workers,
+            telemetry,
+            activity,
+        }
     }
 
     /// The pool's shared stage histograms and busy/idle counters. The serving
@@ -88,6 +130,12 @@ impl EnginePool {
     /// so snapshots carry head-pack / lut-exec / tail percentiles.
     pub fn telemetry(&self) -> Arc<PoolTelemetry> {
         self.telemetry.clone()
+    }
+
+    /// The pool's shared runtime-activity counters (`dwn profile`,
+    /// `Snapshot` activity exposition, BENCH activity summaries).
+    pub fn activity(&self) -> Arc<ActivityProfile> {
+        self.activity.clone()
     }
 
     pub fn plan(&self) -> &ExecPlan {
@@ -115,9 +163,21 @@ impl EnginePool {
     /// input. The only thing cloned per shard is the batch `Arc` — feature
     /// buffers are read in place.
     pub fn infer_shared(&self, rows: Arc<[Row]>) -> Vec<i32> {
+        self.infer_shared_traced(rows, None)
+    }
+
+    /// [`Self::infer_shared`] with an optional trace handle: when the batch
+    /// carries sampled requests, workers emit head-pack / per-level
+    /// lut-exec / tail span events into the tracer's flight recorder under
+    /// the sampled rows' trace IDs. Results are bit-identical with or
+    /// without tracing (instrumentation never writes the value buffer).
+    pub fn infer_shared_traced(&self, rows: Arc<[Row]>, trace: Option<PoolTrace>) -> Vec<i32> {
         let n = rows.len();
         if n == 0 {
             return Vec::new();
+        }
+        if let Some(t) = &trace {
+            assert_eq!(t.ids.len(), n, "trace IDs must align with the batch rows");
         }
         // Arity check on the caller thread, so a malformed request panics
         // the submitter (as the scoped-thread path did), not a pool worker.
@@ -137,8 +197,14 @@ impl EnginePool {
             if len == 0 {
                 continue;
             }
-            tx.send(Job { rows: rows.clone(), start, len, reply: reply_tx.clone() })
-                .expect("engine pool workers gone");
+            tx.send(Job {
+                rows: rows.clone(),
+                start,
+                len,
+                reply: reply_tx.clone(),
+                trace: trace.clone(),
+            })
+            .expect("engine pool workers gone");
             start += len;
             sent += 1;
         }
@@ -190,6 +256,7 @@ fn worker_loop(
     index_width: usize,
     job_rx: &Mutex<Receiver<Job>>,
     tel: &PoolTelemetry,
+    activity: &ActivityProfile,
 ) {
     let mut ex = Executor::new(plan, lanes);
     loop {
@@ -210,16 +277,23 @@ fn worker_loop(
         for (ci, outs) in preds.chunks_mut(lanes).enumerate() {
             let lo = job.start + ci * lanes;
             ex.clear_inputs();
+            // One trace ID represents the block: the first sampled row in
+            // it (engine spans are per lane block, not per row).
+            let trace = job.trace.as_ref().and_then(|t| {
+                let id = t.ids[lo..lo + outs.len()].iter().copied().find(|&i| i != 0)?;
+                Some((t.tracer.as_ref(), id))
+            });
             // Borrowed shard slice of the shared batch — rows mix kinds
             // freely and are never copied here. The evaluator stamps
-            // head-pack / lut-exec / tail laps into the pool histograms.
+            // head-pack / lut-exec / tail laps into the pool histograms and
+            // per-segment runtime into the activity profile.
             eval_shared_rows_block(
                 &mut ex,
                 &job.rows[lo..lo + outs.len()],
                 frac_bits,
                 index_width,
                 outs,
-                Some(&tel.stages),
+                BlockHooks { spans: Some(&tel.stages), profile: Some(activity), trace },
             );
         }
         tel.add_busy(t_busy.elapsed());
@@ -350,6 +424,62 @@ mod tests {
         .map(|&s| tel.stages.get(s).sum_ns())
         .sum();
         assert!(stage_sum <= tel.busy_ns(), "stage laps exceed busy time");
+    }
+
+    #[test]
+    fn traced_inference_matches_untraced_and_emits_engine_spans() {
+        use crate::telemetry::{EventKind, Stage, TraceConfig, Tracer};
+        let plan = Arc::new(sign_plan());
+        let pool = EnginePool::new(plan, 64, 2, 1, 1);
+        let rows: Arc<[Row]> = (0..150)
+            .map(|i| Row::real(&[if i % 3 == 0 { -0.9 } else { 0.9 }]))
+            .collect::<Vec<_>>()
+            .into();
+        let want = pool.infer_shared(rows.clone());
+        let tracer = Arc::new(Tracer::new(TraceConfig { sample: 1, ..Default::default() }));
+        // Sample rows 0 and 100 (different lane blocks).
+        let ids: Arc<[u64]> =
+            (0..150u64).map(|i| if i == 0 { 7 } else if i == 100 { 9 } else { 0 }).collect();
+        let got = pool
+            .infer_shared_traced(rows, Some(PoolTrace { tracer: tracer.clone(), ids }));
+        assert_eq!(got, want, "tracing must not change predictions");
+        let events = tracer.events();
+        for id in [7u64, 9] {
+            for want_kind in [
+                EventKind::Stage(Stage::HeadPack),
+                EventKind::LutLevel(1),
+                EventKind::Stage(Stage::LutExec),
+                EventKind::Stage(Stage::Tail),
+            ] {
+                assert!(
+                    events.iter().any(|e| e.trace_id == id && e.kind == want_kind),
+                    "trace {id} missing {want_kind:?} in {events:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn activity_profile_accumulates_runtime_and_density() {
+        let plan = Arc::new(sign_plan());
+        // Sample every block so the density sweep definitely runs.
+        let pool = EnginePool::with_density(plan, 64, 2, 1, 1, 1);
+        let rows: Vec<Vec<f32>> =
+            (0..500).map(|i| vec![if i % 3 == 0 { -0.9 } else { 0.9 }]).collect();
+        pool.infer(&rows);
+        let rep = pool.activity().report();
+        assert!(rep.blocks > 0, "no blocks counted");
+        assert_eq!(rep.sampled_blocks, rep.blocks, "sample-every-block");
+        assert_eq!(rep.lanes_sampled, 500);
+        assert!(rep.total_ns() > 0, "no per-level runtime recorded");
+        assert_eq!(rep.levels.iter().map(|l| l.ops).sum::<usize>(), rep.ops);
+        // The sign op fires on 1/3 of rows: neither constant nor degenerate.
+        assert_eq!(rep.constant_zero, 0);
+        assert_eq!(rep.constant_one, 0);
+        let density: f64 =
+            rep.levels.iter().map(|l| l.mean_density * l.ops as f64).sum::<f64>()
+                / rep.ops as f64;
+        assert!((density - 1.0 / 3.0).abs() < 0.05, "sign density ~1/3, got {density}");
     }
 
     #[test]

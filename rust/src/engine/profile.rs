@@ -1,0 +1,363 @@
+//! Engine activity profiler: where runtime concentrates and which LUTs do
+//! work in practice — the dynamic counterpart of `dwn breakdown`'s static
+//! per-stage area columns.
+//!
+//! An [`ActivityProfile`] is sized once from a compiled [`ExecPlan`] and
+//! shared (lock-free `AtomicU64` counters) by every pool worker:
+//!
+//! * **per-segment / per-level runtime** — each lane block runs the plan
+//!   segment by segment with one wall-clock lap per segment, so the report
+//!   can say how much of lut-exec each logic level costs (encoder-cone
+//!   levels vs deep LUT layers vs tail is already split by the stage
+//!   histograms; this splits *inside* lut-exec).
+//! * **sampled per-LUT output density** — on 1 in `density_sample` lane
+//!   blocks, every op's output word is popcounted over the block's live
+//!   lanes and folded into a per-op FNV fingerprint. Ops whose sampled
+//!   outputs are all-0 or all-1 are *constant in practice*; ops with equal
+//!   (fingerprint, ones) pairs over the same sampled lanes are *duplicated
+//!   in practice* — both are candidates for the ROADMAP's netlist
+//!   optimization pass. At the default 1-in-64 rate the sweep touches each
+//!   op once per 64 blocks, keeping measured overhead under ~5% (see
+//!   DESIGN.md §tracing).
+//!
+//! The counters are monotone and relaxed; [`report`](ActivityProfile::report)
+//! is a read-only plain-data snapshot safe to take while workers run.
+
+use super::plan::ExecPlan;
+use crate::json::Value;
+use std::collections::BTreeMap;
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Default density-sampling rate (1 in N lane blocks).
+pub const DEFAULT_DENSITY_SAMPLE: u32 = 64;
+
+/// FNV-1a 64-bit offset basis / prime, for the per-op output fingerprint.
+pub(crate) const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Fold one lane word into a running FNV-1a fingerprint.
+#[inline]
+pub(crate) fn fold_word(h: u64, word: u64) -> u64 {
+    (h ^ word).wrapping_mul(FNV_PRIME)
+}
+
+/// Shared runtime-activity counters for one compiled plan.
+pub struct ActivityProfile {
+    /// Static: level of each plan segment, aligned with `ExecPlan::segments`.
+    seg_level: Vec<u32>,
+    /// Static: op index range of each segment.
+    seg_ops: Vec<Range<usize>>,
+    /// Wall-clock nanoseconds spent executing each segment.
+    seg_ns: Vec<AtomicU64>,
+    /// Per-op: 1-bits observed among sampled live lanes.
+    ones: Vec<AtomicU64>,
+    /// Per-op: wrapping sum of per-block output fingerprints. Two ops with
+    /// identical output streams over the sampled blocks accumulate identical
+    /// sums (order-independent); a collision across different streams is a
+    /// ~2⁻⁶⁴ false "duplicate" candidate, acceptable for a report that
+    /// feeds a verifying optimization pass.
+    sig: Vec<AtomicU64>,
+    /// Lane blocks executed with profiling active.
+    blocks: AtomicU64,
+    /// Lane blocks density-sampled.
+    sampled_blocks: AtomicU64,
+    /// Live lanes (rows) across sampled blocks.
+    lanes_sampled: AtomicU64,
+    density_sample: u32,
+}
+
+impl ActivityProfile {
+    /// Size the counters for `plan`; `density_sample` = sample 1 in N lane
+    /// blocks (0 disables density sampling, runtime counters stay on).
+    pub fn for_plan(plan: &ExecPlan, density_sample: u32) -> Self {
+        ActivityProfile {
+            seg_level: plan.segments.iter().map(|s| s.level).collect(),
+            seg_ops: plan.segments.iter().map(|s| s.ops.clone()).collect(),
+            seg_ns: plan.segments.iter().map(|_| AtomicU64::new(0)).collect(),
+            ones: plan.ops.iter().map(|_| AtomicU64::new(0)).collect(),
+            sig: plan.ops.iter().map(|_| AtomicU64::new(0)).collect(),
+            blocks: AtomicU64::new(0),
+            sampled_blocks: AtomicU64::new(0),
+            lanes_sampled: AtomicU64::new(0),
+            density_sample,
+        }
+    }
+
+    pub fn density_sample(&self) -> u32 {
+        self.density_sample
+    }
+
+    /// Count one lane block; returns whether this block should be
+    /// density-sampled (1 in `density_sample`).
+    #[inline]
+    pub(crate) fn begin_block(&self) -> bool {
+        let b = self.blocks.fetch_add(1, Ordering::Relaxed);
+        self.density_sample != 0 && b % self.density_sample as u64 == 0
+    }
+
+    #[inline]
+    pub(crate) fn add_seg_ns(&self, seg: usize, d: Duration) {
+        self.seg_ns[seg]
+            .fetch_add(d.as_nanos().min(u64::MAX as u128) as u64, Ordering::Relaxed);
+    }
+
+    /// Accumulate one sampled block's observation of one op.
+    #[inline]
+    pub(crate) fn add_op_sample(&self, op: usize, ones: u64, block_sig: u64) {
+        self.ones[op].fetch_add(ones, Ordering::Relaxed);
+        self.sig[op].fetch_add(block_sig, Ordering::Relaxed);
+    }
+
+    /// Close one sampled block of `lanes` live rows.
+    #[inline]
+    pub(crate) fn finish_sampled_block(&self, lanes: u64) {
+        self.sampled_blocks.fetch_add(1, Ordering::Relaxed);
+        self.lanes_sampled.fetch_add(lanes, Ordering::Relaxed);
+    }
+
+    /// Plain-data snapshot: per-level runtime plus the density-derived
+    /// constant/duplicate classification.
+    pub fn report(&self) -> ActivityReport {
+        let lanes = self.lanes_sampled.load(Ordering::Relaxed);
+        let num_ops = self.ones.len();
+        // Op → level, from the segment ranges.
+        let mut op_level = vec![0u32; num_ops];
+        for (si, range) in self.seg_ops.iter().enumerate() {
+            for l in &mut op_level[range.clone()] {
+                *l = self.seg_level[si];
+            }
+        }
+        // Per-op classification (only meaningful once lanes were sampled).
+        let mut const_zero = vec![false; num_ops];
+        let mut const_one = vec![false; num_ops];
+        let mut dup_of = vec![false; num_ops];
+        let mut duplicate_groups = 0usize;
+        if lanes > 0 {
+            let mut groups: BTreeMap<(u64, u64), Vec<usize>> = BTreeMap::new();
+            for op in 0..num_ops {
+                let ones = self.ones[op].load(Ordering::Relaxed);
+                const_zero[op] = ones == 0;
+                const_one[op] = ones == lanes;
+                groups
+                    .entry((self.sig[op].load(Ordering::Relaxed), ones))
+                    .or_default()
+                    .push(op);
+            }
+            for members in groups.values() {
+                if members.len() > 1 {
+                    duplicate_groups += 1;
+                    for &op in &members[1..] {
+                        dup_of[op] = true;
+                    }
+                }
+            }
+        }
+        // Aggregate segments into levels (segments are level-contiguous but
+        // a level may span several stage segments).
+        let mut levels: Vec<LevelActivity> = Vec::new();
+        for (si, range) in self.seg_ops.iter().enumerate() {
+            let level = self.seg_level[si];
+            if levels.last().map(|l| l.level) != Some(level) {
+                levels.push(LevelActivity { level, ..LevelActivity::default() });
+            }
+            let entry = levels.last_mut().unwrap();
+            entry.ops += range.len();
+            entry.ns += self.seg_ns[si].load(Ordering::Relaxed);
+            for op in range.clone() {
+                if lanes > 0 {
+                    entry.mean_density += self.ones[op].load(Ordering::Relaxed) as f64;
+                }
+                entry.constant_zero += usize::from(const_zero[op]);
+                entry.constant_one += usize::from(const_one[op]);
+                entry.duplicate_ops += usize::from(dup_of[op]);
+            }
+        }
+        for l in &mut levels {
+            if lanes > 0 && l.ops > 0 {
+                l.mean_density /= (l.ops as u64 * lanes) as f64;
+            }
+        }
+        ActivityReport {
+            levels,
+            blocks: self.blocks.load(Ordering::Relaxed),
+            sampled_blocks: self.sampled_blocks.load(Ordering::Relaxed),
+            lanes_sampled: lanes,
+            ops: num_ops,
+            constant_zero: const_zero.iter().filter(|&&b| b).count(),
+            constant_one: const_one.iter().filter(|&&b| b).count(),
+            duplicate_groups,
+            duplicate_ops: dup_of.iter().filter(|&&b| b).count(),
+            density_sample: self.density_sample,
+        }
+    }
+}
+
+impl std::fmt::Debug for ActivityProfile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "ActivityProfile {{ segments: {}, ops: {}, blocks: {} }}",
+            self.seg_ns.len(),
+            self.ones.len(),
+            self.blocks.load(Ordering::Relaxed)
+        )
+    }
+}
+
+/// One logic level's share of the runtime activity report.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct LevelActivity {
+    /// Logic level (1 = fed only by primary inputs).
+    pub level: u32,
+    /// Surviving ops at this level.
+    pub ops: usize,
+    /// Wall-clock ns spent executing this level across all workers.
+    pub ns: u64,
+    /// Mean sampled output density over the level's ops (fraction of live
+    /// lanes at 1), 0 when nothing was sampled.
+    pub mean_density: f64,
+    /// Ops whose sampled outputs were all 0.
+    pub constant_zero: usize,
+    /// Ops whose sampled outputs were all 1.
+    pub constant_one: usize,
+    /// Ops duplicating another op's sampled output stream.
+    pub duplicate_ops: usize,
+}
+
+/// Plain-data activity snapshot (`dwn profile`, `Snapshot::to_json`,
+/// BENCH_serve.json).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ActivityReport {
+    pub levels: Vec<LevelActivity>,
+    /// Lane blocks executed with profiling active.
+    pub blocks: u64,
+    /// Lane blocks density-sampled (≈ blocks / density_sample).
+    pub sampled_blocks: u64,
+    /// Live lanes across sampled blocks.
+    pub lanes_sampled: u64,
+    /// Total surviving ops in the plan.
+    pub ops: usize,
+    /// Ops constant-0 in practice over the sampled lanes.
+    pub constant_zero: usize,
+    /// Ops constant-1 in practice over the sampled lanes.
+    pub constant_one: usize,
+    /// Groups of ≥2 ops with identical sampled output streams.
+    pub duplicate_groups: usize,
+    /// Ops that duplicate another op (group sizes minus group leaders).
+    pub duplicate_ops: usize,
+    pub density_sample: u32,
+}
+
+impl ActivityReport {
+    /// Total lut-exec ns attributed across levels.
+    pub fn total_ns(&self) -> u64 {
+        self.levels.iter().map(|l| l.ns).sum()
+    }
+
+    pub fn to_json(&self) -> Value {
+        let levels = self
+            .levels
+            .iter()
+            .map(|l| {
+                let mut m = BTreeMap::new();
+                m.insert("level".into(), Value::Num(l.level as f64));
+                m.insert("ops".into(), Value::Num(l.ops as f64));
+                m.insert("ns".into(), Value::Num(l.ns as f64));
+                m.insert("mean_density".into(), Value::Num(l.mean_density));
+                m.insert("constant_zero".into(), Value::Num(l.constant_zero as f64));
+                m.insert("constant_one".into(), Value::Num(l.constant_one as f64));
+                m.insert("duplicate_ops".into(), Value::Num(l.duplicate_ops as f64));
+                Value::Obj(m)
+            })
+            .collect();
+        let mut m = BTreeMap::new();
+        m.insert("levels".into(), Value::Arr(levels));
+        m.insert("blocks".into(), Value::Num(self.blocks as f64));
+        m.insert("sampled_blocks".into(), Value::Num(self.sampled_blocks as f64));
+        m.insert("lanes_sampled".into(), Value::Num(self.lanes_sampled as f64));
+        m.insert("ops".into(), Value::Num(self.ops as f64));
+        m.insert("constant_zero".into(), Value::Num(self.constant_zero as f64));
+        m.insert("constant_one".into(), Value::Num(self.constant_one as f64));
+        m.insert("duplicate_groups".into(), Value::Num(self.duplicate_groups as f64));
+        m.insert("duplicate_ops".into(), Value::Num(self.duplicate_ops as f64));
+        m.insert("density_sample".into(), Value::Num(self.density_sample as f64));
+        Value::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::compile;
+    use crate::techmap::{LutNetlist, MappedLut, Src};
+
+    /// Two levels: l0 = in0 AND in1, l1 = NOT l0, l2 = copy of l0
+    /// (duplicate-in-practice once both see the same lanes), plus an op
+    /// that is constant-in-practice for the inputs we drive.
+    fn toy() -> LutNetlist {
+        LutNetlist {
+            num_inputs: 2,
+            luts: vec![
+                MappedLut { inputs: vec![Src::Input(0), Src::Input(1)], table: 0b1000 },
+                MappedLut { inputs: vec![Src::Lut(0)], table: 0b01 },
+                MappedLut { inputs: vec![Src::Input(0), Src::Input(1)], table: 0b1110 },
+            ],
+            outputs: vec![Src::Lut(1), Src::Lut(2)],
+        }
+    }
+
+    #[test]
+    fn report_shapes_follow_the_plan() {
+        let plan = compile(&toy());
+        let prof = ActivityProfile::for_plan(&plan, 1);
+        let rep = prof.report();
+        assert_eq!(rep.ops, plan.ops.len());
+        assert_eq!(rep.levels.iter().map(|l| l.ops).sum::<usize>(), plan.ops.len());
+        assert_eq!(rep.blocks, 0);
+        // Levels come out ascending and unique.
+        for w in rep.levels.windows(2) {
+            assert!(w[0].level < w[1].level);
+        }
+    }
+
+    #[test]
+    fn density_classifies_constant_and_duplicate_ops() {
+        let plan = compile(&toy());
+        let prof = ActivityProfile::for_plan(&plan, 1);
+        assert!(prof.begin_block(), "sample-every-block must sample the first");
+        // Simulate one sampled block of 64 live lanes: op0 all-zero,
+        // op1 all-one, op2 duplicates op0 (same ones + fingerprint).
+        let lanes = 64u64;
+        let h0 = fold_word(FNV_OFFSET, 0);
+        let h1 = fold_word(FNV_OFFSET, u64::MAX);
+        prof.add_op_sample(0, 0, h0);
+        prof.add_op_sample(1, lanes, h1);
+        prof.add_op_sample(2, 0, h0);
+        prof.finish_sampled_block(lanes);
+        let rep = prof.report();
+        assert_eq!(rep.lanes_sampled, 64);
+        assert_eq!(rep.sampled_blocks, 1);
+        assert_eq!(rep.constant_zero, 2);
+        assert_eq!(rep.constant_one, 1);
+        assert_eq!(rep.duplicate_groups, 1);
+        assert_eq!(rep.duplicate_ops, 1);
+        // JSON exposition carries the headline fields.
+        let json = rep.to_json();
+        assert_eq!(json.get("constant_zero").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(json.get("duplicate_groups").unwrap().as_usize().unwrap(), 1);
+        assert!(!json.get("levels").unwrap().as_arr().unwrap().is_empty());
+    }
+
+    #[test]
+    fn sampling_rate_gates_blocks() {
+        let plan = compile(&toy());
+        let prof = ActivityProfile::for_plan(&plan, 4);
+        let sampled = (0..16).filter(|_| prof.begin_block()).count();
+        assert_eq!(sampled, 4, "1-in-4 of 16 blocks");
+        let off = ActivityProfile::for_plan(&plan, 0);
+        assert_eq!((0..16).filter(|_| off.begin_block()).count(), 0);
+        assert_eq!(off.report().blocks, 16, "runtime counters stay on");
+    }
+}

@@ -179,6 +179,17 @@ impl LatencyHistogram {
             mean_ns: self.mean_ns(),
         }
     }
+
+    /// Plain-data copy of the bucket counters, for interval deltas
+    /// (`--metrics-every`) and snapshot-to-snapshot subtraction.
+    pub fn counts(&self) -> HistCounts {
+        HistCounts {
+            buckets: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count(),
+            sum_ns: self.sum_ns(),
+            max_ns: self.max_ns(),
+        }
+    }
 }
 
 impl std::fmt::Debug for LatencyHistogram {
@@ -201,6 +212,85 @@ pub struct HistSummary {
     pub p999_ns: u64,
     pub max_ns: u64,
     pub mean_ns: f64,
+}
+
+/// Plain-data (non-atomic) bucket-count snapshot of a [`LatencyHistogram`],
+/// supporting saturating subtraction for interval views: two snapshots of a
+/// live histogram, taken while writers keep recording with relaxed
+/// ordering, may each be slightly torn, so `delta` clamps every per-bucket
+/// and counter difference at zero rather than wrapping.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct HistCounts {
+    buckets: Vec<u64>,
+    pub count: u64,
+    pub sum_ns: u64,
+    pub max_ns: u64,
+}
+
+impl HistCounts {
+    /// Saturating `self - prev`: the records added between the two
+    /// snapshots. Missing buckets (e.g. a `Default` baseline) read as 0.
+    pub fn delta(&self, prev: &HistCounts) -> HistCounts {
+        let buckets = (0..self.buckets.len())
+            .map(|i| self.buckets[i].saturating_sub(prev.buckets.get(i).copied().unwrap_or(0)))
+            .collect();
+        HistCounts {
+            buckets,
+            count: self.count.saturating_sub(prev.count),
+            sum_ns: self.sum_ns.saturating_sub(prev.sum_ns),
+            // The true interval max is unknowable from counters alone; the
+            // highest non-empty delta bucket bounds it (see `max_bound`).
+            max_ns: self.max_ns,
+        }
+    }
+
+    /// Upper bound on the largest value in these counts: the lifetime max
+    /// clamped to the highest non-empty bucket's upper edge. Exact for a
+    /// full-lifetime snapshot; for an interval delta it is the tightest
+    /// bound the buckets support (≤25% over, like the quantiles).
+    pub fn max_bound(&self) -> u64 {
+        match self.buckets.iter().rposition(|&c| c > 0) {
+            Some(i) => bucket_upper(i).min(self.max_ns),
+            None => 0,
+        }
+    }
+
+    /// Nearest-rank-ceil quantile over the snapshot, same semantics and
+    /// error bound as [`LatencyHistogram::quantile`].
+    pub fn quantile(&self, q: f64) -> u64 {
+        let total: u64 = self.buckets.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut cum = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_upper(i).min(self.max_ns);
+            }
+        }
+        self.max_bound()
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+
+    pub fn summary(&self) -> HistSummary {
+        HistSummary {
+            count: self.count,
+            p50_ns: self.quantile(0.50),
+            p99_ns: self.quantile(0.99),
+            p999_ns: self.quantile(0.999),
+            max_ns: self.max_bound(),
+            mean_ns: self.mean_ns(),
+        }
+    }
 }
 
 impl HistSummary {
@@ -346,6 +436,47 @@ mod tests {
         for q in [0.5, 0.99, 0.999] {
             assert_eq!(a.quantile(q), all.quantile(q));
         }
+    }
+
+    #[test]
+    fn counts_delta_isolates_the_interval() {
+        let h = LatencyHistogram::new();
+        for _ in 0..100 {
+            h.record_ns(1_000); // 1 µs
+        }
+        let prev = h.counts();
+        for _ in 0..50 {
+            h.record_ns(1_000_000); // 1 ms
+        }
+        let d = h.counts().delta(&prev);
+        assert_eq!(d.count, 50);
+        assert_eq!(d.sum_ns, 50_000_000);
+        // The interval median is the 1 ms population, not the lifetime mix.
+        let p50 = d.quantile(0.5);
+        assert!((1_000_000..=1_250_000).contains(&p50), "interval p50 {p50}");
+        // Lifetime view still sees everything.
+        assert_eq!(h.counts().count, 150);
+        // Interval max bound clamps to the highest non-empty delta bucket.
+        assert!(d.summary().max_ns >= 1_000_000 && d.summary().max_ns <= 1_250_000);
+    }
+
+    #[test]
+    fn counts_delta_saturates_instead_of_wrapping() {
+        let a = LatencyHistogram::new();
+        let b = LatencyHistogram::new();
+        a.record_ns(500);
+        b.record_ns(500);
+        b.record_ns(700);
+        // "prev" has more records than "now" (simulated relaxed-ordering
+        // skew): every field clamps at zero.
+        let d = a.counts().delta(&b.counts());
+        assert_eq!(d.count, 0);
+        assert_eq!(d.sum_ns, 0);
+        assert_eq!(d.quantile(0.99), 0);
+        // Empty-vs-default baseline works too.
+        let d2 = a.counts().delta(&HistCounts::default());
+        assert_eq!(d2.count, 1);
+        assert_eq!(d2.quantile(1.0), a.quantile(1.0));
     }
 
     #[test]

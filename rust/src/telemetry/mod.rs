@@ -15,15 +15,24 @@
 //! * [`Reporter`] — a background thread invoking a report closure every N
 //!   seconds (`--metrics-every` on `dwn serve` / `examples/serve_jsc`),
 //!   stopped on drop.
+//! * [`EventRing`] / [`Tracer`] — the flight recorder and the 1-in-N
+//!   request tracer that fills it (DESIGN.md §tracing): sampled trace IDs
+//!   assigned at admission, span events per stage boundary, anomaly
+//!   triggers, Chrome trace-event export.
 //!
-//! The module depends only on `std`, so any layer — engine, coordinator,
-//! benches, the future network tier — can record into it without cycles.
+//! The module depends only on `std` plus the in-repo `json` writer, so any
+//! layer — engine, coordinator, benches, the future network tier — can
+//! record into it without cycles.
 
 pub mod hist;
+pub mod ring;
 pub mod span;
+pub mod trace;
 
-pub use hist::{HistSummary, LatencyHistogram};
+pub use hist::{HistCounts, HistSummary, LatencyHistogram};
+pub use ring::{EventKind, EventRing, TraceEvent, DEFAULT_RING_CAPACITY};
 pub use span::{PoolTelemetry, Stage, StageClock, StageSet};
+pub use trace::{chrome_trace, TraceConfig, TraceStats, Tracer};
 
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;

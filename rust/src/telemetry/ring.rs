@@ -1,0 +1,271 @@
+//! Flight recorder: a fixed-capacity, lock-free MPMC event ring.
+//!
+//! Every trace event (sampled request spans, anomaly markers) lands here,
+//! always on, so the last `capacity` events are available for dumping the
+//! moment something goes wrong — the classic flight-recorder shape. Writers
+//! never block and never allocate; old events are overwritten in global
+//! admission order.
+//!
+//! ## Slot protocol (DESIGN.md §tracing)
+//!
+//! A global `AtomicU64` cursor assigns each push a monotonically increasing
+//! sequence number; the slot is `seq % capacity` (capacity is a power of
+//! two). Each slot carries a stamp word used as a tiny per-slot seqlock:
+//!
+//! * empty slot: stamp `0`
+//! * writer mid-flight: stamp `WRITING` (`u64::MAX`)
+//! * complete event with sequence `s`: stamp `s + 1`
+//!
+//! A writer claims its slot by CAS-ing the stamp to `WRITING`, writes the
+//! event fields, then publishes `seq + 1` with `Release`. If the stamp
+//! already holds a newer sequence (a lapped writer raced past) or `WRITING`
+//! (another writer mid-flight after a full lap), the event is dropped and
+//! counted in `contended` — diagnostics lose a record rather than block or
+//! tear. Readers `Acquire`-load the stamp, copy the fields, and re-check
+//! the stamp; a changed stamp means a concurrent overwrite and the slot is
+//! skipped. The result: [`snapshot`](EventRing::snapshot) never returns a
+//! torn event, and surviving events are globally ordered by sequence.
+
+use super::span::Stage;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Stamp sentinel marking a slot whose writer is mid-flight.
+const WRITING: u64 = u64::MAX;
+
+/// Default ring capacity (events). Rounded up to a power of two.
+pub const DEFAULT_RING_CAPACITY: usize = 4096;
+
+/// What one trace event records. Encoded into a single `u64` inside the
+/// ring so slot writes stay plain atomic stores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Request admitted at `submit_row` (duration 0).
+    Admit,
+    /// One request-path stage span ([`Stage`] taxonomy).
+    Stage(Stage),
+    /// One compiled-plan LUT level inside lut-exec (payload = level).
+    LutLevel(u32),
+    /// Latency anomaly trigger: e2e above the configured multiple of the
+    /// running p99 (duration = offending e2e span).
+    LatencyAnomaly,
+    /// Shed-burst trigger: N consecutive admissions rejected.
+    ShedBurst,
+}
+
+impl EventKind {
+    const TAG_ADMIT: u64 = 0;
+    const TAG_STAGE: u64 = 1; // 1..=6 map Stage::ALL by index
+    const TAG_LATENCY: u64 = 7;
+    const TAG_SHED: u64 = 8;
+    const TAG_LEVEL: u64 = 16; // 16 + level
+
+    pub(crate) fn encode(self) -> u64 {
+        match self {
+            EventKind::Admit => Self::TAG_ADMIT,
+            EventKind::Stage(s) => Self::TAG_STAGE + s as u64,
+            EventKind::LatencyAnomaly => Self::TAG_LATENCY,
+            EventKind::ShedBurst => Self::TAG_SHED,
+            EventKind::LutLevel(l) => Self::TAG_LEVEL + l as u64,
+        }
+    }
+
+    pub(crate) fn decode(raw: u64) -> Option<EventKind> {
+        match raw {
+            Self::TAG_ADMIT => Some(EventKind::Admit),
+            r if r >= Self::TAG_STAGE && r < Self::TAG_STAGE + Stage::COUNT as u64 => {
+                Some(EventKind::Stage(Stage::ALL[(r - Self::TAG_STAGE) as usize]))
+            }
+            Self::TAG_LATENCY => Some(EventKind::LatencyAnomaly),
+            Self::TAG_SHED => Some(EventKind::ShedBurst),
+            r if r >= Self::TAG_LEVEL && r - Self::TAG_LEVEL <= u32::MAX as u64 => {
+                Some(EventKind::LutLevel((r - Self::TAG_LEVEL) as u32))
+            }
+            _ => None,
+        }
+    }
+
+    /// Stable label used in Chrome trace-event `name` fields and CI greps.
+    pub fn label(&self) -> String {
+        match self {
+            EventKind::Admit => "admit".into(),
+            EventKind::Stage(s) => s.label().into(),
+            EventKind::LutLevel(l) => format!("lut-exec-l{l}"),
+            EventKind::LatencyAnomaly => "anomaly-latency".into(),
+            EventKind::ShedBurst => "anomaly-shed-burst".into(),
+        }
+    }
+}
+
+/// One decoded flight-recorder event. `start_ns` is relative to the owning
+/// tracer's epoch; `trace_id` is 0 for events not tied to a sampled request
+/// (anomaly markers).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    pub seq: u64,
+    pub trace_id: u64,
+    pub kind: EventKind,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+}
+
+#[derive(Default)]
+struct Slot {
+    stamp: AtomicU64,
+    trace_id: AtomicU64,
+    kind: AtomicU64,
+    start_ns: AtomicU64,
+    dur_ns: AtomicU64,
+}
+
+/// The flight recorder ring. All methods are `&self` and lock-free; share
+/// it behind an `Arc` between however many writer and reader threads.
+pub struct EventRing {
+    slots: Box<[Slot]>,
+    mask: usize,
+    cursor: AtomicU64,
+    contended: AtomicU64,
+}
+
+impl EventRing {
+    /// `capacity` is rounded up to a power of two, minimum 2.
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(2).next_power_of_two();
+        EventRing {
+            slots: (0..cap).map(|_| Slot::default()).collect(),
+            mask: cap - 1,
+            cursor: AtomicU64::new(0),
+            contended: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Total events pushed since creation (including overwritten and the
+    /// rare contended drops).
+    pub fn pushed(&self) -> u64 {
+        self.cursor.load(Ordering::Relaxed)
+    }
+
+    /// Events dropped because a lapped writer held the slot (diagnostics
+    /// prefer a dropped record over blocking or tearing).
+    pub fn contended(&self) -> u64 {
+        self.contended.load(Ordering::Relaxed)
+    }
+
+    /// Record one event; returns its global sequence number.
+    pub fn push(&self, trace_id: u64, kind: EventKind, start_ns: u64, dur_ns: u64) -> u64 {
+        let seq = self.cursor.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[seq as usize & self.mask];
+        let tag = seq + 1;
+        loop {
+            let cur = slot.stamp.load(Ordering::Acquire);
+            if cur == WRITING || (cur != 0 && cur >= tag) {
+                // A same-slot writer from a later lap is mid-flight or has
+                // already published; our event is the stale one — drop it.
+                self.contended.fetch_add(1, Ordering::Relaxed);
+                return seq;
+            }
+            if slot
+                .stamp
+                .compare_exchange_weak(cur, WRITING, Ordering::Acquire, Ordering::Relaxed)
+                .is_ok()
+            {
+                break;
+            }
+        }
+        slot.trace_id.store(trace_id, Ordering::Relaxed);
+        slot.kind.store(kind.encode(), Ordering::Relaxed);
+        slot.start_ns.store(start_ns, Ordering::Relaxed);
+        slot.dur_ns.store(dur_ns, Ordering::Relaxed);
+        slot.stamp.store(tag, Ordering::Release);
+        seq
+    }
+
+    /// Copy out every currently-published event, oldest first (by global
+    /// sequence). Slots overwritten mid-read are skipped, never torn.
+    pub fn snapshot(&self) -> Vec<TraceEvent> {
+        let mut out = Vec::with_capacity(self.slots.len());
+        for slot in self.slots.iter() {
+            let s1 = slot.stamp.load(Ordering::Acquire);
+            if s1 == 0 || s1 == WRITING {
+                continue;
+            }
+            let trace_id = slot.trace_id.load(Ordering::Relaxed);
+            let raw_kind = slot.kind.load(Ordering::Relaxed);
+            let start_ns = slot.start_ns.load(Ordering::Relaxed);
+            let dur_ns = slot.dur_ns.load(Ordering::Relaxed);
+            if slot.stamp.load(Ordering::Acquire) != s1 {
+                continue; // overwritten while we read — discard
+            }
+            if let Some(kind) = EventKind::decode(raw_kind) {
+                out.push(TraceEvent { seq: s1 - 1, trace_id, kind, start_ns, dur_ns });
+            }
+        }
+        out.sort_unstable_by_key(|e| e.seq);
+        out
+    }
+}
+
+impl std::fmt::Debug for EventRing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "EventRing {{ capacity: {}, pushed: {}, contended: {} }}",
+            self.capacity(),
+            self.pushed(),
+            self.contended()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_encoding_roundtrips() {
+        let mut kinds = vec![
+            EventKind::Admit,
+            EventKind::LatencyAnomaly,
+            EventKind::ShedBurst,
+            EventKind::LutLevel(0),
+            EventKind::LutLevel(1),
+            EventKind::LutLevel(u32::MAX),
+        ];
+        kinds.extend(Stage::ALL.iter().map(|&s| EventKind::Stage(s)));
+        for k in kinds {
+            assert_eq!(EventKind::decode(k.encode()), Some(k), "{k:?} failed roundtrip");
+        }
+        assert_eq!(EventKind::decode(9), None);
+    }
+
+    #[test]
+    fn capacity_rounds_to_power_of_two() {
+        assert_eq!(EventRing::new(0).capacity(), 2);
+        assert_eq!(EventRing::new(1000).capacity(), 1024);
+        assert_eq!(EventRing::new(4096).capacity(), 4096);
+    }
+
+    #[test]
+    fn keeps_the_newest_events_in_order() {
+        let ring = EventRing::new(8);
+        for i in 0..20u64 {
+            ring.push(1, EventKind::Admit, i, 0);
+        }
+        let events = ring.snapshot();
+        assert_eq!(events.len(), 8);
+        // The surviving window is the last `capacity` pushes, in order.
+        for (k, e) in events.iter().enumerate() {
+            assert_eq!(e.seq, 12 + k as u64);
+            assert_eq!(e.start_ns, 12 + k as u64);
+        }
+        assert_eq!(ring.pushed(), 20);
+    }
+
+    #[test]
+    fn snapshot_of_empty_ring_is_empty() {
+        assert!(EventRing::new(16).snapshot().is_empty());
+    }
+}

@@ -1,0 +1,410 @@
+//! Request-scoped tracing: 1-in-N sampled trace IDs, span emission into the
+//! flight-recorder ring, anomaly triggers, and Chrome trace-event export.
+//!
+//! A [`Tracer`] is attached to a serving `Metrics` store (one per model).
+//! `Server::submit_row` asks [`Tracer::sample`] for an ID; a nonzero ID
+//! rides the job through the drainer batch, the `EnginePool` shard, and the
+//! reply splice, each boundary emitting a wall-clock span event keyed to
+//! the existing [`Stage`] taxonomy (plus per-LUT-level spans from the
+//! engine). All events land in the always-on [`EventRing`], so the last
+//! few thousand spans are dumpable at any moment.
+//!
+//! ## Anomaly triggers (DESIGN.md §tracing)
+//!
+//! Two conditions mark an anomaly and — when a dump path is configured —
+//! write the ring to disk as Chrome trace-event JSON (rate-limited to one
+//! dump per second, latest anomaly wins the file):
+//!
+//! * **latency**: an end-to-end span exceeds `anomaly_mult ×` the running
+//!   p99, after `anomaly_warmup` observations have seeded the histogram;
+//! * **shed burst**: `shed_burst` consecutive admissions rejected (the
+//!   run-length counter resets on any accepted request).
+//!
+//! Timestamps are nanoseconds relative to the tracer's construction epoch;
+//! the Chrome export divides to microseconds (`ts`/`dur` are µs floats in
+//! the trace-event schema) and uses the trace ID as `tid`, so Perfetto /
+//! `chrome://tracing` renders each sampled request as its own track.
+
+use super::hist::LatencyHistogram;
+use super::ring::{EventKind, EventRing, TraceEvent, DEFAULT_RING_CAPACITY};
+use crate::json::Value;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Tracer configuration; `Default` gives a useful always-on flight
+/// recorder with sampling off.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    /// Trace 1 in `sample` admitted requests; 0 disables request sampling
+    /// (the ring still records anomaly markers).
+    pub sample: u32,
+    /// Flight-recorder capacity in events (rounded up to a power of two).
+    pub ring_capacity: usize,
+    /// Latency anomaly: e2e > `anomaly_mult` × running p99.
+    pub anomaly_mult: f64,
+    /// Minimum e2e observations before latency anomalies can fire.
+    pub anomaly_warmup: u64,
+    /// Consecutive sheds that count as a shed burst.
+    pub shed_burst: u64,
+    /// Where anomaly dumps (and final dumps) go; `None` keeps the ring
+    /// in-memory only.
+    pub out: Option<PathBuf>,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            sample: 0,
+            ring_capacity: DEFAULT_RING_CAPACITY,
+            anomaly_mult: 8.0,
+            anomaly_warmup: 256,
+            shed_burst: 64,
+            out: None,
+        }
+    }
+}
+
+/// Plain-data tracer counters for `Snapshot` / `stats_json` exposition.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TraceStats {
+    /// Requests assigned a trace ID.
+    pub sampled: u64,
+    /// Latency anomalies triggered.
+    pub latency_anomalies: u64,
+    /// Shed bursts triggered.
+    pub shed_bursts: u64,
+    /// Ring dumps written to disk.
+    pub dumps: u64,
+    /// Events pushed into the ring since start.
+    pub ring_events: u64,
+    /// Events dropped on lapped-writer contention.
+    pub ring_contended: u64,
+}
+
+impl TraceStats {
+    /// Saturating per-counter difference (interval view).
+    pub fn delta(&self, prev: &TraceStats) -> TraceStats {
+        TraceStats {
+            sampled: self.sampled.saturating_sub(prev.sampled),
+            latency_anomalies: self.latency_anomalies.saturating_sub(prev.latency_anomalies),
+            shed_bursts: self.shed_bursts.saturating_sub(prev.shed_bursts),
+            dumps: self.dumps.saturating_sub(prev.dumps),
+            ring_events: self.ring_events.saturating_sub(prev.ring_events),
+            ring_contended: self.ring_contended.saturating_sub(prev.ring_contended),
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut m = BTreeMap::new();
+        m.insert("sampled".into(), Value::Num(self.sampled as f64));
+        m.insert("latency_anomalies".into(), Value::Num(self.latency_anomalies as f64));
+        m.insert("shed_bursts".into(), Value::Num(self.shed_bursts as f64));
+        m.insert("dumps".into(), Value::Num(self.dumps as f64));
+        m.insert("ring_events".into(), Value::Num(self.ring_events as f64));
+        m.insert("ring_contended".into(), Value::Num(self.ring_contended as f64));
+        Value::Obj(m)
+    }
+}
+
+/// Minimum spacing between automatic anomaly dumps.
+const DUMP_MIN_GAP: Duration = Duration::from_secs(1);
+
+/// The request tracer. All methods are `&self`; share behind an `Arc`.
+pub struct Tracer {
+    cfg: TraceConfig,
+    epoch: Instant,
+    ring: EventRing,
+    /// Admission counter driving the 1-in-N decision.
+    admitted: AtomicU64,
+    /// Next trace ID (IDs start at 1; 0 means "not sampled").
+    next_id: AtomicU64,
+    /// Running e2e view feeding the latency-anomaly threshold. Kept
+    /// tracer-local so the trigger needs no back-reference into `Metrics`.
+    e2e: LatencyHistogram,
+    latency_anomalies: AtomicU64,
+    shed_run: AtomicU64,
+    shed_bursts: AtomicU64,
+    dumps: AtomicU64,
+    dumping: AtomicBool,
+    last_dump_ns: AtomicU64,
+}
+
+impl Tracer {
+    pub fn new(cfg: TraceConfig) -> Self {
+        let ring = EventRing::new(cfg.ring_capacity);
+        Tracer {
+            cfg,
+            epoch: Instant::now(),
+            ring,
+            admitted: AtomicU64::new(0),
+            next_id: AtomicU64::new(1),
+            e2e: LatencyHistogram::new(),
+            latency_anomalies: AtomicU64::new(0),
+            shed_run: AtomicU64::new(0),
+            shed_bursts: AtomicU64::new(0),
+            dumps: AtomicU64::new(0),
+            dumping: AtomicBool::new(false),
+            last_dump_ns: AtomicU64::new(0),
+        }
+    }
+
+    pub fn config(&self) -> &TraceConfig {
+        &self.cfg
+    }
+
+    /// Nanoseconds since the tracer's epoch for `t` (0 if `t` predates it).
+    #[inline]
+    pub fn ns_since_epoch(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.epoch).as_nanos().min(u64::MAX as u128) as u64
+    }
+
+    /// Admission-time sampling decision: returns a fresh nonzero trace ID
+    /// for 1 in `sample` calls, 0 otherwise (or always when sampling is
+    /// off). The counter covers every admission attempt, so IDs spread
+    /// evenly through the request stream.
+    #[inline]
+    pub fn sample(&self) -> u64 {
+        if self.cfg.sample == 0 {
+            return 0;
+        }
+        let n = self.admitted.fetch_add(1, Ordering::Relaxed);
+        if n % self.cfg.sample as u64 == 0 {
+            self.next_id.fetch_add(1, Ordering::Relaxed)
+        } else {
+            0
+        }
+    }
+
+    /// Record one span event into the flight recorder.
+    #[inline]
+    pub fn emit(&self, trace_id: u64, kind: EventKind, start_ns: u64, dur_ns: u64) {
+        self.ring.push(trace_id, kind, start_ns, dur_ns);
+    }
+
+    /// Record a span given its wall-clock start and duration.
+    #[inline]
+    pub fn emit_span(&self, trace_id: u64, kind: EventKind, start: Instant, dur: Duration) {
+        self.emit(
+            trace_id,
+            kind,
+            self.ns_since_epoch(start),
+            dur.as_nanos().min(u64::MAX as u128) as u64,
+        );
+    }
+
+    /// Observe one end-to-end latency (every request, sampled or not) and
+    /// fire the latency-anomaly trigger when warranted. Returns true when
+    /// an anomaly was recorded.
+    pub fn observe_e2e(&self, d: Duration) -> bool {
+        let ns = d.as_nanos().min(u64::MAX as u128) as u64;
+        let armed = self.e2e.count() >= self.cfg.anomaly_warmup;
+        let p99 = self.e2e.quantile(0.99);
+        self.e2e.record_ns(ns);
+        if armed && p99 > 0 && (ns as f64) > self.cfg.anomaly_mult * p99 as f64 {
+            self.latency_anomalies.fetch_add(1, Ordering::Relaxed);
+            let now = self.ns_since_epoch(Instant::now());
+            self.emit(0, EventKind::LatencyAnomaly, now.saturating_sub(ns), ns);
+            self.auto_dump();
+            return true;
+        }
+        false
+    }
+
+    /// Note one rejected admission; fires the shed-burst trigger every
+    /// `shed_burst` consecutive rejections.
+    pub fn note_shed(&self) {
+        let run = self.shed_run.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.cfg.shed_burst > 0 && run % self.cfg.shed_burst == 0 {
+            self.shed_bursts.fetch_add(1, Ordering::Relaxed);
+            let now = self.ns_since_epoch(Instant::now());
+            self.emit(0, EventKind::ShedBurst, now, 0);
+            self.auto_dump();
+        }
+    }
+
+    /// Note one accepted admission (resets the shed run-length).
+    #[inline]
+    pub fn note_accept(&self) {
+        if self.shed_run.load(Ordering::Relaxed) != 0 {
+            self.shed_run.store(0, Ordering::Relaxed);
+        }
+    }
+
+    pub fn stats(&self) -> TraceStats {
+        TraceStats {
+            sampled: self.next_id.load(Ordering::Relaxed) - 1,
+            latency_anomalies: self.latency_anomalies.load(Ordering::Relaxed),
+            shed_bursts: self.shed_bursts.load(Ordering::Relaxed),
+            dumps: self.dumps.load(Ordering::Relaxed),
+            ring_events: self.ring.pushed(),
+            ring_contended: self.ring.contended(),
+        }
+    }
+
+    /// Current ring contents, oldest first.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.ring.snapshot()
+    }
+
+    /// Export the current ring as a Chrome trace-event JSON object
+    /// (`{"traceEvents": [...], "displayTimeUnit": "ms"}`; each event a
+    /// `ph: "X"` complete event with µs `ts`/`dur`, `tid` = trace ID).
+    pub fn export_chrome(&self) -> Value {
+        chrome_trace(&self.events())
+    }
+
+    /// Write the Chrome trace-event export to `path`.
+    pub fn dump_to(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, crate::json::write(&self.export_chrome()))?;
+        self.dumps.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Anomaly-path dump: best-effort, rate-limited, single writer.
+    fn auto_dump(&self) {
+        let Some(path) = self.cfg.out.as_ref() else { return };
+        let now = self.ns_since_epoch(Instant::now());
+        let last = self.last_dump_ns.load(Ordering::Relaxed);
+        if last != 0 && now.saturating_sub(last) < DUMP_MIN_GAP.as_nanos() as u64 {
+            return;
+        }
+        if self.dumping.swap(true, Ordering::Acquire) {
+            return; // another thread is writing
+        }
+        self.last_dump_ns.store(now.max(1), Ordering::Relaxed);
+        let _ = self.dump_to(path);
+        self.dumping.store(false, Ordering::Release);
+    }
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Tracer {{ sample: {}, stats: {:?} }}", self.cfg.sample, self.stats())
+    }
+}
+
+/// Render events as a Chrome trace-event JSON object. Every event is a
+/// complete (`ph: "X"`) event; instantaneous markers get `dur: 0`.
+pub fn chrome_trace(events: &[TraceEvent]) -> Value {
+    let rendered = events
+        .iter()
+        .map(|e| {
+            let mut m = BTreeMap::new();
+            m.insert("name".into(), Value::Str(e.kind.label()));
+            m.insert("cat".into(), Value::Str("dwn".into()));
+            m.insert("ph".into(), Value::Str("X".into()));
+            m.insert("ts".into(), Value::Num(e.start_ns as f64 / 1000.0));
+            m.insert("dur".into(), Value::Num(e.dur_ns as f64 / 1000.0));
+            m.insert("pid".into(), Value::Num(1.0));
+            m.insert("tid".into(), Value::Num(e.trace_id as f64));
+            let mut args = BTreeMap::new();
+            args.insert("seq".into(), Value::Num(e.seq as f64));
+            if let EventKind::LutLevel(l) = e.kind {
+                args.insert("level".into(), Value::Num(l as f64));
+            }
+            m.insert("args".into(), Value::Obj(args));
+            Value::Obj(m)
+        })
+        .collect();
+    let mut top = BTreeMap::new();
+    top.insert("traceEvents".into(), Value::Arr(rendered));
+    top.insert("displayTimeUnit".into(), Value::Str("ms".into()));
+    Value::Obj(top)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::span::Stage;
+    use super::*;
+
+    #[test]
+    fn sampling_one_in_n_is_even_and_ids_are_unique() {
+        let t = Tracer::new(TraceConfig { sample: 4, ..Default::default() });
+        let ids: Vec<u64> = (0..100).map(|_| t.sample()).collect();
+        let sampled: Vec<u64> = ids.iter().copied().filter(|&i| i != 0).collect();
+        assert_eq!(sampled.len(), 25);
+        for (k, &id) in sampled.iter().enumerate() {
+            assert_eq!(id, 1 + k as u64, "ids must be dense and unique");
+        }
+        assert_eq!(t.stats().sampled, 25);
+    }
+
+    #[test]
+    fn sampling_off_returns_zero_and_counts_nothing() {
+        let t = Tracer::new(TraceConfig::default());
+        for _ in 0..50 {
+            assert_eq!(t.sample(), 0);
+        }
+        assert_eq!(t.stats().sampled, 0);
+        assert_eq!(t.stats().ring_events, 0);
+    }
+
+    #[test]
+    fn latency_anomaly_needs_warmup_then_fires() {
+        let t = Tracer::new(TraceConfig {
+            anomaly_mult: 3.0,
+            anomaly_warmup: 64,
+            ..Default::default()
+        });
+        // A huge value during warmup must not trigger.
+        assert!(!t.observe_e2e(Duration::from_millis(500)));
+        for _ in 0..200 {
+            assert!(!t.observe_e2e(Duration::from_micros(100)));
+        }
+        assert!(t.observe_e2e(Duration::from_millis(50)), "50ms vs ~100us p99 must trigger");
+        let stats = t.stats();
+        assert_eq!(stats.latency_anomalies, 1);
+        let events = t.events();
+        assert!(
+            events.iter().any(|e| e.kind == EventKind::LatencyAnomaly),
+            "anomaly marker missing from ring"
+        );
+    }
+
+    #[test]
+    fn shed_burst_fires_on_run_length_and_resets_on_accept() {
+        let t = Tracer::new(TraceConfig { shed_burst: 8, ..Default::default() });
+        for _ in 0..7 {
+            t.note_shed();
+        }
+        assert_eq!(t.stats().shed_bursts, 0);
+        t.note_accept(); // resets the run
+        for _ in 0..7 {
+            t.note_shed();
+        }
+        assert_eq!(t.stats().shed_bursts, 0, "accept must reset the run length");
+        t.note_shed();
+        // 8 consecutive after the reset — one burst. (The counter was not
+        // reset between the two groups of 7 without the accept, so this
+        // also pins that the reset actually happened.)
+        assert_eq!(t.stats().shed_bursts, 1);
+        assert!(t.events().iter().any(|e| e.kind == EventKind::ShedBurst));
+    }
+
+    #[test]
+    fn chrome_export_has_complete_events() {
+        let t = Tracer::new(TraceConfig { sample: 1, ..Default::default() });
+        let id = t.sample();
+        assert_ne!(id, 0);
+        let now = Instant::now();
+        t.emit_span(id, EventKind::Admit, now, Duration::ZERO);
+        t.emit_span(id, EventKind::Stage(Stage::QueueWait), now, Duration::from_micros(5));
+        t.emit_span(id, EventKind::LutLevel(1), now, Duration::from_micros(2));
+        let json = t.export_chrome();
+        let events = json.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 3);
+        for e in events {
+            assert_eq!(e.get("ph").unwrap().as_str().unwrap(), "X");
+            assert!(e.get("ts").unwrap().as_f64().unwrap() >= 0.0);
+            assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+            assert_eq!(e.get("tid").unwrap().as_f64().unwrap(), id as f64);
+        }
+        let names: Vec<&str> =
+            events.iter().map(|e| e.get("name").unwrap().as_str().unwrap()).collect();
+        assert!(names.contains(&"admit"));
+        assert!(names.contains(&"queue-wait"));
+        assert!(names.contains(&"lut-exec-l1"));
+    }
+}

@@ -297,6 +297,76 @@ fn conformance_small_fanin_fallback_shape() {
     }
 }
 
+/// Observability must be inert: with a tracer attached at sampling 0 (off),
+/// 1 (every request), and 1-in-3, served class decisions are bit-identical
+/// to the untraced pool across the whole head×tail matrix — instrumentation
+/// observes the value buffer but never writes it — and recompiling the same
+/// mode yields identical `CompileStats` (tracing never touches the plan).
+#[test]
+fn tracing_is_inert_across_the_mode_matrix() {
+    use dwn::coordinator::{AdmissionPolicy, Server, ServerConfig};
+    use dwn::telemetry::TraceConfig;
+    use std::time::Duration;
+    let model = clean_model(shape("inert", 30, 3, 4, 4, 4, 6));
+    let frac_bits = model.penft.frac_bits.unwrap();
+    let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt)).unwrap();
+    let (nl, tags, head, tail) = accel.map_with_head(&MapConfig::default());
+    let iw = accel.index_width();
+    let rows = input_rows(&model, 0x1E47 ^ base_seed());
+    let shared = dwn::util::fixed::Row::from_reals(&rows);
+    for (hm, tm) in MODES {
+        let compile = || {
+            engine::compile_for_modes(&nl, Some(&tags), head.as_ref(), tail.as_ref(), hm, tm)
+        };
+        let plan = compile();
+        let stats = plan.stats;
+        let want = Backend::compiled(
+            plan,
+            frac_bits,
+            model.num_features,
+            model.num_classes,
+            iw,
+            64,
+            2,
+        )
+        .infer(&shared)
+        .unwrap();
+        for sample in [0u32, 1, 3] {
+            let plan = compile();
+            assert_eq!(plan.stats, stats, "recompile must be deterministic");
+            let server = Server::start_compiled(
+                plan,
+                frac_bits,
+                model.num_features,
+                model.num_classes,
+                iw,
+                64,
+                2,
+                ServerConfig {
+                    max_batch: 128,
+                    max_wait: Duration::from_micros(200),
+                    queue_depth: 4096,
+                    admission: AdmissionPolicy::Block,
+                },
+            );
+            let tracer = server.enable_tracing(TraceConfig { sample, ..Default::default() });
+            let rxs: Vec<_> =
+                shared.iter().map(|r| server.submit_row(r.clone()).unwrap()).collect();
+            let got: Vec<i32> = rxs.into_iter().map(|rx| rx.recv().unwrap().unwrap()).collect();
+            assert_eq!(
+                got,
+                want,
+                "head={} tail={} sample={sample}: traced serving diverged",
+                hm.label(),
+                tm.label()
+            );
+            let expected =
+                if sample == 0 { 0 } else { dwn::util::ceil_div(rows.len(), sample as usize) };
+            assert_eq!(tracer.stats().sampled, expected as u64, "1-in-{sample} cadence");
+        }
+    }
+}
+
 /// Native modes must not perturb the paper's area accounting: the LUT area
 /// columns derive from the mapped netlist's stage tags alone, the replaced
 /// stages keep their (nonzero) LUT counts, and every source LUT is

@@ -7,7 +7,7 @@
 use dwn::coordinator::{AdmissionPolicy, Server, ServerConfig};
 use dwn::engine::EnginePool;
 use dwn::techmap::{LutNetlist, MappedLut, Src};
-use dwn::telemetry::{LatencyHistogram, Stage};
+use dwn::telemetry::{EventKind, EventRing, LatencyHistogram, Stage, TraceConfig, Tracer};
 use dwn::util::SplitMix64;
 use std::sync::Arc;
 use std::time::Duration;
@@ -210,4 +210,176 @@ fn server_snapshot_exposes_the_full_request_path() {
     for label in ["queue-wait", "batch-form", "head-pack", "lut-exec", "tail", "reply", "e2e"] {
         assert!(table.contains(label), "table missing {label} row:\n{table}");
     }
+}
+
+/// Many writers hammer the flight-recorder ring while a reader snapshots
+/// concurrently: no lost-write panics, no torn events (each event's payload
+/// fields must agree with each other), and per-writer survivors keep push
+/// order (monotonic seq and payload).
+#[test]
+fn ring_hammer_never_tears_and_keeps_per_writer_order() {
+    const WRITERS: usize = 8;
+    const PER: usize = 20_000;
+    let ring = Arc::new(EventRing::new(1024));
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let reader = {
+        let ring = ring.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let mut snaps = 0usize;
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                for e in ring.snapshot() {
+                    // Writer t pushes trace_id t+1, start_ns = k*WRITERS + t,
+                    // dur_ns = k — any cross-writer or cross-push mix of
+                    // fields is a torn slot.
+                    assert_eq!(e.start_ns % WRITERS as u64, e.trace_id - 1, "torn event");
+                    assert_eq!(e.start_ns / WRITERS as u64, e.dur_ns, "torn event");
+                }
+                snaps += 1;
+            }
+            snaps
+        })
+    };
+    let writers: Vec<_> = (0..WRITERS)
+        .map(|t| {
+            let ring = ring.clone();
+            std::thread::spawn(move || {
+                for k in 0..PER as u64 {
+                    ring.push(t as u64 + 1, EventKind::Admit, k * WRITERS as u64 + t as u64, k);
+                }
+            })
+        })
+        .collect();
+    for w in writers {
+        w.join().unwrap();
+    }
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    assert!(reader.join().unwrap() > 0, "reader never ran");
+    assert_eq!(ring.pushed(), (WRITERS * PER) as u64, "lost pushes under contention");
+    let events = ring.snapshot();
+    assert!(!events.is_empty() && events.len() <= ring.capacity());
+    for pair in events.windows(2) {
+        assert!(pair[0].seq < pair[1].seq, "snapshot must be seq-sorted and duplicate-free");
+    }
+    for id in 1..=WRITERS as u64 {
+        let mine: Vec<_> = events.iter().filter(|e| e.trace_id == id).collect();
+        for pair in mine.windows(2) {
+            assert!(pair[0].seq < pair[1].seq);
+            assert!(pair[0].start_ns < pair[1].start_ns, "per-writer payloads out of order");
+        }
+    }
+    assert!(ring.contended() <= ring.pushed());
+}
+
+/// An induced latency anomaly must auto-dump the flight recorder to the
+/// configured path as valid Chrome trace JSON carrying the anomaly marker.
+#[test]
+fn latency_anomaly_auto_dumps_the_flight_recorder() {
+    let path = std::env::temp_dir().join(format!("dwn-anomaly-{}.json", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let tracer = Tracer::new(TraceConfig {
+        anomaly_mult: 2.0,
+        anomaly_warmup: 8,
+        out: Some(path.clone()),
+        ..Default::default()
+    });
+    for _ in 0..32 {
+        assert!(!tracer.observe_e2e(Duration::from_micros(100)), "steady state must not fire");
+    }
+    assert!(tracer.observe_e2e(Duration::from_millis(10)), "8x-above-p99 outlier must fire");
+    let stats = tracer.stats();
+    assert_eq!(stats.latency_anomalies, 1);
+    assert_eq!(stats.dumps, 1, "anomaly must write the configured dump file");
+    let text = std::fs::read_to_string(&path).expect("dump file written");
+    let _ = std::fs::remove_file(&path);
+    let json = dwn::json::parse(&text).expect("dump is valid JSON");
+    let events = json.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(
+        events
+            .iter()
+            .any(|e| e.get("name").unwrap().as_str().unwrap() == "anomaly-latency"),
+        "anomaly marker missing from dump ({} events)",
+        events.len()
+    );
+}
+
+/// End-to-end acceptance: a traced request through a compiled-engine server
+/// exports a valid Chrome trace with a complete admit→reply span set,
+/// including one engine span per LUT level (the netlist here is two levels
+/// deep, so both `lut-exec-l1` and `lut-exec-l2` must appear).
+#[test]
+fn traced_server_exports_complete_span_sets_with_per_level_spans() {
+    let nl = LutNetlist {
+        num_inputs: 2,
+        luts: vec![
+            MappedLut { inputs: vec![Src::Input(1)], table: 0b10 },
+            MappedLut { inputs: vec![Src::Lut(0)], table: 0b01 },
+        ],
+        outputs: vec![Src::Lut(1)],
+    };
+    let plan = dwn::engine::compile(&nl);
+    assert_eq!(plan.depth(), 2, "test wants a two-level plan");
+    let server = Server::start_compiled(
+        plan,
+        1,
+        1,
+        2,
+        1,
+        64,
+        2,
+        ServerConfig {
+            max_batch: 64,
+            max_wait: Duration::from_micros(200),
+            queue_depth: 4096,
+            admission: AdmissionPolicy::Block,
+        },
+    );
+    let tracer = server.enable_tracing(TraceConfig { sample: 1, ..Default::default() });
+    let total = 300usize;
+    let mut pending = Vec::new();
+    for i in 0..total {
+        let x = if i % 3 == 0 { -0.7 } else { 0.7 };
+        pending.push(server.submit(&[x]).unwrap());
+        if pending.len() >= 64 {
+            for rx in pending.drain(..) {
+                rx.recv().unwrap().unwrap();
+            }
+        }
+    }
+    for rx in pending.drain(..) {
+        rx.recv().unwrap().unwrap();
+    }
+    assert_eq!(tracer.stats().sampled, total as u64, "sample=1 must trace every request");
+    let json = tracer.export_chrome();
+    let events = json.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    let mut per_tid: std::collections::BTreeMap<u64, Vec<String>> = Default::default();
+    for e in events {
+        assert_eq!(e.get("ph").unwrap().as_str().unwrap(), "X");
+        assert!(e.get("ts").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+        let tid = e.get("tid").unwrap().as_usize().unwrap() as u64;
+        per_tid
+            .entry(tid)
+            .or_default()
+            .push(e.get("name").unwrap().as_str().unwrap().to_string());
+    }
+    // Each batch's lead traced request carries the full span set; at least
+    // one such request must survive in the ring (capacity far exceeds the
+    // event volume here).
+    let full_set = [
+        "admit", "queue-wait", "batch-form", "head-pack", "lut-exec-l1", "lut-exec-l2",
+        "lut-exec", "tail", "reply",
+    ];
+    let complete = per_tid
+        .iter()
+        .filter(|(tid, names)| {
+            **tid != 0 && full_set.iter().all(|want| names.iter().any(|n| n == want))
+        })
+        .count();
+    assert!(
+        complete >= 1,
+        "no traced request carries the full admit→reply span set across {} trace ids",
+        per_tid.len()
+    );
 }
