@@ -20,8 +20,10 @@
 //! Besides the table, the run writes `BENCH_serve.json` so the perf
 //! trajectory is machine-readable across PRs: per arm per batch rows/sec
 //! plus batch-call latency percentiles (p50/p99/p999/max, log-bucket
-//! histogram), a `stage_breakdown` per head×tail pool arm (head-pack /
-//! lut-exec / tail percentiles from the pool's telemetry, plus the pool's
+//! histogram), an `opt` section per head×tail arm (netlist area and
+//! rows/sec before vs after the `--opt-level` max pass pipeline), a
+//! `stage_breakdown` per head×tail pool arm (head-pack / lut-exec / tail
+//! percentiles from the pool's telemetry, plus the pool's
 //! runtime-activity summary — per-level ns and sampled output density), and
 //! the server arm's full metrics snapshot (per-stage table, shed/overlap
 //! counters, and its own `activity` block).
@@ -107,6 +109,28 @@ fn main() {
         full.stats.tail_skipped,
         if full.tail.is_some() { "" } else { "; tail UNAVAILABLE — fell back to lut" }
     );
+    // Pass-pipeline outcome at `--opt-level` max, shared by every opt arm:
+    // the pipeline is a netlist transform, so it runs once and each mode
+    // compiles from the optimized netlist + rebuilt head/tail metadata.
+    let outcome = dwn::engine::run_pipeline(
+        &nl,
+        Some(&tags),
+        head.as_ref(),
+        tail.as_ref(),
+        dwn::engine::OptLevel::Max,
+    );
+    let opt_plans: Vec<dwn::engine::ExecPlan> =
+        MODES.iter().map(|&(hm, tm)| outcome.compile_for_modes(hm, tm)).collect();
+    println!(
+        "opt passes (-O2): {} -> {} LUTs in {} sweep(s) ({} const, {} coalesced, {} dead, {} pins folded)",
+        nl.lut_count(),
+        outcome.netlist.lut_count(),
+        outcome.stats.iterations,
+        outcome.stats.const_folded,
+        outcome.stats.coalesced,
+        outcome.stats.dead_removed,
+        outcome.stats.pins_folded
+    );
 
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let interp = Backend::Netlist {
@@ -173,6 +197,62 @@ fn main() {
             rps[3] / rps[0]
         );
     }
+    // Opt-level delta arms: per head×tail mode, the base plan vs the plan
+    // compiled from the pass-optimized netlist, at one fixed batch through
+    // persistent pools. Decisions are asserted identical before timing, so
+    // this section doubles as an end-to-end smoke check of the pipeline.
+    let opt_batch = 1024usize.min(rows.len());
+    let mut opt_records: Vec<Value> = Vec::new();
+    println!("\nopt-level 2 delta (batch {opt_batch}):");
+    println!(
+        "{:>14} {:>10} {:>10} {:>13} {:>13} {:>7}",
+        "head/tail", "luts", "luts-opt", "base r/s", "opt r/s", "gain"
+    );
+    for (i, &(hm, tm)) in MODES.iter().enumerate() {
+        let opt_pool = Backend::compiled(
+            opt_plans[i].clone(),
+            frac_bits,
+            model.num_features,
+            model.num_classes,
+            index_width,
+            256,
+            cores,
+        );
+        let slice = &rows[..opt_batch];
+        assert_eq!(
+            pools[i].infer(slice).unwrap(),
+            opt_pool.infer(slice).unwrap(),
+            "opt plan diverged for {}/{}",
+            hm.label(),
+            tm.label()
+        );
+        let (base_rps, _) = rows_per_sec(slice, |r| pools[i].infer(r).unwrap());
+        let (opt_rps, _) = rows_per_sec(slice, |r| opt_pool.infer(r).unwrap());
+        let mut m = BTreeMap::new();
+        m.insert("head".to_string(), Value::Str(hm.label().to_string()));
+        m.insert("tail".to_string(), Value::Str(tm.label().to_string()));
+        m.insert("batch".to_string(), Value::Num(opt_batch as f64));
+        m.insert("luts_before".to_string(), Value::Num(nl_luts(&plans[i]) as f64));
+        m.insert(
+            "luts_after".to_string(),
+            Value::Num(outcome.netlist.lut_count() as f64),
+        );
+        m.insert("ops".to_string(), Value::Num(plans[i].ops.len() as f64));
+        m.insert("ops_opt".to_string(), Value::Num(opt_plans[i].ops.len() as f64));
+        m.insert("rows_per_sec".to_string(), Value::Num(base_rps.round()));
+        m.insert("rows_per_sec_opt".to_string(), Value::Num(opt_rps.round()));
+        opt_records.push(Value::Obj(m));
+        println!(
+            "{:>14} {:>10} {:>10} {:>13.0} {:>13.0} {:>6.2}x",
+            format!("{}/{}", hm.label(), tm.label()),
+            nl_luts(&plans[i]),
+            outcome.netlist.lut_count(),
+            base_rps,
+            opt_rps,
+            opt_rps / base_rps.max(1e-9)
+        );
+    }
+
     // Coordinator-overhead arm: the native/native plan behind a full
     // Server, driven closed-loop at small windows. At batch <= 64 the
     // engine work per pass is tiny, so rows/sec here is dominated by
@@ -240,6 +320,10 @@ fn main() {
     top.insert("luts".to_string(), Value::Num(nl_luts(&plans[0]) as f64));
     let arm_count = records.len();
     top.insert("arms".to_string(), Value::Arr(records));
+    // Per-mode area + rows/sec delta from the `--opt-level` max pipeline:
+    // luts_before/luts_after (netlist area), ops/ops_opt (compiled plan
+    // size for that mode), rows_per_sec/rows_per_sec_opt.
+    top.insert("opt".to_string(), Value::Arr(opt_records));
     top.insert("stage_breakdown".to_string(), Value::Arr(breakdown));
     // Full coordinator snapshot of the server arm: per-stage rows including
     // queue-wait/batch-form/reply, shed + overlap counters.

@@ -97,6 +97,10 @@ pub struct StageSnapshot {
     pub max_us: u64,
     /// Raw bucket counts backing the percentiles (for interval deltas).
     pub counts: HistCounts,
+    /// Set by [`Snapshot::delta`] when this stage was absent from `prev`
+    /// (the pool's `PoolTelemetry` attached mid-interval): the row is the
+    /// stage's *lifetime* view baselined at zero, not a true interval.
+    pub zero_baselined: bool,
 }
 
 impl Metrics {
@@ -204,6 +208,7 @@ impl Metrics {
                     p999_us: s.p999_us(),
                     max_us: s.max_us(),
                     counts: hist.counts(),
+                    zero_baselined: false,
                 });
             }
         }
@@ -250,8 +255,12 @@ impl Snapshot {
     /// percentiles are recomputed from the bucket-count differences — so a
     /// `--metrics-every` report shows the interval's p50/p99/p999, not the
     /// since-startup aggregate that stops moving once history dominates.
-    /// Stages absent from `prev` pass through whole; the activity report
-    /// (monotone engine counters) carries the latest view unchanged.
+    /// A stage absent from `prev` (e.g. the pool's `PoolTelemetry` attached
+    /// via `OnceLock` mid-interval) has no baseline to subtract: its row
+    /// passes through whole — lifetime totals — and is flagged
+    /// [`StageSnapshot::zero_baselined`] so reports don't present it as
+    /// interval activity. The activity report (monotone engine counters)
+    /// carries the latest view unchanged.
     pub fn delta(&self, prev: &Snapshot) -> Snapshot {
         let e2e_counts = self.e2e_counts.delta(&prev.e2e_counts);
         let e2e = e2e_counts.summary();
@@ -261,10 +270,11 @@ impl Snapshot {
             .stages
             .iter()
             .map(|s| {
-                let counts = match prev.stages.iter().find(|p| p.stage == s.stage) {
-                    Some(p) => s.counts.delta(&p.counts),
-                    None => s.counts.clone(),
-                };
+                let (counts, zero_baselined) =
+                    match prev.stages.iter().find(|p| p.stage == s.stage) {
+                        Some(p) => (s.counts.delta(&p.counts), false),
+                        None => (s.counts.clone(), true),
+                    };
                 let sum = counts.summary();
                 StageSnapshot {
                     stage: s.stage,
@@ -274,6 +284,7 @@ impl Snapshot {
                     p999_us: sum.p999_us(),
                     max_us: sum.max_us(),
                     counts,
+                    zero_baselined,
                 }
             })
             .filter(|s| s.count > 0)
@@ -327,6 +338,9 @@ impl Snapshot {
             sm.insert("p99_us".into(), Value::Num(s.p99_us as f64));
             sm.insert("p999_us".into(), Value::Num(s.p999_us as f64));
             sm.insert("max_us".into(), Value::Num(s.max_us as f64));
+            if s.zero_baselined {
+                sm.insert("zero_baselined".into(), Value::Bool(true));
+            }
             stages.insert(s.stage.label().to_string(), Value::Obj(sm));
         }
         m.insert("stages".into(), Value::Obj(stages));
@@ -395,13 +409,14 @@ impl Snapshot {
         for s in &self.stages {
             let _ = writeln!(
                 out,
-                "{:<12} {:>10} {:>9} {:>9} {:>9} {:>9}",
+                "{:<12} {:>10} {:>9} {:>9} {:>9} {:>9}{}",
                 s.stage.label(),
                 s.count,
                 s.p50_us,
                 s.p99_us,
                 s.p999_us,
-                s.max_us
+                s.max_us,
+                if s.zero_baselined { "  (lifetime: attached mid-interval)" } else { "" }
             );
         }
         let _ = write!(
@@ -555,6 +570,44 @@ mod tests {
         assert_eq!(z.requests, 0);
         assert_eq!(z.p99_us, 0);
         assert!(z.stages.is_empty());
+    }
+
+    #[test]
+    fn mid_interval_engine_attach_is_flagged_zero_baselined() {
+        // The pool's telemetry attaches via OnceLock when the backend is
+        // enabled; a stage that existed for the whole interval must NOT be
+        // flagged, while one that appeared mid-interval carries lifetime
+        // totals and must be.
+        let m = Metrics::default();
+        m.record_stage(Stage::QueueWait, Duration::from_micros(10));
+        let first = m.snapshot();
+        assert!(first.stage(Stage::LutExec).is_none(), "backend not yet enabled");
+        // Backend comes up between the two snapshots.
+        let pool = Arc::new(crate::telemetry::PoolTelemetry::new());
+        pool.stages.record(Stage::LutExec, Duration::from_micros(7));
+        pool.stages.record(Stage::LutExec, Duration::from_micros(9));
+        m.attach_engine(pool);
+        m.record_stage(Stage::QueueWait, Duration::from_micros(20));
+        let d = m.snapshot().delta(&first);
+        let qw = d.stage(Stage::QueueWait).expect("queue-wait interval row");
+        assert_eq!(qw.count, 1, "true interval for the pre-existing stage");
+        assert!(!qw.zero_baselined);
+        let lut = d.stage(Stage::LutExec).expect("lut-exec row passes through");
+        assert_eq!(lut.count, 2, "lifetime totals, zero-baselined");
+        assert!(lut.zero_baselined, "mid-interval attach must be flagged");
+        // The flag is visible to JSON consumers and the report table.
+        let stages = d.to_json().get("stages").unwrap().clone();
+        assert_eq!(
+            stages.get("lut-exec").unwrap().opt("zero_baselined"),
+            Some(&Value::Bool(true))
+        );
+        assert!(stages.get("queue-wait").unwrap().opt("zero_baselined").is_none());
+        assert!(d.render_table().contains("attached mid-interval"));
+        // Once a later snapshot includes the stage in its baseline, the
+        // next interval is a true delta again.
+        let second = m.snapshot();
+        let d2 = m.snapshot().delta(&second);
+        assert!(d2.stage(Stage::LutExec).is_none(), "no new records, row drops out");
     }
 
     #[test]

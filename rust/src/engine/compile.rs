@@ -20,7 +20,7 @@ use super::plan::{
 };
 use super::tail::TailMode;
 use crate::hwgen::{Component, HeadInfo, TailInfo};
-use crate::logic::net::{cofactor_tables, table_mask};
+use crate::logic::net::{cofactor_tables, merge_dup_pins, table_mask};
 use crate::techmap::{LutNetlist, Src};
 
 /// Compile without stage metadata (single anonymous stage per level).
@@ -520,19 +520,4 @@ fn tail_boundary_ok(nl: &LutNetlist, tags: &[Component], tail: &TailInfo) -> boo
         Src::Input(_) => false,
         Src::Lut(j) => is_tail_tag(*j),
     })
-}
-
-/// Remove pin `j2` from a table over `k` pins given pins `j1` and `j2` carry
-/// the same signal: keep only addresses where both bits agree.
-fn merge_dup_pins(table: u64, k: usize, j1: usize, j2: usize) -> u64 {
-    debug_assert!(j1 < j2 && j2 < k);
-    let mut out = 0u64;
-    for a_new in 0..(1usize << (k - 1)) {
-        let b = (a_new >> j1) & 1;
-        let low = a_new & ((1 << j2) - 1);
-        let high = a_new >> j2;
-        let a = low | (b << j2) | (high << (j2 + 1));
-        out |= ((table >> a) & 1) << a_new;
-    }
-    out
 }

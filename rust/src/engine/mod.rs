@@ -34,10 +34,18 @@
 //! the engine emulates *only* the LUT layers. Each side falls back to full
 //! LUT emulation independently on any structural surprise, with the mapped
 //! netlist untouched — LUT-area accounting is identical in every mode.
+//!
+//! On top of lowering, the optimization pass pipeline ([`passes`],
+//! DESIGN.md §passes) can restructure the mapped netlist itself before
+//! compilation — iterate-to-fixpoint constant propagation,
+//! canonicalization, duplicate-LUT coalescing, and a dead-cone sweep —
+//! behind `--opt-level` ([`compile_for_modes_opt`]); level 0 is exactly
+//! [`compile_for_modes`].
 
 mod compile;
 mod exec;
 pub mod head;
+pub mod passes;
 mod plan;
 mod pool;
 pub mod profile;
@@ -48,6 +56,7 @@ pub use compile::{
     compile, compile_for_mode, compile_for_modes, compile_with_head, compile_with_stages,
     compile_with_tail,
 };
+pub use passes::{compile_for_modes_opt, run_pipeline, OptLevel, PassOutcome, PassStats};
 pub use exec::{infer_fixed_batch, par_eval, Executor};
 pub use head::HeadMode;
 pub use plan::{

@@ -1,0 +1,659 @@
+//! Netlist optimization pass pipeline — restructure the mapped
+//! [`LutNetlist`] *before* it is lowered to an [`ExecPlan`]
+//! (DESIGN.md §passes).
+//!
+//! The compiled engine already folds constants, merges duplicate pins, and
+//! drops dead LUTs once at lowering time ([`super::compile`]); this module
+//! generalizes that one-shot fold into an iterate-to-fixpoint pass manager
+//! over the netlist itself, in the style of MCHPRS redpiler's
+//! `constant_fold` / `coalesce` / `unreachable_output` passes:
+//!
+//! 1. **Constant propagation** — pins fed by constants (or by LUTs proved
+//!    constant in any earlier iteration, at any level) are cofactored into
+//!    the truth table; duplicate pins are merged; a table that collapses to
+//!    all-0/all-1 makes the LUT itself a constant, which propagates forward
+//!    across levels.
+//! 2. **Canonicalization** — surviving LUTs are rewritten into a normal
+//!    form: pins sorted (primary inputs before LUT outputs, each ascending
+//!    by index) with the truth table permuted to match. Two LUTs computing
+//!    the same function of the same signals now have byte-identical
+//!    (pins, table) keys regardless of the pin order the mapper chose.
+//! 3. **Coalescing** (opt-level 2) — structural hashing over the canonical
+//!    key `(stage tag, pins, table)`: a LUT identical to an earlier one is
+//!    replaced by a reference to it. The comparator-heavy thermometer
+//!    encoder cone — the paper's 3.20× area inflation — is full of such
+//!    twins. Merging is same-stage only, so the native head/tail boundary
+//!    cleanliness that [`super::compile_for_modes`] relies on is preserved,
+//!    and head thermometer-bit *carrier* LUTs are never merged away (the
+//!    native head requires each bit to own a distinct carrier); a carrier
+//!    may absorb later twins as their representative.
+//! 4. **Dead-cone sweep** — unreachable LUTs are removed, rooted at the
+//!    netlist outputs, every head carrier, and every tail class bit (the
+//!    union over all compile modes, so one optimized netlist serves the
+//!    whole head×tail matrix).
+//!
+//! Passes 1–3 iterate until nothing changes; each productive iteration
+//! removes at least one LUT, so the fixpoint is reached within
+//! `lut_count + 1` sweeps. The sweep order is the netlist's topological
+//! order and representatives are always the earliest structural twin, so
+//! the result is deterministic — conformance asserts recompiles yield
+//! identical [`CompileStats`].
+//!
+//! The pipeline never changes observable behavior: the optimized netlist is
+//! bit-identical to the source on every input (property-tested in
+//! `tests/property_passes.rs`, conformance-pinned across the full
+//! head×tail × encoder-architecture matrix).
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+
+use super::head::HeadMode;
+use super::plan::{CompileStats, ExecPlan};
+use super::tail::TailMode;
+use crate::hwgen::{Component, HeadInfo, TailInfo};
+use crate::logic::net::{cofactor_tables, merge_dup_pins, permute_table, table_mask};
+use crate::techmap::{LutNetlist, MappedLut, Src};
+
+/// How hard the pass pipeline works. Parsed from `--opt-level 0|1|2`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, PartialOrd, Ord)]
+pub enum OptLevel {
+    /// 0: pipeline off — [`compile_for_modes_opt`] is byte-identical to
+    /// [`super::compile_for_modes`].
+    #[default]
+    None,
+    /// 1: one constant-propagation + canonicalization sweep and a dead-cone
+    /// sweep; no coalescing, no iteration.
+    Fold,
+    /// 2: full fixpoint with duplicate-LUT coalescing.
+    Max,
+}
+
+impl OptLevel {
+    pub fn label(self) -> &'static str {
+        match self {
+            OptLevel::None => "0",
+            OptLevel::Fold => "1",
+            OptLevel::Max => "2",
+        }
+    }
+}
+
+impl std::str::FromStr for OptLevel {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "0" | "none" | "off" => Ok(OptLevel::None),
+            "1" | "fold" => Ok(OptLevel::Fold),
+            "2" | "max" | "full" => Ok(OptLevel::Max),
+            other => Err(format!("unknown opt level {other:?} (want 0, 1, or 2)")),
+        }
+    }
+}
+
+/// What the pipeline removed, per pass, plus the iteration count that
+/// reached the fixpoint.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PassStats {
+    /// LUTs in the source netlist handed to [`run_pipeline`].
+    pub source_luts: usize,
+    /// LUTs proved constant (all-0/all-1 tables after pin folding).
+    pub const_folded: usize,
+    /// LUTs merged into an earlier structural twin.
+    pub coalesced: usize,
+    /// LUTs unreachable from outputs / head carriers / tail class bits.
+    pub dead_removed: usize,
+    /// Constant or duplicate pins folded out of surviving tables.
+    pub pins_folded: usize,
+    /// Sweeps run to reach the fixpoint (>= 1 unless the level is `None`).
+    pub iterations: usize,
+}
+
+impl PassStats {
+    /// Total LUTs removed from the netlist.
+    pub fn removed(&self) -> usize {
+        self.const_folded + self.coalesced + self.dead_removed
+    }
+
+    /// Fold these pass stats into the stats of a plan compiled from the
+    /// *optimized* netlist so the partition invariant is restated over the
+    /// *source* netlist:
+    /// `ops + const_folded + dead_eliminated + coalesced + tail_skipped +
+    ///  head_skipped == source_luts`.
+    pub fn merge_into(&self, c: CompileStats) -> CompileStats {
+        CompileStats {
+            source_luts: self.source_luts,
+            const_folded: c.const_folded + self.const_folded,
+            dead_eliminated: c.dead_eliminated + self.dead_removed,
+            coalesced: c.coalesced + self.coalesced,
+            pins_folded: c.pins_folded + self.pins_folded,
+            tail_skipped: c.tail_skipped,
+            head_skipped: c.head_skipped,
+        }
+    }
+}
+
+/// The optimized netlist plus remapped stage tags and head/tail metadata —
+/// everything [`super::compile_for_modes`] needs, in one bundle.
+#[derive(Debug, Clone)]
+pub struct PassOutcome {
+    pub netlist: LutNetlist,
+    pub tags: Option<Vec<Component>>,
+    pub head: Option<HeadInfo>,
+    pub tail: Option<TailInfo>,
+    pub stats: PassStats,
+}
+
+impl PassOutcome {
+    /// Lower the optimized netlist for a head×tail mode pair, merging the
+    /// pipeline's removal stats into the plan's [`CompileStats`] so
+    /// `stats.source_luts` still counts the *source* netlist.
+    pub fn compile_for_modes(&self, head_mode: HeadMode, tail_mode: TailMode) -> ExecPlan {
+        let mut plan = super::compile_for_modes(
+            &self.netlist,
+            self.tags.as_deref(),
+            self.head.as_ref(),
+            self.tail.as_ref(),
+            head_mode,
+            tail_mode,
+        );
+        plan.stats = self.stats.merge_into(plan.stats);
+        plan
+    }
+}
+
+/// [`super::compile_for_modes`] with the pass pipeline in front: optimize
+/// the netlist at `level`, then lower it for the requested mode pair. At
+/// [`OptLevel::None`] this is exactly `compile_for_modes` (no copy is
+/// made). The shared dispatch for `dwn serve`/`breakdown` and the benches.
+#[allow(clippy::too_many_arguments)]
+pub fn compile_for_modes_opt(
+    nl: &LutNetlist,
+    tags: Option<&[Component]>,
+    head: Option<&HeadInfo>,
+    tail: Option<&TailInfo>,
+    head_mode: HeadMode,
+    tail_mode: TailMode,
+    level: OptLevel,
+) -> ExecPlan {
+    if level == OptLevel::None {
+        return super::compile_for_modes(nl, tags, head, tail, head_mode, tail_mode);
+    }
+    run_pipeline(nl, tags, head, tail, level).compile_for_modes(head_mode, tail_mode)
+}
+
+/// Follow replacement chains to the final source a signal resolves to.
+fn resolve(repl: &[Src], mut s: Src) -> Src {
+    while let Src::Lut(j) = s {
+        let r = repl[j as usize];
+        if r == s {
+            break;
+        }
+        s = r;
+    }
+    s
+}
+
+/// Run the pass pipeline over a mapped netlist. `tags`/`head`/`tail` are
+/// the stage metadata from [`crate::hwgen::Accelerator::map_with_head`]
+/// (any may be absent); the outcome carries them remapped onto the
+/// optimized netlist. At [`OptLevel::None`] the input is returned
+/// unchanged (cloned) with zeroed stats.
+pub fn run_pipeline(
+    nl: &LutNetlist,
+    tags: Option<&[Component]>,
+    head: Option<&HeadInfo>,
+    tail: Option<&TailInfo>,
+    level: OptLevel,
+) -> PassOutcome {
+    if let Some(t) = tags {
+        assert_eq!(t.len(), nl.luts.len(), "one stage tag per source LUT");
+    }
+    debug_assert!(nl.is_topo_ordered(), "pass pipeline requires topo order");
+    let n = nl.luts.len();
+    let mut stats = PassStats { source_luts: n, ..PassStats::default() };
+    if level == OptLevel::None {
+        return PassOutcome {
+            netlist: nl.clone(),
+            tags: tags.map(<[_]>::to_vec),
+            head: head.cloned(),
+            tail: tail.cloned(),
+            stats,
+        };
+    }
+
+    // Working canonical definitions; None = LUT replaced (const/coalesced).
+    let mut defs: Vec<Option<(Vec<Src>, u64)>> = nl
+        .luts
+        .iter()
+        .map(|l| Some((l.inputs.clone(), l.table & table_mask(l.inputs.len()))))
+        .collect();
+    // What each source LUT resolves to once replaced (initially itself).
+    let mut repl: Vec<Src> = (0..n).map(|i| Src::Lut(i as u32)).collect();
+
+    // Head thermometer-bit carriers must survive as *distinct* LUTs: the
+    // native-head boundary check rejects two bits sharing one carrier, so
+    // a carrier never coalesces into another LUT (it may still fold to a
+    // constant — the boundary check accepts `Src::Const` bits).
+    let mut carrier = vec![false; n];
+    if let Some(h) = head {
+        for f in &h.features {
+            for srcs in &f.srcs {
+                for s in srcs {
+                    if let Src::Lut(j) = s {
+                        carrier[*j as usize] = true;
+                    }
+                }
+            }
+        }
+    }
+
+    // Passes 1-3, iterated to fixpoint (opt-level 1 runs a single sweep;
+    // folding completes in one topological pass, so a second sweep would
+    // only matter once coalescing introduces new sharing).
+    let coalesce = level >= OptLevel::Max;
+    loop {
+        stats.iterations += 1;
+        let mut changed = false;
+        let mut canon: HashMap<(Option<Component>, Vec<Src>, u64), u32> = HashMap::new();
+        for i in 0..n {
+            let Some((old_pins, mut table)) = defs[i].take() else { continue };
+            // Pass 1: resolve pins through replacements, cofactor constants
+            // into the table, merge duplicate pins.
+            let mut pins: Vec<Src> = Vec::with_capacity(old_pins.len());
+            let mut live = old_pins.len();
+            for src in old_pins {
+                match resolve(&repl, src) {
+                    Src::Const(b) => {
+                        let (c0, c1) = cofactor_tables(table, live, pins.len());
+                        table = if b { c1 } else { c0 };
+                        live -= 1;
+                        stats.pins_folded += 1;
+                        changed = true;
+                    }
+                    s => {
+                        if let Some(prev) = pins.iter().position(|&q| q == s) {
+                            table = merge_dup_pins(table, live, prev, pins.len());
+                            live -= 1;
+                            stats.pins_folded += 1;
+                            changed = true;
+                        } else {
+                            if s != src {
+                                changed = true;
+                            }
+                            pins.push(s);
+                        }
+                    }
+                }
+            }
+            table &= table_mask(pins.len());
+            if table == 0 || table == table_mask(pins.len()) {
+                repl[i] = Src::Const(table != 0);
+                stats.const_folded += 1;
+                changed = true;
+                continue;
+            }
+            // Pass 2: canonical form — pins sorted (inputs first, then LUT
+            // outputs, ascending), table permuted to match.
+            let mut order: Vec<usize> = (0..pins.len()).collect();
+            order.sort_by_key(|&p| match pins[p] {
+                Src::Input(j) => (0u32, j),
+                Src::Lut(j) => (1, j),
+                Src::Const(_) => unreachable!("const pins were folded"),
+            });
+            if order.iter().enumerate().any(|(new, &old)| new != old) {
+                table = permute_table(table, pins.len(), &order);
+                pins = order.iter().map(|&p| pins[p]).collect();
+            }
+            // Pass 3: structural hashing. Same-stage only; carriers are
+            // kept (they may still *be* the representative).
+            if coalesce {
+                let tag = tags.map(|t| t[i]);
+                match canon.entry((tag, pins.clone(), table)) {
+                    Entry::Occupied(e) => {
+                        if carrier[i] {
+                            defs[i] = Some((pins, table));
+                        } else {
+                            repl[i] = Src::Lut(*e.get());
+                            stats.coalesced += 1;
+                            changed = true;
+                        }
+                    }
+                    Entry::Vacant(e) => {
+                        e.insert(i as u32);
+                        defs[i] = Some((pins, table));
+                    }
+                }
+            } else {
+                defs[i] = Some((pins, table));
+            }
+        }
+        if !changed || level < OptLevel::Max {
+            break;
+        }
+        // Each productive iteration replaces >= 1 LUT, and the first sweep
+        // resolves pins whether or not anything changed, so the fixpoint
+        // arrives within n + 2 sweeps.
+        debug_assert!(stats.iterations <= n + 2, "pass pipeline failed to converge");
+    }
+
+    // Pass 4: dead-cone sweep. Roots: outputs, head carriers, tail class
+    // bits — the union over every compile mode.
+    let mut live = vec![false; n];
+    let mut stack: Vec<u32> = Vec::new();
+    let mark = |s: Src, live: &mut Vec<bool>, stack: &mut Vec<u32>| {
+        if let Src::Lut(j) = resolve(&repl, s) {
+            if !live[j as usize] {
+                live[j as usize] = true;
+                stack.push(j);
+            }
+        }
+    };
+    for &s in &nl.outputs {
+        mark(s, &mut live, &mut stack);
+    }
+    if let Some(h) = head {
+        for f in &h.features {
+            for srcs in &f.srcs {
+                for &s in srcs {
+                    mark(s, &mut live, &mut stack);
+                }
+            }
+        }
+    }
+    if let Some(t) = tail {
+        for bits in &t.class_bits {
+            for &s in bits {
+                mark(s, &mut live, &mut stack);
+            }
+        }
+    }
+    while let Some(j) = stack.pop() {
+        if let Some((pins, _)) = &defs[j as usize] {
+            for &s in pins.iter() {
+                mark(s, &mut live, &mut stack);
+            }
+        }
+    }
+    for i in 0..n {
+        if defs[i].is_some() && !live[i] {
+            defs[i] = None;
+            stats.dead_removed += 1;
+        }
+    }
+
+    // Rebuild: survivors in source order (topo order is preserved because
+    // canonical pins only reference earlier indices), then remap pins,
+    // outputs, and head/tail metadata through replacements + new indices.
+    let mut new_index = vec![u32::MAX; n];
+    let mut luts = Vec::new();
+    let mut new_tags = tags.map(|_| Vec::new());
+    for i in 0..n {
+        let Some((pins, table)) = &defs[i] else { continue };
+        new_index[i] = luts.len() as u32;
+        let inputs = pins
+            .iter()
+            .map(|&s| remap(&repl, &new_index, s))
+            .collect();
+        luts.push(MappedLut { inputs, table: *table });
+        if let (Some(nt), Some(t)) = (new_tags.as_mut(), tags) {
+            nt.push(t[i]);
+        }
+    }
+    let outputs = nl.outputs.iter().map(|&s| remap(&repl, &new_index, s)).collect();
+    let head = head.map(|h| HeadInfo {
+        features: h
+            .features
+            .iter()
+            .map(|f| crate::hwgen::HeadFeatureInfo {
+                feature: f.feature,
+                thresholds: f.thresholds.clone(),
+                srcs: f
+                    .srcs
+                    .iter()
+                    .map(|ss| ss.iter().map(|&s| remap(&repl, &new_index, s)).collect())
+                    .collect(),
+            })
+            .collect(),
+        num_features: h.num_features,
+        frac_bits: h.frac_bits,
+    });
+    let tail = tail.map(|t| TailInfo {
+        class_bits: t
+            .class_bits
+            .iter()
+            .map(|bits| bits.iter().map(|&s| remap(&repl, &new_index, s)).collect())
+            .collect(),
+        num_classes: t.num_classes,
+        score_width: t.score_width,
+        index_width: t.index_width,
+    });
+
+    let netlist = LutNetlist { num_inputs: nl.num_inputs, luts, outputs };
+    debug_assert!(netlist.is_topo_ordered(), "pipeline broke topo order");
+    debug_assert_eq!(
+        netlist.lut_count() + stats.removed(),
+        n,
+        "pipeline stats must partition the source netlist"
+    );
+    PassOutcome { netlist, tags: new_tags, head, tail, stats }
+}
+
+/// Resolve a source through replacements, then renumber surviving LUTs.
+fn remap(repl: &[Src], new_index: &[u32], s: Src) -> Src {
+    match resolve(repl, s) {
+        Src::Lut(j) => {
+            let nj = new_index[j as usize];
+            debug_assert_ne!(nj, u32::MAX, "live LUT lost during rebuild");
+            Src::Lut(nj)
+        }
+        other => other,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn eval_all(nl: &LutNetlist) -> Vec<Vec<u64>> {
+        // Exhaustive over up to 6 inputs: one 64-lane word enumerates all
+        // assignments when lane L carries assignment L.
+        assert!(nl.num_inputs <= 6);
+        let inputs: Vec<u64> = (0..nl.num_inputs)
+            .map(|i| {
+                let mut w = 0u64;
+                for lane in 0..64usize {
+                    w |= (((lane >> i) & 1) as u64) << lane;
+                }
+                w
+            })
+            .collect();
+        vec![nl.eval_lanes(&inputs)]
+    }
+
+    fn assert_equivalent(a: &LutNetlist, b: &LutNetlist) {
+        assert_eq!(a.num_inputs, b.num_inputs);
+        assert_eq!(a.outputs.len(), b.outputs.len());
+        assert_eq!(eval_all(a), eval_all(b));
+    }
+
+    #[test]
+    fn opt_level_parses() {
+        for (s, want) in [
+            ("0", OptLevel::None),
+            ("none", OptLevel::None),
+            ("1", OptLevel::Fold),
+            ("2", OptLevel::Max),
+            ("max", OptLevel::Max),
+        ] {
+            assert_eq!(s.parse::<OptLevel>().unwrap(), want);
+        }
+        assert!("3".parse::<OptLevel>().is_err());
+    }
+
+    #[test]
+    fn cross_level_constants_propagate() {
+        // lut0 = in0 AND NOT in0 = const 0; lut1 = in1 OR lut0 = in1;
+        // lut2 = lut1 XOR lut0 = in1. All of the logic dissolves.
+        let nl = LutNetlist {
+            num_inputs: 2,
+            luts: vec![
+                MappedLut { inputs: vec![Src::Input(0), Src::Input(0)], table: 0b0010 },
+                MappedLut { inputs: vec![Src::Input(1), Src::Lut(0)], table: 0b1110 },
+                MappedLut { inputs: vec![Src::Lut(1), Src::Lut(0)], table: 0b0110 },
+            ],
+            outputs: vec![Src::Lut(2)],
+        };
+        let out = run_pipeline(&nl, None, None, None, OptLevel::Fold);
+        assert_equivalent(&nl, &out.netlist);
+        assert_eq!(out.stats.const_folded, 1, "lut0 proved constant");
+        // lut1 and lut2 collapse to single-pin identities of in1/lut1.
+        assert!(out.stats.pins_folded >= 2);
+        assert_eq!(out.netlist.lut_count() + out.stats.removed(), 3);
+    }
+
+    #[test]
+    fn permuted_duplicates_coalesce() {
+        // lut0 = in0 AND NOT in1; lut1 is the same function with pins
+        // swapped; lut2 combines them (XOR -> const 0 after coalescing).
+        let nl = LutNetlist {
+            num_inputs: 2,
+            luts: vec![
+                MappedLut { inputs: vec![Src::Input(0), Src::Input(1)], table: 0b0010 },
+                MappedLut { inputs: vec![Src::Input(1), Src::Input(0)], table: 0b0100 },
+                MappedLut { inputs: vec![Src::Lut(0), Src::Lut(1)], table: 0b0110 },
+            ],
+            outputs: vec![Src::Lut(2), Src::Lut(0)],
+        };
+        let out = run_pipeline(&nl, None, None, None, OptLevel::Max);
+        assert_equivalent(&nl, &out.netlist);
+        assert_eq!(out.stats.coalesced, 1, "pin-permuted twin merged");
+        assert_eq!(out.stats.const_folded, 1, "XOR of twins is const 0");
+        // Only lut0 survives (lut2 went const, lut1 coalesced).
+        assert_eq!(out.netlist.lut_count(), 1);
+        assert!(out.stats.iterations >= 2, "coalescing enables the fold");
+    }
+
+    #[test]
+    fn same_stage_only_coalescing() {
+        use crate::hwgen::Component;
+        let nl = LutNetlist {
+            num_inputs: 2,
+            luts: vec![
+                MappedLut { inputs: vec![Src::Input(0), Src::Input(1)], table: 0b1000 },
+                MappedLut { inputs: vec![Src::Input(0), Src::Input(1)], table: 0b1000 },
+            ],
+            outputs: vec![Src::Lut(0), Src::Lut(1)],
+        };
+        // Different stages: identical twins must NOT merge.
+        let tags = [Component::Encoder, Component::LutLayer];
+        let out = run_pipeline(&nl, Some(&tags), None, None, OptLevel::Max);
+        assert_eq!(out.stats.coalesced, 0);
+        assert_eq!(out.netlist.lut_count(), 2);
+        // Same stage: they do.
+        let tags = [Component::LutLayer, Component::LutLayer];
+        let out = run_pipeline(&nl, Some(&tags), None, None, OptLevel::Max);
+        assert_eq!(out.stats.coalesced, 1);
+        assert_eq!(out.netlist.lut_count(), 1);
+        assert_eq!(out.tags.as_deref(), Some(&[Component::LutLayer][..]));
+        assert_equivalent(&nl, &out.netlist);
+    }
+
+    #[test]
+    fn dead_cones_are_swept() {
+        // lut1 feeds only lut2, which nothing reads; lut0 is the output.
+        let nl = LutNetlist {
+            num_inputs: 2,
+            luts: vec![
+                MappedLut { inputs: vec![Src::Input(0), Src::Input(1)], table: 0b0110 },
+                MappedLut { inputs: vec![Src::Input(1)], table: 0b01 },
+                MappedLut { inputs: vec![Src::Lut(1)], table: 0b01 },
+            ],
+            outputs: vec![Src::Lut(0)],
+        };
+        let out = run_pipeline(&nl, None, None, None, OptLevel::Fold);
+        assert_eq!(out.stats.dead_removed, 2);
+        assert_eq!(out.netlist.lut_count(), 1);
+        assert_equivalent(&nl, &out.netlist);
+    }
+
+    #[test]
+    fn opt_level_none_is_identity() {
+        let nl = LutNetlist {
+            num_inputs: 1,
+            luts: vec![
+                MappedLut { inputs: vec![Src::Input(0)], table: 0b01 },
+                MappedLut { inputs: vec![Src::Input(0)], table: 0b01 },
+            ],
+            outputs: vec![Src::Lut(0)],
+        };
+        let out = run_pipeline(&nl, None, None, None, OptLevel::None);
+        assert_eq!(out.netlist.lut_count(), 2, "no passes at level 0");
+        assert_eq!(out.stats, PassStats { source_luts: 2, ..PassStats::default() });
+    }
+
+    #[test]
+    fn head_carriers_never_merge_away() {
+        use crate::hwgen::{Component, HeadFeatureInfo, HeadInfo};
+        // Two identical encoder-tagged comparators, both head carriers
+        // (two thermometer bits that happen to compute the same function):
+        // coalescing them would make the bits share a LUT and break the
+        // native-head boundary, so both must survive.
+        let nl = LutNetlist {
+            num_inputs: 2,
+            luts: vec![
+                MappedLut { inputs: vec![Src::Input(0), Src::Input(1)], table: 0b1000 },
+                MappedLut { inputs: vec![Src::Input(0), Src::Input(1)], table: 0b1000 },
+                MappedLut { inputs: vec![Src::Lut(0), Src::Lut(1)], table: 0b1110 },
+            ],
+            outputs: vec![Src::Lut(2)],
+        };
+        let tags = [Component::Encoder, Component::Encoder, Component::LutLayer];
+        let head = HeadInfo {
+            features: vec![HeadFeatureInfo {
+                feature: 0,
+                thresholds: vec![1, 2],
+                srcs: vec![vec![Src::Lut(0)], vec![Src::Lut(1)]],
+            }],
+            num_features: 1,
+            frac_bits: 0,
+        };
+        let out = run_pipeline(&nl, Some(&tags), Some(&head), None, OptLevel::Max);
+        assert_eq!(out.stats.coalesced, 0, "carriers are protected");
+        assert_eq!(out.netlist.lut_count(), 3);
+        let h = out.head.unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for srcs in &h.features[0].srcs {
+            for s in srcs {
+                if let Src::Lut(j) = s {
+                    assert!(seen.insert(*j), "carriers stayed distinct");
+                }
+            }
+        }
+        assert_equivalent(&nl, &out.netlist);
+    }
+
+    #[test]
+    fn pipeline_is_deterministic() {
+        let nl = LutNetlist {
+            num_inputs: 3,
+            luts: vec![
+                MappedLut { inputs: vec![Src::Input(0), Src::Input(1)], table: 0b0111 },
+                MappedLut { inputs: vec![Src::Input(1), Src::Input(0)], table: 0b0111 },
+                MappedLut { inputs: vec![Src::Lut(0), Src::Input(2)], table: 0b0110 },
+                MappedLut { inputs: vec![Src::Lut(1), Src::Input(2)], table: 0b0110 },
+            ],
+            outputs: vec![Src::Lut(2), Src::Lut(3)],
+        };
+        let a = run_pipeline(&nl, None, None, None, OptLevel::Max);
+        let b = run_pipeline(&nl, None, None, None, OptLevel::Max);
+        assert_eq!(a.stats, b.stats);
+        assert_eq!(a.netlist.lut_count(), b.netlist.lut_count());
+        for (x, y) in a.netlist.luts.iter().zip(&b.netlist.luts) {
+            assert_eq!(x.inputs, y.inputs);
+            assert_eq!(x.table, y.table);
+        }
+        // The whole duplicated chain collapsed: 2 coalesces, 2 survivors.
+        assert_eq!(a.stats.coalesced, 2);
+        assert_eq!(a.netlist.lut_count(), 2);
+    }
+}

@@ -64,6 +64,9 @@ pub struct CompileStats {
     pub const_folded: usize,
     /// Non-constant LUTs unreachable from any output.
     pub dead_eliminated: usize,
+    /// Duplicate LUTs merged into an earlier structural twin by the
+    /// optimization pass pipeline (0 for plans compiled at opt-level 0).
+    pub coalesced: usize,
     /// Constant or duplicate pins folded out of surviving tables.
     pub pins_folded: usize,
     /// Popcount/argmax LUTs replaced by the native arithmetic tail

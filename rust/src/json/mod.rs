@@ -275,7 +275,12 @@ fn write_into(v: &Value, s: &mut String) {
         Value::Null => s.push_str("null"),
         Value::Bool(b) => s.push_str(if *b { "true" } else { "false" }),
         Value::Num(n) => {
-            if n.fract() == 0.0 && n.abs() < 9e15 {
+            // JSON has no NaN/Infinity literal; emitting one (quantiles
+            // over empty histograms, 0/0 ratios) would corrupt the whole
+            // document for every consumer. Clamp non-finite to null.
+            if !n.is_finite() {
+                s.push_str("null");
+            } else if n.fract() == 0.0 && n.abs() < 9e15 {
                 let _ = write!(s, "{}", *n as i64);
             } else {
                 let _ = write!(s, "{n}");
@@ -352,6 +357,30 @@ mod tests {
         let v = parse(src).unwrap();
         let out = write(&v);
         assert_eq!(parse(&out).unwrap(), v);
+    }
+
+    #[test]
+    fn non_finite_numbers_render_as_null() {
+        // NaN/inf have no JSON literal; the emitter must clamp them so a
+        // stray 0/0 quantile can't corrupt a whole stats document.
+        let v = Value::Obj(BTreeMap::from([
+            ("nan".to_string(), Value::Num(f64::NAN)),
+            ("pinf".to_string(), Value::Num(f64::INFINITY)),
+            ("ninf".to_string(), Value::Num(f64::NEG_INFINITY)),
+            ("ok".to_string(), Value::Num(0.25)),
+        ]));
+        let out = write(&v);
+        let back = parse(&out).expect("clamped output is valid JSON");
+        assert_eq!(back.get("nan").unwrap(), &Value::Null);
+        assert_eq!(back.get("pinf").unwrap(), &Value::Null);
+        assert_eq!(back.get("ninf").unwrap(), &Value::Null);
+        assert_eq!(back.get("ok").unwrap().as_f64().unwrap(), 0.25);
+        // And a non-finite inside an array round-trips as null too.
+        let arr = write(&Value::Arr(vec![Value::Num(f64::NAN), Value::Num(1.0)]));
+        assert_eq!(
+            parse(&arr).unwrap().as_arr().unwrap(),
+            &[Value::Null, Value::Num(1.0)]
+        );
     }
 
     #[test]

@@ -227,6 +227,36 @@ pub fn cofactor_tables(table: u64, k: usize, j: usize) -> (u64, u64) {
     (c0, c1)
 }
 
+/// Remove pin `j2` from a table over `k` pins given pins `j1` and `j2` carry
+/// the same signal: keep only addresses where both bits agree.
+pub fn merge_dup_pins(table: u64, k: usize, j1: usize, j2: usize) -> u64 {
+    debug_assert!(j1 < j2 && j2 < k);
+    let mut out = 0u64;
+    for a_new in 0..(1usize << (k - 1)) {
+        let b = (a_new >> j1) & 1;
+        let low = a_new & ((1 << j2) - 1);
+        let high = a_new >> j2;
+        let a = low | (b << j2) | (high << (j2 + 1));
+        out |= ((table >> a) & 1) << a_new;
+    }
+    out
+}
+
+/// Reorder the address bits of `table` (over `k` pins): `perm[new] = old`
+/// places the pin formerly at position `old` at position `new`.
+pub fn permute_table(table: u64, k: usize, perm: &[usize]) -> u64 {
+    debug_assert_eq!(perm.len(), k);
+    let mut out = 0u64;
+    for a_new in 0..(1usize << k) {
+        let mut a_old = 0usize;
+        for (new, &old) in perm.iter().enumerate() {
+            a_old |= ((a_new >> new) & 1) << old;
+        }
+        out |= ((table >> a_old) & 1) << a_new;
+    }
+    out
+}
+
 fn cofactor(inputs: &[NodeId], table: u64, j: usize, value: bool) -> (Vec<NodeId>, u64) {
     let k = inputs.len();
     let (c0, c1) = cofactor_tables(table, k, j);
@@ -294,5 +324,32 @@ mod tests {
         let (c0, c1) = cofactor_tables(0b1000, 2, 1);
         assert_eq!(c0, 0b00); // x1=0 -> 0
         assert_eq!(c1, 0b10); // x1=1 -> x0
+    }
+
+    #[test]
+    fn merge_dup_pins_collapses_repeated_signal() {
+        // f(x0,x1) = x0 AND x1 with x1 == x0 -> identity over one pin.
+        assert_eq!(merge_dup_pins(0b1000, 2, 0, 1), 0b10);
+        // f = x0 XOR x1 with x1 == x0 -> constant 0.
+        assert_eq!(merge_dup_pins(0b0110, 2, 0, 1), 0b00);
+    }
+
+    #[test]
+    fn permute_table_swaps_address_bits() {
+        // f(x0,x1) = x0 AND NOT x1: truth at address (x1=0,x0=1) = 0b0010.
+        // Swapping the pins yields NOT x0 AND x1: truth at address 0b10.
+        assert_eq!(permute_table(0b0010, 2, &[1, 0]), 0b0100);
+        // Identity permutation is a no-op, including over 3 pins.
+        for t in [0b1011_0010u64, 0x96, 0xFE] {
+            assert_eq!(permute_table(t, 3, &[0, 1, 2]), t);
+        }
+        // Applying a permutation then its inverse round-trips.
+        let t = 0b1100_1010u64;
+        let p = [2usize, 0, 1]; // new <- old
+        let mut inv = [0usize; 3];
+        for (new, &old) in p.iter().enumerate() {
+            inv[old] = new;
+        }
+        assert_eq!(permute_table(permute_table(t, 3, &p), 3, &inv), t);
     }
 }

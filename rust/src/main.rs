@@ -18,7 +18,7 @@ use dwn::config::{Args, Artifacts};
 use dwn::coordinator::{Backend, Row, Server, ServerConfig};
 use dwn::data::Dataset;
 use dwn::encoding::{self, ArchKind, EncoderIr, EncoderStrategy};
-use dwn::engine::{HeadMode, TailMode};
+use dwn::engine::{HeadMode, OptLevel, TailMode};
 use dwn::hwgen::{build_accelerator, AccelOptions, Component};
 use dwn::model::{DwnModel, SynthSpec, Variant};
 use dwn::report::{f1, int, Table};
@@ -67,13 +67,21 @@ fn run() -> Result<()> {
 const HELP: &str = "dwn — DWN FPGA accelerator generator (thermometer-encoding reproduction)
 commands: generate | breakdown | encoders | verify | serve | trace | profile | accuracy | emit-rtl | mixed | info | help
 common options: --artifacts PATH --model NAME --variant ten|pen|penft
+generate/serve/breakdown/trace/profile:
+           --opt-level 0|1|2 (default 0 = off): netlist optimization pass
+           pipeline before compilation — 1 = constant propagation +
+           canonicalization + dead-cone sweep, 2 = fixpoint with
+           duplicate-LUT coalescing (DESIGN.md §passes); decisions are
+           bit-identical at every level (conformance-pinned)
 generate/breakdown: --encoder auto|bank|chain|mux|lut (default bank = reference comparator bank)
 breakdown: per-component LUT area + per-stage runtime attribution from the
            compiled engine; --lanes N (default 256) --passes N (default 64)
            --head native|lut (default native, matching serve) --tail
            native|lut (default lut); native reports the encoder comparisons
            / arithmetic tail as their own runtime rows — LUT-area columns
-           are unaffected in every mode
+           are unaffected in every mode; --opt-level adds a before/after
+           'total (opt)' area row + an 'opt passes' removal summary;
+           --synthetic (or no --model) uses the built-in JSC-sized model
 encoders: per-feature encoder architecture selection + modeled vs mapped LUT cost
           --encoder auto|bank|chain|mux|lut (default auto) --depth-budget N (auto only)
 serve: --backend pjrt|netlist|compiled [--requests N] [--synthetic]
@@ -141,9 +149,20 @@ fn cmd_generate(artifacts: &Artifacts, args: &Args) -> Result<()> {
     opts.uniform_encoding = args.has_flag("uniform");
     opts.encoder = args.get_parse("encoder", EncoderStrategy::default())?;
     opts.encoder_depth_budget = args.get_parse_opt("depth-budget")?;
+    let opt: OptLevel = args.get_parse("opt-level", OptLevel::None)?;
     let t0 = Instant::now();
     let accel = build_accelerator(&model, &opts)?;
-    let nl = accel.map(&MapConfig::default());
+    // With the pass pipeline on, report STA over the *optimized* netlist
+    // (head/tail metadata keeps the native serving boundaries intact);
+    // the pre-opt LUT count is reported alongside for the before/after.
+    let (nl, pre_opt) = if opt != OptLevel::None {
+        let (nl0, tags, head, tail) = accel.map_with_head(&MapConfig::default());
+        let before = nl0.lut_count();
+        let out = dwn::engine::run_pipeline(&nl0, Some(&tags), head.as_ref(), tail.as_ref(), opt);
+        (out.netlist, Some((before, out.stats)))
+    } else {
+        (accel.map(&MapConfig::default()), None)
+    };
     let rep = analyze(&nl, &DelayModel::default());
     let dt = t0.elapsed();
     let mut t = Table::new(
@@ -151,6 +170,19 @@ fn cmd_generate(artifacts: &Artifacts, args: &Args) -> Result<()> {
         &["metric", "value"],
     );
     t.row(&["LUTs".into(), int(rep.luts)]);
+    if let Some((before, p)) = &pre_opt {
+        t.row(&["LUTs (pre-opt)".into(), int(*before)]);
+        t.row(&[
+            format!("opt -O{} removed", opt.label()),
+            format!(
+                "{} ({} const, {} coalesced, {} dead)",
+                p.removed(),
+                p.const_folded,
+                p.coalesced,
+                p.dead_removed
+            ),
+        ]);
+    }
     t.row(&["FFs".into(), int(rep.ffs)]);
     t.row(&["logic depth (levels)".into(), rep.depth.to_string()]);
     t.row(&["pipeline stages".into(), rep.stages.to_string()]);
@@ -171,7 +203,7 @@ fn cmd_generate(artifacts: &Artifacts, args: &Args) -> Result<()> {
 }
 
 fn cmd_breakdown(artifacts: &Artifacts, args: &Args) -> Result<()> {
-    let model = load_model(artifacts, args)?;
+    let model = load_model_or_synthetic(artifacts, args)?;
     let variant: Variant = args.get_parse("variant", Variant::PenFt)?;
     let encoder: EncoderStrategy = args.get_parse("encoder", EncoderStrategy::default())?;
     // Native head by default — the same default `serve` uses, so breakdown's
@@ -196,14 +228,10 @@ fn cmd_breakdown(artifacts: &Artifacts, args: &Args) -> Result<()> {
     // to the `encoder (native)` row.
     let lanes = args.get_usize("lanes", 256)?;
     let passes = args.get_usize("passes", 64)?;
-    let plan = dwn::engine::compile_for_modes(
-        &nl,
-        Some(&tags),
-        head.as_ref(),
-        tail.as_ref(),
-        head_mode,
-        tail_mode,
-    );
+    let opt: OptLevel = args.get_parse("opt-level", OptLevel::None)?;
+    let outcome =
+        dwn::engine::run_pipeline(&nl, Some(&tags), head.as_ref(), tail.as_ref(), opt);
+    let plan = outcome.compile_for_modes(head_mode, tail_mode);
     let native_tail = plan.tail.is_some();
     let native_head = plan.head.is_some();
     let mut rng = dwn::util::SplitMix64::new(0xB0A7);
@@ -292,16 +320,44 @@ fn cmd_breakdown(artifacts: &Artifacts, args: &Args) -> Result<()> {
         format!("{total_ns:.2}"),
         "100%".into(),
     ]);
+    if opt != OptLevel::None {
+        // Before/after area row: what the optimization pipeline left of
+        // the mapped netlist (the row above is the unoptimized mapping the
+        // per-component shares describe).
+        t.row(&[
+            format!("total (opt -O{})", opt.label()),
+            int(outcome.netlist.lut_count()),
+            format!("{:.1}%", 100.0 * outcome.netlist.lut_count() as f64 / total as f64),
+            "-".into(),
+            "-".into(),
+        ]);
+    }
     print!("{}", t.render());
+    if opt != OptLevel::None {
+        let p = outcome.stats;
+        println!(
+            "opt passes (-O{}): {} -> {} LUTs in {} sweep(s) \
+             ({} const, {} coalesced, {} dead, {} pins folded)",
+            opt.label(),
+            p.source_luts,
+            outcome.netlist.lut_count(),
+            p.iterations,
+            p.const_folded,
+            p.coalesced,
+            p.dead_removed,
+            p.pins_folded,
+        );
+    }
     let s = plan.stats;
     println!(
         "compiled plan: {} ops over {} levels ({} lanes/pass, {} passes; \
-         {} const-folded, {} dead, {} pins folded{}{})",
+         {} const-folded, {} coalesced, {} dead, {} pins folded{}{})",
         plan.ops.len(),
         plan.depth(),
         runtime.lanes,
         runtime.passes,
         s.const_folded,
+        s.coalesced,
         s.dead_eliminated,
         s.pins_folded,
         if native_head {
@@ -566,24 +622,38 @@ fn cmd_serve(artifacts: &Artifacts, args: &Args) -> Result<()> {
             let (nl, tags, head, tail) = accel.map_with_head(&MapConfig::default());
             let head_mode: HeadMode = args.get_parse("head", HeadMode::Native)?;
             let tail_mode: TailMode = args.get_parse("tail", TailMode::Native)?;
-            let plan = dwn::engine::compile_for_modes(
+            let opt: OptLevel = args.get_parse("opt-level", OptLevel::None)?;
+            let plan = dwn::engine::compile_for_modes_opt(
                 &nl,
                 Some(&tags),
                 head.as_ref(),
                 tail.as_ref(),
                 head_mode,
                 tail_mode,
+                opt,
             );
             let lanes = args.get_usize("lanes", 256)?;
             let threads = args.get_usize("threads", default_threads())?;
             println!(
-                "compiled engine: {} ops / {} levels from {} LUTs ({lanes} lanes x {threads} threads, {} head, {} tail)",
+                "compiled engine: {} ops / {} levels from {} LUTs ({lanes} lanes x {threads} threads, {} head, {} tail, -O{})",
                 plan.ops.len(),
                 plan.depth(),
                 nl.lut_count(),
                 if plan.head.is_some() { "native" } else { "lut" },
-                if plan.tail.is_some() { "native" } else { "lut" }
+                if plan.tail.is_some() { "native" } else { "lut" },
+                opt.label()
             );
+            if opt != OptLevel::None {
+                let s = plan.stats;
+                println!(
+                    "opt passes (-O{}): removed {} LUTs ({} const, {} coalesced, {} dead)",
+                    opt.label(),
+                    s.const_folded + s.coalesced + s.dead_eliminated,
+                    s.const_folded,
+                    s.coalesced,
+                    s.dead_eliminated
+                );
+            }
             if head_mode == HeadMode::Native && plan.head.is_none() {
                 println!("note: head metadata unavailable; fell back to LUT emulation");
             }
@@ -704,13 +774,15 @@ fn cmd_trace(artifacts: &Artifacts, args: &Args) -> Result<()> {
     let out = std::path::PathBuf::from(args.get_or("out", "trace.json"));
     let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt))?;
     let (nl, tags, head, tail) = accel.map_with_head(&MapConfig::default());
-    let plan = dwn::engine::compile_for_modes(
+    let opt: OptLevel = args.get_parse("opt-level", OptLevel::None)?;
+    let plan = dwn::engine::compile_for_modes_opt(
         &nl,
         Some(&tags),
         head.as_ref(),
         tail.as_ref(),
         HeadMode::Native,
         TailMode::Native,
+        opt,
     );
     let lanes = args.get_usize("lanes", 256)?;
     let threads = args.get_usize("threads", default_threads())?;
@@ -756,8 +828,10 @@ fn cmd_trace(artifacts: &Artifacts, args: &Args) -> Result<()> {
 }
 
 /// Validate a Chrome trace-event file written by the flight recorder: every
-/// event must be a complete (`ph:"X"`) span with numeric non-negative
-/// ts/dur, and at least one traced request must carry a full
+/// event must be a complete (`ph:"X"`) span with numeric non-negative `ts`
+/// and **strictly positive** `dur` (chrome://tracing silently drops
+/// zero-width complete events, so a zero dur means the export truncated a
+/// sub-µs span), and at least one traced request must carry a full
 /// admit→queue-wait→batch-form→…→reply span set including an engine
 /// lut-exec span.
 fn check_trace(path: &std::path::Path) -> Result<()> {
@@ -774,8 +848,14 @@ fn check_trace(path: &std::path::Path) -> Result<()> {
         }
         let ts = e.get("ts")?.as_f64()?;
         let dur = e.get("dur")?.as_f64()?;
-        if ts < 0.0 || dur < 0.0 {
-            bail!("event {i}: negative ts/dur");
+        if ts < 0.0 {
+            bail!("event {i}: negative ts");
+        }
+        if dur <= 0.0 {
+            bail!(
+                "event {i}: zero-width dur (chrome://tracing drops it; \
+                 sub-us spans must export as fractional us)"
+            );
         }
         let name = e.get("name")?.as_str()?.to_string();
         let tid = e.get("tid")?.as_usize()?;
@@ -818,13 +898,15 @@ fn cmd_profile(artifacts: &Artifacts, args: &Args) -> Result<()> {
     let tail_mode: TailMode = args.get_parse("tail", TailMode::Native)?;
     let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt))?;
     let (nl, tags, head, tail) = accel.map_with_head(&MapConfig::default());
-    let plan = dwn::engine::compile_for_modes(
+    let opt: OptLevel = args.get_parse("opt-level", OptLevel::None)?;
+    let plan = dwn::engine::compile_for_modes_opt(
         &nl,
         Some(&tags),
         head.as_ref(),
         tail.as_ref(),
         head_mode,
         tail_mode,
+        opt,
     );
     let lanes = args.get_usize("lanes", 256)?;
     let threads = args.get_usize("threads", default_threads())?;

@@ -3,7 +3,7 @@
 use crate::util::ceil_div;
 
 /// Signal source in a mapped netlist.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Src {
     /// Primary input index.
     Input(u32),
@@ -38,6 +38,18 @@ impl LutNetlist {
     /// Logic depth in LUT levels (inputs are level 0).
     pub fn depth(&self) -> usize {
         self.levels().iter().copied().max().unwrap_or(0)
+    }
+
+    /// Do all LUT fanins reference strictly earlier LUTs? This is the
+    /// topological-order invariant the compiled engine and the optimization
+    /// pass pipeline ([`crate::engine::run_pipeline`]) rely on.
+    pub fn is_topo_ordered(&self) -> bool {
+        self.luts.iter().enumerate().all(|(i, lut)| {
+            lut.inputs.iter().all(|s| match s {
+                Src::Lut(j) => (*j as usize) < i,
+                _ => true,
+            })
+        })
     }
 
     /// Level of each LUT (1 = fed only by primary inputs).

@@ -286,7 +286,11 @@ impl std::fmt::Debug for Tracer {
 }
 
 /// Render events as a Chrome trace-event JSON object. Every event is a
-/// complete (`ph: "X"`) event; instantaneous markers get `dur: 0`.
+/// complete (`ph: "X"`) event with *fractional* µs `ts`/`dur` — sub-µs
+/// head-pack/tail spans keep their real width instead of truncating to 0.
+/// Instantaneous markers (shed bursts, zero-length admits) are floored to
+/// 1 ns = 0.001 µs: chrome://tracing silently drops zero-width complete
+/// events, which made exactly the anomalies worth looking at invisible.
 pub fn chrome_trace(events: &[TraceEvent]) -> Value {
     let rendered = events
         .iter()
@@ -296,7 +300,7 @@ pub fn chrome_trace(events: &[TraceEvent]) -> Value {
             m.insert("cat".into(), Value::Str("dwn".into()));
             m.insert("ph".into(), Value::Str("X".into()));
             m.insert("ts".into(), Value::Num(e.start_ns as f64 / 1000.0));
-            m.insert("dur".into(), Value::Num(e.dur_ns as f64 / 1000.0));
+            m.insert("dur".into(), Value::Num(e.dur_ns.max(1) as f64 / 1000.0));
             m.insert("pid".into(), Value::Num(1.0));
             m.insert("tid".into(), Value::Num(e.trace_id as f64));
             let mut args = BTreeMap::new();
@@ -398,7 +402,10 @@ mod tests {
         for e in events {
             assert_eq!(e.get("ph").unwrap().as_str().unwrap(), "X");
             assert!(e.get("ts").unwrap().as_f64().unwrap() >= 0.0);
-            assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+            // chrome://tracing drops zero-width complete events — every
+            // exported dur must be strictly positive (zero-length spans
+            // are floored to 1 ns).
+            assert!(e.get("dur").unwrap().as_f64().unwrap() > 0.0);
             assert_eq!(e.get("tid").unwrap().as_f64().unwrap(), id as f64);
         }
         let names: Vec<&str> =
@@ -406,5 +413,26 @@ mod tests {
         assert!(names.contains(&"admit"));
         assert!(names.contains(&"queue-wait"));
         assert!(names.contains(&"lut-exec-l1"));
+    }
+
+    #[test]
+    fn chrome_export_keeps_sub_us_spans_fractional() {
+        let t = Tracer::new(TraceConfig { sample: 1, ..Default::default() });
+        let id = t.sample();
+        let now = Instant::now();
+        // A 250 ns tail span and a zero-duration marker: the first must
+        // export as fractional µs (0.25, not truncated to 0), the second
+        // must be floored to a visible nonzero width.
+        t.emit_span(id, EventKind::Stage(Stage::Tail), now, Duration::from_nanos(250));
+        t.emit_span(id, EventKind::ShedBurst, now, Duration::ZERO);
+        // Round-trip through the serializer: fractions survive on disk too.
+        let text = crate::json::write(&t.export_chrome());
+        let json = crate::json::parse(&text).unwrap();
+        let events = json.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 2);
+        let durs: Vec<f64> =
+            events.iter().map(|e| e.get("dur").unwrap().as_f64().unwrap()).collect();
+        assert!(durs.iter().any(|&d| (d - 0.25).abs() < 1e-9), "250ns span = 0.25us: {durs:?}");
+        assert!(durs.iter().all(|&d| d > 0.0), "no zero-width events: {durs:?}");
     }
 }

@@ -144,9 +144,13 @@ fn gate_sim_preds(
 }
 
 /// Run one (model shape × encoder architecture) case through the gate
-/// simulator, the interpreter, and all four head×tail compile modes.
-/// `expect_native` asserts each requested native boundary actually engaged
-/// (clean-boundary shapes) rather than silently falling back.
+/// simulator, the interpreter, and all four head×tail compile modes — each
+/// mode both unoptimized and at `--opt-level` max (the pass pipeline is a
+/// netlist transform, so it joins this harness *before* any coordinator
+/// wiring relies on it — ROADMAP process guardrail). `expect_native`
+/// asserts each requested native boundary actually engaged (clean-boundary
+/// shapes) rather than silently falling back — including on the optimized
+/// netlist, where coalescing must not dirty the boundaries.
 fn conformance_case(model: &DwnModel, strategy: EncoderStrategy, expect_native: bool) {
     let frac_bits = model.penft.frac_bits.unwrap();
     let opts = AccelOptions::new(Variant::PenFt).with_encoder(strategy);
@@ -156,7 +160,7 @@ fn conformance_case(model: &DwnModel, strategy: EncoderStrategy, expect_native: 
 
     let mut plans = Vec::new();
     for (hm, tm) in MODES {
-        let plan = engine::compile_for_modes(
+        let base = engine::compile_for_modes(
             &nl,
             Some(&tags),
             head.as_ref(),
@@ -164,35 +168,71 @@ fn conformance_case(model: &DwnModel, strategy: EncoderStrategy, expect_native: 
             hm,
             tm,
         );
+        let opt = engine::compile_for_modes_opt(
+            &nl,
+            Some(&tags),
+            head.as_ref(),
+            tail.as_ref(),
+            hm,
+            tm,
+            engine::OptLevel::Max,
+        );
+        // Optimization only ever shrinks the emulated op count, and the
+        // merged stats must still partition the *source* netlist.
+        assert!(
+            opt.ops.len() <= base.ops.len(),
+            "opt grew the plan: {} -> {}",
+            base.ops.len(),
+            opt.ops.len()
+        );
+        for (kind, plan) in [("base", &base), ("opt", &opt)] {
+            let s = plan.stats;
+            assert_eq!(
+                plan.ops.len()
+                    + s.const_folded
+                    + s.dead_eliminated
+                    + s.coalesced
+                    + s.tail_skipped
+                    + s.head_skipped,
+                s.source_luts,
+                "{kind} stats partition for {} under {:?}",
+                model.name,
+                strategy
+            );
+            assert_eq!(s.source_luts, nl.lut_count());
+        }
         if expect_native {
-            if hm == HeadMode::Native {
-                assert!(
-                    plan.head.is_some(),
-                    "native head unavailable for {} under {:?} (boundary not clean?)",
-                    model.name,
-                    strategy
-                );
-                assert!(plan.stats.head_skipped > 0);
-                assert!(plan
-                    .segments
-                    .iter()
-                    .all(|s| !matches!(s.stage, Some(Component::Encoder))));
-            }
-            if tm == TailMode::Native {
-                assert!(
-                    plan.tail.is_some(),
-                    "native tail unavailable for {} under {:?} (boundary not clean?)",
-                    model.name,
-                    strategy
-                );
-                assert!(plan.stats.tail_skipped > 0);
-                assert!(plan.segments.iter().all(|s| !matches!(
-                    s.stage,
-                    Some(Component::Popcount) | Some(Component::Argmax)
-                )));
+            for (kind, plan) in [("base", &base), ("opt", &opt)] {
+                if hm == HeadMode::Native {
+                    assert!(
+                        plan.head.is_some(),
+                        "native head unavailable ({kind}) for {} under {:?} (boundary not clean?)",
+                        model.name,
+                        strategy
+                    );
+                    assert!(plan.stats.head_skipped > 0);
+                    assert!(plan
+                        .segments
+                        .iter()
+                        .all(|s| !matches!(s.stage, Some(Component::Encoder))));
+                }
+                if tm == TailMode::Native {
+                    assert!(
+                        plan.tail.is_some(),
+                        "native tail unavailable ({kind}) for {} under {:?} (boundary not clean?)",
+                        model.name,
+                        strategy
+                    );
+                    assert!(plan.stats.tail_skipped > 0);
+                    assert!(plan.segments.iter().all(|s| !matches!(
+                        s.stage,
+                        Some(Component::Popcount) | Some(Component::Argmax)
+                    )));
+                }
             }
         }
-        plans.push((hm, tm, plan));
+        plans.push((hm, tm, "base", base));
+        plans.push((hm, tm, "opt", opt));
     }
 
     let rows = input_rows(model, 0x5EED ^ base_seed());
@@ -211,7 +251,7 @@ fn conformance_case(model: &DwnModel, strategy: EncoderStrategy, expect_native: 
     let label = |k: String| format!("{} / {:?} / {}", model.name, strategy, k);
     assert_eq!(interp.infer(&shared).unwrap(), want, "{}", label("interpreter".into()));
 
-    for (hm, tm, plan) in plans {
+    for (hm, tm, kind, plan) in plans {
         // Odd lanes/threads on purpose: ragged shards must not change results.
         let backend = Backend::compiled(
             plan,
@@ -226,7 +266,7 @@ fn conformance_case(model: &DwnModel, strategy: EncoderStrategy, expect_native: 
             backend.infer(&shared).unwrap(),
             want,
             "{}",
-            label(format!("compiled head={} tail={}", hm.label(), tm.label()))
+            label(format!("compiled({kind}) head={} tail={}", hm.label(), tm.label()))
         );
     }
 }
@@ -410,10 +450,11 @@ fn native_modes_preserve_area_attribution() {
         assert!(plan.ops.len() < lut.ops.len());
         let s = plan.stats;
         assert_eq!(
-            plan.ops.len() + s.const_folded + s.dead_eliminated + s.tail_skipped
-                + s.head_skipped,
+            plan.ops.len() + s.const_folded + s.dead_eliminated + s.coalesced
+                + s.tail_skipped + s.head_skipped,
             s.source_luts
         );
+        assert_eq!(s.coalesced, 0, "no coalescing without the pass pipeline");
         assert_eq!(s.source_luts, nl.lut_count());
     }
     assert!(native_head.stats.head_skipped > 0);

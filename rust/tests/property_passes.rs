@@ -1,0 +1,285 @@
+//! Property tests for the netlist optimization pass pipeline
+//! (`engine::passes`, DESIGN.md §passes): optimized netlists must be
+//! bit-identical to their source on every input, the fixpoint must arrive
+//! within a bounded sweep count, the removal stats must partition the
+//! source netlist, and a duplicated encoder cone must demonstrably shrink —
+//! the paper's 3.20× encoder-area story attacked by optimization instead of
+//! encoder selection.
+
+use dwn::coordinator::Backend;
+use dwn::engine::{self, HeadMode, OptLevel, TailMode};
+use dwn::hwgen::{build_accelerator, AccelOptions, Component};
+use dwn::logic::Simulator;
+use dwn::model::{DwnModel, SynthSpec, Variant};
+use dwn::techmap::{LutNetlist, MapConfig, MappedLut, Src};
+use dwn::util::SplitMix64;
+
+const MODES: [(HeadMode, TailMode); 4] = [
+    (HeadMode::Lut, TailMode::Lut),
+    (HeadMode::Native, TailMode::Lut),
+    (HeadMode::Lut, TailMode::Native),
+    (HeadMode::Native, TailMode::Native),
+];
+
+/// Random topologically-ordered netlist exercising every `Src` variant,
+/// duplicate pins, dead LUTs — and, unlike the engine suite's generator,
+/// *cross-layer duplicate LUTs*: some LUTs are exact or pin-permuted copies
+/// of earlier ones, re-read by later logic, so coalescing has real work.
+fn random_netlist(rng: &mut SplitMix64) -> LutNetlist {
+    let num_inputs = 2 + rng.below(8) as usize;
+    let num_luts = 5 + rng.below(50) as usize;
+    let mut luts: Vec<MappedLut> = Vec::with_capacity(num_luts + 8);
+    for i in 0..num_luts {
+        // Every few LUTs, clone an earlier LUT verbatim or with its pins
+        // reversed (same function, permuted truth table is NOT applied —
+        // reversal of *pins only* yields a different function, which is
+        // fine: it's the verbatim clones that must coalesce).
+        if i > 0 && rng.below(4) == 0 {
+            let j = rng.below(i as u64) as usize;
+            luts.push(luts[j].clone());
+            continue;
+        }
+        let k = 1 + rng.below(6) as usize;
+        let mut inputs = Vec::with_capacity(k);
+        for _ in 0..k {
+            let src = match rng.below(10) {
+                0..=4 if i > 0 => Src::Lut(rng.below(i as u64) as u32),
+                5 => Src::Const(rng.below(2) == 1),
+                _ => Src::Input(rng.below(num_inputs as u64) as u32),
+            };
+            inputs.push(src);
+        }
+        if k >= 2 && rng.below(3) == 0 {
+            inputs[k - 1] = inputs[0];
+        }
+        luts.push(MappedLut { inputs, table: rng.next_u64() });
+    }
+    let n = luts.len();
+    let num_outputs = 1 + rng.below(6) as usize;
+    let outputs = (0..num_outputs)
+        .map(|_| match rng.below(8) {
+            0 => Src::Input(rng.below(num_inputs as u64) as u32),
+            1 => Src::Const(rng.below(2) == 1),
+            _ => Src::Lut(rng.below(n as u64) as u32),
+        })
+        .collect();
+    LutNetlist { num_inputs, luts, outputs }
+}
+
+#[test]
+fn optimized_netlists_stay_bit_identical_on_random_netlists() {
+    let mut rng = SplitMix64::new(0x0917_CA55);
+    for trial in 0..60 {
+        let nl = random_netlist(&mut rng);
+        assert!(nl.is_topo_ordered());
+        for level in [OptLevel::Fold, OptLevel::Max] {
+            let out = engine::run_pipeline(&nl, None, None, None, level);
+            // Structure: topo order survives, stats partition the source.
+            assert!(out.netlist.is_topo_ordered(), "trial {trial}");
+            assert_eq!(
+                out.netlist.lut_count() + out.stats.removed(),
+                nl.lut_count(),
+                "trial {trial} {level:?}: stats must partition the source"
+            );
+            // Fixpoint bound: each productive sweep removes >= 1 LUT, plus
+            // one opening and one confirming sweep.
+            assert!(
+                out.stats.iterations <= nl.lut_count() + 2,
+                "trial {trial} {level:?}: {} sweeps over {} LUTs",
+                out.stats.iterations,
+                nl.lut_count()
+            );
+            if level == OptLevel::Fold {
+                assert_eq!(out.stats.iterations, 1, "level 1 is a single sweep");
+                assert_eq!(out.stats.coalesced, 0, "no coalescing below max");
+            }
+            // Behavior: bit-identical on random lane words.
+            for _ in 0..4 {
+                let inputs: Vec<u64> =
+                    (0..nl.num_inputs).map(|_| rng.next_u64()).collect();
+                assert_eq!(
+                    out.netlist.eval_lanes(&inputs),
+                    nl.eval_lanes(&inputs),
+                    "trial {trial} {level:?}: optimized netlist diverged"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn pipeline_runs_are_deterministic() {
+    let mut rng = SplitMix64::new(0xD373_1213);
+    for _ in 0..10 {
+        let nl = random_netlist(&mut rng);
+        let a = engine::run_pipeline(&nl, None, None, None, OptLevel::Max);
+        let b = engine::run_pipeline(&nl, None, None, None, OptLevel::Max);
+        assert_eq!(a.stats, b.stats, "recompile determinism");
+        assert_eq!(a.netlist.lut_count(), b.netlist.lut_count());
+        for (x, y) in a.netlist.luts.iter().zip(&b.netlist.luts) {
+            assert_eq!(x.inputs, y.inputs);
+            assert_eq!(x.table, y.table);
+        }
+    }
+}
+
+fn small_spec() -> SynthSpec {
+    SynthSpec {
+        name: "passes-test".into(),
+        num_luts: 60,
+        thermo_bits: 6,
+        num_features: 8,
+        num_classes: 3,
+        lut_k: 6,
+        frac_bits: 5,
+        seed: 0xACCE1,
+    }
+}
+
+/// Every head×tail mode of a synthetic accelerator, compiled at opt-level
+/// max: identical served decisions to the unoptimized compile, and the
+/// merged stats partition holds —
+/// `ops + const + dead + coalesced + tail_skipped + head_skipped == source`.
+#[test]
+fn opt_max_matches_unoptimized_across_mode_matrix() {
+    let model = DwnModel::synthetic(&small_spec());
+    let frac_bits = model.penft.frac_bits.unwrap();
+    let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt)).unwrap();
+    let (nl, tags, head, tail) = accel.map_with_head(&MapConfig::default());
+    let iw = accel.index_width();
+    let mut rng = SplitMix64::new(0x0917_F00D);
+    let rows: Vec<Vec<f32>> = (0..300)
+        .map(|_| {
+            (0..model.num_features).map(|_| (2.0 * rng.next_f64() - 1.0) as f32).collect()
+        })
+        .collect();
+    let shared = dwn::util::fixed::Row::from_reals(&rows);
+    for (hm, tm) in MODES {
+        let base =
+            engine::compile_for_modes(&nl, Some(&tags), head.as_ref(), tail.as_ref(), hm, tm);
+        let opt = engine::compile_for_modes_opt(
+            &nl,
+            Some(&tags),
+            head.as_ref(),
+            tail.as_ref(),
+            hm,
+            tm,
+            OptLevel::Max,
+        );
+        assert!(opt.ops.len() <= base.ops.len());
+        let s = opt.stats;
+        assert_eq!(
+            opt.ops.len() + s.const_folded + s.dead_eliminated + s.coalesced
+                + s.tail_skipped + s.head_skipped,
+            s.source_luts,
+            "head={} tail={}",
+            hm.label(),
+            tm.label()
+        );
+        assert_eq!(s.source_luts, nl.lut_count());
+        let want = Backend::compiled(
+            base,
+            frac_bits,
+            model.num_features,
+            model.num_classes,
+            iw,
+            128,
+            2,
+        )
+        .infer(&shared)
+        .unwrap();
+        let got = Backend::compiled(
+            opt,
+            frac_bits,
+            model.num_features,
+            model.num_classes,
+            iw,
+            64,
+            3,
+        )
+        .infer(&shared)
+        .unwrap();
+        assert_eq!(got, want, "head={} tail={}: opt diverged", hm.label(), tm.label());
+    }
+}
+
+/// The acceptance demonstration: a synthetic model whose mapped encoder
+/// cone is duplicated LUT-for-LUT (every duplicate re-read by a new output,
+/// so it is live, not dead) must shrink back to the original LUT count at
+/// opt-level max via coalescing — and stay bit-identical.
+#[test]
+fn duplicated_encoder_cone_coalesces_back_to_original_area() {
+    let model = DwnModel::synthetic(&small_spec());
+    let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt)).unwrap();
+    let (nl, tags, _head, _tail) = accel.map_with_head(&MapConfig::default());
+
+    // Duplicate every encoder-tagged LUT verbatim at the end of the
+    // netlist (topo order holds: pins reference strictly earlier LUTs) and
+    // make each duplicate observable through an extra netlist output.
+    let mut luts = nl.luts.clone();
+    let mut tags2 = tags.clone();
+    let mut outputs = nl.outputs.clone();
+    let mut dups = 0usize;
+    for (i, lut) in nl.luts.iter().enumerate() {
+        if tags[i] == Component::Encoder {
+            outputs.push(Src::Lut(luts.len() as u32));
+            luts.push(lut.clone());
+            tags2.push(Component::Encoder);
+            dups += 1;
+        }
+    }
+    assert!(dups > 0, "synthetic PEN model must have an encoder cone");
+    let inflated =
+        LutNetlist { num_inputs: nl.num_inputs, luts, outputs };
+    assert!(inflated.is_topo_ordered());
+    assert_eq!(inflated.lut_count(), nl.lut_count() + dups);
+
+    let out = engine::run_pipeline(&inflated, Some(&tags2), None, None, OptLevel::Max);
+    // Every duplicate is removed — coalesced into its original's
+    // representative, or (iff the original itself const-folds, e.g. a
+    // saturated comparator threshold) folded to the same constant.
+    assert!(out.stats.coalesced > 0, "no duplicate encoder LUT coalesced");
+    assert!(
+        out.stats.coalesced + out.stats.const_folded >= dups,
+        "{} coalesced + {} const-folded cannot cover {} duplicates",
+        out.stats.coalesced,
+        out.stats.const_folded,
+        dups
+    );
+    assert!(
+        out.netlist.lut_count() <= nl.lut_count(),
+        "inflated cone did not shrink back: {} > {}",
+        out.netlist.lut_count(),
+        nl.lut_count()
+    );
+    // And the optimized inflated netlist still computes what the inflated
+    // one did (including the duplicate-observing outputs).
+    let mut rng = SplitMix64::new(0xC0A1E5CE);
+    for _ in 0..6 {
+        let inputs: Vec<u64> =
+            (0..inflated.num_inputs).map(|_| rng.next_u64()).collect();
+        assert_eq!(out.netlist.eval_lanes(&inputs), inflated.eval_lanes(&inputs));
+    }
+}
+
+/// End-to-end ground truth: the optimized netlist (full head/tail metadata
+/// in play, opt-level max) matches the gate-level `Simulator` of the
+/// generated design on random input lanes — the same ground truth the
+/// conformance suite pins.
+#[test]
+fn opt_max_matches_gate_simulator_end_to_end() {
+    let model = DwnModel::synthetic(&small_spec());
+    let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt)).unwrap();
+    let (nl, tags, head, tail) = accel.map_with_head(&MapConfig::default());
+    let out =
+        engine::run_pipeline(&nl, Some(&tags), head.as_ref(), tail.as_ref(), OptLevel::Max);
+    assert_eq!(out.netlist.num_inputs, nl.num_inputs);
+    let mut sim = Simulator::new(&accel.net);
+    let mut rng = SplitMix64::new(0x51A7_90D5);
+    for _ in 0..8 {
+        let inputs: Vec<u64> = (0..nl.num_inputs).map(|_| rng.next_u64()).collect();
+        let want = sim.eval_lanes(&inputs);
+        let got = out.netlist.eval_lanes(&inputs);
+        assert_eq!(got, want, "optimized netlist diverged from the gate simulator");
+    }
+}
