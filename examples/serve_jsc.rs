@@ -84,6 +84,7 @@ fn main() -> anyhow::Result<()> {
         max_wait: Duration::from_micros(300),
         queue_depth: 4096,
         admission: AdmissionPolicy::Shed,
+        ..ServerConfig::default()
     };
     let server = match backend.as_str() {
         "pjrt" => {

@@ -271,6 +271,7 @@ fn main() {
             max_wait: Duration::from_micros(100),
             queue_depth: 8192,
             admission: AdmissionPolicy::Shed,
+            ..ServerConfig::default()
         },
     );
     println!("\n{:>7} {:>14}   (closed-loop server, native/native)", "window", "server r/s");

@@ -8,20 +8,39 @@
 //! already being drained from the queue: the pre-PR-5 convoy (queue frozen
 //! for the whole of every inference) is gone, and feature rows move from
 //! admission to lane packing without a single copy.
+//!
+//! Failure containment (DESIGN.md §faults): replies are typed
+//! ([`Reply`] = `Result<i32, InferError>`), so a panicked pool shard, an
+//! expired deadline, or a backend failure resolves to an error on exactly
+//! the affected rows' channels — the executor never crashes. Requests may
+//! carry a deadline ([`Server::submit_row_deadline`]): the drainer drops
+//! already-expired jobs at batch formation and the executor short-circuits
+//! mid-queue expirations, both counted as `expired` and stamped
+//! [`Stage::Deadline`]. Repeat-offender rows are quarantined
+//! ([`SubmitError::Poisoned`]); N consecutive batch failures trip a breaker
+//! that reroutes the compiled backend to its interpreter fallback.
 
 use super::metrics::Metrics;
-use crate::engine::{ActivityProfile, EnginePool, ExecPlan, PoolTrace};
+use crate::engine::fault::{FaultCell, FaultPlan};
+use crate::engine::{
+    ActivityProfile, BatchOutcome, EnginePool, ExecPlan, InferError, PoolTrace, ShardFailure,
+};
 use crate::runtime::Engine;
 use crate::techmap::LutNetlist;
 use crate::telemetry::{EventKind, PoolTelemetry, Stage, TraceConfig, Tracer};
 use crate::util::fixed::{self, Row};
 use anyhow::{anyhow, Result};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{
     sync_channel, Receiver, RecvTimeoutError, Sender, SyncSender, TrySendError,
 };
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+/// What a request's reply channel delivers: the predicted class, or a typed
+/// inference failure scoped to exactly this request.
+pub type Reply = std::result::Result<i32, InferError>;
 
 /// Inference backend.
 pub enum Backend {
@@ -47,6 +66,10 @@ pub enum Backend {
         pool: EnginePool,
         num_features: usize,
         num_classes: usize,
+        /// Interpreter fallback the breaker reroutes to after N consecutive
+        /// batch failures (conformance proves its decisions bit-identical
+        /// to the compiled plan's). `None` = no degradation path.
+        fallback: Option<Box<Backend>>,
     },
     /// Deterministic stand-in for coordinator tests: predicts the sign of
     /// feature 0 after sleeping `delay` per batch, and records every served
@@ -77,7 +100,46 @@ impl Backend {
         threads: usize,
     ) -> Backend {
         let pool = EnginePool::new(Arc::new(plan), lanes, threads, frac_bits, index_width);
-        Backend::Compiled { pool, num_features, num_classes }
+        Backend::Compiled { pool, num_features, num_classes, fallback: None }
+    }
+
+    /// Attach the interpreter fallback the breaker degrades to: the mapped
+    /// netlist the compiled plan came from, evaluated by the bit-accurate
+    /// interpreter on the executor thread (no worker pool to fail). No-op
+    /// on non-compiled backends.
+    pub fn with_fallback_netlist(self, netlist: LutNetlist) -> Backend {
+        match self {
+            Backend::Compiled { pool, num_features, num_classes, .. } => {
+                let fallback = Box::new(Backend::Netlist {
+                    netlist,
+                    frac_bits: pool.frac_bits(),
+                    num_features,
+                    num_classes,
+                    index_width: pool.index_width(),
+                });
+                Backend::Compiled { pool, num_features, num_classes, fallback: Some(fallback) }
+            }
+            other => other,
+        }
+    }
+
+    /// The breaker's degradation target, when one is attached.
+    pub fn fallback(&self) -> Option<&Backend> {
+        match self {
+            Backend::Compiled { fallback, .. } => fallback.as_deref(),
+            _ => None,
+        }
+    }
+
+    /// Arm a deterministic fault-injection plan on the backend's engine
+    /// pool (chaos tests, `dwn serve --fault-plan`). No-op on backends
+    /// without a pool.
+    #[doc(hidden)]
+    pub fn with_faults(self, plan: Arc<FaultPlan>) -> Backend {
+        if let Backend::Compiled { pool, .. } = &self {
+            pool.arm_faults(plan);
+        }
+        self
     }
 
     /// Test fixture backend plus the shared log of rows it serves.
@@ -220,6 +282,30 @@ impl Backend {
             other => other.infer(&rows),
         }
     }
+
+    /// Containment-aware batch evaluation — what the serving executor
+    /// calls. A pool shard failure (worker panic/death) or a whole-batch
+    /// backend error resolves to typed [`ShardFailure`]s covering exactly
+    /// the affected rows; healthy rows' predictions are unaffected.
+    pub fn infer_outcome(&self, rows: Arc<[Row]>, trace: Option<PoolTrace>) -> BatchOutcome {
+        match self {
+            Backend::Compiled { pool, .. } => pool.infer_shared_outcome(rows, trace),
+            other => {
+                let n = rows.len();
+                match other.infer(&rows) {
+                    Ok(preds) => BatchOutcome { preds, failures: Vec::new() },
+                    Err(e) => BatchOutcome {
+                        preds: vec![0; n],
+                        failures: vec![ShardFailure {
+                            start: 0,
+                            len: n,
+                            error: InferError::Backend(e.to_string()),
+                        }],
+                    },
+                }
+            }
+        }
+    }
 }
 
 /// What `submit` does when the request queue is at `queue_depth`.
@@ -246,6 +332,18 @@ pub struct ServerConfig {
     pub queue_depth: usize,
     /// Behavior at the `queue_depth` bound.
     pub admission: AdmissionPolicy,
+    /// Bound on how long a [`AdmissionPolicy::Block`] submit waits for
+    /// queue space before failing with [`SubmitError::Timeout`]. `None`
+    /// (default) waits indefinitely, the pre-existing behavior.
+    pub block_timeout: Option<Duration>,
+    /// Consecutive failed batches before the breaker trips and the server
+    /// degrades to the backend's interpreter fallback (when one is
+    /// attached). 0 disables the breaker.
+    pub breaker_threshold: usize,
+    /// Failed batches a row must appear in before its fingerprint is
+    /// quarantined (subsequent submits rejected with
+    /// [`SubmitError::Poisoned`]). 0 disables quarantine.
+    pub quarantine_strikes: u32,
 }
 
 impl Default for ServerConfig {
@@ -255,6 +353,9 @@ impl Default for ServerConfig {
             max_wait: Duration::from_micros(200),
             queue_depth: 1024,
             admission: AdmissionPolicy::Shed,
+            block_timeout: None,
+            breaker_threshold: 8,
+            quarantine_strikes: 2,
         }
     }
 }
@@ -266,18 +367,28 @@ pub enum SubmitError {
     /// The bounded queue is full and the admission policy sheds load.
     /// Retryable; counted in [`Metrics`] (`Snapshot::rejected`).
     Backpressure,
+    /// A [`AdmissionPolicy::Block`] submit exhausted its bounded wait
+    /// (`ServerConfig::block_timeout`) without queue space freeing.
+    /// Retryable; counted as rejected like a shed.
+    Timeout,
     /// The server has stopped and will never reply. Fatal.
     Stopped,
     /// Row arity does not match the model's feature count.
     Arity { expected: usize, got: usize },
     /// Integer-grid rows on a backend that serves reals only (PJRT).
     FixedRowsUnsupported,
+    /// A feature value is NaN or infinite — rejected before it can reach
+    /// fixed-point conversion. `feature` is the first offending index.
+    InvalidValue { feature: usize },
+    /// This row's fingerprint is quarantined: it appeared in
+    /// `quarantine_strikes` failed batches and will not be retried.
+    Poisoned,
 }
 
 impl SubmitError {
     /// True when resubmitting later can succeed (shed load, not shutdown).
     pub fn is_backpressure(&self) -> bool {
-        matches!(self, SubmitError::Backpressure)
+        matches!(self, SubmitError::Backpressure | SubmitError::Timeout)
     }
 }
 
@@ -285,6 +396,9 @@ impl std::fmt::Display for SubmitError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             SubmitError::Backpressure => write!(f, "queue full: request shed (retryable)"),
+            SubmitError::Timeout => {
+                write!(f, "queue full: bounded admission wait timed out (retryable)")
+            }
             SubmitError::Stopped => write!(f, "server stopped"),
             SubmitError::Arity { expected, got } => {
                 write!(f, "expected {expected} features, got {got}")
@@ -292,18 +406,103 @@ impl std::fmt::Display for SubmitError {
             SubmitError::FixedRowsUnsupported => {
                 write!(f, "this backend serves real-valued rows only")
             }
+            SubmitError::InvalidValue { feature } => {
+                write!(f, "feature {feature} is not finite")
+            }
+            SubmitError::Poisoned => {
+                write!(f, "row quarantined after repeated batch failures")
+            }
         }
     }
 }
 
 impl std::error::Error for SubmitError {}
 
+/// Repeat-offender quarantine: rows (keyed by content fingerprint) that
+/// appeared in `strikes_to_ban` failed batches are banned at admission
+/// instead of being retried into the pool forever. The happy path pays one
+/// relaxed load per submit (`banned_count == 0` skips hashing entirely);
+/// the maps are bounded so a pathological workload cannot grow them
+/// without limit.
+pub(crate) struct Quarantine {
+    strikes_to_ban: u32,
+    banned_count: AtomicU64,
+    inner: Mutex<QuarantineInner>,
+}
+
+#[derive(Default)]
+struct QuarantineInner {
+    strikes: HashMap<u64, u32>,
+    banned: HashSet<u64>,
+}
+
+/// Book-keeping bound: strike map resets and the ban set stops growing at
+/// this many entries (a server under that much distinct poison has bigger
+/// problems than quarantine accuracy).
+const QUARANTINE_CAP: usize = 4096;
+
+impl Quarantine {
+    fn new(strikes_to_ban: u32) -> Self {
+        Quarantine {
+            strikes_to_ban,
+            banned_count: AtomicU64::new(0),
+            inner: Mutex::new(QuarantineInner::default()),
+        }
+    }
+
+    /// Admission check: is this row's fingerprint banned?
+    fn rejects(&self, row: &Row) -> bool {
+        if self.strikes_to_ban == 0 || self.banned_count.load(Ordering::Relaxed) == 0 {
+            return false;
+        }
+        let fp = row.fingerprint();
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).banned.contains(&fp)
+    }
+
+    /// Record one failed-batch appearance; returns true when the row just
+    /// crossed the strike threshold and is now banned.
+    fn strike(&self, fp: u64) -> bool {
+        if self.strikes_to_ban == 0 {
+            return false;
+        }
+        let mut g = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if g.banned.contains(&fp) || g.banned.len() >= QUARANTINE_CAP {
+            return false;
+        }
+        if g.strikes.len() >= QUARANTINE_CAP {
+            g.strikes.clear();
+        }
+        let s = g.strikes.entry(fp).or_insert(0);
+        *s += 1;
+        if *s >= self.strikes_to_ban {
+            g.strikes.remove(&fp);
+            g.banned.insert(fp);
+            self.banned_count.fetch_add(1, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+}
+
 struct Job {
     features: Row,
     enqueued: Instant,
     /// Sampled trace ID (0 = untraced — the overwhelmingly common case).
     trace_id: u64,
-    reply: Sender<Result<i32>>,
+    /// Absolute deadline; jobs past it are dropped at batch formation or
+    /// swept by the executor, never run.
+    deadline: Option<Instant>,
+    reply: Sender<Reply>,
+}
+
+/// A request's reply-side half once its row has been split into a batch:
+/// everything the executor needs to splice a typed reply back.
+struct Waiter {
+    enqueued: Instant,
+    trace_id: u64,
+    deadline: Option<Instant>,
+    reply: Sender<Reply>,
 }
 
 /// One drained batch: feature rows split from their reply handles, so the
@@ -311,7 +510,7 @@ struct Job {
 /// replies splice back by position (`rows[i]` ↔ `waiters[i]`).
 struct Batch {
     rows: Vec<Row>,
-    waiters: Vec<(Instant, u64, Sender<Result<i32>>)>,
+    waiters: Vec<Waiter>,
 }
 
 impl Batch {
@@ -324,7 +523,12 @@ impl Batch {
     /// deep-cloned every row here, once per batch).
     fn push(&mut self, job: Job) {
         self.rows.push(job.features);
-        self.waiters.push((job.enqueued, job.trace_id, job.reply));
+        self.waiters.push(Waiter {
+            enqueued: job.enqueued,
+            trace_id: job.trace_id,
+            deadline: job.deadline,
+            reply: job.reply,
+        });
     }
 
     fn len(&self) -> usize {
@@ -341,6 +545,10 @@ pub struct Server {
     num_features: usize,
     accepts_ints: bool,
     admission: AdmissionPolicy,
+    block_timeout: Option<Duration>,
+    quarantine: Arc<Quarantine>,
+    /// Admission-side fault hooks (shed bursts); write-once, normally empty.
+    faults: FaultCell,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -356,9 +564,12 @@ impl Server {
     {
         let metrics = Arc::new(Metrics::default());
         let admission = cfg.admission;
+        let block_timeout = cfg.block_timeout;
+        let quarantine = Arc::new(Quarantine::new(cfg.quarantine_strikes));
         let (tx, rx) = sync_channel::<Job>(cfg.queue_depth.max(1));
         let (setup_tx, setup_rx) = std::sync::mpsc::channel::<Result<(usize, bool)>>();
         let m = metrics.clone();
+        let q = quarantine.clone();
         let worker = std::thread::spawn(move || {
             let backend = match factory() {
                 Ok(b) => {
@@ -371,7 +582,7 @@ impl Server {
                 }
             };
             let max_batch = cfg.max_batch.min(backend.max_batch_hint()).max(1);
-            serve_loop(backend, rx, cfg, max_batch, m);
+            serve_loop(backend, rx, cfg, max_batch, m, q);
         });
         let (num_features, accepts_ints) = setup_rx
             .recv()
@@ -382,6 +593,9 @@ impl Server {
             num_features,
             accepts_ints,
             admission,
+            block_timeout,
+            quarantine,
+            faults: FaultCell::new(),
             worker: Some(worker),
         })
     }
@@ -440,7 +654,7 @@ impl Server {
     /// Blocking single inference (convenience; contends with other callers).
     pub fn infer(&self, features: &[f32]) -> Result<i32> {
         let rx = self.submit(features)?;
-        rx.recv().map_err(|_| anyhow!("server stopped"))?
+        Ok(rx.recv().map_err(|_| anyhow!("server stopped"))??)
     }
 
     /// Admit a real-valued row: one `Arc` allocation here, zero feature
@@ -449,7 +663,7 @@ impl Server {
     pub fn submit(
         &self,
         features: &[f32],
-    ) -> std::result::Result<Receiver<Result<i32>>, SubmitError> {
+    ) -> std::result::Result<Receiver<Reply>, SubmitError> {
         self.submit_row(Row::real(features))
     }
 
@@ -459,7 +673,7 @@ impl Server {
     pub fn submit_ints(
         &self,
         features: &[i32],
-    ) -> std::result::Result<Receiver<Result<i32>>, SubmitError> {
+    ) -> std::result::Result<Receiver<Reply>, SubmitError> {
         self.submit_row(Row::fixed(features))
     }
 
@@ -469,28 +683,86 @@ impl Server {
     pub fn submit_row(
         &self,
         row: Row,
-    ) -> std::result::Result<Receiver<Result<i32>>, SubmitError> {
+    ) -> std::result::Result<Receiver<Reply>, SubmitError> {
+        self.submit_row_deadline(row, None)
+    }
+
+    /// [`Self::submit_row`] with an absolute per-request deadline. A job
+    /// past its deadline is never executed: the drainer drops it at batch
+    /// formation, the executor sweeps it before dispatch, and either way
+    /// the reply channel resolves to [`InferError::DeadlineExceeded`] and
+    /// the request counts as `expired` (stamped [`Stage::Deadline`]).
+    pub fn submit_row_deadline(
+        &self,
+        row: Row,
+        deadline: Option<Instant>,
+    ) -> std::result::Result<Receiver<Reply>, SubmitError> {
         if row.len() != self.num_features {
             return Err(SubmitError::Arity { expected: self.num_features, got: row.len() });
         }
         if !self.accepts_ints && matches!(row, Row::Fixed(_)) {
             return Err(SubmitError::FixedRowsUnsupported);
         }
+        // Non-finite features would alias onto the fixed-point grid as
+        // arbitrary saturated values; reject them where the caller can see
+        // which feature is bad.
+        if let Row::Real(v) = &row {
+            if let Some(feature) = v.iter().position(|x| !x.is_finite()) {
+                return Err(SubmitError::InvalidValue { feature });
+            }
+        }
+        if self.quarantine.rejects(&row) {
+            self.metrics.record_poisoned();
+            return Err(SubmitError::Poisoned);
+        }
         let tx = self.tx.as_ref().ok_or(SubmitError::Stopped)?;
+        let shed = || {
+            self.metrics.record_rejected();
+            if let Some(t) = self.metrics.tracer() {
+                t.note_shed();
+            }
+        };
+        // Injected shed burst (fault harness): reject as if the queue were
+        // full, exercising every caller's backpressure path on demand.
+        if let Some(plan) = self.faults.get() {
+            if plan.shed_next() {
+                shed();
+                return Err(SubmitError::Backpressure);
+            }
+        }
         // One `OnceLock` load when no tracer is attached; with one, a 1-in-N
         // counter decision. A sampled (nonzero) ID rides the job end to end.
         let trace_id = self.metrics.tracer().map_or(0, |t| t.sample());
         let (reply, rx) = std::sync::mpsc::channel();
         let enqueued = Instant::now();
-        let job = Job { features: row, enqueued, trace_id, reply };
-        match self.admission {
-            AdmissionPolicy::Block => tx.send(job).map_err(|_| SubmitError::Stopped)?,
-            AdmissionPolicy::Shed => tx.try_send(job).map_err(|e| match e {
-                TrySendError::Full(_) => {
-                    self.metrics.record_rejected();
-                    if let Some(t) = self.metrics.tracer() {
-                        t.note_shed();
+        let job = Job { features: row, enqueued, trace_id, deadline, reply };
+        match (self.admission, self.block_timeout) {
+            (AdmissionPolicy::Block, None) => {
+                tx.send(job).map_err(|_| SubmitError::Stopped)?
+            }
+            (AdmissionPolicy::Block, Some(limit)) => {
+                // `SyncSender` has no bounded send, so the wait is a
+                // try/park loop against the admission clock.
+                let give_up = enqueued + limit;
+                let mut job = job;
+                loop {
+                    match tx.try_send(job) {
+                        Ok(()) => break,
+                        Err(TrySendError::Disconnected(_)) => return Err(SubmitError::Stopped),
+                        Err(TrySendError::Full(j)) => {
+                            if Instant::now() >= give_up {
+                                shed();
+                                return Err(SubmitError::Timeout);
+                            }
+                            job = j;
+                            std::thread::sleep(Duration::from_micros(50));
+                        }
                     }
+                }
+            }
+            (AdmissionPolicy::Shed, _) => tx.try_send(job).map_err(|e| match e {
+                TrySendError::Full(_) => {
+                    shed();
                     SubmitError::Backpressure
                 }
                 TrySendError::Disconnected(_) => SubmitError::Stopped,
@@ -503,6 +775,14 @@ impl Server {
             }
         }
         Ok(rx)
+    }
+
+    /// Arm a deterministic admission-side fault plan (shed bursts). Worker
+    /// faults arm on the backend instead ([`Backend::with_faults`]). First
+    /// call wins; chaos tests and `dwn serve --fault-plan` only.
+    #[doc(hidden)]
+    pub fn inject_faults(&self, plan: Arc<FaultPlan>) {
+        let _ = self.faults.set(plan);
     }
 
     /// Attach a request tracer (1-in-N sampling + always-on flight
@@ -544,6 +824,7 @@ fn serve_loop(
     cfg: ServerConfig,
     max_batch: usize,
     metrics: Arc<Metrics>,
+    quarantine: Arc<Quarantine>,
 ) {
     // Pool-owning backends stamp head/lut/tail spans into their own
     // telemetry; linking it here makes one snapshot cover the whole path.
@@ -558,17 +839,18 @@ fn serve_loop(
     // a fence — the count is a statistic, not a synchronization.
     let executing = Arc::new(AtomicBool::new(false));
     let (batch_tx, batch_rx) = sync_channel::<Batch>(1);
+    let max_wait = cfg.max_wait;
     let drainer = {
         let m = metrics.clone();
         let busy = executing.clone();
         std::thread::Builder::new()
             .name("dwn-batch-drain".into())
-            .spawn(move || drain_loop(&rx, max_batch, cfg.max_wait, &batch_tx, &m, &busy))
+            .spawn(move || drain_loop(&rx, max_batch, max_wait, &batch_tx, &m, &busy))
             .expect("spawn batch drainer")
     };
     while let Ok(batch) = batch_rx.recv() {
         executing.store(true, Ordering::Release);
-        execute_batch(&backend, batch, &metrics);
+        execute_batch(&backend, batch, &metrics, &quarantine, cfg.breaker_threshold);
         executing.store(false, Ordering::Release);
     }
     let _ = drainer.join();
@@ -617,7 +899,28 @@ fn collect_batch(
             }
         }
     };
-    let first = rx.recv().ok()?;
+    // Deadline enforcement, first gate: a job already past its deadline is
+    // dropped here instead of occupying a batch slot. The reply resolves to
+    // a typed error and the wasted wait is stamped as the Deadline stage.
+    let expire = |j: Job| {
+        let waited = j.enqueued.elapsed();
+        metrics.record_expired();
+        metrics.record_stage(Stage::Deadline, waited);
+        if j.trace_id != 0 {
+            if let Some(t) = tracer {
+                t.emit_span(j.trace_id, EventKind::Stage(Stage::Deadline), j.enqueued, waited);
+            }
+        }
+        let _ = j.reply.send(Err(InferError::DeadlineExceeded));
+    };
+    let first = loop {
+        let j = rx.recv().ok()?;
+        if j.deadline.is_some_and(|d| Instant::now() >= d) {
+            expire(j);
+            continue;
+        }
+        break j;
+    };
     let t_form = Instant::now();
     queue_wait(&first, t_form - first.enqueued);
     // The batch-form span attaches to the first traced job in the batch —
@@ -634,6 +937,10 @@ fn collect_batch(
         }
         match rx.recv_timeout(deadline - now) {
             Ok(j) => {
+                if j.deadline.is_some_and(|d| Instant::now() >= d) {
+                    expire(j);
+                    continue;
+                }
                 queue_wait(&j, j.enqueued.elapsed());
                 if traced_id == 0 {
                     traced_id = j.trace_id;
@@ -657,25 +964,77 @@ fn collect_batch(
 /// Run one batch and splice the replies. The rows vector becomes the shared
 /// `Arc<[Row]>` by moving its `Row` handles — no feature copies, no
 /// per-row refcount traffic.
-fn execute_batch(backend: &Backend, batch: Batch, metrics: &Metrics) {
+///
+/// Containment happens here: mid-queue deadline expirations are swept
+/// before dispatch, the breaker reroutes to the interpreter fallback once
+/// tripped, and shard failures splice typed errors onto exactly the
+/// affected rows' channels while striking those rows' fingerprints in the
+/// quarantine.
+fn execute_batch(
+    backend: &Backend,
+    batch: Batch,
+    metrics: &Metrics,
+    quarantine: &Quarantine,
+    breaker_threshold: usize,
+) {
     let Batch { rows, waiters } = batch;
+    let tracer = metrics.tracer();
+    // Deadline enforcement, second gate: requests that expired between
+    // batch formation and dispatch (typically while a previous batch held
+    // the executor) are answered now, not run.
+    let now = Instant::now();
+    let any_expired = waiters.iter().any(|w| w.deadline.is_some_and(|d| now >= d));
+    let (rows, waiters) = if any_expired {
+        let mut live_rows = Vec::with_capacity(rows.len());
+        let mut live_waiters = Vec::with_capacity(waiters.len());
+        for (row, w) in rows.into_iter().zip(waiters) {
+            if w.deadline.is_some_and(|d| now >= d) {
+                let waited = now - w.enqueued;
+                metrics.record_expired();
+                metrics.record_stage(Stage::Deadline, waited);
+                if w.trace_id != 0 {
+                    if let Some(t) = tracer {
+                        t.emit_span(w.trace_id, EventKind::Stage(Stage::Deadline), w.enqueued, waited);
+                    }
+                }
+                let _ = w.reply.send(Err(InferError::DeadlineExceeded));
+            } else {
+                live_rows.push(row);
+                live_waiters.push(w);
+            }
+        }
+        (live_rows, live_waiters)
+    } else {
+        (rows, waiters)
+    };
+    if rows.is_empty() {
+        return;
+    }
     let n = rows.len();
     let rows: Arc<[Row]> = rows.into();
-    let tracer = metrics.tracer();
+    // Breaker routing: once tripped, every batch goes to the interpreter
+    // fallback (bit-identical decisions, no worker pool to fail). Sticky by
+    // design — a pool that has repeatedly failed is not re-trusted without
+    // a restart.
+    let degraded = metrics.breaker_tripped() && backend.fallback().is_some();
+    let serving = if degraded { backend.fallback().unwrap() } else { backend };
     // Build the pool trace handle only when this batch carries a sampled
     // row — the untraced hot path stays a single `any` scan over the IDs.
     let trace = tracer
-        .filter(|_| waiters.iter().any(|(_, id, _)| *id != 0))
+        .filter(|_| waiters.iter().any(|w| w.trace_id != 0))
         .map(|t| PoolTrace {
             tracer: t.clone(),
-            ids: waiters.iter().map(|(_, id, _)| *id).collect(),
+            ids: waiters.iter().map(|w| w.trace_id).collect(),
         });
     let t0 = Instant::now();
-    let result = backend.infer_shared_traced(rows, trace);
+    let outcome = serving.infer_outcome(rows.clone(), trace);
     let exec = t0.elapsed();
     let done = Instant::now();
-    let lats: Vec<Duration> = waiters.iter().map(|(enq, _, _)| done - *enq).collect();
+    let lats: Vec<Duration> = waiters.iter().map(|w| done - w.enqueued).collect();
     metrics.record_batch(n, exec, &lats);
+    if degraded {
+        metrics.record_fallback_batch();
+    }
     if let Some(t) = tracer {
         // Every request feeds the anomaly detector, sampled or not — a tail
         // outlier must be able to trigger a dump even at 1-in-N sampling.
@@ -683,19 +1042,33 @@ fn execute_batch(backend: &Backend, batch: Batch, metrics: &Metrics) {
             t.observe_e2e(*l);
         }
     }
-    let traced_id = waiters.iter().map(|(_, id, _)| *id).find(|&id| id != 0).unwrap_or(0);
+    // Expand shard failures to a per-row error view and strike
+    // panic-correlated rows: a row present in `quarantine_strikes` panicked
+    // batches gets banned at admission.
+    let failed = !outcome.failures.is_empty();
+    let mut row_err: Vec<Option<&InferError>> = vec![None; n];
+    for f in &outcome.failures {
+        for slot in row_err.iter_mut().skip(f.start).take(f.len) {
+            *slot = Some(&f.error);
+        }
+        if matches!(f.error, InferError::WorkerPanic) {
+            for row in rows.iter().skip(f.start).take(f.len) {
+                quarantine.strike(row.fingerprint());
+            }
+        }
+    }
+    if failed {
+        metrics.record_failed_rows(row_err.iter().filter(|e| e.is_some()).count() as u64);
+    }
+    metrics.note_batch_result(failed, breaker_threshold);
+    let traced_id = waiters.iter().map(|w| w.trace_id).find(|&id| id != 0).unwrap_or(0);
     let t_reply = Instant::now();
-    match result {
-        Ok(preds) => {
-            for ((_, _, reply), pred) in waiters.into_iter().zip(preds) {
-                let _ = reply.send(Ok(pred));
-            }
-        }
-        Err(e) => {
-            for (_, _, reply) in waiters {
-                let _ = reply.send(Err(anyhow!("inference failed: {e}")));
-            }
-        }
+    for (i, w) in waiters.into_iter().enumerate() {
+        let r = match row_err[i] {
+            Some(e) => Err(e.clone()),
+            None => Ok(outcome.preds.get(i).copied().unwrap_or_default()),
+        };
+        let _ = w.reply.send(r);
     }
     metrics.record_stage(Stage::ReplySplice, t_reply.elapsed());
     if traced_id != 0 {
@@ -728,6 +1101,7 @@ mod tests {
             max_wait: Duration::from_millis(2),
             queue_depth: 64,
             admission: AdmissionPolicy::Shed,
+            ..ServerConfig::default()
         });
         // negative input -> sign bit set -> class 1; positive -> class 0.
         assert_eq!(server.infer(&[-0.6]).unwrap(), 1);
@@ -782,6 +1156,7 @@ mod tests {
                 max_wait: Duration::from_millis(1),
                 queue_depth: 2,
                 admission: AdmissionPolicy::Shed,
+                ..ServerConfig::default()
             },
         )
         .unwrap();
@@ -833,6 +1208,7 @@ mod tests {
                 max_wait: Duration::from_millis(1),
                 queue_depth: 16,
                 admission: AdmissionPolicy::Shed,
+                ..ServerConfig::default()
             },
         )
         .unwrap();
@@ -864,6 +1240,7 @@ mod tests {
                 max_wait: Duration::from_micros(50),
                 queue_depth: 16,
                 admission: AdmissionPolicy::Shed,
+                ..ServerConfig::default()
             },
         )
         .unwrap();
@@ -907,6 +1284,7 @@ mod tests {
                 max_wait: Duration::from_millis(100),
                 queue_depth: 2,
                 admission: AdmissionPolicy::Shed,
+                ..ServerConfig::default()
             },
         )
         .unwrap();
@@ -954,6 +1332,7 @@ mod tests {
                 max_wait: Duration::from_micros(100),
                 queue_depth: 2,
                 admission: AdmissionPolicy::Block,
+                ..ServerConfig::default()
             },
         )
         .unwrap();
@@ -987,6 +1366,7 @@ mod tests {
                 max_wait: Duration::from_millis(1),
                 queue_depth: 1024,
                 admission: AdmissionPolicy::Shed,
+                ..ServerConfig::default()
             },
         );
         assert_eq!(server.infer(&[-0.6]).unwrap(), 1);
@@ -1016,6 +1396,7 @@ mod tests {
             max_wait: Duration::from_micros(200),
             queue_depth: 1024,
             admission: AdmissionPolicy::Block,
+            ..ServerConfig::default()
         };
         let traced = Server::start_compiled(plan.clone(), 1, 1, 2, 1, 64, 2, cfg.clone());
         let tracer = traced.enable_tracing(TraceConfig { sample: 1, ..Default::default() });
@@ -1108,5 +1489,113 @@ mod tests {
                 assert_eq!(backend.infer(std::slice::from_ref(row)).unwrap(), vec![w]);
             }
         }
+    }
+
+    #[test]
+    fn non_finite_features_are_rejected_at_admission() {
+        let server = toy_server(ServerConfig::default());
+        assert_eq!(
+            server.submit(&[f32::NAN]).unwrap_err(),
+            SubmitError::InvalidValue { feature: 0 }
+        );
+        assert_eq!(
+            server.submit(&[f32::INFINITY]).unwrap_err(),
+            SubmitError::InvalidValue { feature: 0 }
+        );
+        assert_eq!(
+            server.submit(&[f32::NEG_INFINITY]).unwrap_err(),
+            SubmitError::InvalidValue { feature: 0 }
+        );
+        assert!(!SubmitError::InvalidValue { feature: 0 }.is_backpressure());
+        // Finite rows (and integer-grid rows, which have no NaN to carry)
+        // still serve.
+        assert_eq!(server.infer(&[-0.6]).unwrap(), 1);
+        let rx = server.submit_ints(&[1]).unwrap();
+        assert_eq!(rx.recv().unwrap().unwrap(), 0);
+    }
+
+    #[test]
+    fn bounded_blocking_admission_times_out_typed() {
+        let (backend, _seen) = Backend::fixture(1, Duration::from_millis(300));
+        let server = Server::start_with(
+            move || Ok(backend),
+            ServerConfig {
+                max_batch: 1,
+                max_wait: Duration::from_micros(50),
+                queue_depth: 1,
+                admission: AdmissionPolicy::Block,
+                block_timeout: Some(Duration::from_millis(10)),
+                ..ServerConfig::default()
+            },
+        )
+        .unwrap();
+        // Fill the executing batch, the double buffer, and the queue; some
+        // bounded-wait submit must then exhaust its 10ms and fail typed.
+        let mut timed_out = false;
+        let mut accepted = Vec::new();
+        for _ in 0..16 {
+            match server.submit(&[1.0]) {
+                Ok(rx) => accepted.push(rx),
+                Err(SubmitError::Timeout) => {
+                    timed_out = true;
+                    break;
+                }
+                Err(e) => panic!("unexpected submit error: {e}"),
+            }
+        }
+        assert!(timed_out, "bounded Block admission never timed out");
+        assert!(server.metrics.snapshot().rejected > 0, "timeout not counted as rejected");
+        for rx in accepted {
+            assert_eq!(rx.recv().unwrap().unwrap(), 1);
+        }
+    }
+
+    #[test]
+    fn expired_deadline_resolves_typed_and_is_counted() {
+        let (backend, seen) = Backend::fixture(1, Duration::ZERO);
+        let server = Server::start_with(
+            move || Ok(backend),
+            ServerConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                queue_depth: 16,
+                admission: AdmissionPolicy::Shed,
+                ..ServerConfig::default()
+            },
+        )
+        .unwrap();
+        // Already-expired deadline: dropped at batch formation, never run.
+        let rx = server
+            .submit_row_deadline(Row::real(&[0.5]), Some(Instant::now()))
+            .unwrap();
+        assert_eq!(rx.recv().unwrap(), Err(InferError::DeadlineExceeded));
+        // A deadline-free row on the same server still serves.
+        assert_eq!(server.infer(&[0.5]).unwrap(), 1);
+        let snap = server.metrics.snapshot();
+        assert_eq!(snap.expired, 1);
+        let st = snap.stage(Stage::Deadline).expect("deadline stage recorded");
+        assert_eq!(st.count, 1);
+        // The expired row never reached the backend.
+        assert_eq!(seen.lock().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn quarantine_bans_after_strike_threshold() {
+        let q = Quarantine::new(2);
+        let row = Row::real(&[0.25, -0.5]);
+        let fp = row.fingerprint();
+        assert!(!q.rejects(&row));
+        assert!(!q.strike(fp), "first strike must not ban");
+        assert!(!q.rejects(&row));
+        assert!(q.strike(fp), "second strike crosses the threshold");
+        assert!(q.rejects(&row));
+        // Same content from a fresh allocation is still banned.
+        assert!(q.rejects(&Row::real(&[0.25, -0.5])));
+        // Strikes are per-fingerprint; other rows are unaffected.
+        assert!(!q.rejects(&Row::real(&[0.25, 0.5])));
+        // Disabled quarantine never bans.
+        let off = Quarantine::new(0);
+        assert!(!off.strike(fp));
+        assert!(!off.rejects(&row));
     }
 }

@@ -21,7 +21,7 @@ use crate::telemetry::{
 };
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, OnceLock};
 use std::time::Duration;
 
@@ -37,6 +37,25 @@ pub struct Metrics {
     /// double-buffering overlap the drainer observes (approximate: the
     /// executing flag is sampled, not fenced against batch hand-off).
     overlapped: AtomicU64,
+    /// Requests dropped because their deadline passed before execution
+    /// (drainer- or executor-side); disjoint from `requests`.
+    expired: AtomicU64,
+    /// Submissions rejected because the row's fingerprint is quarantined.
+    poisoned: AtomicU64,
+    /// Requests whose reply was a typed inference error (worker panic/loss
+    /// or backend failure) — the containment counter: these rows failed,
+    /// the server did not.
+    failed_rows: AtomicU64,
+    /// Consecutive failed batches (reset by any success while untripped).
+    breaker_consecutive: AtomicU64,
+    /// Breaker state: once set, batches reroute to the fallback backend
+    /// until restart (sticky by design).
+    breaker_tripped: AtomicBool,
+    /// Times the breaker tripped (0 or 1 per server life, counted for the
+    /// exposition's sake).
+    breaker_trips: AtomicU64,
+    /// Batches served by the interpreter fallback after the trip.
+    fallback_batches: AtomicU64,
     /// End-to-end latency (submit → reply spliced).
     e2e: LatencyHistogram,
     /// Coordinator-side stages: queue-wait, batch-form, reply.
@@ -70,6 +89,23 @@ pub struct Snapshot {
     pub rejected: u64,
     /// Batches drained before the previous batch finished executing.
     pub overlapped: u64,
+    /// Requests dropped at their deadline (typed `DeadlineExceeded` reply,
+    /// never executed).
+    pub expired: u64,
+    /// Submissions rejected by the repeat-offender quarantine.
+    pub poisoned: u64,
+    /// Requests answered with a typed inference error (contained failures).
+    pub failed_rows: u64,
+    /// Pool workers that died (panic or injected exit) and were respawned
+    /// by the supervisor (0 when the backend has no pool).
+    pub worker_deaths: u64,
+    /// Breaker state at snapshot time (state, not a counter: `delta` passes
+    /// the current value through).
+    pub breaker_tripped: bool,
+    /// Times the breaker tripped.
+    pub breaker_trips: u64,
+    /// Batches served by the interpreter fallback after a trip.
+    pub fallback_batches: u64,
     /// Total pool-worker busy time (0 when the backend has no pool).
     pub worker_busy_us: u64,
     /// Total pool-worker parked-idle time (0 when the backend has no pool).
@@ -131,6 +167,53 @@ impl Metrics {
     /// Count one batch drained while another was still executing.
     pub fn record_overlap(&self) {
         self.overlapped.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one request dropped at its deadline.
+    pub fn record_expired(&self) {
+        self.expired.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one submission rejected by the quarantine.
+    pub fn record_poisoned(&self) {
+        self.poisoned.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count rows answered with a typed inference error this batch.
+    pub fn record_failed_rows(&self, n: u64) {
+        self.failed_rows.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Count one batch served by the interpreter fallback.
+    pub fn record_fallback_batch(&self) {
+        self.fallback_batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Whether the breaker has tripped (sticky until restart).
+    #[inline]
+    pub fn breaker_tripped(&self) -> bool {
+        self.breaker_tripped.load(Ordering::Relaxed)
+    }
+
+    /// Feed the breaker one batch verdict. A success resets the consecutive
+    /// count (unless already tripped — the trip is sticky); `threshold`
+    /// consecutive failures trip it. Returns true on the transition.
+    pub fn note_batch_result(&self, failed: bool, threshold: usize) -> bool {
+        if !failed {
+            if !self.breaker_tripped() {
+                self.breaker_consecutive.store(0, Ordering::Relaxed);
+            }
+            return false;
+        }
+        let consec = self.breaker_consecutive.fetch_add(1, Ordering::Relaxed) + 1;
+        if threshold > 0
+            && consec as usize >= threshold
+            && !self.breaker_tripped.swap(true, Ordering::Relaxed)
+        {
+            self.breaker_trips.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        false
     }
 
     /// Link the engine pool's telemetry into this store's snapshots. Called
@@ -223,6 +306,13 @@ impl Metrics {
             busy_us: self.busy_ns.load(Ordering::Relaxed) / 1000,
             rejected: self.rejected(),
             overlapped: self.overlapped.load(Ordering::Relaxed),
+            expired: self.expired.load(Ordering::Relaxed),
+            poisoned: self.poisoned.load(Ordering::Relaxed),
+            failed_rows: self.failed_rows.load(Ordering::Relaxed),
+            worker_deaths: engine.map(|t| t.worker_deaths()).unwrap_or(0),
+            breaker_tripped: self.breaker_tripped(),
+            breaker_trips: self.breaker_trips.load(Ordering::Relaxed),
+            fallback_batches: self.fallback_batches.load(Ordering::Relaxed),
             worker_busy_us: engine.map(|t| t.busy_ns() / 1000).unwrap_or(0),
             worker_idle_us: engine.map(|t| t.idle_ns() / 1000).unwrap_or(0),
             stages,
@@ -300,6 +390,13 @@ impl Snapshot {
             busy_us: self.busy_us.saturating_sub(prev.busy_us),
             rejected: self.rejected.saturating_sub(prev.rejected),
             overlapped: self.overlapped.saturating_sub(prev.overlapped),
+            expired: self.expired.saturating_sub(prev.expired),
+            poisoned: self.poisoned.saturating_sub(prev.poisoned),
+            failed_rows: self.failed_rows.saturating_sub(prev.failed_rows),
+            worker_deaths: self.worker_deaths.saturating_sub(prev.worker_deaths),
+            breaker_tripped: self.breaker_tripped,
+            breaker_trips: self.breaker_trips.saturating_sub(prev.breaker_trips),
+            fallback_batches: self.fallback_batches.saturating_sub(prev.fallback_batches),
             worker_busy_us: self.worker_busy_us.saturating_sub(prev.worker_busy_us),
             worker_idle_us: self.worker_idle_us.saturating_sub(prev.worker_idle_us),
             stages,
@@ -328,6 +425,20 @@ impl Snapshot {
         m.insert("rejected".into(), Value::Num(self.rejected as f64));
         m.insert("overlapped".into(), Value::Num(self.overlapped as f64));
         m.insert("overlap_ratio".into(), Value::Num(self.overlap_ratio()));
+        // Failure-containment fields are always present (CI asserts on
+        // them), zero on a healthy run.
+        m.insert("expired".into(), Value::Num(self.expired as f64));
+        m.insert("poisoned".into(), Value::Num(self.poisoned as f64));
+        m.insert("failed_rows".into(), Value::Num(self.failed_rows as f64));
+        m.insert("worker_deaths".into(), Value::Num(self.worker_deaths as f64));
+        let mut breaker = BTreeMap::new();
+        breaker.insert("tripped".into(), Value::Bool(self.breaker_tripped));
+        breaker.insert("trips".into(), Value::Num(self.breaker_trips as f64));
+        breaker.insert(
+            "fallback_batches".into(),
+            Value::Num(self.fallback_batches as f64),
+        );
+        m.insert("breaker".into(), Value::Obj(breaker));
         m.insert("worker_busy_us".into(), Value::Num(self.worker_busy_us as f64));
         m.insert("worker_idle_us".into(), Value::Num(self.worker_idle_us as f64));
         let mut stages = BTreeMap::new();
@@ -387,6 +498,26 @@ impl Snapshot {
                 "pool workers: busy {:.1} ms / idle {:.1} ms",
                 self.worker_busy_us as f64 / 1000.0,
                 self.worker_idle_us as f64 / 1000.0
+            );
+        }
+        // Failure line only when something failed — a healthy report stays
+        // exactly as it always looked.
+        if self.worker_deaths + self.expired + self.failed_rows + self.poisoned != 0
+            || self.breaker_tripped
+        {
+            let _ = writeln!(
+                out,
+                "faults: worker deaths {}   expired {}   failed rows {}   poisoned {}   breaker {}{}",
+                self.worker_deaths,
+                self.expired,
+                self.failed_rows,
+                self.poisoned,
+                if self.breaker_tripped { "tripped" } else { "closed" },
+                if self.fallback_batches > 0 {
+                    format!(" (fallback batches {})", self.fallback_batches)
+                } else {
+                    String::new()
+                }
             );
         }
         if let Some(t) = &self.trace {
@@ -628,6 +759,84 @@ mod tests {
         assert_eq!(t.sample(), 2);
         let d = m.snapshot().delta(&s);
         assert_eq!(d.trace.expect("interval trace stats").sampled, 1);
+    }
+
+    #[test]
+    fn containment_counters_surface_everywhere() {
+        let m = Metrics::default();
+        m.record_expired();
+        m.record_expired();
+        m.record_poisoned();
+        m.record_failed_rows(3);
+        m.record_fallback_batch();
+        let s = m.snapshot();
+        assert_eq!(s.expired, 2);
+        assert_eq!(s.poisoned, 1);
+        assert_eq!(s.failed_rows, 3);
+        assert_eq!(s.fallback_batches, 1);
+        assert_eq!(s.worker_deaths, 0, "no pool attached");
+        // JSON always carries the containment keys, even when zero.
+        let v = s.to_json();
+        assert_eq!(v.get("expired").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(v.get("worker_deaths").unwrap().as_f64().unwrap(), 0.0);
+        let b = v.get("breaker").unwrap();
+        assert_eq!(b.get("tripped").unwrap(), &Value::Bool(false));
+        assert_eq!(b.get("fallback_batches").unwrap().as_f64().unwrap(), 1.0);
+        let empty = Metrics::default().snapshot().to_json();
+        assert!(empty.get("expired").is_ok());
+        assert!(empty.get("worker_deaths").is_ok());
+        assert!(empty.get("breaker").is_ok());
+        // The faults table line appears only when something failed.
+        assert!(s.render_table().contains("faults:"));
+        assert!(!Metrics::default().snapshot().render_table().contains("faults:"));
+        // Deltas subtract the counters (breaker state passes through).
+        m.record_expired();
+        let d = m.snapshot().delta(&s);
+        assert_eq!(d.expired, 1);
+        assert_eq!(d.poisoned, 0);
+        assert_eq!(d.failed_rows, 0);
+    }
+
+    #[test]
+    fn breaker_trips_on_consecutive_failures_and_is_sticky() {
+        let m = Metrics::default();
+        assert!(!m.note_batch_result(true, 3));
+        assert!(!m.note_batch_result(true, 3));
+        // A success before the threshold resets the run.
+        assert!(!m.note_batch_result(false, 3));
+        assert!(!m.note_batch_result(true, 3));
+        assert!(!m.note_batch_result(true, 3));
+        assert!(m.note_batch_result(true, 3), "third consecutive failure trips");
+        assert!(m.breaker_tripped());
+        // Sticky: the transition fires once and successes don't reopen it.
+        assert!(!m.note_batch_result(true, 3));
+        assert!(!m.note_batch_result(false, 3));
+        assert!(m.breaker_tripped());
+        let s = m.snapshot();
+        assert!(s.breaker_tripped);
+        assert_eq!(s.breaker_trips, 1);
+        assert_eq!(
+            s.to_json().get("breaker").unwrap().get("tripped").unwrap(),
+            &Value::Bool(true)
+        );
+        assert!(s.render_table().contains("breaker tripped"));
+        // Threshold 0 disables the breaker entirely.
+        let off = Metrics::default();
+        for _ in 0..100 {
+            assert!(!off.note_batch_result(true, 0));
+        }
+        assert!(!off.breaker_tripped());
+    }
+
+    #[test]
+    fn attached_pool_worker_deaths_reach_the_snapshot() {
+        let m = Metrics::default();
+        let pool = Arc::new(crate::telemetry::PoolTelemetry::new());
+        pool.note_worker_death();
+        pool.note_worker_death();
+        m.attach_engine(pool);
+        assert_eq!(m.snapshot().worker_deaths, 2);
+        assert!(m.snapshot().render_table().contains("worker deaths 2"));
     }
 
     /// The O(buckets) guarantee: `Metrics` is a fixed-size block of atomics

@@ -11,12 +11,18 @@
 //! Everything is plain std threads — tokio is not available offline, and
 //! the drain/execute pair matches both the single PJRT CPU device and the
 //! paper's single-accelerator setting.
+//!
+//! Failures are contained, not propagated (DESIGN.md §faults): replies are
+//! typed [`Reply`]s, deadlines are enforced before execution, poisoned rows
+//! are quarantined, and a tripped breaker degrades the compiled backend to
+//! its bit-identical interpreter fallback.
 
 pub mod batcher;
 pub mod metrics;
 pub mod router;
 
+pub use crate::engine::{FaultPlan, InferError};
 pub use crate::util::fixed::Row;
-pub use batcher::{AdmissionPolicy, Backend, Server, ServerConfig, SubmitError};
+pub use batcher::{AdmissionPolicy, Backend, Reply, Server, ServerConfig, SubmitError};
 pub use metrics::{Metrics, Snapshot, StageSnapshot};
 pub use router::Router;

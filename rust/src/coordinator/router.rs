@@ -3,7 +3,7 @@
 //! repo's single-node setting). Tracks per-model and aggregate stats and
 //! applies backpressure per model queue.
 
-use super::batcher::{Server, ServerConfig};
+use super::batcher::{Reply, Server, ServerConfig};
 use super::metrics::Snapshot;
 use crate::util::fixed::Row;
 use anyhow::{anyhow, Result};
@@ -40,15 +40,17 @@ impl Router {
         self.servers.keys().map(|s| s.as_str()).collect()
     }
 
-    /// Route a request to `model`; returns the reply channel. One `Arc`
-    /// allocation at admission; see [`Self::submit_row`] for zero-copy.
-    pub fn submit(&self, model: &str, features: &[f32]) -> Result<Receiver<Result<i32>>> {
+    /// Route a request to `model`; returns the reply channel (typed
+    /// [`Reply`]: prediction or contained per-request inference error). One
+    /// `Arc` allocation at admission; see [`Self::submit_row`] for
+    /// zero-copy.
+    pub fn submit(&self, model: &str, features: &[f32]) -> Result<Receiver<Reply>> {
         self.submit_row(model, Row::real(features))
     }
 
     /// Route an admitted [`Row`] to `model` — fully zero-copy: callers with
     /// a row cache resubmit the same allocation any number of times.
-    pub fn submit_row(&self, model: &str, row: Row) -> Result<Receiver<Result<i32>>> {
+    pub fn submit_row(&self, model: &str, row: Row) -> Result<Receiver<Reply>> {
         let server = self
             .servers
             .get(model)
@@ -59,7 +61,7 @@ impl Router {
     /// Blocking inference convenience.
     pub fn infer(&self, model: &str, features: &[f32]) -> Result<i32> {
         let rx = self.submit(model, features)?;
-        rx.recv().map_err(|_| anyhow!("server for '{model}' stopped"))?
+        Ok(rx.recv().map_err(|_| anyhow!("server for '{model}' stopped"))??)
     }
 
     /// Per-model metric snapshots.
@@ -179,6 +181,20 @@ mod tests {
         assert_eq!(trace.get("sampled").unwrap().as_usize().unwrap(), 5);
         assert!(json.get("plain").unwrap().opt("trace").is_none(), "untraced model stays bare");
         assert_eq!(router.total_anomalies(), 0);
+    }
+
+    #[test]
+    fn stats_json_always_carries_containment_fields() {
+        let mut router = Router::new();
+        router.deploy("m", toy_server(false));
+        let _ = router.infer("m", &[0.5]).unwrap();
+        let json = router.stats_json();
+        let m = json.get("m").unwrap();
+        assert_eq!(m.get("expired").unwrap().as_f64().unwrap(), 0.0);
+        assert_eq!(m.get("worker_deaths").unwrap().as_f64().unwrap(), 0.0);
+        let breaker = m.get("breaker").unwrap();
+        assert_eq!(breaker.get("tripped").unwrap(), &crate::json::Value::Bool(false));
+        assert!(breaker.get("fallback_batches").is_ok());
     }
 
     #[test]

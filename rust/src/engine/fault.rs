@@ -1,0 +1,216 @@
+//! Typed inference failures and the deterministic fault-injection harness.
+//!
+//! Containment contract (DESIGN.md §faults): a failure anywhere past
+//! admission must resolve to a typed [`InferError`] on exactly the affected
+//! rows' reply channels — never a crashed executor, never a silently stuck
+//! batch. [`FaultPlan`] exists so integration tests (and
+//! `dwn serve --fault-plan`) can drive every failure path reproducibly:
+//! each event is keyed to a deterministic point in the request stream (the
+//! pool's batch counter, or the server's admission counter) and fires
+//! exactly once.
+//!
+//! The plan is wired behind `#[doc(hidden)]` hooks
+//! ([`crate::engine::EnginePool::arm_faults`],
+//! `Backend::with_faults`, `Server::inject_faults`) so the happy path pays
+//! one relaxed `OnceLock` load per batch and nothing else.
+
+use std::fmt;
+use std::str::FromStr;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
+
+/// Typed, per-row inference failure delivered on the reply channel instead
+/// of a prediction. Cloned onto every row of an affected shard.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum InferError {
+    /// A pool worker panicked evaluating this row's shard. The panic was
+    /// caught, the worker rebuilt its executor scratch, and the pool kept
+    /// serving — only this shard's rows fail.
+    WorkerPanic,
+    /// The worker owning this row's shard died without replying (thread
+    /// exit / abort). The supervisor respawns a replacement; this shard's
+    /// rows fail.
+    WorkerLost,
+    /// The request's deadline passed before its batch executed; dropped at
+    /// batch formation or short-circuited in the executor.
+    DeadlineExceeded,
+    /// Whole-batch failure from a non-pool backend (interpreter / PJRT).
+    Backend(String),
+}
+
+impl fmt::Display for InferError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            InferError::WorkerPanic => write!(f, "engine worker panicked on this shard"),
+            InferError::WorkerLost => write!(f, "engine worker died before replying"),
+            InferError::DeadlineExceeded => write!(f, "deadline exceeded before execution"),
+            InferError::Backend(msg) => write!(f, "backend inference failed: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for InferError {}
+
+/// What an injected fault does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Worker panics mid-shard (exercises `catch_unwind` containment).
+    Panic,
+    /// Worker thread exits without replying (exercises supervision /
+    /// `WorkerLost` gather timeout).
+    Exit,
+    /// Worker stalls for the given duration before evaluating (exercises
+    /// deadline short-circuit and slow-batch anomaly detection).
+    Stall(Duration),
+    /// The server force-sheds the next N admissions (exercises shed-burst
+    /// anomaly detection without real overload).
+    Shed(u64),
+}
+
+struct FaultEvent {
+    /// Pool batch index (worker faults) or admission index (shed faults).
+    at: u64,
+    kind: FaultKind,
+    fired: AtomicBool,
+}
+
+/// A deterministic schedule of injected faults, parsed from comma-separated
+/// specs: `panic@K`, `exit@K`, `stall@K:MS`, `shed@K:N`. Worker faults key
+/// on the pool's monotonically increasing batch counter and fire on the
+/// batch's first shard only; shed faults key on the server's admission
+/// counter. Every event fires at most once, so a plan replayed against the
+/// same request stream produces the same failures.
+#[doc(hidden)]
+#[derive(Default)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+    /// Admission counter for shed-burst events (one bump per submit).
+    submits: AtomicU64,
+}
+
+impl FaultPlan {
+    /// Worker-side check: the fault (if any) scheduled for `batch`, claimed
+    /// by the shard starting at row 0 so exactly one worker acts on it.
+    pub fn worker_fault(&self, batch: u64, shard_start: usize) -> Option<FaultKind> {
+        if shard_start != 0 {
+            return None;
+        }
+        self.events
+            .iter()
+            .find(|e| {
+                e.at == batch
+                    && !matches!(e.kind, FaultKind::Shed(_))
+                    && !e.fired.swap(true, Ordering::Relaxed)
+            })
+            .map(|e| e.kind)
+    }
+
+    /// Admission-side check: bump the submit counter and report whether
+    /// this admission falls inside a scheduled shed burst `[at, at + n)`.
+    pub fn shed_next(&self) -> bool {
+        let idx = self.submits.fetch_add(1, Ordering::Relaxed);
+        self.events.iter().any(|e| match e.kind {
+            FaultKind::Shed(n) => idx >= e.at && idx < e.at + n,
+            _ => false,
+        })
+    }
+
+    /// True when the plan schedules any worker-side fault (panic/exit/stall).
+    pub fn has_worker_faults(&self) -> bool {
+        self.events.iter().any(|e| !matches!(e.kind, FaultKind::Shed(_)))
+    }
+}
+
+impl FromStr for FaultPlan {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        let mut events = Vec::new();
+        for spec in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (kind, rest) = spec
+                .split_once('@')
+                .ok_or_else(|| format!("fault spec '{spec}': expected kind@batch"))?;
+            let (at, arg) = match rest.split_once(':') {
+                Some((a, b)) => (a, Some(b)),
+                None => (rest, None),
+            };
+            let at: u64 = at
+                .parse()
+                .map_err(|_| format!("fault spec '{spec}': bad batch index '{at}'"))?;
+            let parse_arg = |what: &str| -> Result<u64, String> {
+                arg.ok_or_else(|| format!("fault spec '{spec}': {what} argument required"))?
+                    .parse()
+                    .map_err(|_| format!("fault spec '{spec}': bad {what} argument"))
+            };
+            let kind = match kind {
+                "panic" => FaultKind::Panic,
+                "exit" => FaultKind::Exit,
+                "stall" => FaultKind::Stall(Duration::from_millis(parse_arg("ms")?)),
+                "shed" => FaultKind::Shed(parse_arg("count")?),
+                other => {
+                    return Err(format!(
+                        "fault spec '{spec}': unknown kind '{other}' \
+                         (expected panic|exit|stall|shed)"
+                    ))
+                }
+            };
+            events.push(FaultEvent { at, kind, fired: AtomicBool::new(false) });
+        }
+        if events.is_empty() {
+            return Err("empty fault plan".into());
+        }
+        Ok(FaultPlan { events, submits: AtomicU64::new(0) })
+    }
+}
+
+/// Shared, set-once slot a pool/server reads its fault plan from. Workers
+/// clone the `Arc` at spawn; arming after spawn is race-free because the
+/// `OnceLock` publishes the plan to all of them.
+#[doc(hidden)]
+pub type FaultCell = OnceLock<Arc<FaultPlan>>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_kind_and_rejects_garbage() {
+        let plan: FaultPlan = "panic@2, exit@5,stall@3:50,shed@10:32".parse().unwrap();
+        assert_eq!(plan.events.len(), 4);
+        assert_eq!(plan.events[0].kind, FaultKind::Panic);
+        assert_eq!(plan.events[2].kind, FaultKind::Stall(Duration::from_millis(50)));
+        assert_eq!(plan.events[3].kind, FaultKind::Shed(32));
+        assert!("".parse::<FaultPlan>().is_err());
+        assert!("panic".parse::<FaultPlan>().is_err());
+        assert!("panic@x".parse::<FaultPlan>().is_err());
+        assert!("stall@3".parse::<FaultPlan>().is_err());
+        assert!("frob@1".parse::<FaultPlan>().is_err());
+    }
+
+    #[test]
+    fn worker_faults_fire_once_on_the_first_shard_only() {
+        let plan: FaultPlan = "panic@2".parse().unwrap();
+        assert_eq!(plan.worker_fault(1, 0), None);
+        assert_eq!(plan.worker_fault(2, 64), None, "non-first shard never fires");
+        assert_eq!(plan.worker_fault(2, 0), Some(FaultKind::Panic));
+        assert_eq!(plan.worker_fault(2, 0), None, "events fire at most once");
+        assert!(plan.has_worker_faults());
+    }
+
+    #[test]
+    fn shed_bursts_cover_exactly_their_admission_window() {
+        let plan: FaultPlan = "shed@2:3".parse().unwrap();
+        let hits: Vec<bool> = (0..8).map(|_| plan.shed_next()).collect();
+        assert_eq!(hits, [false, false, true, true, true, false, false, false]);
+        assert!(!plan.has_worker_faults());
+    }
+
+    #[test]
+    fn infer_error_displays_and_converts_to_anyhow() {
+        let e = InferError::WorkerPanic;
+        assert!(e.to_string().contains("panicked"));
+        let any: anyhow::Error = InferError::DeadlineExceeded.into();
+        assert!(any.to_string().contains("deadline"));
+    }
+}

@@ -44,6 +44,7 @@
 
 mod compile;
 mod exec;
+pub mod fault;
 pub mod head;
 pub mod passes;
 mod plan;
@@ -62,7 +63,8 @@ pub use head::HeadMode;
 pub use plan::{
     CompileStats, ExecPlan, HeadFeaturePlan, HeadPlan, OutSrc, PlanOp, Segment, TailPlan,
 };
-pub use pool::{EnginePool, PoolTrace};
+pub use fault::{FaultKind, FaultPlan, InferError};
+pub use pool::{BatchOutcome, EnginePool, PoolTrace, ShardFailure};
 pub use profile::{ActivityProfile, ActivityReport, LevelActivity, DEFAULT_DENSITY_SAMPLE};
 pub use stages::{measure_stages, StageRuntime};
 pub use tail::TailMode;

@@ -18,16 +18,34 @@
 //! start offset, so results land in input order no matter which worker
 //! finishes first — `infer_shared` is bit-identical to a single-threaded
 //! sweep for any batch size, shard count, or scheduling.
+//!
+//! Failure containment (DESIGN.md §faults): shard evaluation runs under
+//! `catch_unwind`, so a panicking row poisons only its own shard — the
+//! worker rebuilds its executor scratch and keeps serving, and the shard
+//! resolves to a typed [`InferError`] in the [`BatchOutcome`] instead of
+//! crashing the caller. Workers that die outright (thread exit, poisoned
+//! pickup lock) are counted in [`PoolTelemetry::worker_deaths`] and
+//! respawned by [`EnginePool::supervise`], which runs before every batch
+//! and on every gather timeout — a dead worker can delay a batch by one
+//! patience tick, never wedge it.
 
 use super::exec::{eval_shared_rows_block, BlockHooks, Executor};
+use super::fault::{FaultCell, FaultKind, InferError};
 use super::plan::ExecPlan;
 use super::profile::{ActivityProfile, DEFAULT_DENSITY_SAMPLE};
 use crate::telemetry::{PoolTelemetry, Tracer};
 use crate::util::fixed::Row;
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// How long the gather loop waits for a shard reply before polling the
+/// supervisor. Bounds how long a dead worker can stall a batch whose shard
+/// is still queued behind it.
+const GATHER_PATIENCE: Duration = Duration::from_millis(50);
 
 /// Trace handle riding one shared batch through the pool: the tracer plus
 /// per-row trace IDs aligned with the batch (0 = unsampled row). Shard jobs
@@ -39,34 +57,68 @@ pub struct PoolTrace {
 }
 
 /// One shard of a batch: worker evaluates rows `[start, start + len)` of the
-/// shared batch and replies with `(start, preds)`.
+/// shared batch and replies with `(start, result)`.
 struct Job {
     rows: Arc<[Row]>,
     start: usize,
     len: usize,
-    reply: Sender<(usize, Vec<i32>)>,
+    /// Pool-wide batch index, used to key injected faults deterministically.
+    batch: u64,
+    reply: Sender<(usize, Result<Vec<i32>, InferError>)>,
     /// Present when the batch carries sampled requests; each worker emits
     /// engine spans for the first sampled row of each of its lane blocks.
     trace: Option<PoolTrace>,
 }
 
-/// A fixed set of parked worker threads over one compiled plan.
-pub struct EnginePool {
+/// One shard that failed to produce predictions: rows
+/// `[start, start + len)` of the batch resolve to `error` instead.
+#[derive(Debug, Clone)]
+pub struct ShardFailure {
+    pub start: usize,
+    pub len: usize,
+    pub error: InferError,
+}
+
+/// Result of one pool batch: predictions for every row, plus the shards (if
+/// any) whose rows are invalid because evaluation failed. Rows covered by a
+/// failure hold `0` in `preds` and must not be served.
+#[derive(Debug, Default)]
+pub struct BatchOutcome {
+    pub preds: Vec<i32>,
+    pub failures: Vec<ShardFailure>,
+}
+
+/// Everything a worker incarnation needs; cloned per (re)spawn so the
+/// supervisor can replace dead workers without threading the pool through.
+#[derive(Clone)]
+struct WorkerCtx {
     plan: Arc<ExecPlan>,
     /// Lanes per evaluation pass (rounded up to a multiple of 64).
     lanes: usize,
     frac_bits: u32,
     index_width: usize,
+    job_rx: Arc<Mutex<Receiver<Job>>>,
+    telemetry: Arc<PoolTelemetry>,
+    activity: Arc<ActivityProfile>,
+    /// Injected-fault plan slot (tests / `dwn serve --fault-plan`); empty
+    /// in production, one relaxed load per job either way.
+    faults: Arc<FaultCell>,
+}
+
+/// A supervised set of parked worker threads over one compiled plan.
+pub struct EnginePool {
+    ctx: WorkerCtx,
     /// `Option` so `Drop` can close the channel before joining.
     job_tx: Option<Sender<Job>>,
-    workers: Vec<JoinHandle<()>>,
-    /// Pool-side stage histograms (head-pack / lut-exec / tail) plus worker
-    /// busy/idle counters; shared with every worker and exposed to the
-    /// serving coordinator via [`Self::telemetry`].
-    telemetry: Arc<PoolTelemetry>,
-    /// Runtime-activity counters (per-segment/per-level ns, sampled per-op
-    /// output density), shared with every worker.
-    activity: Arc<ActivityProfile>,
+    /// Live worker handles; the supervisor joins finished ones and respawns
+    /// replacements up to `threads`.
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    /// Target worker count (shard fan-out width) — stable across deaths.
+    threads: usize,
+    /// Monotonic name counter so respawned workers get fresh names.
+    spawn_seq: AtomicUsize,
+    /// Pool-wide batch counter (fault keying, diagnostics).
+    batch_seq: AtomicU64,
 }
 
 impl EnginePool {
@@ -95,73 +147,103 @@ impl EnginePool {
         density_sample: u32,
     ) -> Self {
         let lanes = crate::util::ceil_div(lanes.max(1), 64) * 64;
-        let telemetry = Arc::new(PoolTelemetry::new());
-        let activity = Arc::new(ActivityProfile::for_plan(&plan, density_sample));
+        let threads = threads.max(1);
         let (job_tx, job_rx) = channel::<Job>();
-        let job_rx = Arc::new(Mutex::new(job_rx));
-        let workers = (0..threads.max(1))
-            .map(|i| {
-                let plan = plan.clone();
-                let job_rx = job_rx.clone();
-                let tel = telemetry.clone();
-                let act = activity.clone();
-                std::thread::Builder::new()
-                    .name(format!("dwn-engine-{i}"))
-                    .spawn(move || {
-                        worker_loop(&plan, lanes, frac_bits, index_width, &job_rx, &tel, &act)
-                    })
-                    .expect("spawn engine worker")
-            })
-            .collect();
-        Self {
+        let ctx = WorkerCtx {
+            activity: Arc::new(ActivityProfile::for_plan(&plan, density_sample)),
             plan,
             lanes,
             frac_bits,
             index_width,
+            job_rx: Arc::new(Mutex::new(job_rx)),
+            telemetry: Arc::new(PoolTelemetry::new()),
+            faults: Arc::new(FaultCell::new()),
+        };
+        let pool = Self {
+            ctx,
             job_tx: Some(job_tx),
-            workers,
-            telemetry,
-            activity,
-        }
+            workers: Mutex::new(Vec::with_capacity(threads)),
+            threads,
+            spawn_seq: AtomicUsize::new(0),
+            batch_seq: AtomicU64::new(0),
+        };
+        pool.supervise(); // initial spawn = one supervision pass
+        pool
     }
 
-    /// The pool's shared stage histograms and busy/idle counters. The serving
-    /// coordinator attaches this handle into its [`crate::coordinator::Metrics`]
-    /// so snapshots carry head-pack / lut-exec / tail percentiles.
+    /// The pool's shared stage histograms, busy/idle counters, and worker
+    /// death count. The serving coordinator attaches this handle into its
+    /// [`crate::coordinator::Metrics`] so snapshots carry head-pack /
+    /// lut-exec / tail percentiles and supervision stats.
     pub fn telemetry(&self) -> Arc<PoolTelemetry> {
-        self.telemetry.clone()
+        self.ctx.telemetry.clone()
     }
 
     /// The pool's shared runtime-activity counters (`dwn profile`,
     /// `Snapshot` activity exposition, BENCH activity summaries).
     pub fn activity(&self) -> Arc<ActivityProfile> {
-        self.activity.clone()
+        self.ctx.activity.clone()
     }
 
     pub fn plan(&self) -> &ExecPlan {
-        &self.plan
+        &self.ctx.plan
     }
 
     pub fn lanes(&self) -> usize {
-        self.lanes
+        self.ctx.lanes
     }
 
     pub fn threads(&self) -> usize {
-        self.workers.len()
+        self.threads
     }
 
     pub fn frac_bits(&self) -> u32 {
-        self.frac_bits
+        self.ctx.frac_bits
     }
 
     pub fn index_width(&self) -> usize {
-        self.index_width
+        self.ctx.index_width
+    }
+
+    /// Arm a deterministic fault-injection plan (chaos tests,
+    /// `dwn serve --fault-plan`). First call wins; workers observe the plan
+    /// through a shared `OnceLock`, so arming after spawn is race-free.
+    #[doc(hidden)]
+    pub fn arm_faults(&self, plan: Arc<super::fault::FaultPlan>) {
+        let _ = self.ctx.faults.set(plan);
+    }
+
+    /// One supervision pass: join worker handles that have finished (their
+    /// deaths were counted at the exit site) and respawn replacements up to
+    /// the configured thread count. Runs before every batch and on every
+    /// gather timeout; cheap when nothing died (one uncontended lock, no
+    /// syscalls).
+    pub fn supervise(&self) {
+        let mut workers = self.workers.lock().unwrap_or_else(|e| e.into_inner());
+        let mut i = 0;
+        while i < workers.len() {
+            if workers[i].is_finished() {
+                let _ = workers.swap_remove(i).join();
+            } else {
+                i += 1;
+            }
+        }
+        while workers.len() < self.threads {
+            let idx = self.spawn_seq.fetch_add(1, Ordering::Relaxed);
+            let ctx = self.ctx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("dwn-engine-{idx}"))
+                .spawn(move || worker_loop(&ctx))
+                .expect("spawn engine worker");
+            workers.push(handle);
+        }
     }
 
     /// Evaluate a shared batch: shard whole lane-blocks across the workers,
     /// gather replies by offset. Row order of the result always matches the
     /// input. The only thing cloned per shard is the batch `Arc` — feature
-    /// buffers are read in place.
+    /// buffers are read in place. Panics if any shard fails; serving goes
+    /// through [`Self::infer_shared_outcome`] for typed containment.
     pub fn infer_shared(&self, rows: Arc<[Row]>) -> Vec<i32> {
         self.infer_shared_traced(rows, None)
     }
@@ -172,28 +254,50 @@ impl EnginePool {
     /// the sampled rows' trace IDs. Results are bit-identical with or
     /// without tracing (instrumentation never writes the value buffer).
     pub fn infer_shared_traced(&self, rows: Arc<[Row]>, trace: Option<PoolTrace>) -> Vec<i32> {
+        let out = self.infer_shared_outcome(rows, trace);
+        if let Some(f) = out.failures.first() {
+            panic!("engine pool shard [{}..{}) failed: {}", f.start, f.start + f.len, f.error);
+        }
+        out.preds
+    }
+
+    /// Containment-aware batch evaluation: like
+    /// [`Self::infer_shared_traced`], but a failed shard (worker panic or
+    /// death) resolves to a typed [`ShardFailure`] covering exactly its
+    /// rows instead of panicking the caller. The serving executor splices
+    /// per-row errors from the failure list; healthy shards' predictions
+    /// are unaffected and bit-identical to the failure-free path.
+    pub fn infer_shared_outcome(
+        &self,
+        rows: Arc<[Row]>,
+        trace: Option<PoolTrace>,
+    ) -> BatchOutcome {
         let n = rows.len();
         if n == 0 {
-            return Vec::new();
+            return BatchOutcome::default();
         }
         if let Some(t) = &trace {
             assert_eq!(t.ids.len(), n, "trace IDs must align with the batch rows");
         }
         // Arity check on the caller thread, so a malformed request panics
         // the submitter (as the scoped-thread path did), not a pool worker.
-        let width = (self.frac_bits + 1) as usize;
+        let width = (self.ctx.frac_bits + 1) as usize;
         for row in rows.iter() {
             assert_eq!(
                 row.len() * width,
-                self.plan.num_inputs,
+                self.ctx.plan.num_inputs,
                 "row does not match the plan's input interface"
             );
         }
+        // Replace any worker that died since the last batch before fanning
+        // out, so this batch shards at full width.
+        self.supervise();
+        let batch = self.batch_seq.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = channel();
         let tx = self.job_tx.as_ref().expect("pool not shut down");
         let mut start = 0usize;
-        let mut sent = 0usize;
-        for len in super::exec::shard_row_counts(n, self.lanes, self.threads()) {
+        let mut pending: Vec<(usize, usize)> = Vec::new();
+        for len in super::exec::shard_row_counts(n, self.ctx.lanes, self.threads()) {
             if len == 0 {
                 continue;
             }
@@ -201,19 +305,49 @@ impl EnginePool {
                 rows: rows.clone(),
                 start,
                 len,
+                batch,
                 reply: reply_tx.clone(),
                 trace: trace.clone(),
             })
-            .expect("engine pool workers gone");
+            .expect("engine pool job channel closed");
+            pending.push((start, len));
             start += len;
-            sent += 1;
         }
         drop(reply_tx);
-        let mut out = vec![0i32; n];
-        for _ in 0..sent {
-            let (at, preds) = reply_rx.recv().expect("engine pool worker died");
-            out[at..at + preds.len()].copy_from_slice(&preds);
+        let mut out = BatchOutcome { preds: vec![0i32; n], failures: Vec::new() };
+        while !pending.is_empty() {
+            match reply_rx.recv_timeout(GATHER_PATIENCE) {
+                Ok((at, res)) => {
+                    let i = pending
+                        .iter()
+                        .position(|&(s, _)| s == at)
+                        .expect("reply for unknown shard");
+                    let (start, len) = pending.swap_remove(i);
+                    match res {
+                        Ok(preds) => {
+                            out.preds[start..start + preds.len()].copy_from_slice(&preds)
+                        }
+                        Err(e) => out.failures.push(ShardFailure { start, len, error: e }),
+                    }
+                }
+                // Replies are slow in coming: a worker may have died with
+                // shards still queued behind it — respawn so they drain.
+                Err(RecvTimeoutError::Timeout) => self.supervise(),
+                // Every job (and so every reply sender) is gone without a
+                // reply: the owning workers died mid-shard. Typed loss.
+                Err(RecvTimeoutError::Disconnected) => {
+                    for (start, len) in pending.drain(..) {
+                        out.failures.push(ShardFailure {
+                            start,
+                            len,
+                            error: InferError::WorkerLost,
+                        });
+                    }
+                    self.supervise();
+                }
+            }
         }
+        out.failures.sort_unstable_by_key(|f| f.start);
         out
     }
 
@@ -243,63 +377,101 @@ impl Drop for EnginePool {
         // Closing the job channel wakes every parked worker with a recv
         // error; join so scratch teardown finishes before the plan drops.
         drop(self.job_tx.take());
-        for h in self.workers.drain(..) {
+        let mut workers = self.workers.lock().unwrap_or_else(|e| e.into_inner());
+        for h in workers.drain(..) {
             let _ = h.join();
         }
     }
 }
 
-fn worker_loop(
-    plan: &ExecPlan,
-    lanes: usize,
-    frac_bits: u32,
-    index_width: usize,
-    job_rx: &Mutex<Receiver<Job>>,
-    tel: &PoolTelemetry,
-    activity: &ActivityProfile,
-) {
-    let mut ex = Executor::new(plan, lanes);
+fn worker_loop(ctx: &WorkerCtx) {
+    let mut ex = Executor::new(&ctx.plan, ctx.lanes);
     loop {
         // Hold the lock only for the blocking recv (idle park), never while
         // evaluating — job pickup serializes, processing stays parallel.
         // Everything from here to job receipt (including waiting on the lock
         // behind a sibling's pickup) counts as idle time.
         let t_idle = Instant::now();
-        let job = match job_rx.lock() {
+        let job = match ctx.job_rx.lock() {
             Ok(rx) => rx.recv(),
-            Err(_) => break, // a sibling panicked holding the lock
+            Err(_) => {
+                // A sibling panicked while holding the pickup lock. Count
+                // the bailout so the supervisor (which polls for finished
+                // handles) registers it as a death and respawns, instead of
+                // the pool silently shrinking with a batch stuck behind it.
+                ctx.telemetry.note_worker_death();
+                break;
+            }
         };
-        tel.add_idle(t_idle.elapsed());
-        let Ok(job) = job else { break };
-        let t_busy = Instant::now();
-        let mut preds = vec![0i32; job.len];
-        let lanes = ex.lanes();
-        for (ci, outs) in preds.chunks_mut(lanes).enumerate() {
-            let lo = job.start + ci * lanes;
-            ex.clear_inputs();
-            // One trace ID represents the block: the first sampled row in
-            // it (engine spans are per lane block, not per row).
-            let trace = job.trace.as_ref().and_then(|t| {
-                let id = t.ids[lo..lo + outs.len()].iter().copied().find(|&i| i != 0)?;
-                Some((t.tracer.as_ref(), id))
-            });
-            // Borrowed shard slice of the shared batch — rows mix kinds
-            // freely and are never copied here. The evaluator stamps
-            // head-pack / lut-exec / tail laps into the pool histograms and
-            // per-segment runtime into the activity profile.
-            eval_shared_rows_block(
-                &mut ex,
-                &job.rows[lo..lo + outs.len()],
-                frac_bits,
-                index_width,
-                outs,
-                BlockHooks { spans: Some(&tel.stages), profile: Some(activity), trace },
-            );
+        ctx.telemetry.add_idle(t_idle.elapsed());
+        let Ok(job) = job else { break }; // channel closed: pool shutdown
+        // Deterministic injected faults (chaos tests / --fault-plan),
+        // claimed by the batch's first shard so exactly one worker acts.
+        let fault = ctx.faults.get().and_then(|p| p.worker_fault(job.batch, job.start));
+        if let Some(FaultKind::Exit) = fault {
+            // Simulated hard death: no reply, no cleanup. The gather loop
+            // sees the dropped reply sender; the supervisor respawns.
+            ctx.telemetry.note_worker_death();
+            return;
         }
-        tel.add_busy(t_busy.elapsed());
-        // A dropped reply receiver just means the submitter gave up.
-        let _ = job.reply.send((job.start, preds));
+        if let Some(FaultKind::Stall(d)) = fault {
+            std::thread::sleep(d);
+        }
+        let t_busy = Instant::now();
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            if let Some(FaultKind::Panic) = fault {
+                panic!("injected fault: worker panic at batch {}", job.batch);
+            }
+            eval_shard(&mut ex, &job, ctx)
+        }));
+        ctx.telemetry.add_busy(t_busy.elapsed());
+        match result {
+            Ok(preds) => {
+                // A dropped reply receiver just means the submitter gave up.
+                let _ = job.reply.send((job.start, Ok(preds)));
+            }
+            Err(_) => {
+                // Shard evaluation panicked. The executor's scratch state is
+                // unknown mid-evaluation, so rebuild it; the shard resolves
+                // to a typed error and this worker keeps serving.
+                ctx.telemetry.note_worker_death();
+                ex = Executor::new(&ctx.plan, ctx.lanes);
+                let _ = job.reply.send((job.start, Err(InferError::WorkerPanic)));
+            }
+        }
     }
+}
+
+fn eval_shard(ex: &mut Executor, job: &Job, ctx: &WorkerCtx) -> Vec<i32> {
+    let mut preds = vec![0i32; job.len];
+    let lanes = ex.lanes();
+    for (ci, outs) in preds.chunks_mut(lanes).enumerate() {
+        let lo = job.start + ci * lanes;
+        ex.clear_inputs();
+        // One trace ID represents the block: the first sampled row in
+        // it (engine spans are per lane block, not per row).
+        let trace = job.trace.as_ref().and_then(|t| {
+            let id = t.ids[lo..lo + outs.len()].iter().copied().find(|&i| i != 0)?;
+            Some((t.tracer.as_ref(), id))
+        });
+        // Borrowed shard slice of the shared batch — rows mix kinds
+        // freely and are never copied here. The evaluator stamps
+        // head-pack / lut-exec / tail laps into the pool histograms and
+        // per-segment runtime into the activity profile.
+        eval_shared_rows_block(
+            ex,
+            &job.rows[lo..lo + outs.len()],
+            ctx.frac_bits,
+            ctx.index_width,
+            outs,
+            BlockHooks {
+                spans: Some(&ctx.telemetry.stages),
+                profile: Some(ctx.activity.as_ref()),
+                trace,
+            },
+        );
+    }
+    preds
 }
 
 #[cfg(test)]
@@ -318,13 +490,16 @@ mod tests {
         compile(&nl)
     }
 
+    fn sign_rows(n: usize) -> Vec<Vec<f32>> {
+        (0..n).map(|i| vec![if i % 3 == 0 { -0.9 } else { 0.9 }]).collect()
+    }
+
     #[test]
     fn pool_matches_inline_for_odd_batches() {
         let plan = Arc::new(sign_plan());
         let pool = EnginePool::new(plan.clone(), 64, 3, 1, 1);
         for n in [1usize, 3, 63, 64, 65, 200] {
-            let rows: Vec<Vec<f32>> =
-                (0..n).map(|i| vec![if i % 3 == 0 { -0.9 } else { 0.9 }]).collect();
+            let rows = sign_rows(n);
             let want = crate::engine::infer_fixed_batch(&plan, &rows, 1, 1, 64, 1);
             assert_eq!(pool.infer(&rows), want, "batch {n}");
         }
@@ -334,8 +509,7 @@ mod tests {
     fn int_rows_match_real_rows() {
         let plan = Arc::new(sign_plan());
         let pool = EnginePool::new(plan, 64, 2, 1, 1);
-        let rows: Vec<Vec<f32>> =
-            (0..100).map(|i| vec![if i % 3 == 0 { -0.9 } else { 0.9 }]).collect();
+        let rows = sign_rows(100);
         let ints: Vec<Vec<i32>> = rows
             .iter()
             .map(|r| {
@@ -350,8 +524,7 @@ mod tests {
     fn mixed_row_kinds_match_per_kind_batches() {
         let plan = Arc::new(sign_plan());
         let pool = EnginePool::new(plan, 64, 2, 1, 1);
-        let rows: Vec<Vec<f32>> =
-            (0..150).map(|i| vec![if i % 3 == 0 { -0.9 } else { 0.9 }]).collect();
+        let rows = sign_rows(150);
         let want = pool.infer(&rows);
         // Alternate real and integer-grid variants of the same rows within
         // one shared batch.
@@ -464,8 +637,7 @@ mod tests {
         let plan = Arc::new(sign_plan());
         // Sample every block so the density sweep definitely runs.
         let pool = EnginePool::with_density(plan, 64, 2, 1, 1, 1);
-        let rows: Vec<Vec<f32>> =
-            (0..500).map(|i| vec![if i % 3 == 0 { -0.9 } else { 0.9 }]).collect();
+        let rows = sign_rows(500);
         pool.infer(&rows);
         let rep = pool.activity().report();
         assert!(rep.blocks > 0, "no blocks counted");
@@ -493,5 +665,63 @@ mod tests {
         // A tiny batch right after a large one must not see stale state.
         assert_eq!(pool.infer(&big[..2]), first[..2].to_vec());
         assert_eq!(pool.infer(&big), first);
+    }
+
+    #[test]
+    fn injected_panic_poisons_only_its_shard_and_worker_recovers() {
+        let plan = Arc::new(sign_plan());
+        let pool = EnginePool::new(plan.clone(), 64, 2, 1, 1);
+        pool.arm_faults(Arc::new("panic@0".parse().unwrap()));
+        let rows = sign_rows(128); // 2 lane blocks -> 2 shards across 2 workers
+        let want = crate::engine::infer_fixed_batch(&plan, &rows, 1, 1, 64, 1);
+        let shared: Arc<[Row]> = rows.iter().map(|r| Row::real(r)).collect();
+        let out = pool.infer_shared_outcome(shared.clone(), None);
+        assert_eq!(out.failures.len(), 1, "exactly the first shard fails: {:?}", out.failures);
+        let f = &out.failures[0];
+        assert_eq!((f.start, f.error.clone()), (0, InferError::WorkerPanic));
+        // Rows outside the failed shard are bit-identical to the clean run.
+        assert_eq!(out.preds[f.start + f.len..], want[f.start + f.len..]);
+        assert_eq!(pool.telemetry().worker_deaths(), 1);
+        // The worker caught the panic and rebuilt its scratch: the next
+        // batch is clean and fully correct.
+        let again = pool.infer_shared_outcome(shared, None);
+        assert!(again.failures.is_empty(), "pool did not recover: {:?}", again.failures);
+        assert_eq!(again.preds, want);
+        assert_eq!(pool.threads(), 2);
+    }
+
+    #[test]
+    fn worker_exit_is_typed_and_supervisor_respawns() {
+        let plan = Arc::new(sign_plan());
+        let pool = EnginePool::new(plan.clone(), 64, 1, 1, 1);
+        pool.arm_faults(Arc::new("exit@0".parse().unwrap()));
+        let rows = sign_rows(10);
+        let want = crate::engine::infer_fixed_batch(&plan, &rows, 1, 1, 64, 1);
+        let shared: Arc<[Row]> = rows.iter().map(|r| Row::real(r)).collect();
+        // Single worker takes the whole batch and dies without replying.
+        let out = pool.infer_shared_outcome(shared.clone(), None);
+        assert_eq!(out.failures.len(), 1);
+        assert_eq!(out.failures[0].error, InferError::WorkerLost);
+        assert_eq!((out.failures[0].start, out.failures[0].len), (0, 10));
+        assert_eq!(pool.telemetry().worker_deaths(), 1);
+        // Supervision replaced the dead worker; service continues.
+        let again = pool.infer_shared_outcome(shared, None);
+        assert!(again.failures.is_empty());
+        assert_eq!(again.preds, want);
+    }
+
+    #[test]
+    fn stall_fault_delays_but_does_not_fail_the_batch() {
+        let plan = Arc::new(sign_plan());
+        let pool = EnginePool::new(plan.clone(), 64, 2, 1, 1);
+        // Longer than GATHER_PATIENCE: exercises the timeout -> supervise
+        // -> keep-waiting path of the gather loop.
+        pool.arm_faults(Arc::new("stall@0:80".parse().unwrap()));
+        let rows = sign_rows(96);
+        let want = crate::engine::infer_fixed_batch(&plan, &rows, 1, 1, 64, 1);
+        let out = pool.infer_shared_outcome(rows.iter().map(|r| Row::real(r)).collect(), None);
+        assert!(out.failures.is_empty());
+        assert_eq!(out.preds, want);
+        assert_eq!(pool.telemetry().worker_deaths(), 0);
     }
 }

@@ -5,7 +5,7 @@
 //!   breakdown --model sm-10 --variant penft [--encoder S]               Fig.5-style component LUT breakdown
 //!   encoders  --model sm-10 --variant penft [--encoder auto]            per-feature encoder architecture/cost table
 //!   verify    --model sm-10 --variant penft [--n 512]                   netlist sim vs golden vectors
-//!   serve     --model sm-10 [--backend pjrt|netlist|compiled] [--requests N] [--lanes W] [--threads T] [--head native|lut] [--tail native|lut] [--metrics-every S] [--trace-sample N] [--trace-out FILE] [--synthetic]
+//!   serve     --model sm-10 [--backend pjrt|netlist|compiled] [--requests N] [--lanes W] [--threads T] [--head native|lut] [--tail native|lut] [--metrics-every S] [--trace-sample N] [--trace-out FILE] [--synthetic] [--deadline-us N] [--fault-plan SPEC]
 //!   trace     [--synthetic | --model NAME] [--out trace.json] | --check FILE   traced smoke run / Chrome trace validation
 //!   profile   [--synthetic | --model NAME] [--density-sample N]         engine runtime-activity profile per logic level
 //!   accuracy  --model sm-10 --variant penft                             netlist accuracy on the test set
@@ -15,7 +15,7 @@
 
 use anyhow::{anyhow, bail, Context, Result};
 use dwn::config::{Args, Artifacts};
-use dwn::coordinator::{Backend, Row, Server, ServerConfig};
+use dwn::coordinator::{Backend, FaultPlan, Reply, Row, Server, ServerConfig};
 use dwn::data::Dataset;
 use dwn::encoding::{self, ArchKind, EncoderIr, EncoderStrategy};
 use dwn::engine::{HeadMode, OptLevel, TailMode};
@@ -94,6 +94,12 @@ serve: --backend pjrt|netlist|compiled [--requests N] [--synthetic]
                  Chrome trace-event JSON at exit — load in about://tracing)
        --synthetic (serve the built-in JSC-sized synthetic model on random
                  rows; no artifacts needed, accuracy not reported)
+       --deadline-us N (per-request deadline; expired requests resolve to a
+                 typed error and count as 'expired', never executed)
+       --fault-plan SPEC (deterministic fault injection, e.g. panic@2 or
+                 'panic@1,stall@3:50,shed@100:32' — kind@batch for worker
+                 faults, shed@admission:count for shed bursts; failures are
+                 contained as typed per-request errors, the server survives)
        compiled: --lanes N (vectors/pass, default 256) --threads N (default = cores)
                  --head native|lut (default native; native computes the
                  thermometer encoding arithmetically, skipping input packing)
@@ -576,6 +582,16 @@ fn cmd_serve(artifacts: &Artifacts, args: &Args) -> Result<()> {
         if synthetic { DwnModel::synthetic(&SynthSpec::jsc_sized()) } else { load_model(artifacts, args)? };
     let backend_kind = args.get_or("backend", if synthetic { "compiled" } else { "pjrt" });
     let requests = args.get_usize("requests", 2000)?;
+    // Failure-containment knobs: deterministic fault injection and a
+    // per-request deadline. Both default off; neither changes the happy
+    // path.
+    let fault_plan: Option<std::sync::Arc<FaultPlan>> = match args.get("fault-plan") {
+        Some(spec) => Some(std::sync::Arc::new(
+            spec.parse::<FaultPlan>().map_err(|e| anyhow!("--fault-plan: {e}"))?,
+        )),
+        None => None,
+    };
+    let deadline_us = args.get_parse_opt::<u64>("deadline-us")?;
     // Labeled test rows from the artifacts, or random rows for the synthetic
     // model (structural throughput only — no accuracy to report).
     let (row_cache, labels): (Vec<Row>, Option<Vec<u8>>) = if synthetic {
@@ -663,19 +679,35 @@ fn cmd_serve(artifacts: &Artifacts, args: &Args) -> Result<()> {
             // Let the batcher fill whole engine passes.
             let cfg =
                 ServerConfig { max_batch: lanes * threads.max(1), ..ServerConfig::default() };
-            Server::start_compiled(
-                plan,
-                model.penft.frac_bits.context("penft bits")?,
-                model.num_features,
-                model.num_classes,
-                accel.index_width(),
-                lanes,
-                threads,
+            let frac_bits = model.penft.frac_bits.context("penft bits")?;
+            let (features, classes, iw) =
+                (model.num_features, model.num_classes, accel.index_width());
+            let faults = fault_plan.clone();
+            // The mapped netlist doubles as the breaker's interpreter
+            // fallback: bit-identical decisions with no worker pool to fail.
+            Server::start_with(
+                move || {
+                    let mut backend =
+                        Backend::compiled(plan, frac_bits, features, classes, iw, lanes, threads)
+                            .with_fallback_netlist(nl);
+                    if let Some(p) = faults {
+                        backend = backend.with_faults(p);
+                    }
+                    Ok(backend)
+                },
                 cfg,
-            )
+            )?
         }
         other => bail!("unknown backend '{other}' (pjrt|netlist|compiled)"),
     };
+    if let Some(p) = &fault_plan {
+        // Admission-side events (shed bursts) arm on the server; worker
+        // faults armed on the backend above (compiled only).
+        server.inject_faults(p.clone());
+        if p.has_worker_faults() && backend_kind != "compiled" {
+            println!("note: worker faults in --fault-plan need --backend compiled; only shed events will fire");
+        }
+    }
     // Request tracing: sampled per-request span sets into the always-on
     // flight recorder, exported as Chrome trace-event JSON on demand.
     let trace_sample = args.get_usize("trace-sample", 0)?;
@@ -707,31 +739,45 @@ fn cmd_serve(artifacts: &Artifacts, args: &Args) -> Result<()> {
     } else {
         None
     };
+    // Typed per-request failures (injected faults, expired deadlines) are
+    // counted and reported, not fatal — containment is the point.
+    let drain = |pending: &mut Vec<(usize, std::sync::mpsc::Receiver<Reply>)>,
+                 correct: &mut usize,
+                 failed: &mut usize|
+     -> Result<()> {
+        for (j, rx) in pending.drain(..) {
+            match rx.recv_timeout(Duration::from_secs(30)).map_err(|_| anyhow!("timeout"))? {
+                Ok(pred) => {
+                    if labels.as_ref().is_some_and(|y| pred as usize == y[j] as usize) {
+                        *correct += 1;
+                    }
+                }
+                Err(_) => *failed += 1,
+            }
+        }
+        Ok(())
+    };
     let t0 = Instant::now();
     let mut pending = Vec::new();
     let mut correct = 0usize;
+    let mut failed = 0usize;
+    let mut shed = 0usize;
     for i in 0..requests {
         let j = i % row_cache.len();
-        pending.push((j, server.submit_row(row_cache[j].clone())?));
+        let deadline = deadline_us.map(|us| Instant::now() + Duration::from_micros(us));
+        match server.submit_row_deadline(row_cache[j].clone(), deadline) {
+            Ok(rx) => pending.push((j, rx)),
+            // Shed (real backpressure or an injected burst): count and move
+            // on, like any retrying client would.
+            Err(e) if e.is_backpressure() => shed += 1,
+            Err(e) => return Err(e.into()),
+        }
         // Drain in windows to bound memory while keeping the batcher busy.
         if pending.len() >= 256 {
-            for (j, rx) in pending.drain(..) {
-                let pred = rx
-                    .recv_timeout(Duration::from_secs(30))
-                    .map_err(|_| anyhow!("timeout"))??;
-                if labels.as_ref().is_some_and(|y| pred as usize == y[j] as usize) {
-                    correct += 1;
-                }
-            }
+            drain(&mut pending, &mut correct, &mut failed)?;
         }
     }
-    for (j, rx) in pending.drain(..) {
-        let pred =
-            rx.recv_timeout(Duration::from_secs(30)).map_err(|_| anyhow!("timeout"))??;
-        if labels.as_ref().is_some_and(|y| pred as usize == y[j] as usize) {
-            correct += 1;
-        }
-    }
+    drain(&mut pending, &mut correct, &mut failed)?;
     let dt = t0.elapsed();
     let snap = server.metrics.snapshot();
     let accuracy = match &labels {
@@ -745,6 +791,12 @@ fn cmd_serve(artifacts: &Artifacts, args: &Args) -> Result<()> {
         requests as f64 / dt.as_secs_f64(),
         accuracy
     );
+    if failed + shed > 0 {
+        println!(
+            "contained failures: {} typed error replies, {} shed at admission",
+            failed, shed
+        );
+    }
     println!("{}", snap.render_table());
     if let (Some(tracer), Some(path)) = (&tracer, &trace_out) {
         tracer.dump_to(path).with_context(|| format!("writing {}", path.display()))?;
@@ -861,6 +913,29 @@ fn check_trace(path: &std::path::Path) -> Result<()> {
         let tid = e.get("tid")?.as_usize()?;
         per_tid.entry(tid).or_default().push(name);
     }
+    // Deadline semantics: every admitted traced request must resolve. A
+    // request dropped at its deadline emits admit + deadline (never a
+    // dangling admit with no continuation); a served one emits queue-wait
+    // and, for the batch's first traced id, reply.
+    let mut dropped = 0usize;
+    for (tid, names) in &per_tid {
+        if *tid == 0 || !names.iter().any(|n| n == "admit") {
+            continue;
+        }
+        let resolved = ["queue-wait", "deadline", "reply"]
+            .iter()
+            .any(|want| names.iter().any(|n| n == want));
+        if !resolved {
+            bail!(
+                "{}: trace id {tid} has a dangling admit (no queue-wait, \
+                 deadline, or reply span — the request vanished)",
+                path.display()
+            );
+        }
+        if names.iter().any(|n| n == "deadline") {
+            dropped += 1;
+        }
+    }
     let request_spans = ["admit", "queue-wait", "batch-form", "reply"];
     let complete = per_tid
         .iter()
@@ -879,10 +954,12 @@ fn check_trace(path: &std::path::Path) -> Result<()> {
         );
     }
     println!(
-        "trace OK: {} — {} events, {} traced requests with complete span sets",
+        "trace OK: {} — {} events, {} traced requests with complete span sets, \
+         {} dropped at deadline",
         path.display(),
         events.len(),
-        complete
+        complete,
+        dropped
     );
     Ok(())
 }

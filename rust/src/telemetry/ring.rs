@@ -54,9 +54,9 @@ pub enum EventKind {
 
 impl EventKind {
     const TAG_ADMIT: u64 = 0;
-    const TAG_STAGE: u64 = 1; // 1..=6 map Stage::ALL by index
-    const TAG_LATENCY: u64 = 7;
-    const TAG_SHED: u64 = 8;
+    const TAG_STAGE: u64 = 1; // 1..=Stage::COUNT map Stage::ALL by index
+    const TAG_LATENCY: u64 = Self::TAG_STAGE + Stage::COUNT as u64;
+    const TAG_SHED: u64 = Self::TAG_LATENCY + 1;
     const TAG_LEVEL: u64 = 16; // 16 + level
 
     pub(crate) fn encode(self) -> u64 {
@@ -238,7 +238,10 @@ mod tests {
         for k in kinds {
             assert_eq!(EventKind::decode(k.encode()), Some(k), "{k:?} failed roundtrip");
         }
-        assert_eq!(EventKind::decode(9), None);
+        // First unassigned tag: just past the shed marker, below TAG_LEVEL.
+        let hole = EventKind::ShedBurst.encode() + 1;
+        assert!(hole < 16, "tag space overflowed into the LutLevel range");
+        assert_eq!(EventKind::decode(hole), None);
     }
 
     #[test]

@@ -7,6 +7,10 @@
 //!   request).
 //! * `BatchForm`  — first job drained → batch handed to the executor
 //!   (drainer thread, per batch).
+//! * `Deadline`   — request dropped because its deadline passed before
+//!   execution; the recorded span is how long it waited before being
+//!   dropped (drainer at batch formation, or executor short-circuit —
+//!   per expired request).
 //! * `HeadPack`   — feature rows packed into the value buffer, native head
 //!   comparisons or input bit-packing (pool worker, per lane block).
 //! * `LutExec`    — the compiled plan's LUT levels evaluated (pool worker,
@@ -29,6 +33,7 @@ use std::time::{Duration, Instant};
 pub enum Stage {
     QueueWait,
     BatchForm,
+    Deadline,
     HeadPack,
     LutExec,
     Tail,
@@ -36,10 +41,13 @@ pub enum Stage {
 }
 
 impl Stage {
-    pub const COUNT: usize = 6;
+    pub const COUNT: usize = 7;
+    /// Discriminant order (the ring encodes stages by `ALL` index, and
+    /// `StageSet` indexes histograms by `stage as usize`).
     pub const ALL: [Stage; Stage::COUNT] = [
         Stage::QueueWait,
         Stage::BatchForm,
+        Stage::Deadline,
         Stage::HeadPack,
         Stage::LutExec,
         Stage::Tail,
@@ -51,6 +59,7 @@ impl Stage {
         match self {
             Stage::QueueWait => "queue-wait",
             Stage::BatchForm => "batch-form",
+            Stage::Deadline => "deadline",
             Stage::HeadPack => "head-pack",
             Stage::LutExec => "lut-exec",
             Stage::Tail => "tail",
@@ -112,6 +121,11 @@ pub struct PoolTelemetry {
     pub stages: StageSet,
     busy_ns: AtomicU64,
     idle_ns: AtomicU64,
+    /// Worker incarnations lost: caught shard panics, injected/real thread
+    /// exits, and poisoned-lock bailouts. The supervisor respawns after
+    /// each, so a growing pool stays at full strength while this counts
+    /// how often it had to.
+    worker_deaths: AtomicU64,
 }
 
 impl PoolTelemetry {
@@ -140,6 +154,18 @@ impl PoolTelemetry {
     pub fn idle_ns(&self) -> u64 {
         self.idle_ns.load(Ordering::Relaxed)
     }
+
+    /// Count one dead worker incarnation (caught panic, thread exit, or
+    /// poisoned-lock bailout).
+    #[inline]
+    pub fn note_worker_death(&self) {
+        self.worker_deaths.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Worker incarnations lost over the pool's life.
+    pub fn worker_deaths(&self) -> u64 {
+        self.worker_deaths.load(Ordering::Relaxed)
+    }
 }
 
 #[cfg(test)]
@@ -156,6 +182,12 @@ mod tests {
         }
         assert_eq!(Stage::QueueWait.label(), "queue-wait");
         assert_eq!(Stage::LutExec.label(), "lut-exec");
+        assert_eq!(Stage::Deadline.label(), "deadline");
+        // ALL must stay in discriminant order: StageSet and the event ring
+        // both index by `stage as usize`.
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(*s as usize, i, "Stage::ALL out of discriminant order");
+        }
     }
 
     #[test]
@@ -193,5 +225,9 @@ mod tests {
         t.add_idle(Duration::from_micros(10));
         assert_eq!(t.busy_ns(), 7_000);
         assert_eq!(t.idle_ns(), 10_000);
+        assert_eq!(t.worker_deaths(), 0);
+        t.note_worker_death();
+        t.note_worker_death();
+        assert_eq!(t.worker_deaths(), 2);
     }
 }

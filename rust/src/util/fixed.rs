@@ -60,6 +60,39 @@ impl Row {
         }
     }
 
+    /// Content fingerprint (FNV-1a over the variant tag and feature bit
+    /// patterns): equal-valued rows hash equal regardless of which
+    /// allocation carries them. The coordinator's quarantine keys repeat
+    /// offenders by this, so a poison row resubmitted from a fresh buffer
+    /// is still recognized. Variant-sensitive on purpose — a `Real` and a
+    /// `Fixed` row take different packing paths, so they count separately.
+    pub fn fingerprint(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        let mut mix = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(FNV_PRIME);
+            }
+        };
+        match self {
+            Row::Real(v) => {
+                mix(&[0u8]);
+                for x in v.iter() {
+                    mix(&x.to_bits().to_le_bytes());
+                }
+            }
+            Row::Fixed(v) => {
+                mix(&[1u8]);
+                for k in v.iter() {
+                    mix(&k.to_le_bytes());
+                }
+            }
+        }
+        h
+    }
+
     /// Admit a whole batch of real-valued rows (bench/test convenience).
     pub fn from_reals(rows: &[Vec<f32>]) -> Vec<Row> {
         rows.iter().map(|r| Row::real(r)).collect()
@@ -381,5 +414,16 @@ mod tests {
                 assert_eq!((w >> lane) & 1 == 1, want[bit], "lane {lane} bit {bit}");
             }
         }
+    }
+
+    #[test]
+    fn fingerprint_keys_by_content_not_allocation() {
+        let a = Row::real(&[0.25, -0.5, 0.0]);
+        let b = Row::real(&[0.25, -0.5, 0.0]); // distinct Arc, same values
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_ne!(a.fingerprint(), Row::real(&[0.25, -0.5, 0.1]).fingerprint());
+        // Variant-sensitive: real vs fixed rows pack differently.
+        assert_ne!(Row::real(&[1.0]).fingerprint(), Row::fixed(&[1]).fingerprint());
+        assert_ne!(Row::fixed(&[1, 2]).fingerprint(), Row::fixed(&[2, 1]).fingerprint());
     }
 }

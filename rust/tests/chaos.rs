@@ -1,0 +1,283 @@
+//! Chaos suite: failure containment under deterministic fault injection
+//! (DESIGN.md §faults). Every test drives the real serving stack — admission,
+//! drainer, executor, engine pool — with a [`FaultPlan`] armed, and asserts
+//! that faults resolve to *typed per-request errors* while the server keeps
+//! serving: K injected panics produce exactly K failed-batch replies,
+//! expired deadlines are counted exactly, the breaker degrades to the
+//! bit-identical interpreter fallback, and a mixed-fault hammer never
+//! deadlocks. The happy-path test pins the flip side: with no plan armed,
+//! the containment machinery is inert.
+//!
+//! Wall-clock bound for the hammer comes from `DWN_CHAOS_MILLIS` (default
+//! 1500 locally; CI sets 30000).
+
+use dwn::coordinator::{
+    AdmissionPolicy, Backend, FaultPlan, InferError, Server, ServerConfig, SubmitError,
+};
+use dwn::engine::compile;
+use dwn::techmap::{LutNetlist, MappedLut, Src};
+use dwn::telemetry::Stage;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// 1 feature, 2-bit input word, prediction = sign bit (negative -> 1).
+fn sign_netlist() -> LutNetlist {
+    LutNetlist {
+        num_inputs: 2,
+        luts: vec![MappedLut { inputs: vec![Src::Input(1)], table: 0b10 }],
+        outputs: vec![Src::Lut(0)],
+    }
+}
+
+fn sign_pred(x: f32) -> i32 {
+    i32::from(x < 0.0)
+}
+
+/// Compiled sign-bit server with `plan_spec` worker faults armed and the
+/// interpreter fallback attached. `threads: 1` keeps fault claiming
+/// deterministic: one shard per batch, `shard_start == 0`.
+fn chaos_server(plan_spec: Option<&str>, cfg: ServerConfig) -> Server {
+    let faults = plan_spec.map(|s| Arc::new(s.parse::<FaultPlan>().expect("fault spec")));
+    let admission_faults = faults.clone();
+    let server = Server::start_with(
+        move || {
+            let mut backend = Backend::compiled(compile(&sign_netlist()), 1, 1, 2, 1, 64, 1)
+                .with_fallback_netlist(sign_netlist());
+            if let Some(p) = faults {
+                backend = backend.with_faults(p);
+            }
+            Ok(backend)
+        },
+        cfg,
+    )
+    .unwrap();
+    if let Some(p) = admission_faults {
+        server.inject_faults(p);
+    }
+    server
+}
+
+/// One submit→reply roundtrip. Sequential roundtrips put every request in
+/// its own server batch, so pool batch numbers advance one per call — the
+/// coordinate system `FaultPlan` events are keyed on.
+fn roundtrip(server: &Server, x: f32) -> Result<i32, InferError> {
+    let rx = server.submit(&[x]).expect("admission");
+    rx.recv_timeout(Duration::from_secs(10)).expect("no reply (deadlock?)")
+}
+
+fn small_cfg() -> ServerConfig {
+    ServerConfig {
+        max_batch: 64,
+        max_wait: Duration::from_micros(200),
+        queue_depth: 64,
+        admission: AdmissionPolicy::Shed,
+        ..ServerConfig::default()
+    }
+}
+
+/// Tentpole acceptance: K injected panics produce exactly K typed error
+/// replies, on exactly the planned batches, and the server serves correct
+/// predictions immediately after each one — no restart, no lost requests.
+#[test]
+fn injected_panics_resolve_typed_and_server_recovers() {
+    // Distinct feature values per request so the quarantine (left at its
+    // default) never accumulates two strikes on one fingerprint.
+    let cfg = small_cfg();
+    let server = chaos_server(Some("panic@1,panic@3"), cfg);
+    let xs = [-0.9f32, 0.9, -0.8, 0.8, -0.7, 0.7];
+    for (batch, &x) in xs.iter().enumerate() {
+        let got = roundtrip(&server, x);
+        if batch == 1 || batch == 3 {
+            assert_eq!(got, Err(InferError::WorkerPanic), "batch {batch}");
+        } else {
+            assert_eq!(got, Ok(sign_pred(x)), "batch {batch}");
+        }
+    }
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests, xs.len() as u64);
+    assert_eq!(snap.failed_rows, 2, "exactly the two planned batches failed");
+    assert_eq!(snap.worker_deaths, 2, "one executor death per caught panic");
+    assert!(!snap.breaker_tripped, "non-consecutive failures stay below threshold");
+    assert_eq!(snap.expired, 0);
+    assert_eq!(snap.poisoned, 0);
+}
+
+/// Deadline enforcement is exact: already-expired submissions resolve to
+/// `DeadlineExceeded`, are counted once each, are stamped with the Deadline
+/// stage, and never reach the backend; live traffic is untouched.
+#[test]
+fn expired_deadlines_are_counted_exactly() {
+    let (backend, seen) = Backend::fixture(1, Duration::ZERO);
+    let server = Server::start_with(move || Ok(backend), small_cfg()).unwrap();
+    let mut expect_expired = Vec::new();
+    let mut expect_live = Vec::new();
+    for i in 0..12 {
+        let expired = i % 3 == 0; // 4 of 12
+        let deadline = expired.then(Instant::now);
+        let rx = server.submit_row_deadline(dwn::coordinator::Row::real(&[0.5]), deadline).unwrap();
+        if expired {
+            expect_expired.push(rx);
+        } else {
+            expect_live.push(rx);
+        }
+    }
+    for rx in expect_expired {
+        let got = rx.recv_timeout(Duration::from_secs(10)).expect("no reply");
+        assert_eq!(got, Err(InferError::DeadlineExceeded));
+    }
+    for rx in expect_live {
+        let got = rx.recv_timeout(Duration::from_secs(10)).expect("no reply");
+        assert!(got.is_ok(), "live request failed: {got:?}");
+    }
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.expired, 4, "exactly the expired submissions counted");
+    assert_eq!(snap.stage(Stage::Deadline).expect("deadline stage").count, 4);
+    assert_eq!(seen.lock().unwrap().len(), 8, "expired rows never reach the backend");
+    assert_eq!(snap.failed_rows, 0, "a dropped request is not a failed batch");
+}
+
+/// Breaker: consecutive failed batches trip it, and from then on the
+/// compiled backend degrades to the interpreter fallback — which must make
+/// bit-identical decisions to a plain netlist server on the same inputs.
+#[test]
+fn breaker_trips_and_fallback_is_bit_identical() {
+    let cfg = ServerConfig {
+        breaker_threshold: 2,
+        quarantine_strikes: 0, // repeated rows below; quarantine is off-topic
+        ..small_cfg()
+    };
+    let server = chaos_server(Some("panic@0,panic@1"), cfg);
+    let reference = Server::start_netlist(sign_netlist(), 1, 1, 2, 1, small_cfg());
+    assert_eq!(roundtrip(&server, 0.5), Err(InferError::WorkerPanic));
+    assert_eq!(roundtrip(&server, 0.5), Err(InferError::WorkerPanic));
+    // Two consecutive failures at threshold 2: tripped. Everything after
+    // is served by the fallback interpreter.
+    let xs = [-0.9f32, -0.5, -0.1, 0.1, 0.5, 0.9];
+    for &x in &xs {
+        assert_eq!(
+            roundtrip(&server, x),
+            Ok(reference.infer(&[x]).unwrap()),
+            "fallback disagrees with interpreter at x={x}"
+        );
+    }
+    let snap = server.metrics.snapshot();
+    assert!(snap.breaker_tripped);
+    assert_eq!(snap.breaker_trips, 1, "sticky breaker trips once");
+    assert_eq!(snap.fallback_batches, xs.len() as u64);
+    assert_eq!(snap.failed_rows, 2);
+}
+
+/// Repeat-offender quarantine: a row present in `quarantine_strikes`
+/// panicked batches is banned at admission with a typed `Poisoned`; other
+/// rows are unaffected.
+#[test]
+fn quarantine_bans_repeat_offender_rows() {
+    let cfg = ServerConfig { breaker_threshold: 0, ..small_cfg() };
+    let server = chaos_server(Some("panic@0,panic@1"), cfg);
+    assert_eq!(roundtrip(&server, 0.5), Err(InferError::WorkerPanic));
+    assert_eq!(roundtrip(&server, 0.5), Err(InferError::WorkerPanic));
+    // Two strikes on the same fingerprint (default strikes-to-ban = 2).
+    assert_eq!(server.submit(&[0.5]).unwrap_err(), SubmitError::Poisoned);
+    // A different row sails through and the pool still serves.
+    assert_eq!(roundtrip(&server, -0.5), Ok(1));
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.poisoned, 1);
+}
+
+/// With no fault plan armed, the containment machinery is inert: zero
+/// deaths, zero failed rows, breaker closed, no fallback batches, and
+/// predictions identical to a plain netlist server.
+#[test]
+fn happy_path_leaves_containment_inert() {
+    let server = chaos_server(None, small_cfg());
+    let reference = Server::start_netlist(sign_netlist(), 1, 1, 2, 1, small_cfg());
+    for i in 0..100 {
+        let x = if i % 2 == 0 { 0.7 } else { -0.7 };
+        assert_eq!(roundtrip(&server, x), Ok(reference.infer(&[x]).unwrap()), "row {i}");
+    }
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests, 100);
+    assert_eq!(snap.worker_deaths, 0);
+    assert_eq!(snap.failed_rows, 0);
+    assert_eq!(snap.expired, 0);
+    assert_eq!(snap.poisoned, 0);
+    assert_eq!(snap.rejected, 0);
+    assert!(!snap.breaker_tripped);
+    assert_eq!(snap.breaker_trips, 0);
+    assert_eq!(snap.fallback_batches, 0);
+}
+
+/// Liveness under a mixed fault storm: panics, a stall, a simulated hard
+/// worker death, and an admission shed burst, concurrent with live traffic
+/// carrying a mix of deadlines. Invariant: every admitted request resolves
+/// (Ok or typed Err) within the recv timeout — the server never deadlocks
+/// and never drops a reply channel. Wall-clock bounded by DWN_CHAOS_MILLIS.
+#[test]
+fn mixed_fault_hammer_never_deadlocks() {
+    let millis = std::env::var("DWN_CHAOS_MILLIS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(1500);
+    let cfg = ServerConfig {
+        max_batch: 32,
+        max_wait: Duration::from_micros(200),
+        queue_depth: 256,
+        admission: AdmissionPolicy::Shed,
+        breaker_threshold: 3,
+        quarantine_strikes: 0, // the hammer reuses row values by design
+        ..ServerConfig::default()
+    };
+    let spec = "panic@2,stall@5:10,panic@9,shed@12:4,exit@17,panic@26";
+    let faults = Arc::new(spec.parse::<FaultPlan>().expect("fault spec"));
+    let worker_faults = faults.clone();
+    let server = Server::start_with(
+        move || {
+            Ok(Backend::compiled(compile(&sign_netlist()), 1, 1, 2, 1, 64, 2)
+                .with_fallback_netlist(sign_netlist())
+                .with_faults(worker_faults))
+        },
+        cfg,
+    )
+    .unwrap();
+    server.inject_faults(faults);
+    let t0 = Instant::now();
+    let mut accepted = 0u64;
+    let mut replied = 0u64;
+    let mut shed = 0u64;
+    let mut pending = Vec::new();
+    let mut i = 0u64;
+    while t0.elapsed() < Duration::from_millis(millis) {
+        let x = if i % 2 == 0 { 0.6 } else { -0.6 };
+        let deadline = match i % 7 {
+            0 => Some(Instant::now()), // already expired
+            1 => Some(Instant::now() + Duration::from_millis(5)),
+            _ => None,
+        };
+        match server.submit_row_deadline(dwn::coordinator::Row::real(&[x]), deadline) {
+            Ok(rx) => {
+                accepted += 1;
+                pending.push(rx);
+            }
+            Err(e) if e.is_backpressure() => shed += 1,
+            Err(e) => panic!("unexpected admission error: {e}"),
+        }
+        i += 1;
+        if pending.len() >= 64 {
+            for rx in pending.drain(..) {
+                let _ = rx.recv_timeout(Duration::from_secs(10)).expect("no reply (deadlock?)");
+                replied += 1;
+            }
+        }
+    }
+    for rx in pending.drain(..) {
+        let _ = rx.recv_timeout(Duration::from_secs(10)).expect("no reply (deadlock?)");
+        replied += 1;
+    }
+    assert_eq!(replied, accepted, "every admitted request must resolve");
+    assert!(accepted > 0, "hammer admitted nothing (shed {shed})");
+    let snap = server.metrics.snapshot();
+    assert_eq!(snap.requests, accepted);
+    // The plan's worker faults fired (pool batches 2, 9, 17, 26 exist for
+    // any plausible hammer rate); deaths are counted, not fatal.
+    assert!(snap.worker_deaths >= 1, "no injected fault fired: {snap:?}");
+}

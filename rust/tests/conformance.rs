@@ -387,6 +387,7 @@ fn tracing_is_inert_across_the_mode_matrix() {
                     max_wait: Duration::from_micros(200),
                     queue_depth: 4096,
                     admission: AdmissionPolicy::Block,
+                    ..ServerConfig::default()
                 },
             );
             let tracer = server.enable_tracing(TraceConfig { sample, ..Default::default() });

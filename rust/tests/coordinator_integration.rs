@@ -149,6 +149,7 @@ fn sustained_load_preserves_per_request_correctness() {
             max_wait: Duration::from_micros(200),
             queue_depth: 256,
             admission: AdmissionPolicy::Shed,
+            ..ServerConfig::default()
         },
     );
 
@@ -215,6 +216,7 @@ fn overlap_keeps_admission_order_and_counts_rejections() {
             max_wait: Duration::from_millis(1),
             queue_depth: 4,
             admission: AdmissionPolicy::Shed,
+            ..ServerConfig::default()
         },
     )
     .unwrap();
@@ -273,6 +275,7 @@ fn router_keeps_per_model_stats_disjoint_under_concurrent_load() {
                 max_wait: Duration::from_micros(200),
                 queue_depth: 4096,
                 admission: AdmissionPolicy::Shed,
+                ..ServerConfig::default()
             },
         )
     };
@@ -323,6 +326,7 @@ fn backpressure_bounded_queue() {
             max_wait: Duration::from_micros(50),
             queue_depth: 8,
             admission: AdmissionPolicy::Shed,
+            ..ServerConfig::default()
         },
     );
     // Flood; some submissions may be rejected (bounded queue) but none may

@@ -160,6 +160,7 @@ fn server_snapshot_exposes_the_full_request_path() {
             max_wait: Duration::from_micros(200),
             queue_depth: 4096,
             admission: AdmissionPolicy::Block,
+            ..ServerConfig::default()
         },
     );
     let total = 600usize;
@@ -332,6 +333,7 @@ fn traced_server_exports_complete_span_sets_with_per_level_spans() {
             max_wait: Duration::from_micros(200),
             queue_depth: 4096,
             admission: AdmissionPolicy::Block,
+            ..ServerConfig::default()
         },
     );
     let tracer = server.enable_tracing(TraceConfig { sample: 1, ..Default::default() });
