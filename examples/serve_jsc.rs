@@ -10,7 +10,10 @@
 //! (both default native): a native head computes the thermometer encoding
 //! arithmetically (no input bit-packing), a native tail evaluates
 //! popcount/argmax arithmetically — both behind the persistent worker pool;
-//! lut emulates the corresponding stages of the mapped netlist.
+//! lut emulates the corresponding stages of the mapped netlist. It also
+//! takes `--engine interp|pool|fused` (default pool), selecting the
+//! execution backend from `engine::backend::registry()` — `fused` batches
+//! each level's ops by canonical truth table for per-table dispatch.
 //!
 //! Runs without trained artifacts too (netlist/compiled backends only): a
 //! synthetic JSC-sized model stands in, which is what the CI smoke step
@@ -29,11 +32,13 @@
 //!     cargo run --release --example serve_jsc -- \
 //!         [--model sm-50] [--backend pjrt|netlist|compiled] [--lanes 256] \
 //!         [--threads N] [--head native|lut] [--tail native|lut] \
-//!         [--metrics-every S] [--trace-sample N] [--trace-out FILE] [--smoke]
+//!         [--engine interp|pool|fused] [--metrics-every S] \
+//!         [--trace-sample N] [--trace-out FILE] [--smoke]
 
 use dwn::config::{Args, Artifacts};
 use dwn::coordinator::{AdmissionPolicy, Backend, Row, Server, ServerConfig};
 use dwn::data::Dataset;
+use dwn::engine::backend::{self as eval_backend, CompileModes, CompiledModel};
 use dwn::engine::{HeadMode, TailMode};
 use dwn::hwgen::{build_accelerator, AccelOptions};
 use dwn::model::{DwnModel, SynthSpec, Variant};
@@ -119,41 +124,58 @@ fn main() -> anyhow::Result<()> {
             )?;
             let head_mode: HeadMode = args.get_parse("head", HeadMode::Native)?;
             let tail_mode: TailMode = args.get_parse("tail", TailMode::Native)?;
+            // Execution backend from the registry: `pool` (per-op dispatch),
+            // `fused` (per-table dispatch), or `interp` for completeness.
+            let engine_name = args.get_or("engine", "pool");
+            let engine = eval_backend::by_name(&engine_name).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown engine '{engine_name}' (available: {})",
+                    eval_backend::names().join("|")
+                )
+            })?;
             let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt))?;
             let (nl, tags, head, tail) = accel.map_with_head(&MapConfig::default());
-            let plan = dwn::engine::compile_for_modes(
-                &nl,
-                Some(&tags),
-                head.as_ref(),
-                tail.as_ref(),
+            let modes = CompileModes {
+                tags: Some(&tags),
+                head: head.as_ref(),
+                tail: tail.as_ref(),
                 head_mode,
                 tail_mode,
-            );
-            if head_mode == HeadMode::Native && plan.head.is_none() {
-                println!("note: head metadata unavailable; fell back to LUT emulation");
-            }
-            if tail_mode == TailMode::Native && plan.tail.is_none() {
-                println!("note: tail metadata unavailable; fell back to LUT emulation");
-            }
-            println!(
-                "serving {} via compiled engine ({} ops / {} levels, {lanes} lanes x {threads} threads, {} head, {} tail)",
-                model.name,
-                plan.ops.len(),
-                plan.depth(),
-                if plan.head.is_some() { "native" } else { "lut" },
-                if plan.tail.is_some() { "native" } else { "lut" }
-            );
-            let max_batch = lanes * threads.max(1);
-            Server::start_compiled(
-                plan,
-                model.penft.frac_bits.expect("penft bits"),
-                model.num_features,
-                model.num_classes,
-                accel.index_width(),
+                frac_bits: model.penft.frac_bits.expect("penft bits"),
+                num_features: model.num_features,
+                num_classes: model.num_classes,
+                index_width: accel.index_width(),
                 lanes,
                 threads,
-                cfg(max_batch),
-            )
+            };
+            let compiled: Box<dyn CompiledModel> =
+                engine.compile(&nl, &modes, dwn::engine::OptLevel::None);
+            if let Some(plan) = compiled.plan() {
+                if head_mode == HeadMode::Native && plan.head.is_none() {
+                    println!("note: head metadata unavailable; fell back to LUT emulation");
+                }
+                if tail_mode == TailMode::Native && plan.tail.is_none() {
+                    println!("note: tail metadata unavailable; fell back to LUT emulation");
+                }
+                println!(
+                    "serving {} via {} engine ({} ops / {} levels, {lanes} lanes x {threads} threads, {} head, {} tail)",
+                    model.name,
+                    engine.name(),
+                    plan.ops.len(),
+                    plan.depth(),
+                    if plan.head.is_some() { "native" } else { "lut" },
+                    if plan.tail.is_some() { "native" } else { "lut" }
+                );
+            } else {
+                println!(
+                    "serving {} via {} engine ({} LUTs interpreted)",
+                    model.name,
+                    engine.name(),
+                    nl.lut_count()
+                );
+            }
+            let max_batch = compiled.max_batch_hint();
+            Server::start_model(compiled, cfg(max_batch))
         }
         other => anyhow::bail!("unknown backend '{other}' (pjrt|netlist|compiled)"),
     };

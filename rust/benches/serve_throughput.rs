@@ -17,10 +17,17 @@
 //! cheapest relative to coordination: rows/sec there isolates coordinator
 //! overhead, the convoy/copy cost this PR removes.
 //!
+//! Every pool arm runs twice: once with per-op dispatch (`engine: pool`)
+//! and once with the per-table fused dispatch schedule (`engine: fused`) —
+//! same plans, same rows — and a `fused` section records the head-to-head
+//! (rows/sec both ways plus `decisions_equal`, asserted true and gated in
+//! CI: fused must be a pure dispatch change, never a semantic one).
+//!
 //! Besides the table, the run writes `BENCH_serve.json` so the perf
 //! trajectory is machine-readable across PRs: per arm per batch rows/sec
 //! plus batch-call latency percentiles (p50/p99/p999/max, log-bucket
-//! histogram), an `opt` section per head×tail arm (netlist area and
+//! histogram) — each arm record carries an `engine` field naming its
+//! registry backend — an `opt` section per head×tail arm (netlist area and
 //! rows/sec before vs after the `--opt-level` max pass pipeline), a
 //! `stage_breakdown` per head×tail pool arm (head-pack / lut-exec / tail
 //! percentiles from the pool's telemetry, plus the pool's
@@ -34,6 +41,7 @@
 
 use dwn::config::Artifacts;
 use dwn::coordinator::{AdmissionPolicy, Backend, Row, Server, ServerConfig};
+use dwn::engine::backend::PooledModel;
 use dwn::engine::{HeadMode, TailMode};
 use dwn::hwgen::{build_accelerator, AccelOptions, Component};
 use dwn::json::Value;
@@ -133,14 +141,11 @@ fn main() {
     );
 
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    let interp = Backend::Netlist {
-        netlist: nl,
-        frac_bits,
-        num_features: model.num_features,
-        num_classes: model.num_classes,
-        index_width,
-    };
-    // Persistent pools, held across all batches like a real server.
+    let interp =
+        Backend::netlist(nl, frac_bits, model.num_features, model.num_classes, index_width);
+    // Persistent pools, held across all batches like a real server. The
+    // fused twins share the exact plans but dispatch per canonical truth
+    // table instead of per op (DESIGN.md §engine).
     let pools: Vec<Backend> = plans
         .iter()
         .map(|p| {
@@ -153,6 +158,21 @@ fn main() {
                 256,
                 cores,
             )
+        })
+        .collect();
+    let fused_pools: Vec<Backend> = plans
+        .iter()
+        .map(|p| {
+            Backend::from_model(Box::new(PooledModel::from_plan(
+                std::sync::Arc::new(p.clone()),
+                frac_bits,
+                model.num_features,
+                model.num_classes,
+                index_width,
+                256,
+                cores,
+                true,
+            )))
         })
         .collect();
 
@@ -177,13 +197,20 @@ fn main() {
     for batch in [64usize, 256, 1024, 4096] {
         let slice = &rows[..batch];
         let (interp_rps, interp_lat) = rows_per_sec(slice, |r| interp.infer(r).unwrap());
-        records.push(arm_record("interp", "-", "-", batch, interp_rps, &interp_lat));
+        records.push(arm_record("interp", "interp", "-", "-", batch, interp_rps, &interp_lat));
         let mut rps = [0f64; 4];
         for (i, pool) in pools.iter().enumerate() {
             let (arm_rps, lat) = rows_per_sec(slice, |r| pool.infer(r).unwrap());
             rps[i] = arm_rps;
             let (hm, tm) = MODES[i];
-            records.push(arm_record("pool", hm.label(), tm.label(), batch, arm_rps, &lat));
+            records
+                .push(arm_record("pool", "pool", hm.label(), tm.label(), batch, arm_rps, &lat));
+        }
+        for (i, fp) in fused_pools.iter().enumerate() {
+            let (arm_rps, lat) = rows_per_sec(slice, |r| fp.infer(r).unwrap());
+            let (hm, tm) = MODES[i];
+            records
+                .push(arm_record("pool", "fused", hm.label(), tm.label(), batch, arm_rps, &lat));
         }
         println!(
             "{:>7} {:>14.0} {:>13.0} {:>13.0} {:>13.0} {:>13.0} {:>7.2}x",
@@ -253,6 +280,42 @@ fn main() {
         );
     }
 
+    // Fused-dispatch head-to-head: per head×tail mode, per-op dispatch vs
+    // the per-table fused schedule over the identical plan and rows, at one
+    // fixed batch. Decisions are asserted equal before timing — the fused
+    // schedule only permutes ops within a level, and levelization makes
+    // that bit-identical — so `decisions_equal` doubles as the bench-side
+    // conformance gate CI checks in BENCH_serve.json.
+    let fused_batch = 1024usize.min(rows.len());
+    let mut fused_records: Vec<Value> = Vec::new();
+    println!("\nfused dispatch delta (batch {fused_batch}):");
+    println!(
+        "{:>14} {:>13} {:>13} {:>7}",
+        "head/tail", "pool r/s", "fused r/s", "gain"
+    );
+    for (i, &(hm, tm)) in MODES.iter().enumerate() {
+        let slice = &rows[..fused_batch];
+        let decisions_equal = pools[i].infer(slice).unwrap() == fused_pools[i].infer(slice).unwrap();
+        assert!(decisions_equal, "fused dispatch diverged for {}/{}", hm.label(), tm.label());
+        let (pool_rps, _) = rows_per_sec(slice, |r| pools[i].infer(r).unwrap());
+        let (fused_rps, _) = rows_per_sec(slice, |r| fused_pools[i].infer(r).unwrap());
+        let mut m = BTreeMap::new();
+        m.insert("head".to_string(), Value::Str(hm.label().to_string()));
+        m.insert("tail".to_string(), Value::Str(tm.label().to_string()));
+        m.insert("batch".to_string(), Value::Num(fused_batch as f64));
+        m.insert("rows_per_sec_pool".to_string(), Value::Num(pool_rps.round()));
+        m.insert("rows_per_sec_fused".to_string(), Value::Num(fused_rps.round()));
+        m.insert("decisions_equal".to_string(), Value::Bool(decisions_equal));
+        fused_records.push(Value::Obj(m));
+        println!(
+            "{:>14} {:>13.0} {:>13.0} {:>6.2}x",
+            format!("{}/{}", hm.label(), tm.label()),
+            pool_rps,
+            fused_rps,
+            fused_rps / pool_rps.max(1e-9)
+        );
+    }
+
     // Coordinator-overhead arm: the native/native plan behind a full
     // Server, driven closed-loop at small windows. At batch <= 64 the
     // engine work per pass is tiny, so rows/sec here is dominated by
@@ -288,7 +351,7 @@ fn main() {
             max_ns: snap.max_us * 1000,
             mean_ns: 0.0,
         };
-        records.push(arm_record("server", "native", "native", window, rps, &lat));
+        records.push(arm_record("server", "pool", "native", "native", window, rps, &lat));
         println!("{:>7} {:>14.0}", window, rps);
     }
 
@@ -300,6 +363,7 @@ fn main() {
         let Some(tel) = pool.engine_telemetry() else { continue };
         let (hm, tm) = MODES[i];
         let mut m = BTreeMap::new();
+        m.insert("engine".to_string(), Value::Str(pool.engine_name().to_string()));
         m.insert("head".to_string(), Value::Str(hm.label().to_string()));
         m.insert("tail".to_string(), Value::Str(tm.label().to_string()));
         let mut stages = BTreeMap::new();
@@ -325,6 +389,9 @@ fn main() {
     // luts_before/luts_after (netlist area), ops/ops_opt (compiled plan
     // size for that mode), rows_per_sec/rows_per_sec_opt.
     top.insert("opt".to_string(), Value::Arr(opt_records));
+    // Per-mode fused-vs-pool head-to-head; `decisions_equal` must stay true
+    // (CI fails the bench smoke if it ever flips).
+    top.insert("fused".to_string(), Value::Arr(fused_records));
     top.insert("stage_breakdown".to_string(), Value::Arr(breakdown));
     // Full coordinator snapshot of the server arm: per-stage rows including
     // queue-wait/batch-form/reply, shed + overlap counters.
@@ -422,9 +489,12 @@ fn summary_json(s: &HistSummary) -> Value {
 }
 
 /// One machine-readable arm record for `BENCH_serve.json`: throughput plus
-/// the arm's latency percentiles.
+/// the arm's latency percentiles. `engine` names the registry backend the
+/// arm ran on (`interp` / `pool` / `fused`) so trajectory tooling can
+/// split dispatch strategies without parsing the `backend` label.
 fn arm_record(
     backend: &str,
+    engine: &str,
     head: &str,
     tail: &str,
     batch: usize,
@@ -433,6 +503,7 @@ fn arm_record(
 ) -> Value {
     let mut m = BTreeMap::new();
     m.insert("backend".to_string(), Value::Str(backend.to_string()));
+    m.insert("engine".to_string(), Value::Str(engine.to_string()));
     m.insert("head".to_string(), Value::Str(head.to_string()));
     m.insert("tail".to_string(), Value::Str(tail.to_string()));
     m.insert("batch".to_string(), Value::Num(batch as f64));

@@ -21,14 +21,17 @@
 //! that reroutes the compiled backend to its interpreter fallback.
 
 use super::metrics::Metrics;
+use crate::engine::backend::{
+    CompileModes, CompiledModel, EvalBackend, InterpBackend, PooledModel,
+};
 use crate::engine::fault::{FaultCell, FaultPlan};
 use crate::engine::{
-    ActivityProfile, BatchOutcome, EnginePool, ExecPlan, InferError, PoolTrace, ShardFailure,
+    ActivityProfile, BatchOutcome, ExecPlan, InferError, OptLevel, PoolTrace, ShardFailure,
 };
 use crate::runtime::Engine;
 use crate::techmap::LutNetlist;
 use crate::telemetry::{EventKind, PoolTelemetry, Stage, TraceConfig, Tracer};
-use crate::util::fixed::{self, Row};
+use crate::util::fixed::Row;
 use anyhow::{anyhow, Result};
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -46,30 +49,20 @@ pub type Reply = std::result::Result<i32, InferError>;
 pub enum Backend {
     /// PJRT-executed AOT HLO (the golden model / production path).
     Pjrt(Engine),
-    /// Bit-accurate simulation of the generated PEN hardware.
-    Netlist {
-        netlist: LutNetlist,
-        /// Fractional bits of the fixed-point input interface.
-        frac_bits: u32,
-        num_features: usize,
-        num_classes: usize,
-        /// Width of the class-index output word.
-        index_width: usize,
-    },
-    /// The netlist compiled into a flat execution plan ([`crate::engine`]),
-    /// evaluated by a persistent worker pool the backend holds for the life
-    /// of the server — no per-batch thread spawn. The plan may carry a
-    /// native thermometer-encoder head (`--head native`: integer compares
-    /// instead of encoder emulation and input bit-packing) and/or a native
-    /// arithmetic tail (`--tail native`), or emulate the full netlist.
-    Compiled {
-        pool: EnginePool,
-        num_features: usize,
-        num_classes: usize,
-        /// Interpreter fallback the breaker reroutes to after N consecutive
-        /// batch failures (conformance proves its decisions bit-identical
-        /// to the compiled plan's). `None` = no degradation path.
-        fallback: Option<Box<Backend>>,
+    /// Any [`CompiledModel`] from the execution-backend registry
+    /// ([`crate::engine::backend::registry`]): the chunked interpreter, the
+    /// persistent-pool per-op engine, the fused per-table engine, or
+    /// whatever registers next. The coordinator attaches the model's
+    /// telemetry hooks, arms faults through the trait, and degrades to
+    /// `fallback` once the breaker trips — all without knowing which
+    /// strategy is serving.
+    Model {
+        model: Box<dyn CompiledModel>,
+        /// Degradation target the breaker reroutes to after N consecutive
+        /// batch failures (conformance proves every registered backend
+        /// bit-identical, so the swap is invisible to callers). `None` =
+        /// no degradation path.
+        fallback: Option<Box<dyn CompiledModel>>,
     },
     /// Deterministic stand-in for coordinator tests: predicts the sign of
     /// feature 0 after sleeping `delay` per batch, and records every served
@@ -86,9 +79,29 @@ pub enum Backend {
 }
 
 impl Backend {
-    /// Build the compiled backend: wraps `plan` in a persistent
-    /// [`EnginePool`] with `threads.max(1)` parked workers, each evaluating
-    /// `lanes` vectors per pass.
+    /// Serve an arbitrary registry model (`--engine` on the CLI goes
+    /// through here).
+    pub fn from_model(model: Box<dyn CompiledModel>) -> Backend {
+        Backend::Model { model, fallback: None }
+    }
+
+    /// Bit-accurate netlist interpretation (the `interp` registry backend):
+    /// chunked lane evaluation straight off the mapped netlist.
+    pub fn netlist(
+        netlist: LutNetlist,
+        frac_bits: u32,
+        num_features: usize,
+        num_classes: usize,
+        index_width: usize,
+    ) -> Backend {
+        let modes = CompileModes::bare(frac_bits, num_features, num_classes, index_width);
+        Backend::from_model(InterpBackend.compile(&netlist, &modes, OptLevel::None))
+    }
+
+    /// Build the compiled backend (the `pool` registry backend): wraps
+    /// `plan` in a persistent [`crate::engine::EnginePool`] with
+    /// `threads.max(1)` parked workers, each evaluating `lanes` vectors per
+    /// pass.
     #[allow(clippy::too_many_arguments)]
     pub fn compiled(
         plan: ExecPlan,
@@ -99,47 +112,66 @@ impl Backend {
         lanes: usize,
         threads: usize,
     ) -> Backend {
-        let pool = EnginePool::new(Arc::new(plan), lanes, threads, frac_bits, index_width);
-        Backend::Compiled { pool, num_features, num_classes, fallback: None }
+        Backend::from_model(Box::new(PooledModel::from_plan(
+            Arc::new(plan),
+            frac_bits,
+            num_features,
+            num_classes,
+            index_width,
+            lanes,
+            threads,
+            false,
+        )))
     }
 
     /// Attach the interpreter fallback the breaker degrades to: the mapped
     /// netlist the compiled plan came from, evaluated by the bit-accurate
     /// interpreter on the executor thread (no worker pool to fail). No-op
-    /// on non-compiled backends.
+    /// on non-model backends.
     pub fn with_fallback_netlist(self, netlist: LutNetlist) -> Backend {
         match self {
-            Backend::Compiled { pool, num_features, num_classes, .. } => {
-                let fallback = Box::new(Backend::Netlist {
-                    netlist,
-                    frac_bits: pool.frac_bits(),
-                    num_features,
-                    num_classes,
-                    index_width: pool.index_width(),
-                });
-                Backend::Compiled { pool, num_features, num_classes, fallback: Some(fallback) }
+            Backend::Model { model, .. } => {
+                let modes = CompileModes::bare(
+                    model.frac_bits(),
+                    model.num_features(),
+                    model.num_classes(),
+                    model.index_width(),
+                );
+                let fallback = InterpBackend.compile(&netlist, &modes, OptLevel::None);
+                Backend::Model { model, fallback: Some(fallback) }
             }
             other => other,
         }
     }
 
     /// The breaker's degradation target, when one is attached.
-    pub fn fallback(&self) -> Option<&Backend> {
+    pub fn fallback(&self) -> Option<&dyn CompiledModel> {
         match self {
-            Backend::Compiled { fallback, .. } => fallback.as_deref(),
+            Backend::Model { fallback, .. } => fallback.as_deref(),
             _ => None,
         }
     }
 
     /// Arm a deterministic fault-injection plan on the backend's engine
-    /// pool (chaos tests, `dwn serve --fault-plan`). No-op on backends
-    /// without a pool.
+    /// (chaos tests, `dwn serve --fault-plan`). No-op on backends without
+    /// injectable faults.
     #[doc(hidden)]
     pub fn with_faults(self, plan: Arc<FaultPlan>) -> Backend {
-        if let Backend::Compiled { pool, .. } = &self {
-            pool.arm_faults(plan);
+        if let Backend::Model { model, .. } = &self {
+            model.arm_faults(plan);
         }
         self
+    }
+
+    /// The serving model's registry engine name (`"pjrt"` / `"fixture"`
+    /// for the non-registry backends) — BENCH_serve.json's per-arm
+    /// `engine` dimension and `dwn breakdown` rows.
+    pub fn engine_name(&self) -> &'static str {
+        match self {
+            Backend::Pjrt(_) => "pjrt",
+            Backend::Model { model, .. } => model.engine(),
+            Backend::Fixture { .. } => "fixture",
+        }
     }
 
     /// Test fixture backend plus the shared log of rows it serves.
@@ -152,12 +184,9 @@ impl Backend {
     pub fn max_batch_hint(&self) -> usize {
         match self {
             Backend::Pjrt(e) => e.batch,
-            // The interpreter evaluates one 64-lane word per pass; several
-            // words per batch amortize the batcher loop without hurting
-            // latency at these eval costs.
-            Backend::Netlist { .. } => 8 * 64,
-            // One full pass per worker of the pool.
-            Backend::Compiled { pool, .. } => pool.lanes() * pool.threads(),
+            // The model knows its own pass shape (pool width, interp chunk
+            // amortization).
+            Backend::Model { model, .. } => model.max_batch_hint(),
             Backend::Fixture { .. } => usize::MAX,
         }
     }
@@ -165,30 +194,29 @@ impl Backend {
     pub fn num_features(&self) -> usize {
         match self {
             Backend::Pjrt(e) => e.features,
-            Backend::Netlist { num_features, .. } => *num_features,
-            Backend::Compiled { num_features, .. } => *num_features,
+            Backend::Model { model, .. } => model.num_features(),
             Backend::Fixture { num_features, .. } => *num_features,
         }
     }
 
-    /// The engine pool's telemetry handle (head-pack / lut-exec / tail
-    /// stage histograms + worker busy/idle), for backends that own a pool.
+    /// The serving engine's telemetry handle (head-pack / lut-exec / tail
+    /// stage histograms + worker busy/idle), for models that expose one.
     /// The serving loop attaches it to [`Metrics`] so serving snapshots
     /// cover the whole request path; benches read it directly.
     pub fn engine_telemetry(&self) -> Option<Arc<PoolTelemetry>> {
         match self {
-            Backend::Compiled { pool, .. } => Some(pool.telemetry()),
+            Backend::Model { model, .. } => model.telemetry_hooks().telemetry,
             _ => None,
         }
     }
 
-    /// The engine pool's runtime-activity profiler (per-level lut-exec time
-    /// plus sampled output density — `dwn profile`), for backends that own
-    /// a pool. Attached to [`Metrics`] by the serving loop like
+    /// The serving engine's runtime-activity profiler (per-level lut-exec
+    /// time plus sampled output density — `dwn profile`), for models that
+    /// expose one. Attached to [`Metrics`] by the serving loop like
     /// [`Self::engine_telemetry`].
     pub fn engine_activity(&self) -> Option<Arc<ActivityProfile>> {
         match self {
-            Backend::Compiled { pool, .. } => Some(pool.activity()),
+            Backend::Model { model, .. } => model.telemetry_hooks().activity,
             _ => None,
         }
     }
@@ -221,28 +249,7 @@ impl Backend {
                 let out = engine.execute_padded(&flat, rows.len())?;
                 Ok(out.pred)
             }
-            Backend::Netlist { netlist, frac_bits, index_width, .. } => {
-                // Pack fixed-point inputs straight into lane words, one
-                // 64-row chunk per eval pass — no per-row bit vectors. The
-                // shared packer rewrites the whole buffer per chunk, so a
-                // chunk smaller than one lane word can never see stale
-                // lanes from an earlier, larger chunk.
-                let mut lanes = Vec::new();
-                let mut scratch = Vec::new();
-                let mut outs = Vec::new();
-                let mut preds = Vec::with_capacity(rows.len());
-                for chunk in rows.chunks(64) {
-                    fixed::pack_chunk_rows(chunk, *frac_bits, netlist.num_inputs, &mut lanes);
-                    netlist.eval_lanes_with(&lanes, &mut scratch, &mut outs);
-                    for lane in 0..chunk.len() {
-                        preds.push(crate::util::decode_index_bits(*index_width, |i| {
-                            (outs[i] >> lane) & 1 == 1
-                        }));
-                    }
-                }
-                Ok(preds)
-            }
-            Backend::Compiled { pool, .. } => Ok(pool.infer_rows(rows)),
+            Backend::Model { model, .. } => Ok(model.infer_rows(rows)?),
             Backend::Fixture { delay, seen, .. } => {
                 if !delay.is_zero() {
                     std::thread::sleep(*delay);
@@ -266,19 +273,25 @@ impl Backend {
         self.infer_shared_traced(rows, None)
     }
 
-    /// [`Self::infer_shared`] with an optional trace handle: the compiled
-    /// backend threads the per-row sampled trace IDs into its shard jobs so
-    /// pool workers emit head-pack / per-level lut-exec / tail spans for
-    /// traced rows. Other backends ignore the handle — their traced
-    /// requests still get the coordinator-side spans (DESIGN.md §tracing
-    /// covers extending a new backend).
+    /// [`Self::infer_shared`] with an optional trace handle: pooled models
+    /// thread the per-row sampled trace IDs into their shard jobs so
+    /// workers emit head-pack / per-level lut-exec / tail spans for traced
+    /// rows. Other backends ignore the handle — their traced requests
+    /// still get the coordinator-side spans (DESIGN.md §tracing covers
+    /// extending a new backend).
     pub fn infer_shared_traced(
         &self,
         rows: Arc<[Row]>,
         trace: Option<PoolTrace>,
     ) -> Result<Vec<i32>> {
         match self {
-            Backend::Compiled { pool, .. } => Ok(pool.infer_shared_traced(rows, trace)),
+            Backend::Model { model, .. } => {
+                let out = model.infer_outcome(rows, trace);
+                match out.failures.into_iter().next() {
+                    Some(f) => Err(anyhow!(f.error)),
+                    None => Ok(out.preds),
+                }
+            }
             other => other.infer(&rows),
         }
     }
@@ -289,7 +302,7 @@ impl Backend {
     /// the affected rows; healthy rows' predictions are unaffected.
     pub fn infer_outcome(&self, rows: Arc<[Row]>, trace: Option<PoolTrace>) -> BatchOutcome {
         match self {
-            Backend::Compiled { pool, .. } => pool.infer_shared_outcome(rows, trace),
+            Backend::Model { model, .. } => model.infer_outcome(rows, trace),
             other => {
                 let n = rows.len();
                 match other.infer(&rows) {
@@ -612,11 +625,19 @@ impl Server {
     ) -> Server {
         Self::start_with(
             move || {
-                Ok(Backend::Netlist { netlist, frac_bits, num_features, num_classes, index_width })
+                Ok(Backend::netlist(netlist, frac_bits, num_features, num_classes, index_width))
             },
             cfg,
         )
         .expect("infallible factory")
+    }
+
+    /// Start over any registry-compiled model (`--engine` on the CLI): the
+    /// model moves into the executor thread and serves as-is, fallback and
+    /// faults attach through the [`CompiledModel`] trait.
+    pub fn start_model(model: Box<dyn CompiledModel>, cfg: ServerConfig) -> Server {
+        Self::start_with(move || Ok(Backend::from_model(model)), cfg)
+            .expect("infallible factory")
     }
 
     /// Start over a compiled execution plan ([`crate::engine`]). `lanes`
@@ -952,6 +973,7 @@ fn collect_batch(
             Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
         }
     }
+    prioritize_deadlines(&mut batch);
     metrics.record_stage(Stage::BatchForm, t_form.elapsed());
     if traced_id != 0 {
         if let Some(t) = tracer {
@@ -959,6 +981,37 @@ fn collect_batch(
         }
     }
     Some(batch)
+}
+
+/// Deadline scheduling, beyond dropping expired rows: order the batch so
+/// soon-to-expire rows evaluate (and reply) first. Backends evaluate rows
+/// in batch order and lane blocks complete front to back, so on a batch
+/// that spans several evaluation passes a near-deadline row placed early
+/// replies one or more pass-times sooner — the difference between meeting
+/// and missing the deadline the executor's second gate enforces.
+///
+/// The sort is stable and deadline-free rows keep their admission order
+/// after every deadlined row, so a server with no deadlines in flight sees
+/// exactly the pre-sort batch (the common case returns without touching
+/// the rows at all — one `any` scan per batch). Rows and waiters move by
+/// handle; feature buffers are not cloned.
+fn prioritize_deadlines(batch: &mut Batch) {
+    if !batch.waiters.iter().any(|w| w.deadline.is_some()) {
+        return;
+    }
+    let rows = std::mem::take(&mut batch.rows);
+    let waiters = std::mem::take(&mut batch.waiters);
+    let mut jobs: Vec<(Row, Waiter)> = rows.into_iter().zip(waiters).collect();
+    jobs.sort_by(|(_, a), (_, b)| match (a.deadline, b.deadline) {
+        (Some(x), Some(y)) => x.cmp(&y),
+        (Some(_), None) => std::cmp::Ordering::Less,
+        (None, Some(_)) => std::cmp::Ordering::Greater,
+        (None, None) => std::cmp::Ordering::Equal,
+    });
+    for (row, w) in jobs {
+        batch.rows.push(row);
+        batch.waiters.push(w);
+    }
 }
 
 /// Run one batch and splice the replies. The rows vector becomes the shared
@@ -1012,12 +1065,12 @@ fn execute_batch(
     }
     let n = rows.len();
     let rows: Arc<[Row]> = rows.into();
-    // Breaker routing: once tripped, every batch goes to the interpreter
-    // fallback (bit-identical decisions, no worker pool to fail). Sticky by
-    // design — a pool that has repeatedly failed is not re-trusted without
-    // a restart.
-    let degraded = metrics.breaker_tripped() && backend.fallback().is_some();
-    let serving = if degraded { backend.fallback().unwrap() } else { backend };
+    // Breaker routing: once tripped, every batch goes to the fallback
+    // model (bit-identical decisions, no worker pool to fail). Sticky by
+    // design — an engine that has repeatedly failed is not re-trusted
+    // without a restart.
+    let fallback = if metrics.breaker_tripped() { backend.fallback() } else { None };
+    let degraded = fallback.is_some();
     // Build the pool trace handle only when this batch carries a sampled
     // row — the untraced hot path stays a single `any` scan over the IDs.
     let trace = tracer
@@ -1027,7 +1080,10 @@ fn execute_batch(
             ids: waiters.iter().map(|w| w.trace_id).collect(),
         });
     let t0 = Instant::now();
-    let outcome = serving.infer_outcome(rows.clone(), trace);
+    let outcome = match fallback {
+        Some(fb) => fb.infer_outcome(rows.clone(), trace),
+        None => backend.infer_outcome(rows.clone(), trace),
+    };
     let exec = t0.elapsed();
     let done = Instant::now();
     let lats: Vec<Duration> = waiters.iter().map(|w| done - w.enqueued).collect();
@@ -1438,13 +1494,7 @@ mod tests {
             outputs: vec![Src::Lut(0)],
         };
         let plan = crate::engine::compile(&nl);
-        let netlist = Backend::Netlist {
-            netlist: nl,
-            frac_bits: 1,
-            num_features: 1,
-            num_classes: 2,
-            index_width: 1,
-        };
+        let netlist = Backend::netlist(nl, 1, 1, 2, 1);
         let compiled = Backend::compiled(plan, 1, 1, 2, 1, 64, 2);
         let rows: Vec<Row> = (0..333)
             .map(|i| Row::real(&[if i % 3 == 0 { -0.5 } else { 0.5 }]))
@@ -1464,13 +1514,7 @@ mod tests {
             outputs: vec![Src::Lut(0)],
         };
         let plan = crate::engine::compile(&nl);
-        let netlist = Backend::Netlist {
-            netlist: nl,
-            frac_bits: 1,
-            num_features: 1,
-            num_classes: 2,
-            index_width: 1,
-        };
+        let netlist = Backend::netlist(nl, 1, 1, 2, 1);
         let compiled = Backend::compiled(plan, 1, 1, 2, 1, 128, 2);
         let big: Vec<Row> = (0..160)
             .map(|i| Row::real(&[if i % 2 == 0 { 0.9 } else { -0.9 }]))

@@ -25,4 +25,4 @@ pub use crate::engine::{FaultPlan, InferError};
 pub use crate::util::fixed::Row;
 pub use batcher::{AdmissionPolicy, Backend, Reply, Server, ServerConfig, SubmitError};
 pub use metrics::{Metrics, Snapshot, StageSnapshot};
-pub use router::Router;
+pub use router::{Router, RouterRecv};

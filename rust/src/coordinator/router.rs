@@ -2,17 +2,105 @@
 //! requests routed by model name (vllm-router-style, scaled to this
 //! repo's single-node setting). Tracks per-model and aggregate stats and
 //! applies backpressure per model queue.
+//!
+//! Multi-tenant admission (ROADMAP network tier): a model may be deployed
+//! with a `max_inflight` budget ([`Router::deploy_with_budget`]) bounding
+//! how many of its requests can be in flight — queued, batched, or
+//! executing — at once. The budget is enforced *at the router*, before the
+//! server's queue is touched, so one tenant saturating its allowance sheds
+//! with a typed [`SubmitError::Backpressure`] while every other tenant's
+//! admission path is untouched. A slot is held by the returned
+//! [`RouterRecv`] and released when it drops — RAII, so abandoned callers
+//! can't leak budget.
 
-use super::batcher::{Reply, Server, ServerConfig};
+use super::batcher::{Reply, Server, ServerConfig, SubmitError};
 use super::metrics::Snapshot;
 use crate::util::fixed::Row;
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
-use std::sync::mpsc::Receiver;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvError, RecvTimeoutError, TryRecvError};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// One deployed model: its server plus the tenant's admission budget.
+struct Tenant {
+    server: Server,
+    /// Max in-flight requests admitted through the router (`None` =
+    /// unbudgeted, the plain [`Router::deploy`] path).
+    budget: Option<usize>,
+    /// Current in-flight count; shared with every outstanding permit.
+    inflight: Arc<AtomicUsize>,
+    /// Requests shed by *this* budget (disjoint from the server's own
+    /// queue-full sheds, which count in its [`Snapshot::rejected`]).
+    budget_sheds: AtomicU64,
+}
+
+impl Tenant {
+    fn new(server: Server, budget: Option<usize>) -> Self {
+        Tenant {
+            server,
+            budget,
+            inflight: Arc::new(AtomicUsize::new(0)),
+            budget_sheds: AtomicU64::new(0),
+        }
+    }
+
+    /// Claim one in-flight slot, or report the budget exhausted.
+    fn acquire(&self) -> std::result::Result<Option<InflightPermit>, SubmitError> {
+        let Some(max) = self.budget else { return Ok(None) };
+        let claimed = self
+            .inflight
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| {
+                (n < max).then_some(n + 1)
+            })
+            .is_ok();
+        if claimed {
+            Ok(Some(InflightPermit(self.inflight.clone())))
+        } else {
+            self.budget_sheds.fetch_add(1, Ordering::Relaxed);
+            Err(SubmitError::Backpressure)
+        }
+    }
+}
+
+/// RAII hold on one tenant in-flight slot.
+struct InflightPermit(Arc<AtomicUsize>);
+
+impl Drop for InflightPermit {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// A routed request's reply handle: the server's reply channel plus the
+/// tenant budget slot the request occupies. Dropping it (with or without
+/// receiving) releases the slot.
+pub struct RouterRecv {
+    rx: Receiver<Reply>,
+    _permit: Option<InflightPermit>,
+}
+
+impl RouterRecv {
+    pub fn recv(&self) -> std::result::Result<Reply, RecvError> {
+        self.rx.recv()
+    }
+
+    pub fn recv_timeout(
+        &self,
+        timeout: Duration,
+    ) -> std::result::Result<Reply, RecvTimeoutError> {
+        self.rx.recv_timeout(timeout)
+    }
+
+    pub fn try_recv(&self) -> std::result::Result<Reply, TryRecvError> {
+        self.rx.try_recv()
+    }
+}
 
 /// A named collection of model servers.
 pub struct Router {
-    servers: BTreeMap<String, Server>,
+    servers: BTreeMap<String, Tenant>,
 }
 
 impl Default for Router {
@@ -26,10 +114,20 @@ impl Router {
         Self { servers: BTreeMap::new() }
     }
 
-    /// Deploy a model under `name`. Replaces any previous deployment with
-    /// the same name (the old server drains on drop).
+    /// Deploy a model under `name` with no router-side admission budget.
+    /// Replaces any previous deployment with the same name (the old server
+    /// drains on drop).
     pub fn deploy(&mut self, name: &str, server: Server) {
-        self.servers.insert(name.to_string(), server);
+        self.servers.insert(name.to_string(), Tenant::new(server, None));
+    }
+
+    /// Deploy with a per-tenant admission budget: at most `max_inflight`
+    /// of this model's requests in flight through the router at once;
+    /// excess submits shed typed ([`SubmitError::Backpressure`]) and count
+    /// in [`Self::budget_sheds`], disjoint from the server's queue sheds.
+    pub fn deploy_with_budget(&mut self, name: &str, server: Server, max_inflight: usize) {
+        self.servers
+            .insert(name.to_string(), Tenant::new(server, Some(max_inflight.max(1))));
     }
 
     pub fn undeploy(&mut self, name: &str) -> bool {
@@ -40,22 +138,26 @@ impl Router {
         self.servers.keys().map(|s| s.as_str()).collect()
     }
 
-    /// Route a request to `model`; returns the reply channel (typed
+    /// Route a request to `model`; returns the reply handle (typed
     /// [`Reply`]: prediction or contained per-request inference error). One
     /// `Arc` allocation at admission; see [`Self::submit_row`] for
     /// zero-copy.
-    pub fn submit(&self, model: &str, features: &[f32]) -> Result<Receiver<Reply>> {
+    pub fn submit(&self, model: &str, features: &[f32]) -> Result<RouterRecv> {
         self.submit_row(model, Row::real(features))
     }
 
     /// Route an admitted [`Row`] to `model` — fully zero-copy: callers with
-    /// a row cache resubmit the same allocation any number of times.
-    pub fn submit_row(&self, model: &str, row: Row) -> Result<Receiver<Reply>> {
-        let server = self
+    /// a row cache resubmit the same allocation any number of times. Budget
+    /// and queue sheds both surface as a downcastable
+    /// [`SubmitError::Backpressure`] (`err.downcast_ref::<SubmitError>()`).
+    pub fn submit_row(&self, model: &str, row: Row) -> Result<RouterRecv> {
+        let tenant = self
             .servers
             .get(model)
             .ok_or_else(|| anyhow!("unknown model '{model}' (deployed: {:?})", self.models()))?;
-        Ok(server.submit_row(row)?)
+        let permit = tenant.acquire()?;
+        let rx = tenant.server.submit_row(row)?;
+        Ok(RouterRecv { rx, _permit: permit })
     }
 
     /// Blocking inference convenience.
@@ -64,19 +166,42 @@ impl Router {
         Ok(rx.recv().map_err(|_| anyhow!("server for '{model}' stopped"))??)
     }
 
+    /// Requests shed by `model`'s router-side budget (0 for unknown or
+    /// unbudgeted models).
+    pub fn budget_sheds(&self, model: &str) -> u64 {
+        self.servers
+            .get(model)
+            .map_or(0, |t| t.budget_sheds.load(Ordering::Relaxed))
+    }
+
     /// Per-model metric snapshots.
     pub fn stats(&self) -> BTreeMap<String, Snapshot> {
-        self.servers.iter().map(|(k, s)| (k.clone(), s.metrics.snapshot())).collect()
+        self.servers
+            .iter()
+            .map(|(k, t)| (k.clone(), t.server.metrics.snapshot()))
+            .collect()
     }
 
     /// Per-model snapshots as one JSON object keyed by model name — the
     /// exposition payload a network tier would serve from `/stats`
-    /// (ROADMAP: network serving tier).
+    /// (ROADMAP: network serving tier). Budgeted tenants additionally
+    /// carry their router-side `budget_sheds` count.
     pub fn stats_json(&self) -> crate::json::Value {
         crate::json::Value::Obj(
             self.servers
                 .iter()
-                .map(|(k, s)| (k.clone(), s.metrics.snapshot().to_json()))
+                .map(|(k, t)| {
+                    let mut v = t.server.metrics.snapshot().to_json();
+                    if let crate::json::Value::Obj(m) = &mut v {
+                        m.insert(
+                            "budget_sheds".to_string(),
+                            crate::json::Value::Num(
+                                t.budget_sheds.load(Ordering::Relaxed) as f64
+                            ),
+                        );
+                    }
+                    (k.clone(), v)
+                })
                 .collect(),
         )
     }
@@ -84,12 +209,18 @@ impl Router {
     /// Aggregate requests served across models (counter reads — no
     /// latency-history snapshot per poll).
     pub fn total_requests(&self) -> u64 {
-        self.servers.values().map(|s| s.metrics.requests()).sum()
+        self.servers.values().map(|t| t.server.metrics.requests()).sum()
     }
 
-    /// Aggregate requests shed at admission across models.
+    /// Aggregate requests shed at admission across models — server queue
+    /// sheds plus router budget sheds.
     pub fn total_rejected(&self) -> u64 {
-        self.servers.values().map(|s| s.metrics.rejected()).sum()
+        self.servers
+            .values()
+            .map(|t| {
+                t.server.metrics.rejected() + t.budget_sheds.load(Ordering::Relaxed)
+            })
+            .sum()
     }
 
     /// Aggregate anomaly triggers (latency + shed-burst) across traced
@@ -98,7 +229,7 @@ impl Router {
     pub fn total_anomalies(&self) -> u64 {
         self.servers
             .values()
-            .filter_map(|s| s.metrics.tracer())
+            .filter_map(|t| t.server.metrics.tracer())
             .map(|t| {
                 let st = t.stats();
                 st.latency_anomalies + st.shed_bursts
@@ -115,8 +246,9 @@ pub fn emulation_server_config() -> ServerConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::batcher::Server;
+    use crate::coordinator::batcher::{Backend, Server};
     use crate::techmap::{LutNetlist, MappedLut, Src};
+    use std::time::Duration;
 
     /// Identity-ish toy model: predicts sign bit of the single feature.
     fn toy_server(invert: bool) -> Server {
@@ -127,6 +259,13 @@ mod tests {
             outputs: vec![Src::Lut(0)],
         };
         Server::start_netlist(nl, 1, 1, 2, 1, ServerConfig::default())
+    }
+
+    /// Fixture-backed server whose batches stall, keeping requests in
+    /// flight long enough to pin budget behavior deterministically.
+    fn slow_server(delay_ms: u64) -> Server {
+        let (backend, _seen) = Backend::fixture(1, Duration::from_millis(delay_ms));
+        Server::start_with(move || Ok(backend), ServerConfig::default()).unwrap()
     }
 
     #[test]
@@ -161,6 +300,62 @@ mod tests {
         assert!(router.undeploy("a"));
         assert!(!router.undeploy("a"));
         assert!(router.infer("a", &[0.5]).is_err());
+    }
+
+    #[test]
+    fn budget_sheds_typed_and_releases_on_reply_drop() {
+        let mut router = Router::new();
+        router.deploy_with_budget("slow", slow_server(100), 3);
+        router.deploy("fast", toy_server(false));
+        // Fill the budget; the 100ms fixture batch keeps all 3 in flight.
+        let held: Vec<RouterRecv> =
+            (0..3).map(|_| router.submit("slow", &[0.5]).unwrap()).collect();
+        // Budget exhausted: typed, downcastable backpressure at the router.
+        let err = router.submit("slow", &[0.5]).unwrap_err();
+        assert_eq!(
+            err.downcast_ref::<SubmitError>(),
+            Some(&SubmitError::Backpressure),
+            "budget shed must downcast to SubmitError: {err}"
+        );
+        assert_eq!(router.budget_sheds("slow"), 1);
+        // The other tenant's admission path is untouched.
+        assert_eq!(router.infer("fast", &[-0.5]).unwrap(), 1);
+        assert_eq!(router.budget_sheds("fast"), 0);
+        // Receiving and dropping the handles releases the slots.
+        for rx in held {
+            assert_eq!(rx.recv().unwrap().unwrap(), 1);
+            drop(rx);
+        }
+        let rx = router.submit("slow", &[0.5]).expect("budget released");
+        assert_eq!(rx.recv().unwrap().unwrap(), 1);
+        assert_eq!(router.budget_sheds("slow"), 1, "no new sheds after release");
+        // Server-side rejected stays disjoint from router budget sheds.
+        assert_eq!(router.stats()["slow"].rejected, 0);
+        assert_eq!(router.total_rejected(), 1);
+    }
+
+    #[test]
+    fn abandoned_reply_handle_cannot_leak_budget() {
+        let mut router = Router::new();
+        router.deploy_with_budget("m", toy_server(false), 1);
+        for _ in 0..5 {
+            // Submit and immediately abandon the handle without receiving;
+            // the RAII permit must free the slot every time.
+            let rx = router.submit("m", &[0.5]).expect("slot free each round");
+            drop(rx);
+        }
+        assert_eq!(router.budget_sheds("m"), 0);
+    }
+
+    #[test]
+    fn stats_json_carries_budget_sheds_for_budgeted_tenants() {
+        let mut router = Router::new();
+        router.deploy_with_budget("slow", slow_server(100), 1);
+        let _held = router.submit("slow", &[0.5]).unwrap();
+        let _ = router.submit("slow", &[0.5]).unwrap_err();
+        let json = router.stats_json();
+        let sheds = json.get("slow").unwrap().get("budget_sheds").unwrap();
+        assert_eq!(sheds.as_f64().unwrap(), 1.0);
     }
 
     #[test]

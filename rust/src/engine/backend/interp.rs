@@ -1,0 +1,162 @@
+//! The interpreter backend: chunked lane evaluation straight off the
+//! mapped netlist, no plan compilation, no worker pool.
+//!
+//! This is the reference software path (and the breaker's degradation
+//! target — DESIGN.md §faults): simple enough to trust, slow enough that
+//! nothing serves on it by choice. Optimization levels still apply — the
+//! pass pipeline rewrites the netlist itself, so the interpreter serves
+//! the optimized cone like every other backend.
+
+use super::super::passes::{run_pipeline, OptLevel};
+use super::super::pool::{BatchOutcome, PoolTrace, ShardFailure};
+use super::{CompileModes, CompiledModel, EvalBackend};
+use crate::engine::fault::InferError;
+use crate::techmap::LutNetlist;
+use crate::util::fixed::{self, Row};
+use std::sync::Arc;
+
+/// Chunked netlist interpreter (`--engine interp`).
+pub struct InterpBackend;
+
+impl EvalBackend for InterpBackend {
+    fn name(&self) -> &'static str {
+        "interp"
+    }
+
+    fn description(&self) -> &'static str {
+        "chunked netlist interpreter (reference path, breaker fallback)"
+    }
+
+    fn compile(
+        &self,
+        nl: &LutNetlist,
+        modes: &CompileModes<'_>,
+        opt: OptLevel,
+    ) -> Box<dyn CompiledModel> {
+        // The pass pipeline transforms the netlist itself; serving the
+        // optimized netlist keeps interp decisions aligned with the
+        // compiled backends at every opt level (conformance-pinned).
+        let netlist = run_pipeline(nl, modes.tags, modes.head, modes.tail, opt).netlist;
+        Box::new(InterpModel {
+            netlist,
+            frac_bits: modes.frac_bits,
+            num_features: modes.num_features,
+            num_classes: modes.num_classes,
+            index_width: modes.index_width,
+        })
+    }
+}
+
+/// A netlist plus its serving interface; evaluation state is per-call.
+pub(crate) struct InterpModel {
+    pub(crate) netlist: LutNetlist,
+    pub(crate) frac_bits: u32,
+    pub(crate) num_features: usize,
+    pub(crate) num_classes: usize,
+    pub(crate) index_width: usize,
+}
+
+impl InterpModel {
+    fn eval(&self, rows: &[Row]) -> Vec<i32> {
+        // Pack fixed-point inputs straight into lane words, one 64-row
+        // chunk per eval pass — no per-row bit vectors. The shared packer
+        // rewrites the whole buffer per chunk, so a chunk smaller than one
+        // lane word can never see stale lanes from an earlier, larger
+        // chunk.
+        let mut lanes = Vec::new();
+        let mut scratch = Vec::new();
+        let mut outs = Vec::new();
+        let mut preds = Vec::with_capacity(rows.len());
+        for chunk in rows.chunks(64) {
+            fixed::pack_chunk_rows(chunk, self.frac_bits, self.netlist.num_inputs, &mut lanes);
+            self.netlist.eval_lanes_with(&lanes, &mut scratch, &mut outs);
+            for lane in 0..chunk.len() {
+                preds.push(crate::util::decode_index_bits(self.index_width, |i| {
+                    (outs[i] >> lane) & 1 == 1
+                }));
+            }
+        }
+        preds
+    }
+}
+
+impl CompiledModel for InterpModel {
+    fn engine(&self) -> &'static str {
+        "interp"
+    }
+
+    fn num_features(&self) -> usize {
+        self.num_features
+    }
+
+    fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    fn frac_bits(&self) -> u32 {
+        self.frac_bits
+    }
+
+    fn index_width(&self) -> usize {
+        self.index_width
+    }
+
+    fn max_batch_hint(&self) -> usize {
+        // A handful of lane words per batch keeps drain latency bounded on
+        // the slow path.
+        8 * 64
+    }
+
+    fn infer_outcome(&self, rows: Arc<[Row]>, _trace: Option<PoolTrace>) -> BatchOutcome {
+        // The interpreter has no shard structure: evaluation either
+        // completes or (on a malformed row) panics whole-batch; contain it
+        // to one typed failure covering the batch.
+        let n = rows.len();
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| self.eval(&rows))) {
+            Ok(preds) => BatchOutcome { preds, failures: Vec::new() },
+            Err(_) => BatchOutcome {
+                preds: vec![0; n],
+                failures: vec![ShardFailure {
+                    start: 0,
+                    len: n,
+                    error: InferError::Backend("interpreter evaluation panicked".into()),
+                }],
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{HeadMode, TailMode};
+    use crate::techmap::{MappedLut, Src};
+
+    #[test]
+    fn interp_serves_optimized_netlist_identically() {
+        // Constant-foldable pair on top of a live sign LUT: opt levels
+        // shrink the netlist but decisions must not move.
+        let nl = LutNetlist {
+            num_inputs: 2,
+            luts: vec![
+                MappedLut { inputs: vec![Src::Input(1)], table: 0b10 },
+                MappedLut { inputs: vec![Src::Const(false), Src::Lut(0)], table: 0b1110 },
+            ],
+            outputs: vec![Src::Lut(1)],
+        };
+        let modes = CompileModes {
+            head_mode: HeadMode::Lut,
+            tail_mode: TailMode::Lut,
+            ..CompileModes::bare(1, 1, 2, 1)
+        };
+        let rows: Vec<Row> =
+            (0..100).map(|i| Row::real(&[if i % 3 == 0 { -0.9 } else { 0.9 }])).collect();
+        let m0 = InterpBackend.compile(&nl, &modes, OptLevel::None);
+        let m2 = InterpBackend.compile(&nl, &modes, OptLevel::Max);
+        assert_eq!(
+            m0.infer_rows(&rows).unwrap(),
+            m2.infer_rows(&rows).unwrap(),
+            "opt passes changed interp decisions"
+        );
+    }
+}

@@ -1,0 +1,300 @@
+//! Pluggable execution backends (DESIGN.md §engine).
+//!
+//! Every way this repo can evaluate a mapped netlist — the chunked
+//! interpreter, the SoA `ExecPlan` + [`EnginePool`] path, the fused
+//! per-table dispatch engine, and whatever comes next (SIMD, codegen) —
+//! sits behind one pair of traits:
+//!
+//! * [`EvalBackend`] is the *compiler*: `name()` + `compile(netlist,
+//!   modes, opt)` producing a ready-to-serve model. Backends are stateless
+//!   and cheap to construct; [`registry`] enumerates every built one.
+//! * [`CompiledModel`] is the *servable artifact*: batch inference
+//!   ([`CompiledModel::infer_outcome`] with typed per-shard containment),
+//!   plus the hooks the coordinator attaches — telemetry handles, fault
+//!   injection, compile stats.
+//!
+//! The serving coordinator holds a `Box<dyn CompiledModel>` and nothing
+//! else; the conformance harness iterates [`registry`] so a backend that
+//! registers here is bit-identity-gated against the gate simulator
+//! automatically (`tests/conformance.rs::registry_backends_are_conformant`
+//! fails the build if the matrix and the registry drift apart). Per the
+//! ROADMAP guardrail, add a new backend to that harness *before* wiring it
+//! anywhere near the coordinator — with this module, registering it *is*
+//! adding it to the harness.
+
+mod interp;
+mod pooled;
+
+pub use interp::InterpBackend;
+pub use pooled::{FusedBackend, PoolBackend, PooledModel};
+
+use super::fault::{FaultPlan, InferError};
+use super::head::HeadMode;
+use super::passes::OptLevel;
+use super::plan::{CompileStats, ExecPlan};
+use super::pool::{BatchOutcome, PoolTrace};
+use super::profile::ActivityProfile;
+use super::tail::TailMode;
+use crate::hwgen::{Component, HeadInfo, TailInfo};
+use crate::techmap::LutNetlist;
+use crate::telemetry::PoolTelemetry;
+use crate::util::fixed::Row;
+use std::sync::Arc;
+
+/// Everything a backend needs to compile a mapped netlist into a servable
+/// model, beyond the netlist itself: the stage metadata that enables the
+/// native head/tail truncations, the serving interface (fixed-point word
+/// width, feature/class counts), and the pool shape.
+///
+/// Metadata fields are optional for the same reason they are on
+/// [`super::compile_for_modes`]: synthetic netlists and tests compile
+/// without accelerator provenance, and every backend must degrade to full
+/// LUT emulation when they are absent.
+pub struct CompileModes<'a> {
+    /// Per-LUT stage tags from the accelerator build (`None` = untagged).
+    pub tags: Option<&'a [Component]>,
+    /// Encoder-head structure for `HeadMode::Native` truncation.
+    pub head: Option<&'a HeadInfo>,
+    /// Popcount/argmax tail structure for `TailMode::Native` truncation.
+    pub tail: Option<&'a TailInfo>,
+    pub head_mode: HeadMode,
+    pub tail_mode: TailMode,
+    /// Fractional bits of the serving fixed-point grid.
+    pub frac_bits: u32,
+    pub num_features: usize,
+    pub num_classes: usize,
+    /// Output bits forming the predicted class index.
+    pub index_width: usize,
+    /// Lane vectors per evaluation pass (rounded up to ×64 by pooled
+    /// backends; the interpreter ignores it).
+    pub lanes: usize,
+    /// Worker threads (pooled backends; the interpreter ignores it).
+    pub threads: usize,
+}
+
+impl<'a> CompileModes<'a> {
+    /// Modes for a bare synthetic netlist: no stage metadata, full LUT
+    /// emulation, single-threaded 64-lane pool shape.
+    pub fn bare(
+        frac_bits: u32,
+        num_features: usize,
+        num_classes: usize,
+        index_width: usize,
+    ) -> Self {
+        CompileModes {
+            tags: None,
+            head: None,
+            tail: None,
+            head_mode: HeadMode::Lut,
+            tail_mode: TailMode::Lut,
+            frac_bits,
+            num_features,
+            num_classes,
+            index_width,
+            lanes: 64,
+            threads: 1,
+        }
+    }
+}
+
+/// Shared telemetry handles a model exposes so the coordinator can fold
+/// engine-side observations into its [`crate::coordinator::Metrics`]
+/// snapshots (DESIGN.md §telemetry). Backends without engine
+/// instrumentation (the interpreter) return the default — both `None` —
+/// and the coordinator serves without engine-stage percentiles.
+#[derive(Default, Clone)]
+pub struct TelemetryHooks {
+    /// Pool stage histograms + busy/idle + worker-death counters.
+    pub telemetry: Option<Arc<PoolTelemetry>>,
+    /// Runtime activity profile (`dwn profile`, BENCH activity summaries).
+    pub activity: Option<Arc<ActivityProfile>>,
+}
+
+/// A compiled, ready-to-serve model: the artifact an [`EvalBackend`]
+/// produces and the only thing the serving coordinator holds.
+///
+/// `Send` because the coordinator's factory closure moves the model into
+/// the drainer/executor threads.
+pub trait CompiledModel: Send {
+    /// The backend that produced this model (registry name — stable, used
+    /// in BENCH_serve.json's per-arm `engine` field and `--engine` flags).
+    fn engine(&self) -> &'static str;
+
+    fn num_features(&self) -> usize;
+    fn num_classes(&self) -> usize;
+    fn frac_bits(&self) -> u32;
+    fn index_width(&self) -> usize;
+
+    /// Largest batch the model evaluates in one pass without internal
+    /// re-sharding losses; the coordinator clamps its batch size to this.
+    fn max_batch_hint(&self) -> usize;
+
+    /// Compile-time area accounting, when the backend compiles to an
+    /// [`ExecPlan`] (`None` for the interpreter).
+    fn stats(&self) -> Option<CompileStats> {
+        None
+    }
+
+    /// The underlying execution plan, when there is one. Surfaces
+    /// (`dwn breakdown`, property tests) introspect depth/segments here.
+    fn plan(&self) -> Option<&ExecPlan> {
+        None
+    }
+
+    /// Containment-aware batch evaluation: predictions for every row plus
+    /// typed [`super::ShardFailure`]s for any rows that could not be
+    /// served. Must never panic on evaluation failure — that is the whole
+    /// contract the coordinator's failure containment builds on.
+    fn infer_outcome(&self, rows: Arc<[Row]>, trace: Option<PoolTrace>) -> BatchOutcome;
+
+    /// Whole-batch evaluation: `Err` of the first shard failure if any row
+    /// failed, else predictions for every row.
+    fn infer_shared(&self, rows: Arc<[Row]>) -> Result<Vec<i32>, InferError> {
+        let out = self.infer_outcome(rows, None);
+        match out.failures.first() {
+            Some(f) => Err(f.error.clone()),
+            None => Ok(out.preds),
+        }
+    }
+
+    /// [`Self::infer_shared`] over borrowed rows (handle clones only).
+    fn infer_rows(&self, rows: &[Row]) -> Result<Vec<i32>, InferError> {
+        self.infer_shared(rows.iter().cloned().collect())
+    }
+
+    /// Engine-side telemetry handles for coordinator attach; default none.
+    fn telemetry_hooks(&self) -> TelemetryHooks {
+        TelemetryHooks::default()
+    }
+
+    /// Arm a deterministic fault-injection plan (chaos tests,
+    /// `dwn serve --fault-plan`). Backends without injectable faults
+    /// ignore it.
+    fn arm_faults(&self, _plan: Arc<FaultPlan>) {}
+}
+
+/// One execution strategy: compiles a mapped netlist (plus stage metadata
+/// and serving modes) into a [`CompiledModel`]. Implementations are
+/// zero-sized and stateless — all state lives in the model they produce.
+pub trait EvalBackend: Send + Sync {
+    /// Stable registry name (`--engine <name>`).
+    fn name(&self) -> &'static str;
+
+    /// One-line description for `--engine` help and docs.
+    fn description(&self) -> &'static str;
+
+    /// Compile `nl` under `modes` at optimization level `opt`. Every
+    /// backend must produce bit-identical class decisions for the same
+    /// `(nl, modes, opt)` — pinned by the conformance harness across the
+    /// whole head×tail × encoder-architecture matrix.
+    fn compile(
+        &self,
+        nl: &LutNetlist,
+        modes: &CompileModes<'_>,
+        opt: OptLevel,
+    ) -> Box<dyn CompiledModel>;
+}
+
+/// Every built execution backend, in presentation order. The conformance
+/// harness iterates this — registering a backend here *is* entering it
+/// into the bit-identity matrix.
+pub fn registry() -> Vec<Box<dyn EvalBackend>> {
+    vec![
+        Box::new(InterpBackend),
+        Box::new(PoolBackend),
+        Box::new(FusedBackend),
+    ]
+}
+
+/// Look up a backend by registry name (`--engine` flag parsing).
+pub fn by_name(name: &str) -> Option<Box<dyn EvalBackend>> {
+    registry().into_iter().find(|b| b.name() == name)
+}
+
+/// Registry names, for help text and error messages.
+pub fn names() -> Vec<&'static str> {
+    registry().iter().map(|b| b.name()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::techmap::{MappedLut, Src};
+
+    /// 1 feature, 2-bit word, prediction = sign bit (matches the pool
+    /// tests' fixture so cross-module expectations line up).
+    fn sign_netlist() -> LutNetlist {
+        LutNetlist {
+            num_inputs: 2,
+            luts: vec![MappedLut { inputs: vec![Src::Input(1)], table: 0b10 }],
+            outputs: vec![Src::Lut(0)],
+        }
+    }
+
+    #[test]
+    fn registry_names_are_unique_and_resolvable() {
+        let names = names();
+        for (i, n) in names.iter().enumerate() {
+            assert!(!names[..i].contains(n), "duplicate backend name {n}");
+            let b = by_name(n).expect("registered name must resolve");
+            assert_eq!(b.name(), *n);
+            assert!(!b.description().is_empty());
+        }
+        assert!(by_name("no-such-engine").is_none());
+    }
+
+    #[test]
+    fn every_backend_serves_the_sign_model_identically() {
+        let nl = sign_netlist();
+        let modes = CompileModes::bare(1, 1, 2, 1);
+        let rows: Vec<Row> = (0..130)
+            .map(|i| Row::real(&[if i % 3 == 0 { -0.9 } else { 0.9 }]))
+            .collect();
+        let want: Vec<i32> = (0..130).map(|i| i32::from(i % 3 == 0)).collect();
+        for opt in [OptLevel::None, OptLevel::Max] {
+            for b in registry() {
+                let model = b.compile(&nl, &modes, opt);
+                assert_eq!(model.engine(), b.name());
+                assert_eq!(model.num_features(), 1);
+                assert_eq!(model.num_classes(), 2);
+                assert_eq!(model.frac_bits(), 1);
+                assert_eq!(model.index_width(), 1);
+                assert!(model.max_batch_hint() >= 1);
+                let got = model.infer_rows(&rows).expect("clean batch");
+                assert_eq!(got, want, "backend {} at opt {}", b.name(), opt.label());
+                // Containment path agrees and reports no failures.
+                let out = model.infer_outcome(rows.iter().cloned().collect(), None);
+                assert!(out.failures.is_empty());
+                assert_eq!(out.preds, want);
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_backends_expose_plan_stats_and_telemetry() {
+        let nl = sign_netlist();
+        let modes = CompileModes::bare(1, 1, 2, 1);
+        for name in ["pool", "fused"] {
+            let model = by_name(name).unwrap().compile(&nl, &modes, OptLevel::None);
+            assert!(model.plan().is_some(), "{name} has an ExecPlan");
+            assert!(model.stats().is_some(), "{name} has compile stats");
+            let hooks = model.telemetry_hooks();
+            assert!(hooks.telemetry.is_some() && hooks.activity.is_some());
+        }
+        let interp = by_name("interp").unwrap().compile(&nl, &modes, OptLevel::None);
+        assert!(interp.plan().is_none());
+        let hooks = interp.telemetry_hooks();
+        assert!(hooks.telemetry.is_none() && hooks.activity.is_none());
+    }
+
+    #[test]
+    fn empty_batch_is_a_clean_default_outcome() {
+        let nl = sign_netlist();
+        let modes = CompileModes::bare(1, 1, 2, 1);
+        for b in registry() {
+            let model = b.compile(&nl, &modes, OptLevel::None);
+            let out = model.infer_outcome(Vec::new().into(), None);
+            assert!(out.preds.is_empty() && out.failures.is_empty(), "{}", b.name());
+        }
+    }
+}

@@ -1,0 +1,239 @@
+//! The pooled execution backends: SoA `ExecPlan` compiled via
+//! `compile_for_modes_opt`, served by a persistent [`EnginePool`].
+//!
+//! Two registry entries share this model type and differ only in the
+//! worker inner loop:
+//!
+//! * `pool` — per-op truth-table dispatch ([`Executor::run`]'s default).
+//! * `fused` — per-table group sweeps ([`super::super::FusedSchedule`]):
+//!   each level's ops are regrouped by canonical truth table so the
+//!   Shannon-cofactor branch tree resolves once per group instead of once
+//!   per op-word. Same plan, same head/tail packing, same supervision and
+//!   fault containment — bit-identical decisions by construction, faster
+//!   on the table-duplicate-heavy netlists thermometer encoding produces.
+
+use super::super::fault::{FaultPlan, InferError};
+use super::super::passes::{compile_for_modes_opt, OptLevel};
+use super::super::plan::{CompileStats, ExecPlan};
+use super::super::pool::{BatchOutcome, EnginePool, PoolTrace, ShardFailure};
+use super::{CompileModes, CompiledModel, EvalBackend, TelemetryHooks};
+use crate::techmap::LutNetlist;
+use crate::util::fixed::Row;
+use std::sync::Arc;
+
+/// Persistent-pool backend with per-op dispatch (`--engine pool`).
+pub struct PoolBackend;
+
+/// Persistent-pool backend with fused per-table dispatch
+/// (`--engine fused`).
+pub struct FusedBackend;
+
+impl EvalBackend for PoolBackend {
+    fn name(&self) -> &'static str {
+        "pool"
+    }
+
+    fn description(&self) -> &'static str {
+        "persistent worker pool over a compiled SoA plan, per-op dispatch"
+    }
+
+    fn compile(
+        &self,
+        nl: &LutNetlist,
+        modes: &CompileModes<'_>,
+        opt: OptLevel,
+    ) -> Box<dyn CompiledModel> {
+        Box::new(PooledModel::compile(nl, modes, opt, false))
+    }
+}
+
+impl EvalBackend for FusedBackend {
+    fn name(&self) -> &'static str {
+        "fused"
+    }
+
+    fn description(&self) -> &'static str {
+        "persistent worker pool with fused per-table dispatch loops"
+    }
+
+    fn compile(
+        &self,
+        nl: &LutNetlist,
+        modes: &CompileModes<'_>,
+        opt: OptLevel,
+    ) -> Box<dyn CompiledModel> {
+        Box::new(PooledModel::compile(nl, modes, opt, true))
+    }
+}
+
+/// An [`EnginePool`] plus its serving interface — the servable artifact
+/// both pooled backends produce.
+pub struct PooledModel {
+    pool: EnginePool,
+    engine: &'static str,
+    num_features: usize,
+    num_classes: usize,
+}
+
+impl PooledModel {
+    fn compile(nl: &LutNetlist, modes: &CompileModes<'_>, opt: OptLevel, fused: bool) -> Self {
+        let plan = compile_for_modes_opt(
+            nl,
+            modes.tags,
+            modes.head,
+            modes.tail,
+            modes.head_mode,
+            modes.tail_mode,
+            opt,
+        );
+        Self::from_plan(
+            Arc::new(plan),
+            modes.frac_bits,
+            modes.num_features,
+            modes.num_classes,
+            modes.index_width,
+            modes.lanes,
+            modes.threads,
+            fused,
+        )
+    }
+
+    /// Wrap an already-compiled plan (the CLI compiles once and reuses the
+    /// plan for breakdown rows and serving).
+    #[allow(clippy::too_many_arguments)]
+    pub fn from_plan(
+        plan: Arc<ExecPlan>,
+        frac_bits: u32,
+        num_features: usize,
+        num_classes: usize,
+        index_width: usize,
+        lanes: usize,
+        threads: usize,
+        fused: bool,
+    ) -> Self {
+        let pool = if fused {
+            EnginePool::new_fused(plan, lanes, threads, frac_bits, index_width)
+        } else {
+            EnginePool::new(plan, lanes, threads, frac_bits, index_width)
+        };
+        PooledModel {
+            pool,
+            engine: if fused { "fused" } else { "pool" },
+            num_features,
+            num_classes,
+        }
+    }
+
+    pub fn pool(&self) -> &EnginePool {
+        &self.pool
+    }
+}
+
+impl CompiledModel for PooledModel {
+    fn engine(&self) -> &'static str {
+        self.engine
+    }
+
+    fn num_features(&self) -> usize {
+        self.num_features
+    }
+
+    fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    fn frac_bits(&self) -> u32 {
+        self.pool.frac_bits()
+    }
+
+    fn index_width(&self) -> usize {
+        self.pool.index_width()
+    }
+
+    fn max_batch_hint(&self) -> usize {
+        // One full pass per worker of the pool.
+        self.pool.lanes() * self.pool.threads()
+    }
+
+    fn stats(&self) -> Option<CompileStats> {
+        Some(self.pool.plan().stats)
+    }
+
+    fn plan(&self) -> Option<&ExecPlan> {
+        Some(self.pool.plan())
+    }
+
+    fn infer_outcome(&self, rows: Arc<[Row]>, trace: Option<PoolTrace>) -> BatchOutcome {
+        self.pool.infer_shared_outcome(rows, trace)
+    }
+
+    fn infer_shared(&self, rows: Arc<[Row]>) -> Result<Vec<i32>, InferError> {
+        let out = self.pool.infer_shared_outcome(rows, None);
+        match out.failures.first() {
+            Some(ShardFailure { error, .. }) => Err(error.clone()),
+            None => Ok(out.preds),
+        }
+    }
+
+    fn telemetry_hooks(&self) -> TelemetryHooks {
+        TelemetryHooks {
+            telemetry: Some(self.pool.telemetry()),
+            activity: Some(self.pool.activity()),
+        }
+    }
+
+    fn arm_faults(&self, plan: Arc<FaultPlan>) {
+        self.pool.arm_faults(plan);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::backend::by_name;
+    use crate::techmap::{MappedLut, Src};
+
+    #[test]
+    fn fused_model_reports_its_engine_and_matches_pool() {
+        let nl = LutNetlist {
+            num_inputs: 2,
+            luts: vec![
+                MappedLut { inputs: vec![Src::Input(1)], table: 0b10 },
+                MappedLut { inputs: vec![Src::Input(0)], table: 0b10 },
+                MappedLut { inputs: vec![Src::Lut(0), Src::Lut(1)], table: 0b0110 },
+            ],
+            outputs: vec![Src::Lut(2)],
+        };
+        let modes = CompileModes::bare(1, 1, 2, 1);
+        let pool = by_name("pool").unwrap().compile(&nl, &modes, OptLevel::None);
+        let fused = by_name("fused").unwrap().compile(&nl, &modes, OptLevel::None);
+        assert_eq!(pool.engine(), "pool");
+        assert_eq!(fused.engine(), "fused");
+        let rows: Vec<Row> =
+            (0..200).map(|i| Row::real(&[(i as f32 / 100.0) - 1.0])).collect();
+        assert_eq!(
+            fused.infer_rows(&rows).unwrap(),
+            pool.infer_rows(&rows).unwrap(),
+            "fused dispatch changed decisions"
+        );
+    }
+
+    #[test]
+    fn fused_faults_stay_contained() {
+        let nl = LutNetlist {
+            num_inputs: 2,
+            luts: vec![MappedLut { inputs: vec![Src::Input(1)], table: 0b10 }],
+            outputs: vec![Src::Lut(0)],
+        };
+        let modes = CompileModes::bare(1, 1, 2, 1);
+        let model = by_name("fused").unwrap().compile(&nl, &modes, OptLevel::None);
+        model.arm_faults(Arc::new("panic@0".parse().unwrap()));
+        let rows: Arc<[Row]> = (0..10).map(|_| Row::real(&[0.5])).collect();
+        let out = model.infer_outcome(rows.clone(), None);
+        assert_eq!(out.failures.len(), 1);
+        assert_eq!(out.failures[0].error, InferError::WorkerPanic);
+        // Worker recovered; next batch is clean.
+        let again = model.infer_outcome(rows, None);
+        assert!(again.failures.is_empty());
+    }
+}

@@ -1,8 +1,10 @@
 //! Wide execution of an [`ExecPlan`]: W×64 lanes per pass over a reusable
 //! SoA value buffer, plus scoped-thread sharding of batches across cores.
 
+use super::fused::FusedSchedule;
 use super::plan::{ExecPlan, OutSrc};
 use crate::logic::sim::eval_table_lanes;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Reusable evaluator over one plan. The value buffer holds `words` lane
@@ -15,6 +17,11 @@ pub struct Executor<'p> {
     /// Level-bucket scratch for the native head packer (empty when the plan
     /// has no head) — kept here so steady-state packing allocates nothing.
     head_acc: Vec<u64>,
+    /// Per-table fused dispatch schedule (the `fused` engine): when present,
+    /// [`Self::run`] sweeps segment groups with the truth table hoisted
+    /// loop-invariant instead of re-dispatching per op. Same ops, same slot
+    /// writes — bit-identical by the levelization argument in `fused.rs`.
+    fused: Option<Arc<FusedSchedule>>,
 }
 
 impl<'p> Executor<'p> {
@@ -28,7 +35,22 @@ impl<'p> Executor<'p> {
                 .and_then(|h| h.features.iter().map(|f| f.thresholds.len() + 1).max())
                 .unwrap_or(0)
         ];
-        Self { plan, words, buf: vec![0u64; plan.num_slots() * words], head_acc }
+        Self { plan, words, buf: vec![0u64; plan.num_slots() * words], head_acc, fused: None }
+    }
+
+    /// [`Self::new`] with a fused per-table dispatch schedule built for the
+    /// same plan (see [`FusedSchedule`]); `run`/`run_attributed` and the
+    /// serving block evaluator then execute group-wise. Panics if the
+    /// schedule was built for a different plan shape.
+    pub fn with_schedule(plan: &'p ExecPlan, lanes: usize, sched: Arc<FusedSchedule>) -> Self {
+        assert_eq!(
+            sched.ops(),
+            plan.ops.len(),
+            "fused schedule does not match the plan"
+        );
+        let mut ex = Self::new(plan, lanes);
+        ex.fused = Some(sched);
+        ex
     }
 
     /// Vectors evaluated per pass.
@@ -112,9 +134,17 @@ impl<'p> Executor<'p> {
         (self.plan, self.words, &mut self.buf, &mut self.head_acc)
     }
 
-    /// Evaluate every op for the current inputs.
+    /// Evaluate every op for the current inputs — per-op dispatch, or the
+    /// fused per-table group sweep when a schedule is attached.
     pub fn run(&mut self) {
-        self.run_ops(0..self.plan.ops.len());
+        match self.fused.clone() {
+            Some(s) => {
+                for si in 0..s.seg_groups.len() {
+                    self.run_fused_segment(&s, si);
+                }
+            }
+            None => self.run_ops(0..self.plan.ops.len()),
+        }
     }
 
     /// Evaluate with per-segment wall-clock attribution: returns one
@@ -122,14 +152,24 @@ impl<'p> Executor<'p> {
     /// than [`run`](Self::run) (two `Instant` reads per segment) — meant for
     /// `dwn breakdown`, not the serving hot path.
     pub fn run_attributed(&mut self) -> Vec<Duration> {
-        let plan = self.plan;
-        let mut out = Vec::with_capacity(plan.segments.len());
-        for seg in &plan.segments {
+        let mut out = Vec::with_capacity(self.plan.segments.len());
+        for si in 0..self.plan.segments.len() {
             let t0 = Instant::now();
-            self.run_ops(seg.ops.clone());
+            self.run_segment(si);
             out.push(t0.elapsed());
         }
         out
+    }
+
+    /// Evaluate one plan segment, honoring the attached dispatch strategy —
+    /// the profiled/traced serving sweep and `run_attributed` go through
+    /// here so per-segment attribution covers the fused engine too.
+    #[inline]
+    pub(crate) fn run_segment(&mut self, si: usize) {
+        match self.fused.clone() {
+            Some(s) => self.run_fused_segment(&s, si),
+            None => self.run_ops(self.plan.segments[si].ops.clone()),
+        }
     }
 
     #[inline]
@@ -145,6 +185,44 @@ impl<'p> Executor<'p> {
                     ins[j] = self.buf[*slot as usize * w + i];
                 }
                 self.buf[dst + i] = eval_table_lanes(op.table, &ins[..k]);
+            }
+        }
+    }
+
+    /// One segment of the fused sweep: for each `(k, table)` group, hoist
+    /// the table out of the loop and run an arity-monomorphized pass over
+    /// the group's ops. The cofactor tree's shape depends only on `table`
+    /// and the (now compile-time) arity, so the branch resolution that
+    /// `run_ops` pays per op-word is loop-invariant here and hoists.
+    fn run_fused_segment(&mut self, sched: &FusedSchedule, si: usize) {
+        for gi in sched.seg_groups[si].clone() {
+            let g = &sched.groups[gi];
+            let ops = &sched.op_indices[g.ops.clone()];
+            match g.k {
+                1 => self.run_group::<1>(g.table, ops),
+                2 => self.run_group::<2>(g.table, ops),
+                3 => self.run_group::<3>(g.table, ops),
+                4 => self.run_group::<4>(g.table, ops),
+                5 => self.run_group::<5>(g.table, ops),
+                6 => self.run_group::<6>(g.table, ops),
+                k => unreachable!("compile emits pin counts 1..=6, got {k}"),
+            }
+        }
+    }
+
+    #[inline]
+    fn run_group<const K: usize>(&mut self, table: u64, ops: &[u32]) {
+        let plan = self.plan;
+        let w = self.words;
+        for &oi in ops {
+            let op = plan.ops[oi as usize];
+            let dst = op.dst as usize * w;
+            for i in 0..w {
+                let mut ins = [0u64; K];
+                for (j, slot) in ins.iter_mut().enumerate() {
+                    *slot = self.buf[op.pins[j] as usize * w + i];
+                }
+                self.buf[dst + i] = eval_table_lanes(table, &ins);
             }
         }
     }
@@ -368,7 +446,7 @@ pub(crate) fn eval_shared_rows_block(
                         _ => {}
                     }
                 }
-                ex.run_ops(seg.ops.clone());
+                ex.run_segment(si);
                 profile.add_seg_ns(si, now.elapsed());
             }
             if let (Some((tracer, id)), Some((lvl, t0))) = (hooks.trace, level_open) {

@@ -1,0 +1,170 @@
+//! Fused per-table dispatch schedule for an [`ExecPlan`].
+//!
+//! The baseline executor loop ([`super::Executor::run`]) calls the
+//! recursive Shannon-cofactor evaluator once per op per lane word — the
+//! truth-table branch tree is re-resolved for every single op even though a
+//! thermometer-encoded netlist is dominated by a handful of distinct
+//! tables (the comparator cone is thousands of copies of the same few
+//! functions; the paper's 3.20× encoder inflation is almost entirely
+//! table-duplicate area). A [`FusedSchedule`] regroups each segment's ops
+//! by canonical `(k, table)` key so the executor can run one tight,
+//! arity-monomorphized loop per group with the table hoisted loop-invariant
+//! — the branch tree resolves once per group, not once per op-word.
+//!
+//! Correctness is structural: within one segment every op's fanins live at
+//! strictly lower levels (levelization invariant, `plan.rs`), so ops of a
+//! segment never read each other and any permutation of them evaluates
+//! identically. The schedule only permutes *within* segments and runs
+//! segments in plan order, so a fused sweep writes exactly the same slot
+//! values as [`super::Executor::run`] — bit-identity is pinned by
+//! `tests/property_engine.rs` (random netlists plus all-same-table and
+//! all-distinct-table adversarial levels) and by the conformance harness,
+//! which enumerates the fused backend from [`super::backend::registry`].
+
+use super::plan::ExecPlan;
+use std::ops::Range;
+
+/// One run of same-table ops within a segment: every op in
+/// `op_indices[ops]` has this `table` over `k` pins.
+#[derive(Debug, Clone)]
+pub(crate) struct FusedGroup {
+    pub table: u64,
+    pub k: u8,
+    /// Index range into [`FusedSchedule::op_indices`].
+    pub ops: Range<usize>,
+}
+
+/// Per-table execution schedule over one plan: segments in plan order, each
+/// segment's ops regrouped by canonical `(k, table)` key (group order =
+/// first appearance within the segment; op order within a group = plan
+/// order — fully deterministic).
+#[derive(Debug, Clone)]
+pub struct FusedSchedule {
+    /// Group ranges, aligned with `plan.segments`: segment `si`'s groups
+    /// are `groups[seg_groups[si]]`.
+    pub(crate) seg_groups: Vec<Range<usize>>,
+    pub(crate) groups: Vec<FusedGroup>,
+    /// Indices into `plan.ops`, grouped.
+    pub(crate) op_indices: Vec<u32>,
+}
+
+impl FusedSchedule {
+    /// Build the schedule for `plan`. Pure data transform — the plan is not
+    /// modified and the schedule never outlives its usefulness (the
+    /// executor validates alignment by construction: `seg_groups` has one
+    /// entry per plan segment).
+    pub fn for_plan(plan: &ExecPlan) -> FusedSchedule {
+        let mut seg_groups = Vec::with_capacity(plan.segments.len());
+        let mut groups: Vec<FusedGroup> = Vec::new();
+        let mut op_indices = Vec::with_capacity(plan.ops.len());
+        // Scratch reused across segments: key -> position in `order`.
+        let mut order: Vec<(u64, u8, Vec<u32>)> = Vec::new();
+        for seg in &plan.segments {
+            order.clear();
+            for oi in seg.ops.clone() {
+                let op = &plan.ops[oi];
+                match order.iter_mut().find(|(t, k, _)| *t == op.table && *k == op.k) {
+                    Some((_, _, list)) => list.push(oi as u32),
+                    None => order.push((op.table, op.k, vec![oi as u32])),
+                }
+            }
+            let g0 = groups.len();
+            for (table, k, list) in order.drain(..) {
+                let start = op_indices.len();
+                op_indices.extend_from_slice(&list);
+                groups.push(FusedGroup { table, k, ops: start..op_indices.len() });
+            }
+            seg_groups.push(g0..groups.len());
+        }
+        FusedSchedule { seg_groups, groups, op_indices }
+    }
+
+    /// Total ops scheduled (equals the plan's op count).
+    pub fn ops(&self) -> usize {
+        self.op_indices.len()
+    }
+
+    /// Total `(segment, table)` groups — the number of table-branch-tree
+    /// resolutions per sweep (vs `ops()` for the per-op path).
+    pub fn num_groups(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Mean ops per group — the fusion win: how many tight-loop iterations
+    /// each hoisted table dispatch amortizes over.
+    pub fn mean_group_len(&self) -> f64 {
+        if self.groups.is_empty() {
+            0.0
+        } else {
+            self.op_indices.len() as f64 / self.groups.len() as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::compile;
+    use crate::techmap::{LutNetlist, MappedLut, Src};
+
+    /// One level of 6 LUTs: 4 share a table, 2 are distinct.
+    fn mixed_level() -> LutNetlist {
+        let and2 = MappedLut { inputs: vec![Src::Input(0), Src::Input(1)], table: 0b1000 };
+        let or2 = MappedLut { inputs: vec![Src::Input(1), Src::Input(2)], table: 0b1110 };
+        let xor2 = MappedLut { inputs: vec![Src::Input(0), Src::Input(2)], table: 0b0110 };
+        let mut luts = vec![and2.clone(), and2.clone(), or2, and2.clone(), xor2, and2];
+        // Vary pins so nothing folds to a duplicate at compile time.
+        luts[1].inputs = vec![Src::Input(1), Src::Input(2)];
+        luts[3].inputs = vec![Src::Input(0), Src::Input(2)];
+        luts[5].inputs = vec![Src::Input(2), Src::Input(3)];
+        let outputs = (0..6).map(Src::Lut).collect();
+        LutNetlist { num_inputs: 4, luts, outputs }
+    }
+
+    #[test]
+    fn schedule_partitions_ops_and_groups_by_table() {
+        let plan = compile(&mixed_level());
+        let sched = FusedSchedule::for_plan(&plan);
+        assert_eq!(sched.ops(), plan.ops.len());
+        assert_eq!(sched.seg_groups.len(), plan.segments.len());
+        // Every op index appears exactly once.
+        let mut seen = vec![false; plan.ops.len()];
+        for &oi in &sched.op_indices {
+            assert!(!seen[oi as usize], "op {oi} scheduled twice");
+            seen[oi as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        // Each group is table-homogeneous and stays inside one segment.
+        for (si, gr) in sched.seg_groups.iter().enumerate() {
+            for g in &sched.groups[gr.clone()] {
+                for &oi in &sched.op_indices[g.ops.clone()] {
+                    let op = &plan.ops[oi as usize];
+                    assert_eq!((op.table, op.k), (g.table, g.k));
+                    assert!(
+                        plan.segments[si].ops.contains(&(oi as usize)),
+                        "op {oi} scheduled outside its segment"
+                    );
+                }
+            }
+        }
+        // The 4 same-table LUTs fuse: fewer groups than ops.
+        assert!(sched.num_groups() < sched.ops(), "no fusion on a duplicate-heavy level");
+        assert!(sched.mean_group_len() > 1.0);
+    }
+
+    #[test]
+    fn all_distinct_tables_degenerate_to_one_op_per_group() {
+        // 4 LUTs, 4 distinct tables: fusion finds nothing to merge and the
+        // schedule must still cover every op exactly once.
+        let luts: Vec<MappedLut> = [0b1000u64, 0b1110, 0b0110, 0b1001]
+            .iter()
+            .map(|&table| MappedLut { inputs: vec![Src::Input(0), Src::Input(1)], table })
+            .collect();
+        let outputs = (0..4).map(Src::Lut).collect();
+        let nl = LutNetlist { num_inputs: 2, luts, outputs };
+        let plan = compile(&nl);
+        let sched = FusedSchedule::for_plan(&plan);
+        assert_eq!(sched.ops(), plan.ops.len());
+        assert_eq!(sched.num_groups(), plan.ops.len());
+    }
+}

@@ -26,9 +26,8 @@
 //!   boundary and evaluates the popcount/argmax tail natively
 //!   ([`tail`]).
 //! * [`EnginePool`] replaces per-batch scoped-thread spawning with
-//!   persistent parked workers owning their scratch, which
-//!   [`crate::coordinator::Backend::Compiled`] holds for the life of the
-//!   server.
+//!   persistent parked workers owning their scratch, which the pooled
+//!   execution backends ([`backend`]) hold for the life of the server.
 //!
 //! Head and tail compose freely ([`compile_for_modes`]); with both native,
 //! the engine emulates *only* the LUT layers. Each side falls back to full
@@ -41,10 +40,19 @@
 //! canonicalization, duplicate-LUT coalescing, and a dead-cone sweep —
 //! behind `--opt-level` ([`compile_for_modes_opt`]); level 0 is exactly
 //! [`compile_for_modes`].
+//!
+//! Every execution strategy — interpreter, pooled per-op dispatch, fused
+//! per-table dispatch ([`FusedSchedule`]) — is packaged behind the
+//! [`backend::EvalBackend`] trait and enumerated by
+//! [`backend::registry`]; the serving coordinator holds only a
+//! `Box<dyn backend::CompiledModel>` and the conformance harness
+//! bit-identity-gates every registered backend automatically.
 
+pub mod backend;
 mod compile;
 mod exec;
 pub mod fault;
+mod fused;
 pub mod head;
 pub mod passes;
 mod plan;
@@ -59,6 +67,7 @@ pub use compile::{
 };
 pub use passes::{compile_for_modes_opt, run_pipeline, OptLevel, PassOutcome, PassStats};
 pub use exec::{infer_fixed_batch, par_eval, Executor};
+pub use fused::FusedSchedule;
 pub use head::HeadMode;
 pub use plan::{
     CompileStats, ExecPlan, HeadFeaturePlan, HeadPlan, OutSrc, PlanOp, Segment, TailPlan,

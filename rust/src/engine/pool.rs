@@ -4,9 +4,9 @@
 //! serving backend pays that spawn/join cost on every batch. `EnginePool`
 //! spawns its workers once; each owns its [`Executor`] scratch for the
 //! pool's whole life, parks in a blocking channel `recv` while idle, and is
-//! fed contiguous batch shards through the channel.
-//! [`crate::coordinator::Backend::Compiled`] holds one pool for the life of
-//! the server (DESIGN.md §engine, §coordinator).
+//! fed contiguous batch shards through the channel. The pooled execution
+//! backends (`engine::backend`) hold one pool for the life of the server
+//! (DESIGN.md §engine, §coordinator).
 //!
 //! Zero-copy: a batch arrives as one `Arc<[Row]>` ([`EnginePool::infer_shared`])
 //! and every shard job clones only that batch handle — workers pack lanes
@@ -31,6 +31,7 @@
 
 use super::exec::{eval_shared_rows_block, BlockHooks, Executor};
 use super::fault::{FaultCell, FaultKind, InferError};
+use super::fused::FusedSchedule;
 use super::plan::ExecPlan;
 use super::profile::{ActivityProfile, DEFAULT_DENSITY_SAMPLE};
 use crate::telemetry::{PoolTelemetry, Tracer};
@@ -103,6 +104,20 @@ struct WorkerCtx {
     /// Injected-fault plan slot (tests / `dwn serve --fault-plan`); empty
     /// in production, one relaxed load per job either way.
     faults: Arc<FaultCell>,
+    /// Fused per-table dispatch schedule shared by every worker incarnation
+    /// (`None` = per-op dispatch, the default engine).
+    fused: Option<Arc<FusedSchedule>>,
+}
+
+impl WorkerCtx {
+    /// Build one worker's executor under the pool's dispatch strategy —
+    /// used at spawn and when rebuilding scratch after a contained panic.
+    fn executor(&self) -> Executor<'_> {
+        match &self.fused {
+            Some(s) => Executor::with_schedule(&self.plan, self.lanes, s.clone()),
+            None => Executor::new(&self.plan, self.lanes),
+        }
+    }
 }
 
 /// A supervised set of parked worker threads over one compiled plan.
@@ -135,6 +150,28 @@ impl EnginePool {
         Self::with_density(plan, lanes, threads, frac_bits, index_width, DEFAULT_DENSITY_SAMPLE)
     }
 
+    /// [`Self::new`] with the fused per-table dispatch engine: workers run
+    /// [`FusedSchedule`] group sweeps instead of per-op dispatch. Decisions
+    /// are bit-identical to [`Self::new`] (property- and
+    /// conformance-pinned); only the inner-loop shape differs.
+    pub fn new_fused(
+        plan: Arc<ExecPlan>,
+        lanes: usize,
+        threads: usize,
+        frac_bits: u32,
+        index_width: usize,
+    ) -> Self {
+        Self::with_options(
+            plan,
+            lanes,
+            threads,
+            frac_bits,
+            index_width,
+            DEFAULT_DENSITY_SAMPLE,
+            true,
+        )
+    }
+
     /// [`Self::new`] with an explicit density-sampling rate: per-op output
     /// density is swept on 1 in `density_sample` lane blocks (0 disables
     /// the sweep; per-segment runtime counters stay on either way).
@@ -146,11 +183,27 @@ impl EnginePool {
         index_width: usize,
         density_sample: u32,
     ) -> Self {
+        Self::with_options(plan, lanes, threads, frac_bits, index_width, density_sample, false)
+    }
+
+    /// Fully explicit constructor: density-sampling rate plus the dispatch
+    /// engine (`fused` = per-table group sweeps, else per-op dispatch).
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_options(
+        plan: Arc<ExecPlan>,
+        lanes: usize,
+        threads: usize,
+        frac_bits: u32,
+        index_width: usize,
+        density_sample: u32,
+        fused: bool,
+    ) -> Self {
         let lanes = crate::util::ceil_div(lanes.max(1), 64) * 64;
         let threads = threads.max(1);
         let (job_tx, job_rx) = channel::<Job>();
         let ctx = WorkerCtx {
             activity: Arc::new(ActivityProfile::for_plan(&plan, density_sample)),
+            fused: fused.then(|| Arc::new(FusedSchedule::for_plan(&plan))),
             plan,
             lanes,
             frac_bits,
@@ -203,6 +256,12 @@ impl EnginePool {
 
     pub fn index_width(&self) -> usize {
         self.ctx.index_width
+    }
+
+    /// Whether workers run the fused per-table dispatch engine
+    /// ([`Self::new_fused`]) instead of per-op dispatch.
+    pub fn fused(&self) -> bool {
+        self.ctx.fused.is_some()
     }
 
     /// Arm a deterministic fault-injection plan (chaos tests,
@@ -385,7 +444,7 @@ impl Drop for EnginePool {
 }
 
 fn worker_loop(ctx: &WorkerCtx) {
-    let mut ex = Executor::new(&ctx.plan, ctx.lanes);
+    let mut ex = ctx.executor();
     loop {
         // Hold the lock only for the blocking recv (idle park), never while
         // evaluating — job pickup serializes, processing stays parallel.
@@ -435,7 +494,7 @@ fn worker_loop(ctx: &WorkerCtx) {
                 // unknown mid-evaluation, so rebuild it; the shard resolves
                 // to a typed error and this worker keeps serving.
                 ctx.telemetry.note_worker_death();
-                ex = Executor::new(&ctx.plan, ctx.lanes);
+                ex = ctx.executor();
                 let _ = job.reply.send((job.start, Err(InferError::WorkerPanic)));
             }
         }
@@ -652,6 +711,30 @@ mod tests {
             rep.levels.iter().map(|l| l.mean_density * l.ops as f64).sum::<f64>()
                 / rep.ops as f64;
         assert!((density - 1.0 / 3.0).abs() < 0.05, "sign density ~1/3, got {density}");
+    }
+
+    #[test]
+    fn fused_pool_matches_per_op_pool() {
+        // Duplicate-heavy level (what the fused engine is for) on top of the
+        // sign plan's interface: 1 feature, 2-bit word.
+        let nl = LutNetlist {
+            num_inputs: 2,
+            luts: vec![
+                MappedLut { inputs: vec![Src::Input(1)], table: 0b10 },
+                MappedLut { inputs: vec![Src::Input(0)], table: 0b10 },
+                MappedLut { inputs: vec![Src::Lut(0), Src::Lut(1)], table: 0b0110 },
+                MappedLut { inputs: vec![Src::Lut(1), Src::Lut(0)], table: 0b1000 },
+            ],
+            outputs: vec![Src::Lut(2), Src::Lut(3)],
+        };
+        let plan = Arc::new(compile(&nl));
+        let per_op = EnginePool::new(plan.clone(), 64, 2, 1, 2);
+        let fused = EnginePool::new_fused(plan, 64, 2, 1, 2);
+        assert!(fused.fused() && !per_op.fused());
+        for n in [1usize, 63, 64, 65, 200] {
+            let rows = sign_rows(n);
+            assert_eq!(fused.infer(&rows), per_op.infer(&rows), "batch {n}");
+        }
     }
 
     #[test]

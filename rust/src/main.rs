@@ -5,7 +5,7 @@
 //!   breakdown --model sm-10 --variant penft [--encoder S]               Fig.5-style component LUT breakdown
 //!   encoders  --model sm-10 --variant penft [--encoder auto]            per-feature encoder architecture/cost table
 //!   verify    --model sm-10 --variant penft [--n 512]                   netlist sim vs golden vectors
-//!   serve     --model sm-10 [--backend pjrt|netlist|compiled] [--requests N] [--lanes W] [--threads T] [--head native|lut] [--tail native|lut] [--metrics-every S] [--trace-sample N] [--trace-out FILE] [--synthetic] [--deadline-us N] [--fault-plan SPEC]
+//!   serve     --model sm-10 [--backend pjrt|netlist|compiled] [--engine interp|pool|fused] [--requests N] [--lanes W] [--threads T] [--head native|lut] [--tail native|lut] [--metrics-every S] [--trace-sample N] [--trace-out FILE] [--synthetic] [--deadline-us N] [--fault-plan SPEC]
 //!   trace     [--synthetic | --model NAME] [--out trace.json] | --check FILE   traced smoke run / Chrome trace validation
 //!   profile   [--synthetic | --model NAME] [--density-sample N]         engine runtime-activity profile per logic level
 //!   accuracy  --model sm-10 --variant penft                             netlist accuracy on the test set
@@ -18,7 +18,8 @@ use dwn::config::{Args, Artifacts};
 use dwn::coordinator::{Backend, FaultPlan, Reply, Row, Server, ServerConfig};
 use dwn::data::Dataset;
 use dwn::encoding::{self, ArchKind, EncoderIr, EncoderStrategy};
-use dwn::engine::{HeadMode, OptLevel, TailMode};
+use dwn::engine::backend::{self as eval_backend, CompileModes, EvalBackend};
+use dwn::engine::{FusedSchedule, HeadMode, OptLevel, TailMode};
 use dwn::hwgen::{build_accelerator, AccelOptions, Component};
 use dwn::model::{DwnModel, SynthSpec, Variant};
 use dwn::report::{f1, int, Table};
@@ -81,7 +82,9 @@ breakdown: per-component LUT area + per-stage runtime attribution from the
            / arithmetic tail as their own runtime rows — LUT-area columns
            are unaffected in every mode; --opt-level adds a before/after
            'total (opt)' area row + an 'opt passes' removal summary;
-           --synthetic (or no --model) uses the built-in JSC-sized model
+           --synthetic (or no --model) uses the built-in JSC-sized model;
+           prints greppable 'engine pool' / 'engine fused' lines comparing
+           per-op vs fused per-table dispatch over the same compiled plan
 encoders: per-feature encoder architecture selection + modeled vs mapped LUT cost
           --encoder auto|bank|chain|mux|lut (default auto) --depth-budget N (auto only)
 serve: --backend pjrt|netlist|compiled [--requests N] [--synthetic]
@@ -101,22 +104,42 @@ serve: --backend pjrt|netlist|compiled [--requests N] [--synthetic]
                  faults, shed@admission:count for shed bursts; failures are
                  contained as typed per-request errors, the server survives)
        compiled: --lanes N (vectors/pass, default 256) --threads N (default = cores)
+                 --engine interp|pool|fused (default pool; execution backend
+                 from engine::backend::registry() — fused groups each
+                 level's ops by truth table so the LUT-dispatch branch tree
+                 resolves once per group; decisions are bit-identical,
+                 conformance-pinned)
                  --head native|lut (default native; native computes the
                  thermometer encoding arithmetically, skipping input packing)
                  --tail native|lut (default native; native evaluates the
                  popcount/argmax tail arithmetically, lut emulates it)
 trace: traced smoke run over the compiled backend (default --synthetic)
-       [--trace-sample N (default 4)] [--requests N (default 1024)]
+       [--engine pool|fused] [--trace-sample N (default 4)]
+       [--requests N (default 1024)]
        [--out trace.json]; or --check FILE to validate an existing trace
 profile: engine runtime-activity report — per-level runtime share plus
        sampled LUT output density (constant / duplicate in practice)
-       [--density-sample N (default 64, 0 = off)] [--passes N (default 64)]
+       [--engine pool|fused] [--density-sample N (default 64, 0 = off)]
+       [--passes N (default 64)]
        [--head native|lut] [--tail native|lut] [--lanes N] [--threads N]
 emit-rtl: --out design.v [--tb design_tb.v]    mixed: --start 8 --min 3 --tol 0.01";
 
 /// Default worker-thread count for the compiled engine.
 fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Resolve `--engine NAME` against the execution-backend registry
+/// (`engine::backend::registry()`); `default` is the command's default
+/// registry entry.
+fn engine_backend(args: &Args, default: &str) -> Result<Box<dyn EvalBackend>> {
+    let name = args.get_or("engine", default);
+    eval_backend::by_name(&name).ok_or_else(|| {
+        anyhow!(
+            "unknown engine '{name}' (available: {})",
+            eval_backend::names().join("|")
+        )
+    })
 }
 
 fn load_model(artifacts: &Artifacts, args: &Args) -> Result<DwnModel> {
@@ -376,6 +399,42 @@ fn cmd_breakdown(artifacts: &Artifacts, args: &Args) -> Result<()> {
         } else {
             String::new()
         }
+    );
+    // Dispatch-strategy comparison over the same plan: per-op vs fused
+    // per-table sweeps (the engine::backend registry's `pool` and `fused`
+    // serving engines), plus the fused schedule's grouping shape — on
+    // thermometer models the comparator cones are duplicate-table-heavy,
+    // which is exactly what fusing exploits.
+    let sched = std::sync::Arc::new(FusedSchedule::for_plan(&plan));
+    let mut bench = |fused: bool| -> f64 {
+        let mut ex = if fused {
+            dwn::engine::Executor::with_schedule(&plan, lanes, sched.clone())
+        } else {
+            dwn::engine::Executor::new(&plan, lanes)
+        };
+        if plan.head.is_some() {
+            ex.pack_head_rows(&head_rows, head_fb);
+        } else {
+            for i in 0..nl.num_inputs {
+                for w in ex.input_words_mut(i) {
+                    *w = rng.next_u64();
+                }
+            }
+        }
+        let t0 = Instant::now();
+        for _ in 0..passes.max(1) {
+            ex.run();
+        }
+        t0.elapsed().as_nanos() as f64 / (passes.max(1) * ex.lanes()) as f64
+    };
+    let pool_ns = bench(false);
+    let fused_ns = bench(true);
+    println!("engine pool: {pool_ns:.2} ns/row (per-op dispatch)");
+    println!(
+        "engine fused: {fused_ns:.2} ns/row ({} table-groups over {} ops, mean group {:.1})",
+        sched.num_groups(),
+        plan.ops.len(),
+        sched.mean_group_len()
     );
     if head_mode == HeadMode::Native && !native_head {
         println!("note: head metadata unavailable for this mapping; fell back to LUT emulation");
@@ -639,57 +698,65 @@ fn cmd_serve(artifacts: &Artifacts, args: &Args) -> Result<()> {
             let head_mode: HeadMode = args.get_parse("head", HeadMode::Native)?;
             let tail_mode: TailMode = args.get_parse("tail", TailMode::Native)?;
             let opt: OptLevel = args.get_parse("opt-level", OptLevel::None)?;
-            let plan = dwn::engine::compile_for_modes_opt(
-                &nl,
-                Some(&tags),
-                head.as_ref(),
-                tail.as_ref(),
-                head_mode,
-                tail_mode,
-                opt,
-            );
             let lanes = args.get_usize("lanes", 256)?;
             let threads = args.get_usize("threads", default_threads())?;
-            println!(
-                "compiled engine: {} ops / {} levels from {} LUTs ({lanes} lanes x {threads} threads, {} head, {} tail, -O{})",
-                plan.ops.len(),
-                plan.depth(),
-                nl.lut_count(),
-                if plan.head.is_some() { "native" } else { "lut" },
-                if plan.tail.is_some() { "native" } else { "lut" },
-                opt.label()
-            );
-            if opt != OptLevel::None {
-                let s = plan.stats;
+            let engine = engine_backend(args, "pool")?;
+            let frac_bits = model.penft.frac_bits.context("penft bits")?;
+            let modes = CompileModes {
+                tags: Some(&tags),
+                head: head.as_ref(),
+                tail: tail.as_ref(),
+                head_mode,
+                tail_mode,
+                frac_bits,
+                num_features: model.num_features,
+                num_classes: model.num_classes,
+                index_width: accel.index_width(),
+                lanes,
+                threads,
+            };
+            let compiled = engine.compile(&nl, &modes, opt);
+            println!("engine {}: {}", engine.name(), engine.description());
+            if let Some(plan) = compiled.plan() {
                 println!(
-                    "opt passes (-O{}): removed {} LUTs ({} const, {} coalesced, {} dead)",
-                    opt.label(),
-                    s.const_folded + s.coalesced + s.dead_eliminated,
-                    s.const_folded,
-                    s.coalesced,
-                    s.dead_eliminated
+                    "compiled engine: {} ops / {} levels from {} LUTs ({lanes} lanes x {threads} threads, {} head, {} tail, -O{})",
+                    plan.ops.len(),
+                    plan.depth(),
+                    nl.lut_count(),
+                    if plan.head.is_some() { "native" } else { "lut" },
+                    if plan.tail.is_some() { "native" } else { "lut" },
+                    opt.label()
                 );
-            }
-            if head_mode == HeadMode::Native && plan.head.is_none() {
-                println!("note: head metadata unavailable; fell back to LUT emulation");
-            }
-            if tail_mode == TailMode::Native && plan.tail.is_none() {
-                println!("note: tail metadata unavailable; fell back to LUT emulation");
+                if opt != OptLevel::None {
+                    let s = plan.stats;
+                    println!(
+                        "opt passes (-O{}): removed {} LUTs ({} const, {} coalesced, {} dead)",
+                        opt.label(),
+                        s.const_folded + s.coalesced + s.dead_eliminated,
+                        s.const_folded,
+                        s.coalesced,
+                        s.dead_eliminated
+                    );
+                }
+                if head_mode == HeadMode::Native && plan.head.is_none() {
+                    println!("note: head metadata unavailable; fell back to LUT emulation");
+                }
+                if tail_mode == TailMode::Native && plan.tail.is_none() {
+                    println!("note: tail metadata unavailable; fell back to LUT emulation");
+                }
             }
             // Let the batcher fill whole engine passes.
-            let cfg =
-                ServerConfig { max_batch: lanes * threads.max(1), ..ServerConfig::default() };
-            let frac_bits = model.penft.frac_bits.context("penft bits")?;
-            let (features, classes, iw) =
-                (model.num_features, model.num_classes, accel.index_width());
+            let cfg = ServerConfig {
+                max_batch: compiled.max_batch_hint(),
+                ..ServerConfig::default()
+            };
             let faults = fault_plan.clone();
             // The mapped netlist doubles as the breaker's interpreter
             // fallback: bit-identical decisions with no worker pool to fail.
             Server::start_with(
                 move || {
                     let mut backend =
-                        Backend::compiled(plan, frac_bits, features, classes, iw, lanes, threads)
-                            .with_fallback_netlist(nl);
+                        Backend::from_model(compiled).with_fallback_netlist(nl);
                     if let Some(p) = faults {
                         backend = backend.with_faults(p);
                     }
@@ -827,25 +894,30 @@ fn cmd_trace(artifacts: &Artifacts, args: &Args) -> Result<()> {
     let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt))?;
     let (nl, tags, head, tail) = accel.map_with_head(&MapConfig::default());
     let opt: OptLevel = args.get_parse("opt-level", OptLevel::None)?;
-    let plan = dwn::engine::compile_for_modes_opt(
-        &nl,
-        Some(&tags),
-        head.as_ref(),
-        tail.as_ref(),
-        HeadMode::Native,
-        TailMode::Native,
-        opt,
-    );
     let lanes = args.get_usize("lanes", 256)?;
     let threads = args.get_usize("threads", default_threads())?;
-    let server = Server::start_compiled(
-        plan,
-        model.penft.frac_bits.context("penft bits")?,
-        model.num_features,
-        model.num_classes,
-        accel.index_width(),
+    // The engine lut-exec spans the validator requires come from the worker
+    // pool, so only the pooled dispatch engines can back a traced run.
+    let engine = engine_backend(args, "pool")?;
+    if engine.name() == "interp" {
+        bail!("the interpreter has no engine spans to trace; use --engine pool|fused");
+    }
+    let modes = CompileModes {
+        tags: Some(&tags),
+        head: head.as_ref(),
+        tail: tail.as_ref(),
+        head_mode: HeadMode::Native,
+        tail_mode: TailMode::Native,
+        frac_bits: model.penft.frac_bits.context("penft bits")?,
+        num_features: model.num_features,
+        num_classes: model.num_classes,
+        index_width: accel.index_width(),
         lanes,
         threads,
+    };
+    let compiled = engine.compile(&nl, &modes, opt);
+    let server = Server::start_model(
+        compiled,
         ServerConfig { max_batch: lanes * threads.max(1), ..ServerConfig::default() },
     );
     let tracer = server.enable_tracing(TraceConfig {
@@ -992,13 +1064,21 @@ fn cmd_profile(artifacts: &Artifacts, args: &Args) -> Result<()> {
         "density-sample",
         dwn::engine::DEFAULT_DENSITY_SAMPLE as usize,
     )? as u32;
-    let pool = dwn::engine::EnginePool::with_density(
+    // The activity profiler lives in the worker pool, so profiling runs on
+    // the pooled dispatch engines (per-op or fused); the fused schedule
+    // regroups ops but attributes runtime to the same levels.
+    let engine = engine_backend(args, "pool")?;
+    if engine.name() == "interp" {
+        bail!("the interpreter has no activity profiler; use --engine pool|fused");
+    }
+    let pool = dwn::engine::EnginePool::with_options(
         std::sync::Arc::new(plan),
         lanes,
         threads,
         model.penft.frac_bits.context("penft bits")?,
         accel.index_width(),
         density,
+        engine.name() == "fused",
     );
     let rows: std::sync::Arc<[Row]> =
         random_rows(model.num_features, lanes * threads.max(1), 0x0DD5).into();
@@ -1012,8 +1092,9 @@ fn cmd_profile(artifacts: &Artifacts, args: &Args) -> Result<()> {
     let rows_served = (rows.len() * passes) as f64;
     let mut t = Table::new(
         &format!(
-            "Engine activity {} (head {}, tail {}, density 1-in-{})",
+            "Engine activity {} (engine {}, head {}, tail {}, density 1-in-{})",
             model.name,
+            engine.name(),
             if head_mode == HeadMode::Native { "native" } else { "lut" },
             if tail_mode == TailMode::Native { "native" } else { "lut" },
             density

@@ -2,12 +2,17 @@
 //! serving stack (ROADMAP): one parameterized differential harness drives
 //! identical fixed-point input batches through
 //!   1. the gate-level `Simulator` (ground truth for the generated design),
-//!   2. the `LutNetlist` interpreter (`eval_lanes_with`), and
-//!   3. the compiled engine across the full head×tail mode matrix
-//!      (lut/lut, native/lut, lut/native, native/native),
+//!   2. every execution backend in `engine::backend::registry()` —
+//!      interpreter, pooled per-op dispatch, fused per-table dispatch, and
+//!      whatever registers next — across the full head×tail mode matrix
+//!      (lut/lut, native/lut, lut/native, native/native), each at
+//!      `--opt-level` 0 and max,
 //! and asserts bit-identical class decisions, across synthetic models
 //! spanning every encoder architecture × several width/layer shapes (in the
-//! spirit of LogicNets-style bit-exact verification flows).
+//! spirit of LogicNets-style bit-exact verification flows). Because the
+//! harness iterates the registry, registering a backend *is* entering it
+//! into this gate; `registry_backends_are_conformant` pins the registry
+//! contents so additions are conscious.
 //!
 //! Seeding: `DWN_CONFORMANCE_SEED` (decimal u64) perturbs the base seed so
 //! CI can pin a fixed seed while allowing local fuzzing; the default is
@@ -22,7 +27,8 @@
 
 use dwn::coordinator::Backend;
 use dwn::encoding::EncoderStrategy;
-use dwn::engine::{self, HeadMode, TailMode};
+use dwn::engine::backend::{self as eval_backend, CompileModes, CompiledModel};
+use dwn::engine::{self, HeadMode, OptLevel, TailMode};
 use dwn::hwgen::{build_accelerator, AccelOptions, Component};
 use dwn::logic::Simulator;
 use dwn::model::{DwnModel, SynthSpec, Variant};
@@ -158,7 +164,6 @@ fn conformance_case(model: &DwnModel, strategy: EncoderStrategy, expect_native: 
     let (nl, tags, head, tail) = accel.map_with_head(&MapConfig::default());
     let iw = accel.index_width();
 
-    let mut plans = Vec::new();
     for (hm, tm) in MODES {
         let base = engine::compile_for_modes(
             &nl,
@@ -231,8 +236,6 @@ fn conformance_case(model: &DwnModel, strategy: EncoderStrategy, expect_native: 
                 }
             }
         }
-        plans.push((hm, tm, "base", base));
-        plans.push((hm, tm, "opt", opt));
     }
 
     let rows = input_rows(model, 0x5EED ^ base_seed());
@@ -240,34 +243,45 @@ fn conformance_case(model: &DwnModel, strategy: EncoderStrategy, expect_native: 
     // Serving backends consume admitted rows; the same feature values flow
     // through the gate simulator above and every backend below.
     let shared = dwn::util::fixed::Row::from_reals(&rows);
-
-    let interp = Backend::Netlist {
-        netlist: nl,
-        frac_bits,
-        num_features: model.num_features,
-        num_classes: model.num_classes,
-        index_width: iw,
-    };
     let label = |k: String| format!("{} / {:?} / {}", model.name, strategy, k);
-    assert_eq!(interp.infer(&shared).unwrap(), want, "{}", label("interpreter".into()));
 
-    for (hm, tm, kind, plan) in plans {
-        // Odd lanes/threads on purpose: ragged shards must not change results.
-        let backend = Backend::compiled(
-            plan,
+    // Every registered execution backend × head×tail mode × opt level must
+    // reproduce the gate simulator's decisions bit-identically. Iterating
+    // the registry is the point: a backend registered in
+    // `engine::backend::registry()` enters this gate with no further wiring.
+    for (hm, tm) in MODES {
+        let modes = CompileModes {
+            tags: Some(&tags),
+            head: head.as_ref(),
+            tail: tail.as_ref(),
+            head_mode: hm,
+            tail_mode: tm,
             frac_bits,
-            model.num_features,
-            model.num_classes,
-            iw,
-            64,
-            3,
-        );
-        assert_eq!(
-            backend.infer(&shared).unwrap(),
-            want,
-            "{}",
-            label(format!("compiled({kind}) head={} tail={}", hm.label(), tm.label()))
-        );
+            num_features: model.num_features,
+            num_classes: model.num_classes,
+            index_width: iw,
+            // Odd thread count on purpose: ragged shards must not change
+            // results (the interpreter ignores the pool shape).
+            lanes: 64,
+            threads: 3,
+        };
+        for opt in [OptLevel::None, OptLevel::Max] {
+            for b in eval_backend::registry() {
+                let compiled: Box<dyn CompiledModel> = b.compile(&nl, &modes, opt);
+                assert_eq!(
+                    compiled.infer_rows(&shared).unwrap(),
+                    want,
+                    "{}",
+                    label(format!(
+                        "engine={} opt={} head={} tail={}",
+                        b.name(),
+                        opt.label(),
+                        hm.label(),
+                        tm.label()
+                    ))
+                );
+            }
+        }
     }
 }
 
@@ -334,6 +348,28 @@ fn conformance_small_fanin_fallback_shape() {
     let model = DwnModel::synthetic(&spec);
     for strategy in ALL_ARCHS {
         conformance_case(&model, strategy, false);
+    }
+}
+
+/// Pin the backend registry to the conformance matrix. The cases above
+/// iterate `registry()`, so any registered backend is automatically gated
+/// against the gate simulator; this test makes registry changes conscious
+/// in the other direction — a new entry (or a rename) fails here until the
+/// expected list is updated, which is the reviewer's cue to confirm the
+/// backend actually went through the matrix.
+#[test]
+fn registry_backends_are_conformant() {
+    let names = eval_backend::names();
+    assert_eq!(
+        names,
+        ["interp", "pool", "fused"],
+        "engine::backend::registry() changed. Every entry is conformance-gated \
+         automatically by the cases in this file; update this expected list \
+         (and BENCH/CI engine matrices) to acknowledge the change."
+    );
+    for name in names {
+        let b = eval_backend::by_name(name).expect("registry name resolves");
+        assert_eq!(b.name(), name);
     }
 }
 

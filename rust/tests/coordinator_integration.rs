@@ -309,6 +309,123 @@ fn router_keeps_per_model_stats_disjoint_under_concurrent_load() {
     assert_eq!(router.total_rejected(), 0);
 }
 
+/// Per-tenant admission budgets stay disjoint under the same concurrent
+/// two-model load: a third, tightly-budgeted tenant sheds deterministically
+/// at the router while "a" and "b" (unbudgeted) admit every request, and
+/// the budget sheds never leak into any server's queue-shed counter.
+#[test]
+fn router_budget_sheds_stay_disjoint_under_concurrent_load() {
+    let toy = |invert: bool| {
+        let table = if invert { 0b01 } else { 0b10 };
+        let nl = LutNetlist {
+            num_inputs: 2,
+            luts: vec![MappedLut { inputs: vec![Src::Input(1)], table }],
+            outputs: vec![Src::Lut(0)],
+        };
+        Server::start_netlist(nl, 1, 1, 2, 1, ServerConfig::default())
+    };
+    let mut router = Router::new();
+    router.deploy("a", toy(false));
+    router.deploy("b", toy(true));
+    router.deploy_with_budget("c", toy(false), 2);
+
+    let per_thread = 100usize;
+    let c_floods = 10usize;
+    std::thread::scope(|scope| {
+        for (model, expect_neg) in [("a", 1i32), ("b", 0i32)] {
+            let router = &router;
+            scope.spawn(move || {
+                for k in 0..per_thread {
+                    let x = if k % 2 == 0 { -0.8f32 } else { 0.8 };
+                    let pred = router.infer(model, &[x]).unwrap();
+                    let want = if x < 0.0 { expect_neg } else { 1 - expect_neg };
+                    assert_eq!(pred, want, "model {model} x={x}");
+                }
+            });
+        }
+        let router = &router;
+        scope.spawn(move || {
+            // Hold every admitted reply handle so the budget cannot be
+            // released: exactly 2 of 10 submits fit, 8 shed — typed.
+            let mut held = Vec::new();
+            let mut sheds = 0usize;
+            for _ in 0..c_floods {
+                match router.submit("c", &[0.5]) {
+                    Ok(rx) => held.push(rx),
+                    Err(e) => {
+                        assert_eq!(
+                            e.downcast_ref::<SubmitError>(),
+                            Some(&SubmitError::Backpressure),
+                            "budget shed must stay typed: {e}"
+                        );
+                        sheds += 1;
+                    }
+                }
+            }
+            assert_eq!(held.len(), 2, "budget of 2 admits exactly 2 held requests");
+            assert_eq!(sheds, c_floods - 2);
+            for rx in &held {
+                assert_eq!(rx.recv().unwrap().unwrap(), 1);
+            }
+        });
+    });
+
+    let stats = router.stats();
+    assert_eq!(stats["a"].requests, per_thread as u64);
+    assert_eq!(stats["b"].requests, per_thread as u64);
+    assert_eq!(stats["c"].requests, 2);
+    // Budget sheds are a router-side counter: no server ever saw the shed
+    // requests, so every per-server queue-shed counter stays zero.
+    for m in ["a", "b", "c"] {
+        assert_eq!(stats[m].rejected, 0, "model {m} server-side sheds");
+    }
+    assert_eq!(router.budget_sheds("c"), (c_floods - 2) as u64);
+    assert_eq!(router.budget_sheds("a"), 0);
+    assert_eq!(router.budget_sheds("b"), 0);
+    assert_eq!(router.total_rejected(), (c_floods - 2) as u64);
+}
+
+/// Deadline-aware batch formation (satellite of the backend-trait PR): a
+/// near-deadline request admitted *after* a far-deadline one must still be
+/// served first within their shared batch. The generous `max_wait` holds
+/// batch formation open so both requests deterministically join one batch,
+/// and the fixture backend logs served-row order.
+#[test]
+fn near_deadline_row_ships_before_far_deadline_row() {
+    use std::time::Instant;
+    let (backend, seen) = Backend::fixture(1, Duration::from_millis(5));
+    let server = Server::start_with(
+        move || Ok(backend),
+        ServerConfig {
+            max_batch: 2,
+            max_wait: Duration::from_millis(500),
+            queue_depth: 16,
+            admission: AdmissionPolicy::Block,
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let far = server
+        .submit_row_deadline(Row::real(&[2.0]), Some(Instant::now() + Duration::from_secs(30)))
+        .unwrap();
+    let near = server
+        .submit_row_deadline(Row::real(&[1.0]), Some(Instant::now() + Duration::from_secs(10)))
+        .unwrap();
+    assert_eq!(near.recv().unwrap().unwrap(), 1);
+    assert_eq!(far.recv().unwrap().unwrap(), 1);
+    let served = seen.lock().unwrap();
+    let got: Vec<f32> = served
+        .iter()
+        .map(|r| {
+            let Row::Real(v) = r else { panic!("row kind changed") };
+            v[0]
+        })
+        .collect();
+    // Batch formation reordered [far, near] -> [near, far] before handing
+    // the batch to the executor.
+    assert_eq!(got, vec![1.0, 2.0], "near-deadline row must ship first");
+}
+
 #[test]
 fn backpressure_bounded_queue() {
     let Some(a) = artifacts() else { return };

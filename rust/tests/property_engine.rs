@@ -1,9 +1,14 @@
 //! Property tests for the compiled execution engine: bit-exactness against
 //! the netlist interpreter on adversarial random netlists (consts, duplicate
-//! pins, dead LUTs), and end-to-end against the gate-level simulator on a
-//! generated accelerator.
+//! pins, dead LUTs), end-to-end against the gate-level simulator on a
+//! generated accelerator, and fused per-table dispatch
+//! ([`dwn::engine::FusedSchedule`]) against per-op dispatch — on random
+//! netlists and on the adversarial extremes of the grouping space
+//! (all-same-table and all-distinct-table levels).
 
-use dwn::engine::{self, Executor};
+use dwn::engine::backend::{by_name, CompileModes, CompiledModel};
+use dwn::engine::{self, Executor, FusedSchedule, OptLevel};
+use std::sync::Arc;
 use dwn::hwgen::{build_accelerator, AccelOptions, Component};
 use dwn::logic::Simulator;
 use dwn::model::{DwnModel, SynthSpec, Variant};
@@ -166,13 +171,13 @@ fn compiled_serving_path_matches_interpreter_on_accelerator() {
     let accel = build_accelerator(&model, &AccelOptions::new(Variant::PenFt)).unwrap();
     let (nl, tags) = accel.map_with_stages(&MapConfig::default());
     let plan = engine::compile_with_stages(&nl, Some(&tags));
-    let interp = Backend::Netlist {
-        netlist: nl,
+    let interp = Backend::netlist(
+        nl,
         frac_bits,
-        num_features: model.num_features,
-        num_classes: model.num_classes,
-        index_width: accel.index_width(),
-    };
+        model.num_features,
+        model.num_classes,
+        accel.index_width(),
+    );
     let compiled = Backend::compiled(
         plan,
         frac_bits,
@@ -193,4 +198,126 @@ fn compiled_serving_path_matches_interpreter_on_accelerator() {
     let a = interp.infer(&shared).unwrap();
     let b = compiled.infer(&shared).unwrap();
     assert_eq!(a, b);
+}
+
+/// Drive one executor pair (per-op vs fused) over random lane words and
+/// assert every output word matches.
+fn assert_fused_executor_parity(nl: &LutNetlist, rng: &mut SplitMix64, ctx: &str) {
+    let plan = engine::compile(nl);
+    let sched = Arc::new(FusedSchedule::for_plan(&plan));
+    assert_eq!(sched.ops(), plan.ops.len(), "{ctx}: schedule covers every op");
+    let mut per_op = Executor::new(&plan, 128);
+    let mut fused = Executor::with_schedule(&plan, 128, sched);
+    for round in 0..3 {
+        per_op.clear_inputs();
+        fused.clear_inputs();
+        for i in 0..nl.num_inputs {
+            for w in 0..per_op.words() {
+                let v = rng.next_u64();
+                per_op.input_words_mut(i)[w] = v;
+                fused.input_words_mut(i)[w] = v;
+            }
+        }
+        per_op.run();
+        fused.run();
+        for o in 0..nl.outputs.len() {
+            for w in 0..per_op.words() {
+                assert_eq!(
+                    fused.output_word(o, w),
+                    per_op.output_word(o, w),
+                    "{ctx}: round {round} output {o} word {w}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_executor_matches_per_op_on_random_netlists() {
+    let mut rng = SplitMix64::new(0xF05E_D117);
+    for trial in 0..40 {
+        let nl = random_netlist(&mut rng);
+        assert_fused_executor_parity(&nl, &mut rng, &format!("trial {trial}"));
+    }
+}
+
+/// One wide LUT level over 6 packed input bits (3 features at frac_bits=1),
+/// every op drawing a distinct input pair, XOR-reduced to a single output
+/// bit. The wide level's table multiset is the test parameter — it controls
+/// how much the fused schedule can group.
+fn level_netlist(tables: &[u64]) -> LutNetlist {
+    let pairs: Vec<(u32, u32)> =
+        (0..6u32).flat_map(|a| (a + 1..6).map(move |b| (a, b))).collect();
+    let mut luts: Vec<MappedLut> = tables
+        .iter()
+        .enumerate()
+        .map(|(i, &t)| {
+            let (a, b) = pairs[i % pairs.len()];
+            MappedLut { inputs: vec![Src::Input(a), Src::Input(b)], table: t & 0xF }
+        })
+        .collect();
+    let mut frontier: Vec<u32> = (0..luts.len() as u32).collect();
+    while frontier.len() > 1 {
+        let mut next = Vec::new();
+        for ch in frontier.chunks(2) {
+            if let [a, b] = *ch {
+                luts.push(MappedLut {
+                    inputs: vec![Src::Lut(a), Src::Lut(b)],
+                    table: 0b0110,
+                });
+                next.push(luts.len() as u32 - 1);
+            } else {
+                next.push(ch[0]);
+            }
+        }
+        frontier = next;
+    }
+    LutNetlist { num_inputs: 6, luts, outputs: vec![Src::Lut(frontier[0])] }
+}
+
+/// The grouping extremes: a level where every op shares one truth table
+/// (maximal fusion — one group per level, the thermometer-comparator-cone
+/// shape the fused engine exists for) and a level where every table is
+/// distinct (degenerate fusion — one op per group). Both must be
+/// bit-identical to per-op dispatch at the executor level and to the `pool`
+/// backend at the serving-model level, optimized or not.
+#[test]
+fn fused_grouping_is_bit_identical_on_adversarial_levels() {
+    let mut rng = SplitMix64::new(0xAD5E_7A81);
+    let all_same: Vec<u64> = vec![0b1000; 12];
+    let all_distinct: Vec<u64> = (1..=12).collect();
+    for (name, tables) in [("all-same-table", all_same), ("all-distinct-table", all_distinct)] {
+        let nl = level_netlist(&tables);
+        let plan = engine::compile(&nl);
+        let sched = FusedSchedule::for_plan(&plan);
+        if name == "all-same-table" {
+            assert!(
+                sched.num_groups() < plan.ops.len(),
+                "duplicate tables must actually group"
+            );
+        }
+        assert_fused_executor_parity(&nl, &mut rng, name);
+
+        let modes = CompileModes::bare(1, 3, 2, 1);
+        let rows: Vec<dwn::util::fixed::Row> = (0..150)
+            .map(|_| {
+                dwn::util::fixed::Row::real(&[
+                    (2.0 * rng.next_f64() - 1.0) as f32,
+                    (2.0 * rng.next_f64() - 1.0) as f32,
+                    (2.0 * rng.next_f64() - 1.0) as f32,
+                ])
+            })
+            .collect();
+        for opt in [OptLevel::None, OptLevel::Max] {
+            let pool: Box<dyn CompiledModel> = by_name("pool").unwrap().compile(&nl, &modes, opt);
+            let fused: Box<dyn CompiledModel> =
+                by_name("fused").unwrap().compile(&nl, &modes, opt);
+            assert_eq!(
+                fused.infer_rows(&rows).unwrap(),
+                pool.infer_rows(&rows).unwrap(),
+                "{name}: fused vs pool decisions at opt {}",
+                opt.label()
+            );
+        }
+    }
 }

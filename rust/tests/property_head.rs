@@ -6,8 +6,8 @@
 //! head metadata, and end-to-end head×tail parity (including the pool's
 //! integer-row fast path).
 
-use dwn::coordinator::Backend;
 use dwn::encoding::{arch_for, ArchKind, EncoderArch, FeatureIr};
+use dwn::engine::backend::{CompiledModel, PooledModel};
 use dwn::engine::{self, Executor, HeadMode, TailMode};
 use dwn::hwgen::{
     build_accelerator, AccelOptions, Component, HeadFeatureInfo, HeadInfo,
@@ -261,31 +261,37 @@ fn head_tail_matrix_parity_and_int_rows_on_full_accelerator() {
             hm,
             tm,
         );
-        let backend = Backend::compiled(
-            plan,
-            frac_bits,
-            model.num_features,
-            model.num_classes,
-            iw,
-            64,
-            3,
-        );
-        assert_eq!(
-            backend.infer(&dwn::util::fixed::Row::from_reals(&rows)).unwrap(),
-            want,
-            "head={} tail={}",
-            hm.label(),
-            tm.label()
-        );
-        // The pool's integer-row fast path is bit-identical in every mode.
-        let Backend::Compiled { pool, .. } = &backend else { unreachable!() };
-        assert_eq!(
-            pool.infer_ints(&ints),
-            want,
-            "int rows, head={} tail={}",
-            hm.label(),
-            tm.label()
-        );
+        let plan = std::sync::Arc::new(plan);
+        // Both pooled dispatch strategies, including the pool's integer-row
+        // fast path, are bit-identical in every head×tail mode.
+        for fused in [false, true] {
+            let pm = PooledModel::from_plan(
+                plan.clone(),
+                frac_bits,
+                model.num_features,
+                model.num_classes,
+                iw,
+                64,
+                3,
+                fused,
+            );
+            assert_eq!(
+                pm.infer_rows(&dwn::util::fixed::Row::from_reals(&rows)).unwrap(),
+                want,
+                "engine={} head={} tail={}",
+                pm.engine(),
+                hm.label(),
+                tm.label()
+            );
+            assert_eq!(
+                pm.pool().infer_ints(&ints),
+                want,
+                "int rows, engine={} head={} tail={}",
+                pm.engine(),
+                hm.label(),
+                tm.label()
+            );
+        }
     }
 }
 
